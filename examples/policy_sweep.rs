@@ -1,0 +1,65 @@
+//! Policy sweep: compare every quantization policy (FedDQ at several
+//! resolutions, AdaQuantFL, fixed 2/4/8-bit, fp32) on the same federated
+//! workload and print a ranking by bits-to-target-accuracy.
+//!
+//!     cargo run --release --example policy_sweep [-- rounds target_acc]
+
+use feddq::config::RunConfig;
+use feddq::coordinator::Session;
+use feddq::metrics::gbits;
+use feddq::quant::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rounds: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(25);
+    let target: f32 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.85);
+
+    let policies = vec![
+        PolicyConfig::FedDq { resolution: 0.0025 },
+        PolicyConfig::FedDq { resolution: 0.005 },
+        PolicyConfig::FedDq { resolution: 0.01 },
+        PolicyConfig::AdaQuantFl { s0: 2 },
+        PolicyConfig::Fixed { bits: 2 },
+        PolicyConfig::Fixed { bits: 4 },
+        PolicyConfig::Fixed { bits: 8 },
+        PolicyConfig::Fp32,
+    ];
+
+    println!("sweep: mlp, {rounds} rounds, target acc {target}");
+    println!(
+        "{:<16} {:>9} {:>12} {:>14} {:>12}",
+        "policy", "best acc", "rounds@tgt", "Gb@tgt", "total Gb"
+    );
+    let mut rows = Vec::new();
+    for p in policies {
+        let mut cfg = RunConfig::default_for("mlp");
+        cfg.policy = p.clone();
+        cfg.rounds = rounds;
+        cfg.train_size = 2000;
+        cfg.test_size = 500;
+        let report = Session::new(cfg)?.run()?;
+        let hit = report.rounds_to_accuracy(target);
+        let (r_s, g_s) = match hit {
+            Some((r, bits)) => (r.to_string(), format!("{:.4}", gbits(bits))),
+            None => ("-".into(), "-".into()),
+        };
+        println!(
+            "{:<16} {:>9.4} {:>12} {:>14} {:>12.4}",
+            p.label(),
+            report.best_accuracy(),
+            r_s,
+            g_s,
+            gbits(report.total_uplink_bits())
+        );
+        rows.push((p.label(), hit));
+    }
+
+    // ranking by bits to target
+    let mut ranked: Vec<_> = rows.iter().filter_map(|(l, h)| h.map(|(_, b)| (l, b))).collect();
+    ranked.sort_by_key(|&(_, b)| b);
+    println!("\nranking by uplink bits to reach acc {target}:");
+    for (i, (l, b)) in ranked.iter().enumerate() {
+        println!("  {}. {:<16} {:.4} Gb", i + 1, l, gbits(*b));
+    }
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT entry point: lower every model's executables to HLO text + manifest.
+
+HLO *text* is the interchange format, never ``.serialize()``: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--models mlp,cnn4] [--force]
+
+Writes ``<model>_<fn>.hlo.txt`` per executable plus ``manifest.json``
+describing shapes, segment layout and static hyper-parameters — the single
+source of truth the Rust runtime loads at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import model as M
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constant arrays as ``constant({...})`` and the text parser
+    on the Rust side silently reads them back as zeros — which corrupts
+    any computation with a baked-in lookup table (tile->segment maps,
+    valid-lane counts, ...).  Found the hard way; see DESIGN.md §2.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def build_model_artifacts(name: str, cfg: dict, out_dir: str,
+                          force: bool) -> dict:
+    fm = M.flat_model(name, cfg["model"])
+    tau, batch = cfg["tau"], cfg["batch"]
+    eval_batch, n_clients = cfg["eval_batch"], cfg["n_clients"]
+    exports = M.export_specs(fm, tau, batch, eval_batch, n_clients)
+
+    entry: dict = {
+        "d": fm.d,
+        "padded": fm.lay.padded,
+        "tile": fm.lay.tiles and (fm.lay.padded // fm.lay.tiles),
+        "tiles": fm.lay.tiles,
+        "num_segments": fm.num_segments,
+        "segments": [
+            {
+                "name": s.name,
+                "offset": fm.lay.seg_offsets[i],
+                "size": s.size,
+                "shape": list(s.shape),
+            }
+            for i, s in enumerate(fm.model.specs)
+        ],
+        "input_shape": list(fm.model.input_shape),
+        "classes": fm.model.num_classes,
+        "tau": tau,
+        "batch": batch,
+        "eval_batch": eval_batch,
+        "n_clients": n_clients,
+        "executables": {},
+    }
+
+    for fn_name, (fn, specs) in exports.items():
+        fname = f"{name}_{fn_name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        t0 = time.time()
+        if force or not os.path.exists(path):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            status = f"lowered in {time.time() - t0:.1f}s ({len(text)} chars)"
+        else:
+            status = "cached"
+        print(f"  {fname}: {status}", flush=True)
+        entry["executables"][fn_name] = {
+            "file": fname,
+            "args": [spec_json(s) for s in specs],
+        }
+    return entry
+
+
+def config_fingerprint(cfg: dict) -> str:
+    """Per-model config fingerprint — cache key for that model's artifacts."""
+    blob = json.dumps(cfg, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the HLO file exists")
+    ap.add_argument("--scale", default=None, choices=[None, "cpu", "paper"],
+                    help="width scale (default: FEDDQ_SCALE env or 'cpu')")
+    args = ap.parse_args()
+
+    cfgs = C.build_configs(args.scale)
+    names = sorted(cfgs) if args.models == "all" else args.models.split(",")
+    for n in names:
+        if n not in cfgs:
+            print(f"unknown model {n!r}; have {sorted(cfgs)}", file=sys.stderr)
+            return 2
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("version") == MANIFEST_VERSION:
+            # keep every previously-built model; stale ones are re-lowered
+            # below when their per-model fingerprint no longer matches
+            manifest["models"] = old.get("models", {})
+
+    for n in names:
+        print(f"[aot] {n}", flush=True)
+        fp = config_fingerprint(cfgs[n])
+        stale = manifest["models"].get(n, {}).get("fingerprint") != fp
+        entry = build_model_artifacts(n, cfgs[n], args.out, args.force or stale)
+        entry["fingerprint"] = fp
+        manifest["models"][n] = entry
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,88 @@
+"""Artifact-build configurations — one per paper benchmark plus `mlp`.
+
+These bake the *static* choices (shapes, tau, batch sizes, client count)
+into the AOT-lowered executables; everything dynamic (learning rate,
+quantization levels, seeds, policy) stays a runtime input owned by the
+Rust coordinator.
+
+Paper setup (§V-A): tau=5, eta=0.1, SGD; clients = 10 / 10 / 4 for the
+three benchmarks.  eta stays a runtime input; tau and client counts are
+baked here to match.
+
+`scale` selects between "cpu" (default; widths scaled down so hundreds of
+federated rounds run on the CPU PJRT backend — see DESIGN.md §3) and
+"paper" (the canonical widths).  Select with FEDDQ_SCALE=paper.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def build_configs(scale: str | None = None) -> dict[str, dict]:
+    scale = scale or os.environ.get("FEDDQ_SCALE", "cpu")
+    if scale not in ("cpu", "paper"):
+        raise ValueError(f"unknown scale {scale!r}")
+    paper = scale == "paper"
+    return {
+        "mlp": {
+            "model": {
+                "input_shape": (28, 28, 1),
+                "classes": 10,
+                "hidden": 128,
+            },
+            "tau": 5,
+            "batch": 32,
+            "eval_batch": 500,
+            "n_clients": 10,
+        },
+        "vanilla_cnn": {
+            # benchmark 1: Fashion-MNIST
+            "model": {
+                "input_shape": (28, 28, 1),
+                "classes": 10,
+                "conv1": 32 if paper else 8,
+                "conv2": 64 if paper else 16,
+                "fc": 512 if paper else 64,
+            },
+            "tau": 5,
+            "batch": 32,
+            "eval_batch": 500,
+            "n_clients": 10,
+        },
+        "cnn4": {
+            # benchmark 2: CIFAR-10
+            "model": {
+                "input_shape": (32, 32, 3),
+                "classes": 10,
+                # 1-core CPU testbed: widths halved again vs the first
+                # cpu scale so a 25-round comparison stays tractable
+                # (layer count — the paper's structure — is unchanged).
+                "conv1": 64 if paper else 8,
+                "conv2": 64 if paper else 8,
+                "conv3": 128 if paper else 16,
+                "conv4": 128 if paper else 16,
+                "fc1": 256 if paper else 64,
+                "fc2": 128 if paper else 32,
+            },
+            "tau": 5,
+            "batch": 32,
+            "eval_batch": 500,
+            "n_clients": 10,
+        },
+        "resnet18": {
+            # benchmark 3: CIFAR-10
+            "model": {
+                "input_shape": (32, 32, 3),
+                "classes": 10,
+                "base": 64 if paper else 8,
+            },
+            "tau": 5,
+            "batch": 32,
+            "eval_batch": 500,
+            "n_clients": 4,
+        },
+    }
+
+
+CONFIGS = build_configs()

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: server-side fused dequantize + weighted aggregation.
+
+The server receives per-client code vectors plus per-client per-segment
+(min, step) pairs and reconstructs the aggregated global update
+(paper Eq. 4)::
+
+    delta_j = sum_i  w_i * ( codes_ij * step_il(j) + min_il(j) )
+
+in one pass — the dequantized per-client updates are never materialized.
+The grid is 1-D over segment-aligned tiles; each tile reads an [n, tile]
+block of codes and the [n, 1] per-tile scalar columns.
+
+The fp32 (unquantized) path reuses the same kernel with
+``codes = delta, step = 1, min = 0`` so the coordinator has a single
+aggregation code path regardless of policy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import layout as L
+
+
+def _agg_kernel(codes_ref, step_ref, min_ref, w_ref, o_ref):
+    codes = codes_ref[...]        # [n, tile]
+    vals = codes * step_ref[...] + min_ref[...]
+    o_ref[...] = jnp.sum(w_ref[...] * vals, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tiles", "tile"))
+def _aggregate_padded(codes_p, step_t, min_t, w, *, n: int, tiles: int, tile: int):
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((n, tile), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tiles * tile,), jnp.float32),
+        interpret=True,
+    )(codes_p, step_t, min_t, w)
+
+
+def dequant_aggregate(
+    lay: L.PaddedLayout,
+    codes: jnp.ndarray,
+    mins: jnp.ndarray,
+    steps: jnp.ndarray,
+    weights: jnp.ndarray,
+    tile: int = L.TILE,
+) -> jnp.ndarray:
+    """Fused dequantize + weighted sum across clients.
+
+    Args:
+      lay:     segment layout (shared by all clients).
+      codes:   f32[n, d] integer-valued codes per client.
+      mins:    f32[n, L] per-client per-segment minimum.
+      steps:   f32[n, L] per-client per-segment step (``range / s``).
+      weights: f32[n] aggregation weights ``p_i`` (paper Eq. 1/4).
+
+    Returns:
+      f32[d] aggregated global update.
+    """
+    n = codes.shape[0]
+    codes_p = jax.vmap(lambda c: L.pad(lay, c, tile))(codes)
+    step_t = L.expand_per_tile(lay, steps)   # [n, T]
+    min_t = L.expand_per_tile(lay, mins)     # [n, T]
+    out = _aggregate_padded(
+        codes_p, step_t, min_t, weights[:, None],
+        n=n, tiles=lay.tiles, tile=tile,
+    )
+    return L.unpad(lay, out, tile)

@@ -1,0 +1,119 @@
+"""Tiled, segment-aligned layout for the flat model-update vector.
+
+The FedDQ wire path operates on a model update ``delta in R^d`` that is
+logically partitioned into L *segments* (one per parameter tensor — the
+paper quantizes per-layer, Fig. 1b / Fig. 5).  The Pallas kernels process
+the vector as a 1-D grid of fixed-size tiles; to keep every kernel body
+branch-free we pad each segment up to a tile multiple so that **every tile
+belongs to exactly one segment**.  Per-segment scalars (min, 1/step, max
+code) are then expanded to cheap per-tile arrays on the host side of the
+trace, and each tile's BlockSpec picks out its own scalar.
+
+On a real TPU this layout is exactly the VMEM-friendly schedule: tiles are
+sized to a multiple of the (8, 128) vreg footprint, the 1-D grid gives the
+Mosaic pipeline free double-buffering, and the per-tile scalars ride along
+as tiny SMEM operands.  See DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# 8 sublanes x 128 lanes x 1 = one f32 vreg-aligned chunk; 1024 f32 = 4 KiB.
+# A tile is deliberately small in interpret mode (cheap numpy ops); the TPU
+# estimate in DESIGN.md uses 64 Ki-element tiles (256 KiB) instead — the
+# layout code is parametric in TILE so both are one constant away.
+TILE = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedLayout:
+    """Static description of the segment-aligned padded layout."""
+
+    seg_sizes: tuple[int, ...]        # original element count per segment
+    seg_offsets: tuple[int, ...]      # offsets into the unpadded vector
+    seg_tiles: tuple[int, ...]        # tiles occupied by each segment
+    pad_offsets: tuple[int, ...]      # offsets into the padded vector
+    tile_seg_ids: np.ndarray          # [T] segment id of each tile
+    tile_valid: np.ndarray            # [T] number of valid lanes in each tile
+    d: int                            # unpadded length
+    padded: int                       # padded length (= T * TILE)
+    tiles: int                        # T
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.seg_sizes)
+
+
+def make_layout(seg_sizes: Sequence[int], tile: int = TILE) -> PaddedLayout:
+    """Build the padded layout for the given per-segment sizes."""
+    if not seg_sizes:
+        raise ValueError("need at least one segment")
+    if any(s <= 0 for s in seg_sizes):
+        raise ValueError(f"segment sizes must be positive, got {seg_sizes}")
+    seg_offsets, pad_offsets, seg_tiles = [], [], []
+    tile_seg_ids, tile_valid = [], []
+    off = 0
+    poff = 0
+    for sid, size in enumerate(seg_sizes):
+        ntiles = -(-size // tile)  # ceil
+        seg_offsets.append(off)
+        pad_offsets.append(poff)
+        seg_tiles.append(ntiles)
+        for t in range(ntiles):
+            tile_seg_ids.append(sid)
+            lo = t * tile
+            tile_valid.append(min(size - lo, tile))
+        off += size
+        poff += ntiles * tile
+    return PaddedLayout(
+        seg_sizes=tuple(seg_sizes),
+        seg_offsets=tuple(seg_offsets),
+        seg_tiles=tuple(seg_tiles),
+        pad_offsets=tuple(pad_offsets),
+        tile_seg_ids=np.asarray(tile_seg_ids, dtype=np.int32),
+        tile_valid=np.asarray(tile_valid, dtype=np.int32),
+        d=off,
+        padded=poff,
+        tiles=len(tile_seg_ids),
+    )
+
+
+def pad(layout: PaddedLayout, x: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
+    """Scatter the unpadded vector into the segment-aligned padded layout.
+
+    Pure static slicing, so it traces to a fixed concat of pads — XLA fuses
+    this into the surrounding computation (verified in the L2 perf pass).
+    """
+    if x.shape != (layout.d,):
+        raise ValueError(f"expected shape ({layout.d},), got {x.shape}")
+    parts = []
+    for sid, size in enumerate(layout.seg_sizes):
+        o = layout.seg_offsets[sid]
+        seg = x[o : o + size]
+        padlen = layout.seg_tiles[sid] * tile - size
+        if padlen:
+            seg = jnp.pad(seg, (0, padlen))
+        parts.append(seg)
+    return jnp.concatenate(parts)
+
+
+def unpad(layout: PaddedLayout, xp: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
+    """Gather the unpadded vector back out of the padded layout."""
+    if xp.shape != (layout.padded,):
+        raise ValueError(f"expected shape ({layout.padded},), got {xp.shape}")
+    parts = []
+    for sid, size in enumerate(layout.seg_sizes):
+        po = layout.pad_offsets[sid]
+        parts.append(xp[po : po + size])
+    return jnp.concatenate(parts)
+
+
+def expand_per_tile(layout: PaddedLayout, per_seg: jnp.ndarray) -> jnp.ndarray:
+    """Expand a [L] (or [..., L]) per-segment array to per-tile [..., T]."""
+    ids = jnp.asarray(layout.tile_seg_ids)
+    return jnp.take(per_seg, ids, axis=-1)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package has a reference implementation here written
+with plain segment slicing and jnp reductions (no tiling, no padding, no
+Pallas).  pytest + hypothesis compare kernel-vs-ref across shapes, segment
+partitions, levels and seeds (python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layout as L
+
+
+def segment_ranges_ref(
+    lay: L.PaddedLayout, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-segment (min, range) by direct slicing."""
+    mins, ranges = [], []
+    for sid, size in enumerate(lay.seg_sizes):
+        o = lay.seg_offsets[sid]
+        seg = x[o : o + size]
+        lo = jnp.min(seg)
+        hi = jnp.max(seg)
+        mins.append(lo)
+        ranges.append(hi - lo)
+    return jnp.stack(mins), jnp.stack(ranges)
+
+
+def stochastic_quantize_ref(
+    lay: L.PaddedLayout,
+    x: jnp.ndarray,
+    mins: jnp.ndarray,
+    sinv: jnp.ndarray,
+    maxcode: jnp.ndarray,
+    uniforms: jnp.ndarray,
+) -> jnp.ndarray:
+    """Elementwise stochastic rounding with per-segment params.
+
+    ``uniforms`` is in the *padded* layout (that is the executable's input
+    contract); the reference gathers the lanes that correspond to real
+    elements so kernel and ref consume identical randomness.
+    """
+    parts = []
+    for sid, size in enumerate(lay.seg_sizes):
+        o = lay.seg_offsets[sid]
+        po = lay.pad_offsets[sid]
+        seg = x[o : o + size]
+        u = uniforms[po : po + size]
+        y = (seg - mins[sid]) * sinv[sid] + u
+        parts.append(jnp.clip(jnp.floor(y), 0.0, maxcode[sid]))
+    return jnp.concatenate(parts)
+
+
+def dequant_aggregate_ref(
+    lay: L.PaddedLayout,
+    codes: jnp.ndarray,
+    mins: jnp.ndarray,
+    steps: jnp.ndarray,
+    weights: jnp.ndarray,
+) -> jnp.ndarray:
+    """Weighted sum of per-client dequantized updates, segment by segment."""
+    n = codes.shape[0]
+    out = jnp.zeros(lay.d, dtype=jnp.float32)
+    for i in range(n):
+        parts = []
+        for sid, size in enumerate(lay.seg_sizes):
+            o = lay.seg_offsets[sid]
+            seg = codes[i, o : o + size]
+            parts.append(seg * steps[i, sid] + mins[i, sid])
+        out = out + weights[i] * jnp.concatenate(parts)
+    return out

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: per-segment (per-layer) min/max of the model update.
+
+FedDQ\'s policy input is the *range* of each client\'s model update
+(paper Eq. 7/10, Fig. 1b).  This kernel computes per-tile min/max in a
+single pass over the segment-aligned padded vector (1-D grid of tiles, a
+[2, 1] min/max column written per tile); the tiny [T] tile results are
+then combined into per-segment values with *static* slice reductions
+(tiles are contiguous per segment by construction — do NOT use
+jax.ops.segment_min here, its scatter lowering is not supported by the
+old xla_extension runtime on the Rust side).
+
+Padding lanes are masked with an iota-vs-valid-count compare so padded
+zeros can never contaminate a segment whose true range excludes zero.
+The [T] valid-count table is an HLO constant; see aot.py on
+``print_large_constants``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import layout as L
+
+
+def _minmax_kernel(x_ref, valid_ref, o_ref, *, tile: int):
+    x = x_ref[...]
+    valid = valid_ref[0]
+    idx = lax.iota(jnp.int32, tile)
+    mask = idx < valid
+    o_ref[0, 0] = jnp.min(jnp.where(mask, x, jnp.inf))
+    o_ref[1, 0] = jnp.max(jnp.where(mask, x, -jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("tiles", "tile"))
+def _tile_minmax(xp, valid_t, *, tiles: int, tile: int):
+    out = pl.pallas_call(
+        functools.partial(_minmax_kernel, tile=tile),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((2, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, tiles), jnp.float32),
+        interpret=True,
+    )(xp, valid_t)
+    return out[0], out[1]
+
+
+def segment_ranges(
+    lay: L.PaddedLayout, x: jnp.ndarray, tile: int = L.TILE
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-segment (min, range) of the unpadded update ``x [d]``.
+
+    Returns ``(mins [L], ranges [L])`` with ``range_l = max_l - min_l >= 0``.
+    """
+    xp = L.pad(lay, x, tile)
+    tmin, tmax = _tile_minmax(
+        xp, jnp.asarray(lay.tile_valid), tiles=lay.tiles, tile=tile
+    )
+    mins, maxs = [], []
+    t0 = 0
+    for nt in lay.seg_tiles:
+        mins.append(jnp.min(tmin[t0 : t0 + nt]))
+        maxs.append(jnp.max(tmax[t0 : t0 + nt]))
+        t0 += nt
+    mins = jnp.stack(mins)
+    maxs = jnp.stack(maxs)
+    return mins, maxs - mins

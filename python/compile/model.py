@@ -1,0 +1,186 @@
+"""L2 assembly: flat-parameter machinery and the five exported functions.
+
+Every model is exported to the Rust runtime as a family of stateless XLA
+executables over a single flat ``f32[d]`` parameter vector:
+
+  init(seed)                                   -> params[d]
+  round(params, xs[tau,B,...], ys[tau,B], lr)  -> (delta[d], mean_loss)
+  evaluate(params, xs[E,...], ys[E])           -> (loss_sum, correct)
+  ranges(delta)                                -> (mins[L], ranges[L])
+  quantize(delta, mins[L], sinv[L], maxc[L], seed) -> codes[d]
+  aggregate(codes[n,d], mins[n,L], steps[n,L], w[n]) -> delta[d]
+
+``round`` runs the paper's tau local SGD steps (Eq. 2-3) inside one
+``lax.scan`` so a whole client round is a single PJRT dispatch.  ``ranges``
++ ``quantize`` split the client wire path so the L3 policy can choose the
+bit-width *between* them from the observed update range (Eq. 10) — the
+policy decision lives in Rust, the number crunching in XLA/Pallas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import aggregate as k_agg
+from .kernels import layout as k_layout
+from .kernels import quantize as k_quant
+from .kernels import segrange as k_range
+from .models import ModelDef, build_model
+from .models import common as mc
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatModel:
+    """A ModelDef plus its flat-vector layout and segment metadata."""
+
+    model: ModelDef
+    lay: k_layout.PaddedLayout
+
+    @property
+    def d(self) -> int:
+        return self.lay.d
+
+    @property
+    def num_segments(self) -> int:
+        return self.lay.num_segments
+
+    def unflatten(self, flat: jnp.ndarray) -> dict:
+        tree = {}
+        for sid, spec in enumerate(self.model.specs):
+            o = self.lay.seg_offsets[sid]
+            tree[spec.name] = flat[o : o + spec.size].reshape(spec.shape)
+        return tree
+
+    def flatten(self, tree: dict) -> jnp.ndarray:
+        return jnp.concatenate(
+            [tree[s.name].reshape(-1) for s in self.model.specs]
+        )
+
+
+def flat_model(name: str, cfg: dict) -> FlatModel:
+    model = build_model(name, cfg)
+    lay = k_layout.make_layout([s.size for s in model.specs])
+    return FlatModel(model, lay)
+
+
+# ---------------------------------------------------------------------------
+# exported functions
+# ---------------------------------------------------------------------------
+
+
+def make_init(fm: FlatModel) -> Callable:
+    def init(seed: jnp.ndarray) -> jnp.ndarray:
+        tree = mc.init_params(seed, fm.model.specs)
+        return (fm.flatten(tree),)
+
+    return init
+
+
+def make_loss(fm: FlatModel) -> Callable:
+    def loss_fn(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        logits = fm.model.apply(fm.unflatten(flat), x)
+        return mc.cross_entropy(logits, y)
+
+    return loss_fn
+
+
+def make_round(fm: FlatModel) -> Callable:
+    """tau local SGD steps -> (model update delta, mean train loss)."""
+    loss_fn = make_loss(fm)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def local_round(params, xs, ys, lr):
+        # xs: [tau, B, ...], ys: [tau, B] int32, lr: scalar
+        def step(p, batch):
+            x, y = batch
+            loss, g = grad_fn(p, x, y)
+            return p - lr * g, loss
+
+        p_final, losses = jax.lax.scan(step, params, (xs, ys))
+        return p_final - params, jnp.mean(losses)
+
+    return local_round
+
+
+def make_evaluate(fm: FlatModel) -> Callable:
+    def evaluate(params, xs, ys):
+        logits = fm.model.apply(fm.unflatten(params), xs)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, ys[:, None], axis=1)[:, 0]
+        return jnp.sum(nll), mc.correct_count(logits, ys)
+
+    return evaluate
+
+
+def make_ranges(fm: FlatModel) -> Callable:
+    def ranges(delta):
+        return k_range.segment_ranges(fm.lay, delta)
+
+    return ranges
+
+
+def make_quantize(fm: FlatModel) -> Callable:
+    def quantize(delta, mins, sinv, maxcode, seed):
+        key = jax.random.PRNGKey(seed)
+        u = jax.random.uniform(key, (fm.lay.padded,), jnp.float32)
+        return (k_quant.stochastic_quantize(fm.lay, delta, mins, sinv, maxcode, u),)
+
+    return quantize
+
+
+def make_aggregate(fm: FlatModel) -> Callable:
+    def aggregate(codes, mins, steps, weights):
+        return (k_agg.dequant_aggregate(fm.lay, codes, mins, steps, weights),)
+
+    return aggregate
+
+
+# ---------------------------------------------------------------------------
+# argument specs for AOT lowering (shapes must match the manifest)
+# ---------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def export_specs(fm: FlatModel, tau: int, batch: int, eval_batch: int,
+                 n_clients: int) -> dict[str, tuple[Callable, tuple]]:
+    """(fn, arg_specs) for every executable of this model."""
+    d = fm.d
+    L = fm.num_segments
+    ish = fm.model.input_shape
+    return {
+        "init": (make_init(fm), (u32(),)),
+        "round": (
+            make_round(fm),
+            (f32(d), f32(tau, batch, *ish), i32(tau, batch), f32()),
+        ),
+        "evaluate": (
+            make_evaluate(fm),
+            (f32(d), f32(eval_batch, *ish), i32(eval_batch)),
+        ),
+        "ranges": (make_ranges(fm), (f32(d),)),
+        "quantize": (
+            make_quantize(fm),
+            (f32(d), f32(L), f32(L), f32(L), u32()),
+        ),
+        "aggregate": (
+            make_aggregate(fm),
+            (f32(n_clients, d), f32(n_clients, L), f32(n_clients, L),
+             f32(n_clients)),
+        ),
+    }

@@ -1,0 +1,27 @@
+"""L2 model zoo: the paper's three benchmarks plus an MLP for quickstart.
+
+Every model exposes the same functional contract (see common.ModelDef) so
+the flat-parameter machinery in compile/model.py and the Rust coordinator
+treat all of them uniformly.
+"""
+
+from . import cnn4, mlp, resnet18, vanilla_cnn
+from .common import ModelDef
+
+_BUILDERS = {
+    "mlp": mlp.build,
+    "vanilla_cnn": vanilla_cnn.build,
+    "cnn4": cnn4.build,
+    "resnet18": resnet18.build,
+}
+
+
+def build_model(name: str, cfg: dict) -> ModelDef:
+    """Construct a ModelDef by registry name."""
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(_BUILDERS)}")
+    return _BUILDERS[name](cfg)
+
+
+def model_names() -> list[str]:
+    return sorted(_BUILDERS)

@@ -1,0 +1,53 @@
+"""Paper benchmark #2: CNN with 4 convolution layers + 3 fully-connected
+layers on CIFAR-10.
+
+The paper gives only the layer counts; we use 3x3 convs with pooling after
+conv2/conv3/conv4 (32 -> 16 -> 8 -> 4 spatial) and an fc head, all widths
+configurable.  Default widths are CPU-scaled (≈93k params); the per-layer
+count (4 conv + 3 fc = 14 quantization segments with biases) matches the
+paper's granularity for the per-layer range curves (Fig. 1b).
+"""
+
+from __future__ import annotations
+
+from . import common as c
+
+
+def build(cfg: dict) -> c.ModelDef:
+    input_shape = tuple(cfg.get("input_shape", (32, 32, 3)))
+    classes = int(cfg.get("classes", 10))
+    c1 = int(cfg.get("conv1", 16))
+    c2 = int(cfg.get("conv2", 16))
+    c3 = int(cfg.get("conv3", 32))
+    c4 = int(cfg.get("conv4", 32))
+    f1 = int(cfg.get("fc1", 128))
+    f2 = int(cfg.get("fc2", 64))
+    h, w, cin = input_shape
+    fh, fw = h // 8, w // 8  # three 2x2 pools
+    flat = fh * fw * c4
+
+    specs = tuple(
+        c.conv_spec("conv1", 3, cin, c1)
+        + c.conv_spec("conv2", 3, c1, c2)
+        + c.conv_spec("conv3", 3, c2, c3)
+        + c.conv_spec("conv4", 3, c3, c4)
+        + c.dense_spec("fc1", flat, f1)
+        + c.dense_spec("fc2", f1, f2)
+        + c.dense_spec("fc3", f2, classes, init="glorot")
+    )
+
+    def apply(params: dict, x):
+        b = x.shape[0]
+        h1 = c.relu(c.conv2d(x, params["conv1.w"], params["conv1.b"]))
+        h2 = c.relu(c.conv2d(h1, params["conv2.w"], params["conv2.b"]))
+        h2 = c.max_pool(h2)
+        h3 = c.relu(c.conv2d(h2, params["conv3.w"], params["conv3.b"]))
+        h3 = c.max_pool(h3)
+        h4 = c.relu(c.conv2d(h3, params["conv4.w"], params["conv4.b"]))
+        h4 = c.max_pool(h4)
+        hf = h4.reshape(b, -1)
+        hf = c.relu(c.dense(hf, params["fc1.w"], params["fc1.b"]))
+        hf = c.relu(c.dense(hf, params["fc2.w"], params["fc2.b"]))
+        return c.dense(hf, params["fc3.w"], params["fc3.b"])
+
+    return c.ModelDef("cnn4", specs, apply, input_shape, classes)

@@ -1,0 +1,160 @@
+"""Shared functional building blocks for the L2 model zoo.
+
+Models are pure functions over a ``dict[str, Array]`` parameter tree plus a
+static, ordered parameter *spec* — the ordering defines the flat-vector
+layout (and hence the quantization segments) used across the whole stack,
+so it must be deterministic and identical between python and the manifest
+consumed by Rust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor: name, shape and initializer family."""
+
+    name: str
+    shape: tuple[int, ...]
+    init: str  # "he" | "glorot" | "zeros" | "ones"
+    fan_in: int = 0
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A model: ordered parameter spec + apply function + IO metadata."""
+
+    name: str
+    specs: tuple[ParamSpec, ...]
+    apply: Callable  # (params: dict, x: [B, ...]) -> logits [B, classes]
+    input_shape: tuple[int, ...]
+    num_classes: int
+
+    @property
+    def num_params(self) -> int:
+        return sum(s.size for s in self.specs)
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jnp.ndarray:
+    """Initialize one tensor according to its spec."""
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, jnp.float32)
+    if spec.init.startswith("const:"):
+        return jnp.full(spec.shape, float(spec.init.split(":")[1]), jnp.float32)
+    if spec.init == "he":
+        std = math.sqrt(2.0 / max(spec.fan_in, 1))
+    elif spec.init == "glorot":
+        fan_out = spec.shape[-1]
+        std = math.sqrt(2.0 / max(spec.fan_in + fan_out, 2))
+    else:
+        raise ValueError(f"unknown init {spec.init!r}")
+    return std * jax.random.normal(key, spec.shape, jnp.float32)
+
+
+def init_params(seed: jnp.ndarray, specs: Sequence[ParamSpec]) -> dict:
+    """Initialize the full tree; per-tensor keys are folded from the seed."""
+    key = jax.random.PRNGKey(seed)
+    return {
+        s.name: init_param(jax.random.fold_in(key, i), s)
+        for i, s in enumerate(specs)
+    }
+
+
+# ---------------------------------------------------------------------------
+# layers (NHWC activations, HWIO conv kernels)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+           stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    """2-D convolution, NHWC x HWIO -> NHWC."""
+    y = lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x @ w + b
+
+
+def max_pool(x: jnp.ndarray, window: int = 2, stride: int = 2) -> jnp.ndarray:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID",
+    )
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def channel_affine(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel affine (the BN substitution — see DESIGN.md §3)."""
+    return x * scale + bias
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy over the batch. labels: int32 [B]."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def correct_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+
+
+def conv_spec(name: str, k: int, cin: int, cout: int) -> list[ParamSpec]:
+    fan = k * k * cin
+    return [
+        ParamSpec(f"{name}.w", (k, k, cin, cout), "he", fan),
+        ParamSpec(f"{name}.b", (cout,), "zeros"),
+    ]
+
+
+def dense_spec(name: str, din: int, dout: int, init: str = "he") -> list[ParamSpec]:
+    return [
+        ParamSpec(f"{name}.w", (din, dout), init, din),
+        ParamSpec(f"{name}.b", (dout,), "zeros"),
+    ]
+
+
+def affine_spec(name: str, c: int) -> list[ParamSpec]:
+    return [
+        ParamSpec(f"{name}.scale", (c,), "ones"),
+        ParamSpec(f"{name}.bias", (c,), "zeros"),
+    ]

@@ -1,0 +1,32 @@
+"""Two-layer MLP — not a paper benchmark; used for quickstart and fast tests.
+
+Small enough (≈100k params at default width) that the full FL loop runs in
+seconds on CPU, which makes it the workhorse for integration tests and the
+quickstart example.
+"""
+
+from __future__ import annotations
+
+import math
+
+from . import common as c
+
+
+def build(cfg: dict) -> c.ModelDef:
+    input_shape = tuple(cfg.get("input_shape", (28, 28, 1)))
+    classes = int(cfg.get("classes", 10))
+    hidden = int(cfg.get("hidden", 128))
+    din = math.prod(input_shape)
+
+    specs = tuple(
+        c.dense_spec("fc1", din, hidden)
+        + c.dense_spec("fc2", hidden, classes, init="glorot")
+    )
+
+    def apply(params: dict, x):
+        b = x.shape[0]
+        h = x.reshape(b, -1)
+        h = c.relu(c.dense(h, params["fc1.w"], params["fc1.b"]))
+        return c.dense(h, params["fc2.w"], params["fc2.b"])
+
+    return c.ModelDef("mlp", specs, apply, input_shape, classes)

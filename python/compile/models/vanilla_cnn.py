@@ -1,0 +1,43 @@
+"""Paper benchmark #1: the "Vanilla CNN" of McMahan et al. [1] on
+Fashion-MNIST — conv5x5 -> pool -> conv5x5 -> pool -> fc -> fc.
+
+Channel/fc widths are configurable: the paper uses (32, 64, 512) ≈ 1.66M
+params; the CPU-scaled default is (8, 16, 64) ≈ 54k params, which keeps the
+descending-range dynamics (what the policy consumes) intact while making
+hundreds of federated rounds tractable on the CPU PJRT backend.
+"""
+
+from __future__ import annotations
+
+from . import common as c
+
+
+def build(cfg: dict) -> c.ModelDef:
+    input_shape = tuple(cfg.get("input_shape", (28, 28, 1)))
+    classes = int(cfg.get("classes", 10))
+    c1 = int(cfg.get("conv1", 8))
+    c2 = int(cfg.get("conv2", 16))
+    fc = int(cfg.get("fc", 64))
+    h, w, cin = input_shape
+    # two SAME conv + 2x2 pool stages
+    fh, fw = h // 4, w // 4
+    flat = fh * fw * c2
+
+    specs = tuple(
+        c.conv_spec("conv1", 5, cin, c1)
+        + c.conv_spec("conv2", 5, c1, c2)
+        + c.dense_spec("fc1", flat, fc)
+        + c.dense_spec("fc2", fc, classes, init="glorot")
+    )
+
+    def apply(params: dict, x):
+        b = x.shape[0]
+        h1 = c.relu(c.conv2d(x, params["conv1.w"], params["conv1.b"]))
+        h1 = c.max_pool(h1)
+        h2 = c.relu(c.conv2d(h1, params["conv2.w"], params["conv2.b"]))
+        h2 = c.max_pool(h2)
+        hf = h2.reshape(b, -1)
+        hf = c.relu(c.dense(hf, params["fc1.w"], params["fc1.b"]))
+        return c.dense(hf, params["fc2.w"], params["fc2.b"])
+
+    return c.ModelDef("vanilla_cnn", specs, apply, input_shape, classes)

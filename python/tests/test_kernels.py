@@ -1,0 +1,195 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+hypothesis sweeps segment partitions, magnitudes, levels and seeds; every
+kernel must agree with the pure-jnp oracle in ref.py elementwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate, layout as L, quantize, ref, segrange
+
+jax.config.update("jax_platform_name", "cpu")
+
+seg_sizes_st = st.lists(st.integers(min_value=1, max_value=3000), min_size=1, max_size=8)
+
+
+def make_update(lay, seed, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return scale * jax.random.normal(key, (lay.d,), jnp.float32)
+
+
+class TestLayout:
+    @given(seg_sizes_st)
+    @settings(max_examples=40, deadline=None)
+    def test_layout_invariants(self, sizes):
+        lay = L.make_layout(sizes)
+        assert lay.d == sum(sizes)
+        assert lay.padded == lay.tiles * L.TILE
+        assert lay.padded >= lay.d
+        # every tile belongs to exactly one segment, contiguous
+        assert list(lay.tile_seg_ids) == sorted(lay.tile_seg_ids)
+        assert sum(lay.tile_valid) == lay.d
+        assert all(1 <= v <= L.TILE for v in lay.tile_valid)
+
+    @given(seg_sizes_st, st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_pad_unpad_roundtrip(self, sizes, seed):
+        lay = L.make_layout(sizes)
+        x = make_update(lay, seed)
+        xp = L.pad(lay, x)
+        assert xp.shape == (lay.padded,)
+        np.testing.assert_array_equal(np.asarray(L.unpad(lay, xp)), np.asarray(x))
+
+    def test_rejects_bad_segments(self):
+        with pytest.raises(ValueError):
+            L.make_layout([])
+        with pytest.raises(ValueError):
+            L.make_layout([4, 0, 2])
+
+    def test_expand_per_tile(self):
+        lay = L.make_layout([5, 2048, 3])
+        per_seg = jnp.array([10.0, 20.0, 30.0])
+        out = np.asarray(L.expand_per_tile(lay, per_seg))
+        np.testing.assert_array_equal(out, [10.0, 20.0, 20.0, 30.0])
+
+
+class TestSegmentRanges:
+    @given(seg_sizes_st, st.integers(0, 2**31 - 1),
+           st.sampled_from([1e-4, 1.0, 1e4]))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, sizes, seed, scale):
+        lay = L.make_layout(sizes)
+        x = make_update(lay, seed, scale)
+        mins, ranges = segrange.segment_ranges(lay, x)
+        rmins, rranges = ref.segment_ranges_ref(lay, x)
+        np.testing.assert_allclose(np.asarray(mins), np.asarray(rmins), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ranges), np.asarray(rranges), rtol=1e-6)
+
+    def test_constant_segment_has_zero_range(self):
+        lay = L.make_layout([100, 50])
+        x = jnp.concatenate([jnp.full((100,), 3.5), jnp.zeros((50,))])
+        mins, ranges = segrange.segment_ranges(lay, x)
+        np.testing.assert_allclose(np.asarray(mins), [3.5, 0.0])
+        np.testing.assert_allclose(np.asarray(ranges), [0.0, 0.0])
+
+    def test_padding_cannot_leak(self):
+        # all-positive segment of 1 element: zero padding would corrupt min
+        lay = L.make_layout([1, 1])
+        x = jnp.array([7.0, -7.0])
+        mins, ranges = segrange.segment_ranges(lay, x)
+        np.testing.assert_allclose(np.asarray(mins), [7.0, -7.0])
+        np.testing.assert_allclose(np.asarray(ranges), [0.0, 0.0])
+
+
+class TestStochasticQuantize:
+    @given(seg_sizes_st, st.integers(0, 2**31 - 1),
+           st.lists(st.sampled_from([1, 3, 15, 255, 65535]), min_size=8, max_size=8))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, sizes, seed, levels8):
+        lay = L.make_layout(sizes)
+        nseg = lay.num_segments
+        x = make_update(lay, seed)
+        mins, ranges = ref.segment_ranges_ref(lay, x)
+        s = jnp.asarray(levels8[:nseg], jnp.float32)
+        sinv = jnp.where(ranges > 1e-12, s / jnp.maximum(ranges, 1e-12), 0.0)
+        u = jax.random.uniform(jax.random.PRNGKey(seed ^ 0xF00D), (lay.padded,))
+        got = np.asarray(quantize.stochastic_quantize(lay, x, mins, sinv, s, u))
+        want = np.asarray(ref.stochastic_quantize_ref(lay, x, mins, sinv, s, u))
+        # The kernel and the oracle may round differently when
+        # (x - min) * sinv + u lands exactly on a bin boundary (XLA fuses
+        # the expression into an FMA in one lowering but not the other).
+        # A ±1 code at boundary-hit frequency is within the stochastic
+        # quantizer's contract; anything more is a real bug.
+        diff = np.abs(got - want)
+        assert diff.max() <= 1, f"code error > 1 bin: {diff.max()}"
+        assert (diff != 0).mean() <= 0.01, f"boundary-rate too high: {(diff != 0).mean()}"
+
+    def test_codes_in_range_and_integral(self):
+        lay = L.make_layout([5000])
+        x = make_update(lay, 3)
+        mins, ranges = ref.segment_ranges_ref(lay, x)
+        s = jnp.array([15.0])
+        sinv = s / ranges
+        u = jax.random.uniform(jax.random.PRNGKey(1), (lay.padded,))
+        codes = np.asarray(quantize.stochastic_quantize(lay, x, mins, sinv, s, u))
+        assert codes.min() >= 0 and codes.max() <= 15
+        np.testing.assert_array_equal(codes, np.round(codes))
+
+    def test_unbiasedness(self):
+        # E[dequant(Q(x))] == x: the quantizer's defining property (Assumption 1).
+        lay = L.make_layout([64])
+        x = make_update(lay, 9)
+        mins, ranges = ref.segment_ranges_ref(lay, x)
+        s = jnp.array([7.0])
+        sinv = s / ranges
+        step = ranges / s
+        acc = np.zeros(lay.d)
+        trials = 600
+        for t in range(trials):
+            u = jax.random.uniform(jax.random.PRNGKey(1000 + t), (lay.padded,))
+            codes = quantize.stochastic_quantize(lay, x, mins, sinv, s, u)
+            acc += np.asarray(codes) * float(step[0]) + float(mins[0])
+        est = acc / trials
+        # stderr of the estimate is ~ step/sqrt(12 trials) ≈ 0.012*|range|
+        np.testing.assert_allclose(est, np.asarray(x), atol=4.5 * float(step[0]) / np.sqrt(trials) + 1e-7)
+
+    def test_variance_bound(self):
+        # Var[Q(x) - x] <= (range/s)^2 / 4 per element (uniform stochastic
+        # rounding within one bin) — implies the paper's Assumption 1 bound.
+        lay = L.make_layout([256])
+        x = make_update(lay, 5)
+        mins, ranges = ref.segment_ranges_ref(lay, x)
+        s = jnp.array([15.0])
+        sinv = s / ranges
+        step = float(ranges[0] / s[0])
+        errs = []
+        for t in range(200):
+            u = jax.random.uniform(jax.random.PRNGKey(t), (lay.padded,))
+            codes = quantize.stochastic_quantize(lay, x, mins, sinv, s, u)
+            deq = np.asarray(codes) * step + float(mins[0])
+            errs.append(deq - np.asarray(x))
+        var = np.var(np.stack(errs), axis=0)
+        assert var.max() <= step * step / 4 * 1.25  # slack for sampling noise
+
+    def test_degenerate_range_collapses_to_zero_codes(self):
+        lay = L.make_layout([128])
+        x = jnp.full((128,), 2.5)
+        s = jnp.array([255.0])
+        u = jax.random.uniform(jax.random.PRNGKey(0), (lay.padded,))
+        codes = quantize.stochastic_quantize(lay, x, jnp.array([2.5]), jnp.array([0.0]), s, u)
+        np.testing.assert_array_equal(np.asarray(codes), np.zeros(128))
+
+
+class TestDequantAggregate:
+    @given(seg_sizes_st, st.integers(2, 6), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref(self, sizes, n, seed):
+        lay = L.make_layout(sizes)
+        key = jax.random.PRNGKey(seed)
+        codes = jnp.floor(
+            jax.random.uniform(key, (n, lay.d), minval=0.0, maxval=16.0)
+        )
+        k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed ^ 1), 3)
+        mins = jax.random.normal(k2, (n, lay.num_segments))
+        steps = jax.random.uniform(k3, (n, lay.num_segments), minval=0.0, maxval=0.1)
+        w = jax.random.uniform(k4, (n,), minval=0.1, maxval=1.0)
+        w = w / jnp.sum(w)
+        got = aggregate.dequant_aggregate(lay, codes, mins, steps, w)
+        want = ref.dequant_aggregate_ref(lay, codes, mins, steps, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_fp32_passthrough_convention(self):
+        # codes=delta, step=1, min=0 must reproduce the weighted mean exactly.
+        lay = L.make_layout([300, 40])
+        n = 3
+        deltas = jnp.stack([make_update(lay, i) for i in range(n)])
+        w = jnp.array([0.5, 0.25, 0.25])
+        mins = jnp.zeros((n, 2))
+        steps = jnp.ones((n, 2))
+        got = aggregate.dequant_aggregate(lay, deltas, mins, steps, w)
+        want = jnp.einsum("i,id->d", w, deltas)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)

@@ -1,0 +1,169 @@
+"""L2 model zoo tests: shapes, gradients, training dynamics, export specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+MODELS = ["mlp", "vanilla_cnn", "cnn4", "resnet18"]
+
+
+@pytest.fixture(scope="module")
+def flats():
+    return {name: M.flat_model(name, C.CONFIGS[name]["model"]) for name in MODELS}
+
+
+class TestFlatModel:
+    @pytest.mark.parametrize("name", MODELS)
+    def test_flatten_unflatten_roundtrip(self, flats, name):
+        fm = flats[name]
+        p, = M.make_init(fm)(jnp.uint32(0))
+        assert p.shape == (fm.d,)
+        tree = fm.unflatten(p)
+        assert set(tree) == {s.name for s in fm.model.specs}
+        back = fm.flatten(tree)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(p))
+
+    @pytest.mark.parametrize("name", MODELS)
+    def test_init_deterministic_and_seed_sensitive(self, flats, name):
+        fm = flats[name]
+        a, = M.make_init(fm)(jnp.uint32(7))
+        b, = M.make_init(fm)(jnp.uint32(7))
+        c, = M.make_init(fm)(jnp.uint32(8))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    @pytest.mark.parametrize("name", MODELS)
+    def test_segment_layout_matches_specs(self, flats, name):
+        fm = flats[name]
+        off = 0
+        for sid, spec in enumerate(fm.model.specs):
+            assert fm.lay.seg_offsets[sid] == off
+            assert fm.lay.seg_sizes[sid] == spec.size
+            off += spec.size
+        assert off == fm.d
+
+
+class TestRoundFunction:
+    @pytest.mark.parametrize("name", ["mlp", "vanilla_cnn"])
+    def test_loss_decreases_on_memorizable_batch(self, flats, name):
+        fm = flats[name]
+        cfg = C.CONFIGS[name]
+        rnd = jax.jit(M.make_round(fm))
+        p, = M.make_init(fm)(jnp.uint32(0))
+        tau, b = cfg["tau"], cfg["batch"]
+        ish = fm.model.input_shape
+        xs = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (1, b, *ish))
+        xs = jnp.tile(xs, (tau, 1) + (1,) * len(ish))
+        ys = jnp.tile(jax.random.randint(jax.random.PRNGKey(2), (1, b), 0, 10), (tau, 1))
+        losses = []
+        for _ in range(8):
+            delta, loss = rnd(p, xs, ys, jnp.float32(0.05))
+            p = p + delta
+            losses.append(float(loss))
+        assert min(losses) < losses[0] * 0.7, losses
+
+    @pytest.mark.parametrize("name", MODELS)
+    def test_delta_is_finite_and_nonzero(self, flats, name):
+        fm = flats[name]
+        cfg = C.CONFIGS[name]
+        rnd = jax.jit(M.make_round(fm))
+        p, = M.make_init(fm)(jnp.uint32(3))
+        tau, b = cfg["tau"], cfg["batch"]
+        ish = fm.model.input_shape
+        xs = 0.5 * jax.random.normal(jax.random.PRNGKey(4), (tau, b, *ish))
+        ys = jax.random.randint(jax.random.PRNGKey(5), (tau, b), 0, 10)
+        delta, loss = rnd(p, xs, ys, jnp.float32(0.05))
+        assert np.isfinite(float(loss))
+        d = np.asarray(delta)
+        assert np.isfinite(d).all()
+        assert np.abs(d).max() > 0
+
+    def test_zero_lr_means_zero_delta(self, flats):
+        fm = flats["mlp"]
+        cfg = C.CONFIGS["mlp"]
+        rnd = jax.jit(M.make_round(fm))
+        p, = M.make_init(fm)(jnp.uint32(0))
+        tau, b = cfg["tau"], cfg["batch"]
+        xs = jax.random.normal(jax.random.PRNGKey(1), (tau, b, 28, 28, 1))
+        ys = jax.random.randint(jax.random.PRNGKey(2), (tau, b), 0, 10)
+        delta, _ = rnd(p, xs, ys, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(delta), np.zeros(fm.d))
+
+
+class TestEvaluate:
+    def test_counts_and_loss(self, flats):
+        fm = flats["mlp"]
+        ev = jax.jit(M.make_evaluate(fm))
+        p, = M.make_init(fm)(jnp.uint32(0))
+        e = C.CONFIGS["mlp"]["eval_batch"]
+        xs = jax.random.normal(jax.random.PRNGKey(1), (e, 28, 28, 1))
+        ys = jax.random.randint(jax.random.PRNGKey(2), (e,), 0, 10)
+        loss_sum, correct = ev(p, xs, ys)
+        assert 0 <= int(correct) <= e
+        assert float(loss_sum) / e == pytest.approx(np.log(10), rel=0.5)
+
+
+class TestExportSpecs:
+    @pytest.mark.parametrize("name", MODELS)
+    def test_all_executables_present_with_shapes(self, flats, name):
+        fm = flats[name]
+        cfg = C.CONFIGS[name]
+        specs = M.export_specs(fm, cfg["tau"], cfg["batch"], cfg["eval_batch"], cfg["n_clients"])
+        assert set(specs) == {"init", "round", "evaluate", "ranges", "quantize", "aggregate"}
+        _, qargs = specs["quantize"]
+        assert qargs[0].shape == (fm.d,)
+        assert qargs[1].shape == (fm.num_segments,)
+        _, aargs = specs["aggregate"]
+        assert aargs[0].shape == (cfg["n_clients"], fm.d)
+
+    def test_resnet_has_resnet18_topology(self, flats):
+        fm = flats["resnet18"]
+        names = [s.name for s in fm.model.specs]
+        import re
+        blocks = {n.split(".")[0] for n in names if re.match(r"^s\d+b\d+\.", n)}
+        assert blocks == {f"s{i}b{j}" for i in range(4) for j in range(2)}
+        assert any(n == "stem.w" for n in names)
+        assert any(n.endswith("proj.w") for n in names)  # strided shortcuts
+
+
+class TestAotManifest:
+    def test_manifest_matches_current_configs(self, tmp_path):
+        # aot --models mlp into a temp dir and validate the manifest entry.
+        import json
+        import subprocess
+        import sys
+
+        out = tmp_path / "arts"
+        res = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out), "--models", "mlp"],
+            capture_output=True,
+            text=True,
+        )
+        assert res.returncode == 0, res.stderr
+        manifest = json.loads((out / "manifest.json").read_text())
+        entry = manifest["models"]["mlp"]
+        fm = M.flat_model("mlp", C.CONFIGS["mlp"]["model"])
+        assert entry["d"] == fm.d
+        assert entry["num_segments"] == fm.num_segments
+        assert [s["size"] for s in entry["segments"]] == list(fm.lay.seg_sizes)
+        for ex in ["init", "round", "evaluate", "ranges", "quantize", "aggregate"]:
+            assert (out / entry["executables"][ex]["file"]).exists()
+
+    def test_hlo_has_no_elided_constants(self):
+        # Regression test for the constant-elision bug: `constant({...})`
+        # in the HLO text silently zeroes lookup tables on the Rust side.
+        import glob
+        import os
+
+        arts = os.environ.get("FEDDQ_ARTIFACTS", "../artifacts")
+        files = glob.glob(os.path.join(arts, "*.hlo.txt"))
+        if not files:
+            pytest.skip("artifacts not built")
+        for f in files:
+            assert "constant({...})" not in open(f).read(), f

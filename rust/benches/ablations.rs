@@ -1,0 +1,73 @@
+//! Ablations over FedDQ's design choices (DESIGN.md §4):
+//!   1. resolution hyper-parameter sweep (paper §IV: trade-off knob);
+//!   2. per-segment vs whole-model range granularity;
+//!   3. non-IID severity (Dirichlet alpha) — robustness of the
+//!      descending-trend schedule under heterogeneity.
+
+use feddq::bench_support as bs;
+use feddq::config::RunConfig;
+use feddq::coordinator::Session;
+use feddq::data::shard::Sharding;
+use feddq::metrics::gbits;
+use feddq::quant::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    let mut setup = bs::setup_for("mlp");
+    setup.rounds = setup.rounds.min(25);
+
+    println!("=== Ablation 1: resolution sweep (mlp, {} rounds) ===", setup.rounds);
+    println!("{:<12} {:>9} {:>11} {:>10}", "resolution", "best acc", "total Gb", "end bits");
+    for res in [0.001f32, 0.0025, 0.005, 0.01, 0.02] {
+        let rep = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: res })?;
+        println!(
+            "{:<12} {:>9.4} {:>11.4} {:>10.2}",
+            res,
+            rep.best_accuracy(),
+            gbits(rep.total_uplink_bits()),
+            rep.rounds.last().unwrap().mean_bits
+        );
+    }
+
+    println!("\n=== Ablation 2: range granularity (per-segment vs whole-model) ===");
+    // The whole-model variant applies Eq. 10 to the global update range —
+    // exercised via a custom run loop: emulate by computing with the max
+    // segment range, which the FedDq policy exposes as Granularity::Whole.
+    // (Session builds policies from PolicyConfig, so we run per-segment
+    // here and quantify the headroom from the recorded ranges.)
+    let rep = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: 0.005 })?;
+    let mut per_seg_bits = 0.0f64;
+    let mut whole_bits = 0.0f64;
+    for r in &rep.rounds {
+        per_seg_bits += r.mean_bits as f64;
+        // whole-model bits/elem = bits(max range) for every segment
+        let max_range = r.seg_ranges.iter().copied().fold(0.0f32, f32::max);
+        whole_bits += feddq::quant::math::feddq_bits(max_range, 0.005, 16) as f64;
+    }
+    let n = rep.rounds.len() as f64;
+    println!(
+        "mean bits/elem: per-segment {:.2} vs whole-model {:.2} ({:.0}% saved by per-layer ranges)",
+        per_seg_bits / n,
+        whole_bits / n,
+        100.0 * (1.0 - per_seg_bits / whole_bits)
+    );
+
+    println!("\n=== Ablation 3: non-IID severity (Dirichlet alpha) ===");
+    println!("{:<10} {:>9} {:>11} {:>10}", "alpha", "best acc", "total Gb", "end bits");
+    for alpha in [100.0f64, 1.0, 0.3, 0.1] {
+        let mut cfg = RunConfig::default_for("mlp");
+        cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
+        cfg.rounds = setup.rounds;
+        cfg.train_size = setup.train_size;
+        cfg.test_size = setup.test_size;
+        cfg.sharding = Sharding::Dirichlet { alpha };
+        let rep = Session::new(cfg)?.run()?;
+        println!(
+            "{:<10} {:>9.4} {:>11.4} {:>10.2}",
+            alpha,
+            rep.best_accuracy(),
+            gbits(rep.total_uplink_bits()),
+            rep.rounds.last().unwrap().mean_bits
+        );
+    }
+    Ok(())
+}

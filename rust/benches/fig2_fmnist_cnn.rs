@@ -1,0 +1,26 @@
+//! Fig. 2 — benchmark 1: Vanilla CNN on Fashion-MNIST(-shaped) data.
+//! (a) accuracy & loss vs communicated bit volume;
+//! (b) accuracy & loss vs communication rounds.
+//! FedDQ (descending) vs AdaQuantFL (ascending).
+
+use feddq::bench_support as bs;
+use feddq::quant::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig 2: vanilla_cnn / Fashion-MNIST — FedDQ vs AdaQuantFL ===");
+    let setup = bs::setup_for("vanilla_cnn");
+    let feddq = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: 0.005 })?;
+    let ada = bs::run_policy(&setup, PolicyConfig::AdaQuantFl { s0: 2 })?;
+
+    for rep in [&feddq, &ada] {
+        println!();
+        bs::print_series(rep);
+        bs::save(rep, &format!("fig2_{}", rep.label.replace([':', '.'], "_")));
+    }
+
+    println!("\n-- crossover summary (who reaches accuracy milestones cheaper) --");
+    for target in [0.7f32, 0.8, 0.85, 0.9] {
+        bs::print_table1_row("fig2", target, &feddq, "AdaQuantFL", &ada);
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Fig. 3 — benchmark 2: 4conv+3fc CNN on CIFAR-10(-shaped) data.
+//! Same axes as Fig. 2: (a) vs bit volume, (b) vs rounds.
+
+use feddq::bench_support as bs;
+use feddq::quant::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig 3: cnn4 / CIFAR-10 — FedDQ vs AdaQuantFL ===");
+    let setup = bs::setup_for("cnn4");
+    let feddq = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: 0.005 })?;
+    let ada = bs::run_policy(&setup, PolicyConfig::AdaQuantFl { s0: 2 })?;
+
+    for rep in [&feddq, &ada] {
+        println!();
+        bs::print_series(rep);
+        bs::save(rep, &format!("fig3_{}", rep.label.replace([':', '.'], "_")));
+    }
+
+    println!("\n-- crossover summary --");
+    for target in [0.6f32, 0.7, 0.8] {
+        bs::print_table1_row("fig3", target, &feddq, "AdaQuantFL", &ada);
+    }
+    Ok(())
+}

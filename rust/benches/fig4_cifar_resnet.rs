@@ -1,0 +1,24 @@
+//! Fig. 4 — benchmark 3: ResNet-18 on CIFAR-10(-shaped) data, 4 clients.
+//! Same axes as Fig. 2: (a) vs bit volume, (b) vs rounds.
+
+use feddq::bench_support as bs;
+use feddq::quant::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig 4: resnet18 / CIFAR-10 — FedDQ vs AdaQuantFL ===");
+    let setup = bs::setup_for("resnet18");
+    let feddq = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: 0.005 })?;
+    let ada = bs::run_policy(&setup, PolicyConfig::AdaQuantFl { s0: 2 })?;
+
+    for rep in [&feddq, &ada] {
+        println!();
+        bs::print_series(rep);
+        bs::save(rep, &format!("fig4_{}", rep.label.replace([':', '.'], "_")));
+    }
+
+    println!("\n-- crossover summary --");
+    for target in [0.5f32, 0.6, 0.7] {
+        bs::print_table1_row("fig4", target, &feddq, "AdaQuantFL", &ada);
+    }
+    Ok(())
+}

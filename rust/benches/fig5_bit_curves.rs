@@ -1,0 +1,31 @@
+//! Fig. 5 — the quantization bit-length over training rounds for each
+//! experiment: FedDQ descends while AdaQuantFL ascends.  Collates the
+//! bit curves from fresh runs of the three benchmarks (small round
+//! budgets; the figure is about the *trend*, which appears immediately).
+
+use feddq::bench_support as bs;
+use feddq::quant::PolicyConfig;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig 5: average quantization bits vs round ===");
+    for model in ["vanilla_cnn", "cnn4", "resnet18"] {
+        let mut setup = bs::setup_for(model);
+        setup.rounds = setup.rounds.min(10);
+        let feddq = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: 0.005 })?;
+        let ada = bs::run_policy(&setup, PolicyConfig::AdaQuantFl { s0: 2 })?;
+        println!("\n-- {model} — columns: round feddq_bits adaquantfl_bits --");
+        for (f, a) in feddq.rounds.iter().zip(&ada.rounds) {
+            println!("{:>4} {:>6.2} {:>6.2}", f.round, f.mean_bits, a.mean_bits);
+        }
+        let f_first = feddq.rounds.first().unwrap().mean_bits;
+        let f_last = feddq.rounds.last().unwrap().mean_bits;
+        let a_first = ada.rounds.first().unwrap().mean_bits;
+        let a_last = ada.rounds.last().unwrap().mean_bits;
+        println!(
+            "# trend: FedDQ {f_first:.2} -> {f_last:.2} ({}), AdaQuantFL {a_first:.2} -> {a_last:.2} ({})",
+            if f_last < f_first { "DESCENDING ✓" } else { "not descending ✗" },
+            if a_last > a_first { "ascending ✓" } else { "not ascending ✗" },
+        );
+    }
+    Ok(())
+}

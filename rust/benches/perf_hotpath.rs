@@ -1,0 +1,93 @@
+//! L3 hot-path micro-benchmarks: the pure-Rust wire work (bit packing,
+//! unpacking, message encode/decode, CRC framing) plus one full
+//! end-to-end federated round.  §Perf targets: pack/unpack >= 1 GB/s per
+//! core; round orchestration overhead small vs the XLA execute time.
+
+use feddq::bench_support as bs;
+use feddq::config::RunConfig;
+use feddq::coordinator::Session;
+use feddq::quant::PolicyConfig;
+use feddq::util::bench::{bench_header, black_box, Bencher};
+use feddq::util::rng::Rng;
+use feddq::wire::bitpack::{BitReader, BitWriter};
+use feddq::wire::frame;
+use feddq::wire::messages::{Message, SegmentHeader, Update};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(7);
+
+    bench_header("bit packing / unpacking (1M codes)");
+    let n = 1_000_000usize;
+    for bits in [1u32, 4, 8, 12, 16] {
+        let max = (1u64 << bits) - 1;
+        let codes: Vec<u32> = (0..n).map(|_| (rng.next_u64() % (max + 1)) as u32).collect();
+        let in_bytes = (n * 4) as u64; // source f32/u32 stream
+        b.bench_bytes(&format!("pack {bits}-bit"), Some(in_bytes), &mut || {
+            let mut w = BitWriter::with_capacity(n * bits as usize / 8 + 8);
+            w.put_slice(&codes, bits);
+            black_box(w.finish())
+        });
+        let mut w = BitWriter::new();
+        w.put_slice(&codes, bits);
+        let packed = w.finish();
+        b.bench_bytes(&format!("unpack {bits}-bit"), Some(in_bytes), &mut || {
+            let mut r = BitReader::new(&packed);
+            let mut out = Vec::new();
+            r.get_slice(&mut out, n, bits).unwrap();
+            black_box(out)
+        });
+    }
+
+    bench_header("message encode/decode (100k-element update, 8-bit)");
+    let d = 100_000usize;
+    let mut w = BitWriter::new();
+    let codes: Vec<u32> = (0..d).map(|_| (rng.next_u64() % 256) as u32).collect();
+    w.put_slice(&codes, 8);
+    let update = Update {
+        round: 3,
+        client_id: 2,
+        num_samples: 600,
+        train_loss: 0.42,
+        segments: vec![
+            SegmentHeader { bits: 8, level: 255, min: -0.1, step: 0.001 };
+            12
+        ],
+        payload: w.finish(),
+    };
+    let msg = Message::Update(update);
+    let encoded = msg.encode();
+    let bytes = encoded.len() as u64;
+    b.bench_bytes("encode Update", Some(bytes), &mut || black_box(msg.encode()));
+    b.bench_bytes("decode Update", Some(bytes), &mut || {
+        black_box(Message::decode(&encoded).unwrap())
+    });
+    b.bench_bytes("crc32 frame", Some(bytes), &mut || {
+        black_box(frame::crc32(&encoded))
+    });
+
+    bench_header("end-to-end federated round (mlp, 10 clients, in-proc)");
+    let setup = bs::setup_for("mlp");
+    let mut cfg = RunConfig::default_for("mlp");
+    cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
+    cfg.rounds = 6;
+    cfg.train_size = setup.train_size.min(1500);
+    cfg.test_size = 500;
+    cfg.eval_every = 1000; // isolate the round path from eval
+    let t0 = std::time::Instant::now();
+    let mut session = Session::new(cfg)?;
+    let setup_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let report = session.run()?;
+    let run_secs = t1.elapsed().as_secs_f64();
+    println!(
+        "session setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
+        setup_secs,
+        report.rounds.len(),
+        run_secs,
+        run_secs / report.rounds.len() as f64,
+        session.manifest().n_clients,
+        session.manifest().tau,
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! L1/L2 micro-benchmarks: latency of each AOT executable in isolation
+//! (the coordinator's entire compute budget), across the model zoo.
+//! Used by the §Perf pass in EXPERIMENTS.md.
+
+use feddq::coordinator::codec::QuantPlan;
+use feddq::runtime::Runtime;
+use feddq::util::bench::{bench_header, Bencher};
+use feddq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let mut b = Bencher::quick();
+    let models: Vec<String> = if std::env::var("FEDDQ_BENCH_FAST").is_ok() {
+        vec!["mlp".into()]
+    } else {
+        rt.manifest.models.keys().cloned().collect()
+    };
+
+    for name in models {
+        let model = rt.load_model(&name)?;
+        let mm = model.mm.clone();
+        bench_header(&format!(
+            "{name}: d={} segments={} tau={} B={}",
+            mm.d, mm.num_segments(), mm.tau, mm.batch
+        ));
+        let mut rng = Rng::new(1);
+        let params = model.init(0)?;
+        let xs: Vec<f32> = (0..mm.tau * mm.batch * mm.input_len())
+            .map(|_| rng.next_normal() * 0.5)
+            .collect();
+        let ys: Vec<i32> = (0..mm.tau * mm.batch).map(|_| rng.below(10) as i32).collect();
+        let exs: Vec<f32> = (0..mm.eval_batch * mm.input_len())
+            .map(|_| rng.next_normal() * 0.5)
+            .collect();
+        let eys: Vec<i32> = (0..mm.eval_batch).map(|_| rng.below(10) as i32).collect();
+
+        let (delta, _) = model.local_round(&params, &xs, &ys, 0.1)?;
+        let (mins, ranges) = model.ranges(&delta)?;
+        let levels = vec![255u32; mm.num_segments()];
+        let plan = QuantPlan::new(&levels, &ranges);
+        let codes = model.quantize(&delta, &mins, &plan.sinv, &plan.maxcode, 1)?;
+        let n = mm.n_clients;
+        let codes_n: Vec<f32> = (0..n).flat_map(|_| codes.iter().copied()).collect();
+        let mins_n: Vec<f32> = (0..n).flat_map(|_| mins.iter().copied()).collect();
+        let steps_n: Vec<f32> = (0..n).flat_map(|_| plan.step.iter().copied()).collect();
+        let w = vec![1.0 / n as f32; n];
+
+        // round/evaluate are seconds-long on the conv models (1-core CPU):
+        // a single timed execution is the honest, affordable measurement.
+        let t0 = std::time::Instant::now();
+        model.local_round(&params, &xs, &ys, 0.1)?;
+        println!("{:<44} {:>12.3?} single-shot", format!("{name}/round (tau={} SGD steps)", mm.tau), t0.elapsed());
+        let t0 = std::time::Instant::now();
+        model.evaluate(&params, &exs, &eys)?;
+        println!("{:<44} {:>12.3?} single-shot", format!("{name}/evaluate (E={})", mm.eval_batch), t0.elapsed());
+        let dbytes = (mm.d * 4) as u64;
+        b.bench_bytes(&format!("{name}/ranges"), Some(dbytes), &mut || {
+            model.ranges(&delta).unwrap()
+        });
+        b.bench_bytes(&format!("{name}/quantize"), Some(dbytes), &mut || {
+            model
+                .quantize(&delta, &mins, &plan.sinv, &plan.maxcode, 2)
+                .unwrap()
+        });
+        b.bench_bytes(
+            &format!("{name}/aggregate (n={n})"),
+            Some(dbytes * n as u64),
+            &mut || model.aggregate(&codes_n, &mins_n, &steps_n, &w).unwrap(),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table I — performance improvement summary: communicated bits (Gb) and
+//! communication rounds needed to hit a target test accuracy, FedDQ vs
+//! AdaQuantFL, across the three paper benchmarks, with reduction ratios.
+//!
+//! Paper values (their testbed): −65.2%/−20.0%/−60.9% bits and
+//! −57%/−41.5%/−68% rounds.  Our substrate differs (CPU XLA, synthetic
+//! data, CPU-scaled widths), so the *sign and rough magnitude* of the
+//! reductions is the reproduction target, not the absolute numbers.
+
+use feddq::bench_support as bs;
+use feddq::metrics::gbits;
+use feddq::quant::PolicyConfig;
+
+struct Row {
+    bench: &'static str,
+    model: &'static str,
+    /// Target ladder: the row reports the highest accuracy level that
+    /// BOTH policies reach within the round budget (robust on a scaled
+    /// substrate where the paper's absolute accuracies don't transfer).
+    targets: &'static [f32],
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table I: FedDQ vs AdaQuantFL — bits & rounds to target accuracy ===");
+    // Accuracy targets chosen near each benchmark's convergence plateau on
+    // this substrate (paper used 91% / 62% / 72% on the real datasets).
+    let rows = [
+        Row { bench: "1: FMNIST/CNN", model: "vanilla_cnn", targets: &[0.92, 0.90, 0.85, 0.80] },
+        Row { bench: "2: CIFAR/cnn4", model: "cnn4", targets: &[0.80, 0.75, 0.70, 0.60] },
+        Row { bench: "3: CIFAR/rn18", model: "resnet18", targets: &[0.70, 0.60, 0.50, 0.40] },
+    ];
+
+    println!(
+        "{:<16} {:>7} | {:>12} {:>8} | {:>12} {:>8} | {:>9} {:>9}",
+        "benchmark", "target", "AdaQ Gb", "rounds", "FedDQ Gb", "rounds", "bits red", "rnds red"
+    );
+    for row in rows {
+        let mut setup = bs::setup_for(row.model);
+        // table budgets slightly below the figure budgets: the ladder
+        // reports the milestone both policies reach within them
+        setup.rounds = match row.model {
+            "vanilla_cnn" => setup.rounds.min(30),
+            "cnn4" => setup.rounds.min(20),
+            _ => setup.rounds.min(10),
+        };
+        let feddq = bs::run_policy(&setup, PolicyConfig::FedDq { resolution: 0.005 })?;
+        let ada = bs::run_policy(&setup, PolicyConfig::AdaQuantFl { s0: 2 })?;
+        let hit = row.targets.iter().find_map(|&t| {
+            match (feddq.rounds_to_accuracy(t), ada.rounds_to_accuracy(t)) {
+                (Some(f), Some(a)) => Some((t, f, a)),
+                _ => None,
+            }
+        });
+        match hit {
+            Some((target, (fr, fb), (ar, ab))) => {
+                println!(
+                    "{:<16} {:>6.0}% | {:>12.4} {:>8} | {:>12.4} {:>8} | {:>8.1}% {:>8.1}%",
+                    row.bench,
+                    target * 100.0,
+                    gbits(ab),
+                    ar,
+                    gbits(fb),
+                    fr,
+                    100.0 * (1.0 - fb as f64 / ab as f64),
+                    100.0 * (1.0 - fr as f64 / ar as f64),
+                );
+            }
+            None => {
+                println!(
+                    "{:<16}        | no common target reached (feddq best {:.3}, ada best {:.3}) — raise FEDDQ_BENCH_ROUNDS",
+                    row.bench,
+                    feddq.best_accuracy(),
+                    ada.best_accuracy()
+                );
+            }
+        }
+    }
+    println!("\npaper (real datasets): bits −65.2% / −20.0% / −60.9%; rounds −57% / −41.5% / −68%");
+    Ok(())
+}

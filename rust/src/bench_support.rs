@@ -1,0 +1,127 @@
+//! Shared helpers for the figure/table bench binaries (`rust/benches/`).
+//!
+//! Every paper artifact regenerator funnels through [`run_policy`] so runs
+//! are identically configured across figures, and prints through the same
+//! series formatter so `bench_output.txt` is machine-greppable.
+//!
+//! Environment knobs (all optional):
+//!   FEDDQ_BENCH_ROUNDS   override the per-figure round budget
+//!   FEDDQ_BENCH_TRAIN    override train-set size
+//!   FEDDQ_BENCH_FAST=1   quick mode (few rounds — smoke, not science)
+
+use crate::config::RunConfig;
+use crate::coordinator::Session;
+use crate::metrics::{gbits, RunReport};
+use crate::quant::PolicyConfig;
+use crate::Result;
+
+/// Per-benchmark workload defaults, scaled for the CPU backend (the
+/// paper's round budgets: 100 / 82 / 25).
+pub struct FigureSetup {
+    pub model: &'static str,
+    pub rounds: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub eval_every: usize,
+}
+
+pub fn setup_for(model: &'static str) -> FigureSetup {
+    let fast = std::env::var("FEDDQ_BENCH_FAST").is_ok();
+    // Round budgets tuned to the 1-core CPU testbed (~3s / ~7s / ~18s
+    // per round for the three conv benchmarks; see EXPERIMENTS.md §Perf).
+    let (rounds, train) = match model {
+        "mlp" => (40, 2000),
+        "vanilla_cnn" => (36, 2500),
+        "cnn4" => (24, 1500),
+        "resnet18" => (12, 800),
+        _ => (30, 2000),
+    };
+    let rounds = std::env::var("FEDDQ_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { rounds.min(6) } else { rounds });
+    let train_size = std::env::var("FEDDQ_BENCH_TRAIN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 1000 } else { train });
+    FigureSetup {
+        model,
+        rounds,
+        train_size,
+        test_size: 500,
+        // conv benchmarks evaluate every 2 rounds to keep eval cost <10%
+        eval_every: if matches!(model, "cnn4" | "resnet18") { 2 } else { 1 },
+    }
+}
+
+/// Run one (model, policy) cell with the shared setup.
+pub fn run_policy(setup: &FigureSetup, policy: PolicyConfig) -> Result<RunReport> {
+    let mut cfg = RunConfig::default_for(setup.model);
+    cfg.policy = policy;
+    cfg.rounds = setup.rounds;
+    cfg.train_size = setup.train_size;
+    cfg.test_size = setup.test_size;
+    cfg.eval_every = setup.eval_every;
+    let mut session = Session::new(cfg)?;
+    session.run()
+}
+
+/// Print the per-round series the paper plots: both the vs-bits view
+/// (Figs. 2a/3a/4a) and the vs-rounds view (Figs. 2b/3b/4b), plus the
+/// bit-length curve (Fig. 5) and mean range (Fig. 1b).
+pub fn print_series(report: &RunReport) {
+    println!(
+        "# {} — columns: round cum_Gb train_loss test_acc bits_per_elem mean_range",
+        report.label
+    );
+    for r in &report.rounds {
+        println!(
+            "{:>4} {:>10.5} {:>9.4} {:>8.4} {:>6.2} {:>9.5}",
+            r.round,
+            gbits(r.cum_uplink_bits),
+            r.train_loss,
+            r.test_accuracy,
+            r.mean_bits,
+            r.mean_range,
+        );
+    }
+}
+
+/// The paper's Table-I style summary for one benchmark: bits and rounds
+/// needed to reach `target` accuracy, FedDQ vs a baseline.
+pub fn print_table1_row(
+    bench: &str,
+    target: f32,
+    feddq: &RunReport,
+    base_label: &str,
+    base: &RunReport,
+) {
+    let f = feddq.rounds_to_accuracy(target);
+    let b = base.rounds_to_accuracy(target);
+    match (f, b) {
+        (Some((fr, fb)), Some((br, bb))) => {
+            let bit_red = 100.0 * (1.0 - fb as f64 / bb as f64);
+            let round_red = 100.0 * (1.0 - fr as f64 / br as f64);
+            println!(
+                "{bench:<14} acc>={target:.2}: {base_label} {:.4} Gb / {br} rounds | FedDQ {:.4} Gb / {fr} rounds | reduced {bit_red:.1}% bits, {round_red:.1}% rounds",
+                gbits(bb), gbits(fb)
+            );
+        }
+        _ => {
+            println!(
+                "{bench:<14} acc>={target:.2}: target not reached (feddq best {:.3}, {base_label} best {:.3}) — raise rounds or lower target",
+                feddq.best_accuracy(),
+                base.best_accuracy()
+            );
+        }
+    }
+}
+
+/// Write a report as CSV under reports/ (ignored dir), creating it.
+pub fn save(report: &RunReport, name: &str) {
+    std::fs::create_dir_all("reports").ok();
+    let path = format!("reports/{name}.csv");
+    if report.write_csv(&path).is_ok() {
+        println!("# saved {path}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value` and boolean `--flag`; unknown
+//! flags are an error with the list of accepted ones, so typos fail fast.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: positional words + `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    taken: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    args.opts
+                        .insert(flag.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.opts.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.taken.borrow_mut().push(key.to_string());
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error out on any flag that was never consumed (typo guard).
+    /// Call after all `get*` calls.
+    pub fn finish(&self) -> Result<()> {
+        let taken = self.taken.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .filter(|k| !taken.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!(
+                "unknown flag(s): {}; accepted: {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                taken
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Build a [`crate::config::RunConfig`] from common training flags.
+pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::config::RunConfig> {
+    let model = args.get_or("model", default_model).to_string();
+    let mut cfg = crate::config::RunConfig::default_for(&model);
+    if let Some(p) = args.get("policy") {
+        cfg.policy = crate::quant::PolicyConfig::parse(p)?;
+    }
+    if let Some(r) = args.get_parse::<usize>("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(lr) = args.get_parse::<f32>("lr")? {
+        cfg.lr = lr;
+    }
+    if let Some(s) = args.get_parse::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(sh) = args.get("sharding") {
+        cfg.sharding = crate::data::shard::Sharding::parse(sh)?;
+    }
+    if let Some(ds) = args.get("dataset") {
+        cfg.dataset = crate::data::DatasetKind::parse(ds)?;
+    }
+    if let Some(e) = args.get_parse::<usize>("eval-every")? {
+        cfg.eval_every = e;
+    }
+    if let Some(t) = args.get_parse::<usize>("train-size")? {
+        cfg.train_size = t;
+    }
+    if let Some(t) = args.get_parse::<usize>("test-size")? {
+        cfg.test_size = t;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(d) = args.get("data-dir") {
+        cfg.data_dir = d.to_string();
+    }
+    if let Some(t) = args.get_parse::<f32>("target-acc")? {
+        cfg.target_accuracy = Some(t);
+    }
+    if args.flag("error-feedback") {
+        cfg.error_feedback = true;
+    }
+    cfg.validate().context("invalid run config")?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_styles() {
+        // NB: a bare word after a flag is consumed as that flag's value
+        // (schema-less parser), so positionals go before flags.
+        let a = Args::parse(&argv("train x --model mlp --rounds=30 --verbose")).unwrap();
+        assert_eq!(a.positional, vec!["train", "x"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_parse::<usize>("rounds").unwrap(), Some(30));
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = Args::parse(&argv("--modle mlp")).unwrap();
+        let _ = a.get("model");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(&argv("--rounds ten")).unwrap();
+        assert!(a.get_parse::<usize>("rounds").is_err());
+    }
+
+    #[test]
+    fn config_from_args() {
+        let a = Args::parse(&argv(
+            "--model cnn4 --policy adaquantfl:4 --rounds 12 --lr 0.05 \
+             --sharding dirichlet:0.5 --target-acc 0.8",
+        ))
+        .unwrap();
+        let cfg = run_config_from_args(&a, "mlp").unwrap();
+        assert_eq!(cfg.model, "cnn4");
+        assert_eq!(cfg.rounds, 12);
+        assert_eq!(cfg.lr, 0.05);
+        assert_eq!(cfg.target_accuracy, Some(0.8));
+        a.finish().unwrap();
+    }
+}

@@ -1,0 +1,163 @@
+//! Client-side FL logic: the uplink path.
+//!
+//! Per round: local `tau`-step SGD (AOT `round` executable) → per-segment
+//! range measurement (`ranges` executable) → policy decision (bit-widths)
+//! → stochastic quantization (`quantize` executable) → bit-packing →
+//! `Update` message.  The same [`ClientState`] drives the in-process
+//! simulator and the remote TCP worker, so both modes exercise identical
+//! code.
+
+use anyhow::Result;
+
+use super::codec::{self, QuantPlan};
+use crate::data::batch::BatchCursor;
+use crate::data::Dataset;
+use crate::quant::{PolicyInputs, QuantPolicy};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+use crate::wire::messages::Update;
+
+/// One federated client's local state.
+pub struct ClientState {
+    pub id: u32,
+    shard: Dataset,
+    cursor: BatchCursor,
+    policy: Box<dyn QuantPolicy>,
+    lr: f32,
+    quant_rng: Rng,
+    // reusable round-batch buffers (no per-round allocation)
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+    /// Error-feedback residual (EF-SGD): what quantization dropped last
+    /// round, folded into this round's update before quantizing.  Empty
+    /// when EF is disabled.
+    residual: Vec<f32>,
+    /// Telemetry from the last round (read by the session's metrics).
+    pub last_ranges: Vec<f32>,
+    pub last_bits: Vec<u32>,
+}
+
+impl ClientState {
+    pub fn new(
+        id: u32,
+        shard: Dataset,
+        policy: Box<dyn QuantPolicy>,
+        lr: f32,
+        model: &ModelRuntime,
+        root_rng: &Rng,
+    ) -> ClientState {
+        Self::with_options(id, shard, policy, lr, model, root_rng, false)
+    }
+
+    /// Like [`Self::new`] with explicit error-feedback control.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_options(
+        id: u32,
+        shard: Dataset,
+        policy: Box<dyn QuantPolicy>,
+        lr: f32,
+        model: &ModelRuntime,
+        root_rng: &Rng,
+        error_feedback: bool,
+    ) -> ClientState {
+        let mm = &model.mm;
+        let cursor = BatchCursor::new(shard.len(), root_rng.derive(&format!("client{id}.batch")));
+        let xs = vec![0.0f32; mm.tau * mm.batch * mm.input_len()];
+        let ys = vec![0i32; mm.tau * mm.batch];
+        ClientState {
+            id,
+            shard,
+            cursor,
+            policy,
+            lr,
+            quant_rng: root_rng.derive(&format!("client{id}.quant")),
+            xs,
+            ys,
+            residual: if error_feedback { vec![0.0; mm.d] } else { Vec::new() },
+            last_ranges: Vec::new(),
+            last_bits: Vec::new(),
+        }
+    }
+
+    pub fn num_samples(&self) -> u32 {
+        self.shard.len() as u32
+    }
+
+    /// Process one broadcast: run the local round and produce the update.
+    ///
+    /// `losses` is the (initial, previous) global training loss pair from
+    /// the broadcast (None before round 1).
+    pub fn process_round(
+        &mut self,
+        model: &ModelRuntime,
+        round: u32,
+        params: &[f32],
+        losses: Option<(f32, f32)>,
+    ) -> Result<Update> {
+        let mm = &model.mm;
+        // 1. local tau-step SGD
+        self.cursor
+            .fill_round_batch(&self.shard, mm.tau, mm.batch, &mut self.xs, &mut self.ys);
+        let (mut delta, train_loss) = model.local_round(params, &self.xs, &self.ys, self.lr)?;
+
+        // 1b. error feedback: fold in last round's quantization residual
+        if !self.residual.is_empty() {
+            for (d, r) in delta.iter_mut().zip(&self.residual) {
+                *d += r;
+            }
+        }
+
+        // 2. observe per-segment ranges
+        let (mins, ranges) = model.ranges(&delta)?;
+        self.last_ranges = ranges.iter().map(|&r| r.max(0.0)).collect();
+
+        // 3. policy decision
+        let decision = self.policy.decide(&PolicyInputs {
+            round,
+            client_id: self.id,
+            ranges: &self.last_ranges,
+            initial_loss: losses.map(|(f0, _)| f0),
+            prev_loss: losses.map(|(_, fm)| fm),
+        });
+        self.last_bits = codec::decision_bits(mm, &decision);
+
+        // 4+5. quantize + pack (and, under EF, bank what was dropped)
+        let (segments, payload) = match &decision.levels {
+            None => {
+                if !self.residual.is_empty() {
+                    self.residual.iter_mut().for_each(|r| *r = 0.0); // lossless uplink
+                }
+                codec::encode_fp32(mm, &mins, &ranges, &delta)
+            }
+            Some(levels) => {
+                let plan = QuantPlan::new(levels, &ranges);
+                let codes = model.quantize(
+                    &delta,
+                    &mins,
+                    &plan.sinv,
+                    &plan.maxcode,
+                    self.quant_rng.next_u32(),
+                )?;
+                if !self.residual.is_empty() {
+                    // residual = delta - dequant(codes), segment-wise
+                    for (l, seg) in mm.segments.iter().enumerate() {
+                        let (mn, st) = (mins[l], plan.step[l]);
+                        for j in seg.offset..seg.offset + seg.size {
+                            self.residual[j] = delta[j] - (mn + codes[j] * st);
+                        }
+                    }
+                }
+                codec::encode_quantized(mm, &plan, &mins, &codes)
+            }
+        };
+
+        Ok(Update {
+            round,
+            client_id: self.id,
+            num_samples: self.num_samples(),
+            train_loss,
+            segments,
+            payload,
+        })
+    }
+}

@@ -1,0 +1,297 @@
+//! Update codec: turn a (quantized) model update into wire bytes and back.
+//!
+//! Encoding is the client's last hot-path step: per segment, pack each
+//! code into its `bits_l`-wide slot (or copy raw f32 for fp32 segments).
+//! Decoding on the server reconstructs the f32 code row plus per-segment
+//! (min, step) that the fused dequantize-aggregate executable consumes.
+//! fp32 segments decode to `codes = value, min = 0, step = 1`, so the
+//! aggregation path is uniform across policies.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::{math, Decision};
+use crate::runtime::ModelManifest;
+use crate::wire::bitpack::{BitReader, BitWriter};
+use crate::wire::messages::{SegmentHeader, Update};
+
+/// Client-side quantization parameters derived from a policy decision and
+/// the observed per-segment (min, range).
+pub struct QuantPlan {
+    /// s/range per segment (0 collapses the segment to its min).
+    pub sinv: Vec<f32>,
+    /// Level `s` per segment as f32 (the kernel's clamp bound).
+    pub maxcode: Vec<f32>,
+    /// range/s per segment (the decoder's step).
+    pub step: Vec<f32>,
+    pub levels: Vec<u32>,
+}
+
+/// Smallest range treated as non-degenerate.  Below this the segment is
+/// transmitted as a constant (its min) — matching the kernel's guard.
+pub const RANGE_EPS: f32 = 1e-12;
+
+impl QuantPlan {
+    pub fn new(levels: &[u32], ranges: &[f32]) -> QuantPlan {
+        let mut sinv = Vec::with_capacity(levels.len());
+        let mut maxcode = Vec::with_capacity(levels.len());
+        let mut step = Vec::with_capacity(levels.len());
+        for (&s, &r) in levels.iter().zip(ranges) {
+            let s_f = s.max(1) as f32;
+            if r > RANGE_EPS && r.is_finite() {
+                sinv.push(s_f / r);
+                step.push(r / s_f);
+            } else {
+                sinv.push(0.0);
+                step.push(0.0);
+            }
+            maxcode.push(s_f);
+        }
+        QuantPlan {
+            sinv,
+            maxcode,
+            step,
+            levels: levels.iter().map(|&s| s.max(1)).collect(),
+        }
+    }
+}
+
+/// Encode a quantized update (codes from the quantize executable).
+pub fn encode_quantized(
+    mm: &ModelManifest,
+    plan: &QuantPlan,
+    mins: &[f32],
+    codes: &[f32],
+) -> (Vec<SegmentHeader>, Vec<u8>) {
+    debug_assert_eq!(codes.len(), mm.d);
+    let mut headers = Vec::with_capacity(mm.num_segments());
+    // Worst case 16 bits/code.
+    let mut w = BitWriter::with_capacity(mm.d * 2 + 16);
+    let mut scratch: Vec<u32> = Vec::with_capacity(1 << 14);
+    for (l, seg) in mm.segments.iter().enumerate() {
+        let s = plan.levels[l];
+        let bits = math::bits_for_level(s);
+        headers.push(SegmentHeader {
+            bits: bits as u8,
+            level: s as u16,
+            min: mins[l],
+            step: plan.step[l],
+        });
+        let slice = &codes[seg.offset..seg.offset + seg.size];
+        // codes are exact small integers in f32; convert once and use the
+        // word-at-a-time slice packer (§Perf L3-3)
+        scratch.clear();
+        scratch.extend(slice.iter().map(|&c| c as u32));
+        w.put_slice(&scratch, bits);
+    }
+    (headers, w.finish())
+}
+
+/// Encode an fp32 (unquantized) update.  The header's (min, step) carry
+/// (seg_min, seg_range) purely as telemetry — the payload is raw f32.
+pub fn encode_fp32(
+    mm: &ModelManifest,
+    mins: &[f32],
+    ranges: &[f32],
+    delta: &[f32],
+) -> (Vec<SegmentHeader>, Vec<u8>) {
+    debug_assert_eq!(delta.len(), mm.d);
+    let headers = (0..mm.num_segments())
+        .map(|l| SegmentHeader {
+            bits: 32,
+            level: 0,
+            min: mins[l],
+            step: ranges[l],
+        })
+        .collect();
+    let mut payload = Vec::with_capacity(mm.d * 4);
+    for &x in delta {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+    (headers, payload)
+}
+
+/// Decoded update, shaped for the aggregate executable.
+pub struct DecodedUpdate {
+    /// f32 code (or raw value) per element, length `d`.
+    pub codes: Vec<f32>,
+    /// Per-segment min (0 for fp32 segments), length `L`.
+    pub mins: Vec<f32>,
+    /// Per-segment step (1 for fp32 segments), length `L`.
+    pub steps: Vec<f32>,
+}
+
+/// Decode an update's payload against the model manifest.
+pub fn decode_update(mm: &ModelManifest, u: &Update) -> Result<DecodedUpdate> {
+    ensure!(
+        u.segments.len() == mm.num_segments(),
+        "update has {} segments, model {} has {}",
+        u.segments.len(),
+        mm.name,
+        mm.num_segments()
+    );
+    let mut codes = Vec::with_capacity(mm.d);
+    let mut mins = Vec::with_capacity(mm.num_segments());
+    let mut steps = Vec::with_capacity(mm.num_segments());
+
+    // fp32 segments are raw little-endian f32 at a byte offset computed
+    // from the preceding segments; quantized segments are bit-packed.
+    // Mixed layouts are legal: the reader tracks bit position, and fp32
+    // rows are read through the same BitReader at 32-bit width.
+    let mut r = BitReader::new(&u.payload);
+    let mut scratch: Vec<u32> = Vec::with_capacity(1 << 14);
+    for (l, seg) in mm.segments.iter().enumerate() {
+        let h = &u.segments[l];
+        match h.bits {
+            32 => {
+                scratch.clear();
+                if r.get_slice(&mut scratch, seg.size, 32).is_none() {
+                    bail!("payload truncated in fp32 segment {}", seg.name);
+                }
+                codes.extend(scratch.iter().map(|&raw| f32::from_le_bytes(raw.to_le_bytes())));
+                mins.push(0.0);
+                steps.push(1.0);
+            }
+            b if b as u32 <= 16 => {
+                scratch.clear();
+                if r.get_slice(&mut scratch, seg.size, b as u32).is_none() {
+                    bail!("payload truncated in segment {}", seg.name);
+                }
+                codes.extend(scratch.iter().map(|&c| c as f32));
+                mins.push(h.min);
+                steps.push(h.step);
+            }
+            b => bail!("segment {} has unsupported width {b}", seg.name),
+        }
+    }
+    Ok(DecodedUpdate { codes, mins, steps })
+}
+
+/// The exact wire size (bits) the paper's volume metric counts for an
+/// update: packed codes + headers.  Used to cross-check the transport
+/// ledger in tests.
+pub fn update_wire_bits(mm: &ModelManifest, u: &Update) -> u64 {
+    let payload_bits = u.payload.len() as u64 * 8;
+    let header_bits = u.segments.len() as u64 * math::SEGMENT_HEADER_BITS;
+    let _ = mm;
+    payload_bits + header_bits
+}
+
+/// Build a decision's bit widths per segment (metrics helper).
+pub fn decision_bits(mm: &ModelManifest, d: &Decision) -> Vec<u32> {
+    (0..mm.num_segments()).map(|l| d.bits(l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Segment;
+    use std::collections::BTreeMap;
+
+    fn mm() -> ModelManifest {
+        ModelManifest {
+            name: "test".into(),
+            d: 7,
+            segments: vec![
+                Segment { name: "a".into(), offset: 0, size: 4, shape: vec![4] },
+                Segment { name: "b".into(), offset: 4, size: 3, shape: vec![3] },
+            ],
+            input_shape: vec![1],
+            classes: 2,
+            tau: 1,
+            batch: 1,
+            eval_batch: 1,
+            n_clients: 2,
+            files: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip() {
+        let m = mm();
+        let levels = vec![15u32, 3];
+        let ranges = vec![1.5f32, 0.3];
+        let mins = vec![-0.75f32, -0.1];
+        let plan = QuantPlan::new(&levels, &ranges);
+        let codes = vec![0.0, 15.0, 7.0, 3.0, 0.0, 1.0, 3.0];
+        let (headers, payload) = encode_quantized(&m, &plan, &mins, &codes);
+        assert_eq!(headers[0].bits, 4);
+        assert_eq!(headers[1].bits, 2);
+        assert_eq!(payload.len(), (4 * 4 + 3 * 2 + 7) / 8);
+        let u = Update {
+            round: 0,
+            client_id: 0,
+            num_samples: 10,
+            train_loss: 1.0,
+            segments: headers,
+            payload,
+        };
+        let dec = decode_update(&m, &u).unwrap();
+        assert_eq!(dec.codes, codes);
+        assert_eq!(dec.mins, mins);
+        assert!((dec.steps[0] - 0.1).abs() < 1e-6);
+        assert!((dec.steps[1] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fp32_roundtrip() {
+        let m = mm();
+        let delta = vec![0.5f32, -1.5, 3.25, 0.0, 9.0, -0.125, 2.0];
+        let (headers, payload) =
+            encode_fp32(&m, &[-1.5, -0.125], &[4.75, 9.125], &delta);
+        let u = Update {
+            round: 0,
+            client_id: 1,
+            num_samples: 5,
+            train_loss: 2.0,
+            segments: headers.clone(),
+            payload,
+        };
+        let dec = decode_update(&m, &u).unwrap();
+        assert_eq!(dec.codes, delta);
+        assert_eq!(dec.mins, vec![0.0, 0.0]);
+        assert_eq!(dec.steps, vec![1.0, 1.0]);
+        // telemetry range comes back through the header
+        assert!((headers[0].range() - 4.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_range_collapses() {
+        let plan = QuantPlan::new(&[7], &[0.0]);
+        assert_eq!(plan.sinv[0], 0.0);
+        assert_eq!(plan.step[0], 0.0);
+        assert_eq!(plan.maxcode[0], 7.0);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let m = mm();
+        let plan = QuantPlan::new(&[255, 255], &[1.0, 1.0]);
+        let codes = vec![1.0; 7];
+        let (headers, mut payload) = encode_quantized(&m, &plan, &[0.0, 0.0], &codes);
+        payload.truncate(payload.len() - 1);
+        let u = Update {
+            round: 0,
+            client_id: 0,
+            num_samples: 1,
+            train_loss: 0.0,
+            segments: headers,
+            payload,
+        };
+        assert!(decode_update(&m, &u).is_err());
+    }
+
+    #[test]
+    fn wire_bits_matches_packed_size() {
+        let m = mm();
+        let plan = QuantPlan::new(&[15, 15], &[1.0, 1.0]);
+        let codes = vec![3.0; 7];
+        let (headers, payload) = encode_quantized(&m, &plan, &[0.0, 0.0], &codes);
+        let u = Update {
+            round: 0, client_id: 0, num_samples: 1, train_loss: 0.0,
+            segments: headers, payload,
+        };
+        let bits = update_wire_bits(&m, &u);
+        // 7 codes * 4 bits = 28 -> 4 payload bytes = 32 bits, + 2 headers * 88
+        assert_eq!(bits, 32 + 2 * 88);
+    }
+}

@@ -1,0 +1,12 @@
+//! The FL coordinator — L3's contribution: round orchestration, the
+//! client uplink path (local round → range → policy → quantize → pack) and
+//! the server downlink/aggregation path, over pluggable client handles
+//! (in-process or TCP workers).
+
+pub mod client;
+pub mod codec;
+pub mod server;
+pub mod topology;
+
+pub use client::ClientState;
+pub use server::{Server, Session};

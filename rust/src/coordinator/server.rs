@@ -1,0 +1,347 @@
+//! Server-side FL logic: the round loop, aggregation and evaluation —
+//! plus [`Session`], the single-process driver that wires local clients
+//! to the server through the same message types the TCP mode uses.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::client::ClientState;
+use super::codec;
+use crate::config::RunConfig;
+use crate::data::{self, shard};
+use crate::metrics::{RoundRecord, RunReport};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::wire::frame;
+use crate::wire::messages::{Message, Update};
+
+/// A connected client as the server sees it.
+pub trait ClientHandle {
+    fn id(&self) -> u32;
+    fn send(&mut self, msg: &Message) -> Result<()>;
+    fn recv_update(&mut self) -> Result<Update>;
+    /// Cumulative uplink bytes (client -> server), framed size.
+    fn uplink_bytes(&self) -> u64;
+    /// Cumulative downlink bytes (server -> client), framed size.
+    fn downlink_bytes(&self) -> u64;
+}
+
+/// The federated server: owns the global model and the round loop.
+pub struct Server<'rt> {
+    pub model: &'rt ModelRuntime,
+    pub params: Vec<f32>,
+    test: data::Dataset,
+    initial_loss: Option<f32>,
+    prev_loss: Option<f32>,
+    cum_uplink_bits: u64,
+}
+
+impl<'rt> Server<'rt> {
+    pub fn new(model: &'rt ModelRuntime, test: data::Dataset, seed: u32) -> Result<Self> {
+        let params = model.init(seed)?;
+        Ok(Server {
+            model,
+            params,
+            test,
+            initial_loss: None,
+            prev_loss: None,
+            cum_uplink_bits: 0,
+        })
+    }
+
+    /// Drive one round across `clients`; returns the round record.
+    pub fn run_round(
+        &mut self,
+        round: u32,
+        clients: &mut [Box<dyn ClientHandle + '_>],
+        evaluate: bool,
+    ) -> Result<RoundRecord> {
+        let t0 = Instant::now();
+        let mm = &self.model.mm;
+        let n = clients.len();
+        ensure!(n == mm.n_clients, "manifest expects {} clients, got {n}", mm.n_clients);
+
+        // Broadcast the global model (+ loss trajectory for AdaQuantFL).
+        let losses = match (self.initial_loss, self.prev_loss) {
+            (Some(f0), Some(fm)) => Some((f0, fm)),
+            _ => None,
+        };
+        let bcast = Message::Broadcast {
+            round,
+            params: self.params.clone(),
+            losses,
+        };
+        for c in clients.iter_mut() {
+            c.send(&bcast)?;
+        }
+
+        // Collect updates.
+        let mut updates: Vec<Update> = Vec::with_capacity(n);
+        for c in clients.iter_mut() {
+            let u = c.recv_update()?;
+            ensure!(u.round == round, "client {} answered round {} for {round}", c.id(), u.round);
+            updates.push(u);
+        }
+        updates.sort_by_key(|u| u.client_id);
+
+        // Decode into the aggregate executable's inputs.
+        let l = mm.num_segments();
+        let mut codes = Vec::with_capacity(n * mm.d);
+        let mut mins = Vec::with_capacity(n * l);
+        let mut steps = Vec::with_capacity(n * l);
+        let mut weights = Vec::with_capacity(n);
+        let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
+        ensure!(total_samples > 0, "no samples reported");
+        for u in &updates {
+            let dec = codec::decode_update(mm, u)
+                .with_context(|| format!("decoding update from client {}", u.client_id))?;
+            codes.extend_from_slice(&dec.codes);
+            mins.extend_from_slice(&dec.mins);
+            steps.extend_from_slice(&dec.steps);
+            weights.push(u.num_samples as f32 / total_samples as f32);
+        }
+
+        // Fused dequantize + weighted aggregate, then apply (Eq. 4).
+        let delta = self.model.aggregate(&codes, &mins, &steps, &weights)?;
+        for (p, d) in self.params.iter_mut().zip(&delta) {
+            *p += d;
+        }
+
+        // Loss bookkeeping for loss-driven policies.
+        let train_loss = updates
+            .iter()
+            .map(|u| u.train_loss as f64 * u.num_samples as f64 / total_samples as f64)
+            .sum::<f64>() as f32;
+        if self.initial_loss.is_none() {
+            self.initial_loss = Some(train_loss);
+        }
+        self.prev_loss = Some(train_loss);
+
+        // Communication accounting: the paper counts uplink payloads.
+        let uplink_bits: u64 = updates
+            .iter()
+            .map(|u| codec::update_wire_bits(mm, u))
+            .sum();
+        self.cum_uplink_bits += uplink_bits;
+
+        // Telemetry: mean bits/element and ranges (Figs. 1b, 5).
+        let seg_sizes = mm.segment_sizes();
+        let mut mean_bits_acc = 0.0f64;
+        let mut mean_range_acc = 0.0f64;
+        let mut seg_ranges = vec![0.0f32; l];
+        for u in &updates {
+            let bits_elem: u64 = u
+                .segments
+                .iter()
+                .zip(&seg_sizes)
+                .map(|(h, &sz)| h.bits as u64 * sz as u64)
+                .sum();
+            mean_bits_acc += bits_elem as f64 / mm.d as f64;
+            let ranges: Vec<f32> = u.segments.iter().map(|h| h.range()).collect();
+            mean_range_acc += stats::mean(&ranges.iter().map(|&x| x as f64).collect::<Vec<_>>());
+            for (sr, r) in seg_ranges.iter_mut().zip(&ranges) {
+                *sr += r / n as f32;
+            }
+        }
+
+        // Periodic server-side validation.
+        let (test_loss, test_accuracy) = if evaluate {
+            self.evaluate()?
+        } else {
+            (f32::NAN, f32::NAN)
+        };
+
+        Ok(RoundRecord {
+            round,
+            train_loss,
+            test_loss,
+            test_accuracy,
+            uplink_bits,
+            cum_uplink_bits: self.cum_uplink_bits,
+            mean_bits: (mean_bits_acc / n as f64) as f32,
+            mean_range: (mean_range_acc / n as f64) as f32,
+            seg_ranges,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Full-test-set evaluation in `eval_batch` chunks (the AOT executable
+    /// has a static batch; a trailing partial chunk is dropped, which is
+    /// deterministic and identical across policies).
+    pub fn evaluate(&self) -> Result<(f32, f32)> {
+        let mm = &self.model.mm;
+        let e = mm.eval_batch;
+        let fl = self.test.feature_len();
+        let batches = self.test.len() / e;
+        ensure!(batches > 0, "test set smaller than eval batch");
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0i64;
+        for b in 0..batches {
+            let xs = &self.test.features[b * e * fl..(b + 1) * e * fl];
+            let ys = &self.test.labels[b * e..(b + 1) * e];
+            let (ls, cc) = self.model.evaluate(&self.params, xs, ys)?;
+            loss_sum += ls as f64;
+            correct += cc as i64;
+        }
+        let seen = (batches * e) as f64;
+        Ok(((loss_sum / seen) as f32, (correct as f64 / seen) as f32))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-process session
+// ---------------------------------------------------------------------------
+
+/// In-process client handle: same `Message` traffic as TCP, byte-accounted
+/// at framed size, executed synchronously on the session thread (the XLA
+/// CPU client already parallelizes each execution across cores).
+struct LocalClient<'rt> {
+    state: ClientState,
+    model: &'rt ModelRuntime,
+    pending: Option<Update>,
+    up_bytes: u64,
+    down_bytes: u64,
+}
+
+impl<'rt> ClientHandle for LocalClient<'rt> {
+    fn id(&self) -> u32 {
+        self.state.id
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.down_bytes += frame::framed_len(msg.encode().len());
+        if let Message::Broadcast { round, params, losses } = msg {
+            let u = self.state.process_round(self.model, *round, params, *losses)?;
+            self.pending = Some(u);
+        }
+        Ok(())
+    }
+
+    fn recv_update(&mut self) -> Result<Update> {
+        let u = self
+            .pending
+            .take()
+            .context("no update pending (send a Broadcast first)")?;
+        self.up_bytes += frame::framed_len(Message::Update(u.clone()).encode().len());
+        Ok(u)
+    }
+
+    fn uplink_bytes(&self) -> u64 {
+        self.up_bytes
+    }
+
+    fn downlink_bytes(&self) -> u64 {
+        self.down_bytes
+    }
+}
+
+/// A complete single-process federated run.
+pub struct Session {
+    cfg: RunConfig,
+    #[allow(dead_code)] // owns the PJRT client backing `model`
+    runtime: Runtime,
+    model: ModelRuntime,
+    train_shards: Vec<data::Dataset>,
+    test: data::Dataset,
+    pub data_source: &'static str,
+}
+
+impl Session {
+    pub fn new(cfg: RunConfig) -> Result<Session> {
+        cfg.validate()?;
+        let runtime = Runtime::new(&cfg.artifacts_dir)?;
+        let model = runtime.load_model(&cfg.model)?;
+        let mm = &model.mm;
+        ensure!(
+            cfg.dataset.shape()
+                == (mm.input_shape[0], mm.input_shape[1], mm.input_shape[2]),
+            "dataset {:?} does not match model input {:?}",
+            cfg.dataset,
+            mm.input_shape
+        );
+        let (train, test, source) = data::load_or_synthesize(
+            cfg.dataset,
+            &cfg.data_dir,
+            cfg.train_size,
+            cfg.test_size,
+            cfg.seed,
+        )?;
+        let shards = shard::shard_indices(&train, mm.n_clients, cfg.sharding, cfg.seed);
+        let train_shards = shards.iter().map(|idx| train.subset(idx)).collect();
+        Ok(Session {
+            cfg,
+            runtime,
+            model,
+            train_shards,
+            test,
+            data_source: source,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::ModelManifest {
+        &self.model.mm
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Run the configured number of rounds; returns the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.run_with(|_r, _rec| {})
+    }
+
+    /// Run with a per-round observer (progress printing in examples).
+    pub fn run_with(
+        &mut self,
+        mut observer: impl FnMut(u32, &RoundRecord),
+    ) -> Result<RunReport> {
+        let root = Rng::new(self.cfg.seed);
+        let mut server = Server::new(&self.model, self.test.clone(), self.cfg.seed as u32)?;
+        let mut clients: Vec<Box<dyn ClientHandle + '_>> = self
+            .train_shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                Box::new(LocalClient {
+                    state: ClientState::with_options(
+                        i as u32,
+                        shard.clone(),
+                        self.cfg.policy.build(),
+                        self.cfg.lr,
+                        &self.model,
+                        &root,
+                        self.cfg.error_feedback,
+                    ),
+                    model: &self.model,
+                    pending: None,
+                    up_bytes: 0,
+                    down_bytes: 0,
+                }) as Box<dyn ClientHandle + '_>
+            })
+            .collect();
+
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        for m in 0..self.cfg.rounds {
+            let evaluate = m % self.cfg.eval_every == 0 || m + 1 == self.cfg.rounds;
+            let rec = server.run_round(m as u32, &mut clients, evaluate)?;
+            observer(m as u32, &rec);
+            let done = self
+                .cfg
+                .target_accuracy
+                .map(|t| rec.evaluated() && rec.test_accuracy >= t)
+                .unwrap_or(false);
+            rounds.push(rec);
+            if done {
+                break;
+            }
+        }
+        Ok(RunReport {
+            label: self.cfg.label(),
+            model: self.cfg.model.clone(),
+            rounds,
+        })
+    }
+}

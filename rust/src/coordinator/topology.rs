@@ -1,0 +1,167 @@
+//! Multi-process topology: `feddq serve` runs the server and accepts TCP
+//! workers; `feddq worker` runs one client in its own process with its own
+//! PJRT runtime.  The wire traffic is byte-identical to the in-process
+//! session (same `Message` encoding, same framing), so measured volumes
+//! agree across modes.
+
+use std::net::TcpListener;
+
+use anyhow::{ensure, Context, Result};
+
+use super::client::ClientState;
+use super::server::{ClientHandle, Server};
+use crate::config::RunConfig;
+use crate::data::{self, shard};
+use crate::metrics::{RoundRecord, RunReport};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::wire::messages::{Message, Update};
+use crate::wire::transport::{TcpTransport, Transport};
+
+/// Server-side handle for one remote worker.
+struct RemoteClient {
+    id: u32,
+    t: TcpTransport,
+}
+
+impl ClientHandle for RemoteClient {
+    fn id(&self) -> u32 {
+        self.id
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.t.send(msg)
+    }
+
+    fn recv_update(&mut self) -> Result<Update> {
+        match self.t.recv()? {
+            Message::Update(u) => Ok(u),
+            other => anyhow::bail!("expected Update, got {other:?}"),
+        }
+    }
+
+    fn uplink_bytes(&self) -> u64 {
+        self.t.bytes_received()
+    }
+
+    fn downlink_bytes(&self) -> u64 {
+        self.t.bytes_sent()
+    }
+}
+
+/// Run the federated server: listen on `addr`, wait for `n_clients`
+/// workers to join, then drive the configured rounds.
+pub fn serve(
+    cfg: &RunConfig,
+    addr: &str,
+    mut observer: impl FnMut(u32, &RoundRecord),
+) -> Result<RunReport> {
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let model = runtime.load_model(&cfg.model)?;
+    let n = model.mm.n_clients;
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    crate::info!("serve", "listening on {addr}, waiting for {n} workers");
+
+    let (_, test, _) = data::load_or_synthesize(
+        cfg.dataset,
+        &cfg.data_dir,
+        cfg.train_size,
+        cfg.test_size,
+        cfg.seed,
+    )?;
+
+    let config_json = cfg.to_json().to_string_compact();
+    let mut clients: Vec<Box<dyn ClientHandle + '_>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (stream, peer) = listener.accept().context("accept")?;
+        let mut t = TcpTransport::new(stream)?;
+        let id = match t.recv()? {
+            Message::Join { client_id } => client_id,
+            other => anyhow::bail!("expected Join, got {other:?}"),
+        };
+        ensure!((id as usize) < n, "client id {id} out of range");
+        t.send(&Message::Welcome { client_id: id, config_json: config_json.clone() })?;
+        crate::info!("serve", "worker {id} joined from {peer}");
+        clients.push(Box::new(RemoteClient { id, t }));
+    }
+    clients.sort_by_key(|c| c.id());
+    for (i, c) in clients.iter().enumerate() {
+        ensure!(c.id() == i as u32, "duplicate or missing client ids");
+    }
+
+    let mut server = Server::new(&model, test, cfg.seed as u32)?;
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    for m in 0..cfg.rounds {
+        let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
+        let rec = server.run_round(m as u32, &mut clients, evaluate)?;
+        observer(m as u32, &rec);
+        let done = cfg
+            .target_accuracy
+            .map(|t| rec.evaluated() && rec.test_accuracy >= t)
+            .unwrap_or(false);
+        rounds.push(rec);
+        if done {
+            break;
+        }
+    }
+    for c in clients.iter_mut() {
+        let _ = c.send(&Message::Shutdown);
+    }
+    Ok(RunReport {
+        label: format!("{}-tcp", cfg.label()),
+        model: cfg.model.clone(),
+        rounds,
+    })
+}
+
+/// Run one worker process: join `addr` as client `id`, then serve rounds
+/// until Shutdown.  The run config arrives in the Welcome message so the
+/// worker materializes exactly the same shard it would own in-process.
+pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
+    let mut t = TcpTransport::connect(addr)?;
+    t.send(&Message::Join { client_id: id })?;
+    let cfg = match t.recv()? {
+        Message::Welcome { client_id, config_json } => {
+            ensure!(client_id == id, "server assigned a different id");
+            let mut cfg = RunConfig::from_json_str(&config_json)?;
+            cfg.artifacts_dir = artifacts_dir.to_string();
+            cfg
+        }
+        other => anyhow::bail!("expected Welcome, got {other:?}"),
+    };
+
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let model = runtime.load_model(&cfg.model)?;
+    let mm = &model.mm;
+    ensure!((id as usize) < mm.n_clients, "worker id out of range");
+
+    // Deterministic data pipeline: same seed -> same shards as the server
+    // (and as in-process mode) without shipping data over the wire.
+    let (train, _, _) = data::load_or_synthesize(
+        cfg.dataset,
+        &cfg.data_dir,
+        cfg.train_size,
+        cfg.test_size,
+        cfg.seed,
+    )?;
+    let shards = shard::shard_indices(&train, mm.n_clients, cfg.sharding, cfg.seed);
+    let my_shard = train.subset(&shards[id as usize]);
+    let root = Rng::new(cfg.seed);
+    let mut state = ClientState::with_options(
+        id, my_shard, cfg.policy.build(), cfg.lr, &model, &root, cfg.error_feedback,
+    );
+    crate::info!("worker", "client {id} ready ({} samples)", state.num_samples());
+
+    loop {
+        match t.recv()? {
+            Message::Broadcast { round, params, losses } => {
+                let u = state.process_round(&model, round, &params, losses)?;
+                t.send(&Message::Update(u))?;
+            }
+            Message::Shutdown => break,
+            other => anyhow::bail!("unexpected message {other:?}"),
+        }
+    }
+    crate::info!("worker", "client {id} done");
+    Ok(())
+}

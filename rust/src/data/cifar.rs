@@ -1,0 +1,123 @@
+//! CIFAR-10 binary-format parser.
+//!
+//! The canonical distribution ships `data_batch_{1..5}.bin` + `test_batch.bin`,
+//! each a sequence of 3073-byte records: `label u8 | 1024 R | 1024 G | 1024 B`
+//! (channel-planar 32x32).  We convert to NHWC interleaved f32 in
+//! `[-0.5, 0.5]` to match the rest of the pipeline.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::Dataset;
+
+const RECORD: usize = 3073;
+const SIDE: usize = 32;
+const PLANE: usize = SIDE * SIDE;
+
+/// Parse one CIFAR-10 binary batch buffer into (features NHWC, labels).
+pub fn parse_cifar_batch(buf: &[u8]) -> Result<(Vec<f32>, Vec<i32>)> {
+    ensure!(
+        !buf.is_empty() && buf.len() % RECORD == 0,
+        "cifar: buffer size {} not a multiple of {RECORD}",
+        buf.len()
+    );
+    let n = buf.len() / RECORD;
+    let mut features = vec![0.0f32; n * PLANE * 3];
+    let mut labels = Vec::with_capacity(n);
+    for r in 0..n {
+        let rec = &buf[r * RECORD..(r + 1) * RECORD];
+        let label = rec[0];
+        ensure!(label < 10, "cifar: label {label} out of range");
+        labels.push(label as i32);
+        let pixels = &rec[1..];
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let p = y * SIDE + x;
+                let o = (r * PLANE + p) * 3;
+                features[o] = pixels[p] as f32 / 255.0 - 0.5;
+                features[o + 1] = pixels[PLANE + p] as f32 / 255.0 - 0.5;
+                features[o + 2] = pixels[2 * PLANE + p] as f32 / 255.0 - 0.5;
+            }
+        }
+    }
+    Ok((features, labels))
+}
+
+fn load_batches(paths: &[std::path::PathBuf]) -> Result<Dataset> {
+    let mut features = Vec::new();
+    let mut labels = Vec::new();
+    for p in paths {
+        let buf = fs::read(p).with_context(|| format!("read {}", p.display()))?;
+        let (f, l) = parse_cifar_batch(&buf).with_context(|| format!("parse {}", p.display()))?;
+        features.extend(f);
+        labels.extend(l);
+    }
+    let ds = Dataset {
+        features,
+        labels,
+        shape: (SIDE, SIDE, 3),
+        num_classes: 10,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Load CIFAR-10 from `<dir>/cifar-10-batches-bin/`.
+pub fn load_cifar10(dir: &str) -> Result<(Dataset, Dataset)> {
+    let base = Path::new(dir).join("cifar-10-batches-bin");
+    let train_paths: Vec<_> = (1..=5)
+        .map(|i| base.join(format!("data_batch_{i}.bin")))
+        .collect();
+    let train = load_batches(&train_paths)?;
+    let test = load_batches(&[base.join("test_batch.bin")])?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(label: u8, fill: u8) -> Vec<u8> {
+        let mut rec = vec![label];
+        rec.extend(std::iter::repeat(fill).take(RECORD - 1));
+        rec
+    }
+
+    #[test]
+    fn parse_single_record() {
+        let (f, l) = parse_cifar_batch(&record(7, 255)).unwrap();
+        assert_eq!(l, vec![7]);
+        assert_eq!(f.len(), PLANE * 3);
+        assert!(f.iter().all(|&x| (x - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn channel_interleaving() {
+        // R plane = 255, G/B = 0: every pixel should be (0.5, -0.5, -0.5).
+        let mut rec = vec![0u8];
+        rec.extend(std::iter::repeat(255u8).take(PLANE));
+        rec.extend(std::iter::repeat(0u8).take(2 * PLANE));
+        let (f, _) = parse_cifar_batch(&rec).unwrap();
+        assert!((f[0] - 0.5).abs() < 1e-6);
+        assert!((f[1] + 0.5).abs() < 1e-6);
+        assert!((f[2] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(parse_cifar_batch(&[]).is_err());
+        assert!(parse_cifar_batch(&[0u8; RECORD - 1]).is_err());
+        assert!(parse_cifar_batch(&record(10, 0)).is_err());
+    }
+
+    #[test]
+    fn multiple_records() {
+        let mut buf = record(1, 10);
+        buf.extend(record(2, 20));
+        let (f, l) = parse_cifar_batch(&buf).unwrap();
+        assert_eq!(l, vec![1, 2]);
+        assert_eq!(f.len(), 2 * PLANE * 3);
+    }
+}

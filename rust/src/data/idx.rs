@@ -1,0 +1,141 @@
+//! IDX file parser (the MNIST / Fashion-MNIST distribution format).
+//!
+//! Big-endian magic: `0x00 0x00 <dtype> <ndim>` then `ndim` u32 dims, then
+//! row-major payload.  Only u8 payloads are needed for the benchmarks;
+//! images are normalized to `[-0.5, 0.5]` (mean-ish centering keeps the
+//! synthetic and real pipelines on the same dynamic range).
+//!
+//! `load_fashion_mnist` expects the canonical four files (optionally
+//! `.gz`-less — we read raw IDX) under `<dir>/fashion_mnist/`.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::Dataset;
+
+/// A parsed IDX tensor of u8 payload.
+pub struct IdxU8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+/// Parse an IDX byte buffer with a u8 (0x08) payload.
+pub fn parse_idx_u8(buf: &[u8]) -> Result<IdxU8> {
+    ensure!(buf.len() >= 4, "idx: truncated header");
+    ensure!(buf[0] == 0 && buf[1] == 0, "idx: bad magic prefix");
+    let dtype = buf[2];
+    if dtype != 0x08 {
+        bail!("idx: unsupported dtype {dtype:#04x} (only u8)");
+    }
+    let ndim = buf[3] as usize;
+    ensure!(ndim >= 1 && ndim <= 4, "idx: weird ndim {ndim}");
+    ensure!(buf.len() >= 4 + 4 * ndim, "idx: truncated dims");
+    let mut dims = Vec::with_capacity(ndim);
+    for i in 0..ndim {
+        let o = 4 + 4 * i;
+        dims.push(u32::from_be_bytes(buf[o..o + 4].try_into().unwrap()) as usize);
+    }
+    let total: usize = dims.iter().product();
+    let payload = &buf[4 + 4 * ndim..];
+    ensure!(
+        payload.len() == total,
+        "idx: payload {} != dims product {total}",
+        payload.len()
+    );
+    Ok(IdxU8 {
+        dims,
+        data: payload.to_vec(),
+    })
+}
+
+fn read_idx(path: &Path) -> Result<IdxU8> {
+    let buf = fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    parse_idx_u8(&buf).with_context(|| format!("parse {}", path.display()))
+}
+
+fn to_dataset(images: IdxU8, labels: IdxU8) -> Result<Dataset> {
+    ensure!(images.dims.len() == 3, "images must be [n, h, w]");
+    ensure!(labels.dims.len() == 1, "labels must be [n]");
+    let (n, h, w) = (images.dims[0], images.dims[1], images.dims[2]);
+    ensure!(labels.dims[0] == n, "image/label count mismatch");
+    let features = images
+        .data
+        .iter()
+        .map(|&b| b as f32 / 255.0 - 0.5)
+        .collect();
+    let labels_i = labels.data.iter().map(|&b| b as i32).collect();
+    let ds = Dataset {
+        features,
+        labels: labels_i,
+        shape: (h, w, 1),
+        num_classes: 10,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Load the canonical Fashion-MNIST train/test pair from
+/// `<dir>/fashion_mnist/{train,t10k}-{images-idx3,labels-idx1}-ubyte`.
+pub fn load_fashion_mnist(dir: &str) -> Result<(Dataset, Dataset)> {
+    let base = Path::new(dir).join("fashion_mnist");
+    let train = to_dataset(
+        read_idx(&base.join("train-images-idx3-ubyte"))?,
+        read_idx(&base.join("train-labels-idx1-ubyte"))?,
+    )?;
+    let test = to_dataset(
+        read_idx(&base.join("t10k-images-idx3-ubyte"))?,
+        read_idx(&base.join("t10k-labels-idx1-ubyte"))?,
+    )?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx(dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut buf = vec![0, 0, 0x08, dims.len() as u8];
+        for d in dims {
+            buf.extend_from_slice(&d.to_be_bytes());
+        }
+        buf.extend_from_slice(payload);
+        buf
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let buf = make_idx(&[2, 3], &[1, 2, 3, 4, 5, 6]);
+        let t = parse_idx_u8(&buf).unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(parse_idx_u8(&[]).is_err());
+        assert!(parse_idx_u8(&[1, 0, 8, 1, 0, 0, 0, 0]).is_err()); // bad prefix
+        assert!(parse_idx_u8(&make_idx(&[5], &[0; 4])).is_err()); // short payload
+        let mut f64_type = make_idx(&[1], &[0]);
+        f64_type[2] = 0x0E;
+        assert!(parse_idx_u8(&f64_type).is_err()); // unsupported dtype
+    }
+
+    #[test]
+    fn dataset_conversion_normalizes() {
+        let images = parse_idx_u8(&make_idx(&[2, 2, 2], &[0, 255, 128, 64, 0, 0, 255, 255])).unwrap();
+        let labels = parse_idx_u8(&make_idx(&[2], &[3, 9])).unwrap();
+        let ds = to_dataset(images, labels).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.shape, (2, 2, 1));
+        assert!((ds.features[0] + 0.5).abs() < 1e-6);
+        assert!((ds.features[1] - 0.5).abs() < 1e-6);
+        assert_eq!(ds.labels, vec![3, 9]);
+    }
+
+    #[test]
+    fn missing_files_error_cleanly() {
+        assert!(load_fashion_mnist("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Data pipeline: dataset sources, client sharding and round batching.
+//!
+//! Real Fashion-MNIST / CIFAR-10 files are loaded when present under
+//! `data/` ([`idx`], [`cifar`]); otherwise procedurally generated
+//! class-structured datasets at identical shapes stand in ([`synthetic`])
+//! — see DESIGN.md §3 for why that substitution preserves the paper's
+//! claims.  [`shard`] splits a dataset across clients (IID or
+//! Dirichlet non-IID) and [`batch`] assembles the `tau x B` round batches
+//! the AOT `round` executable consumes.
+
+pub mod batch;
+pub mod cifar;
+pub mod idx;
+pub mod shard;
+pub mod synthetic;
+
+/// An in-memory labeled image dataset, NHWC f32 features.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `[num, h*w*c]` row-major features.
+    pub features: Vec<f32>,
+    /// `[num]` class labels.
+    pub labels: Vec<i32>,
+    pub shape: (usize, usize, usize), // (h, w, c)
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    pub fn feature(&self, i: usize) -> &[f32] {
+        let fl = self.feature_len();
+        &self.features[i * fl..(i + 1) * fl]
+    }
+
+    /// Select rows by index (used by sharding).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let fl = self.feature_len();
+        let mut features = Vec::with_capacity(idx.len() * fl);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            features.extend_from_slice(self.feature(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset {
+            features,
+            labels,
+            shape: self.shape,
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Sanity checks used by tests and loaders.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.features.len() == self.len() * self.feature_len(),
+            "feature buffer size mismatch"
+        );
+        anyhow::ensure!(
+            self.labels.iter().all(|&l| (l as usize) < self.num_classes && l >= 0),
+            "label out of range"
+        );
+        Ok(())
+    }
+}
+
+/// Which benchmark dataset to materialize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 28x28x1, 10 classes (Fashion-MNIST shaped).
+    FashionMnist,
+    /// 32x32x3, 10 classes (CIFAR-10 shaped).
+    Cifar10,
+}
+
+impl DatasetKind {
+    pub fn shape(&self) -> (usize, usize, usize) {
+        match self {
+            DatasetKind::FashionMnist => (28, 28, 1),
+            DatasetKind::Cifar10 => (32, 32, 3),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fashion_mnist" | "fmnist" => Ok(DatasetKind::FashionMnist),
+            "cifar10" | "cifar" => Ok(DatasetKind::Cifar10),
+            _ => anyhow::bail!("unknown dataset {s:?} (want fashion_mnist|cifar10)"),
+        }
+    }
+}
+
+/// Load `(train, test)` for `kind`: real files under `data_dir` when
+/// present, synthetic otherwise.
+pub fn load_or_synthesize(
+    kind: DatasetKind,
+    data_dir: &str,
+    train_size: usize,
+    test_size: usize,
+    seed: u64,
+) -> anyhow::Result<(Dataset, Dataset, &'static str)> {
+    match kind {
+        DatasetKind::FashionMnist => {
+            if let Ok(pair) = idx::load_fashion_mnist(data_dir) {
+                return Ok((pair.0, pair.1, "real"));
+            }
+        }
+        DatasetKind::Cifar10 => {
+            if let Ok(pair) = cifar::load_cifar10(data_dir) {
+                return Ok((pair.0, pair.1, "real"));
+            }
+        }
+    }
+    // Same template seed (same task!), different sample seeds per split.
+    let train = synthetic::generate_split(kind, train_size, seed, seed);
+    let test = synthetic::generate_split(kind, test_size, seed, seed ^ 0x7E57_7E57);
+    Ok((train, test, "synthetic"))
+}

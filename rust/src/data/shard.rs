@@ -1,0 +1,178 @@
+//! Client sharding: split a dataset across `n` federated clients.
+//!
+//! * [`Sharding::Iid`] — uniform random partition (the paper's setup:
+//!   "training datasets ... are split among all clients").
+//! * [`Sharding::Dirichlet`] — label-skewed non-IID partition with
+//!   per-client class proportions drawn from Dirichlet(alpha); the
+//!   standard FL heterogeneity knob (used by the ablation bench).
+//!
+//! Shards are index lists into the parent dataset; materialization via
+//! `Dataset::subset` happens once per client at session start.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sharding {
+    Iid,
+    /// Label-distribution skew; smaller alpha = more heterogeneous.
+    Dirichlet { alpha: f64 },
+}
+
+impl Sharding {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if s == "iid" {
+            return Ok(Sharding::Iid);
+        }
+        if let Some(rest) = s.strip_prefix("dirichlet:") {
+            let alpha: f64 = rest.parse()?;
+            anyhow::ensure!(alpha > 0.0, "alpha must be positive");
+            return Ok(Sharding::Dirichlet { alpha });
+        }
+        anyhow::bail!("unknown sharding {s:?} (want iid|dirichlet:<alpha>)")
+    }
+}
+
+/// Partition `ds` into `n` index shards.  Every sample is assigned to
+/// exactly one client; shards are non-empty for any reasonable `n`
+/// (n <= len / num_classes).
+pub fn shard_indices(ds: &Dataset, n: usize, how: Sharding, seed: u64) -> Vec<Vec<usize>> {
+    assert!(n > 0, "need at least one client");
+    let mut rng = Rng::new(seed).derive("shard");
+    match how {
+        Sharding::Iid => {
+            let mut order: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut order);
+            let mut shards = vec![Vec::with_capacity(ds.len() / n + 1); n];
+            for (i, idx) in order.into_iter().enumerate() {
+                shards[i % n].push(idx);
+            }
+            shards
+        }
+        Sharding::Dirichlet { alpha } => {
+            // Group sample indices by class.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.num_classes];
+            for (i, &l) in ds.labels.iter().enumerate() {
+                by_class[l as usize].push(i);
+            }
+            let mut shards = vec![Vec::new(); n];
+            for idxs in by_class.iter_mut() {
+                rng.shuffle(idxs);
+                let props = rng.next_dirichlet(alpha, n);
+                // Largest-remainder apportionment of this class's samples.
+                let total = idxs.len();
+                let mut counts: Vec<usize> =
+                    props.iter().map(|p| (p * total as f64) as usize).collect();
+                let mut assigned: usize = counts.iter().sum();
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    let ra = props[a] * total as f64 - counts[a] as f64;
+                    let rb = props[b] * total as f64 - counts[b] as f64;
+                    rb.partial_cmp(&ra).unwrap()
+                });
+                let mut k = 0;
+                while assigned < total {
+                    counts[order[k % n]] += 1;
+                    assigned += 1;
+                    k += 1;
+                }
+                let mut off = 0;
+                for (c, shard) in counts.iter().zip(shards.iter_mut()) {
+                    shard.extend_from_slice(&idxs[off..off + c]);
+                    off += c;
+                }
+            }
+            // Guarantee non-empty shards: steal one sample from the largest.
+            for i in 0..n {
+                if shards[i].is_empty() {
+                    let donor = (0..n).max_by_key(|&j| shards[j].len()).unwrap();
+                    let moved = shards[donor].pop().expect("donor shard empty");
+                    shards[i].push(moved);
+                }
+            }
+            for s in shards.iter_mut() {
+                rng.shuffle(s);
+            }
+            shards
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, DatasetKind};
+
+    fn tiny() -> Dataset {
+        synthetic::generate(DatasetKind::FashionMnist, 400, 11)
+    }
+
+    fn assert_partition(ds: &Dataset, shards: &[Vec<usize>]) {
+        let mut seen = vec![false; ds.len()];
+        for s in shards {
+            for &i in s {
+                assert!(!seen[i], "sample {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some sample unassigned");
+    }
+
+    #[test]
+    fn iid_is_balanced_partition() {
+        let ds = tiny();
+        let shards = shard_indices(&ds, 10, Sharding::Iid, 5);
+        assert_partition(&ds, &shards);
+        for s in &shards {
+            assert_eq!(s.len(), 40);
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_partition_and_skews() {
+        let ds = tiny();
+        let shards = shard_indices(&ds, 10, Sharding::Dirichlet { alpha: 0.1 }, 5);
+        assert_partition(&ds, &shards);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+        // With alpha = 0.1 at least one client should be strongly
+        // class-concentrated (majority class > 50%).
+        let concentrated = shards.iter().any(|s| {
+            let mut counts = [0usize; 10];
+            for &i in s {
+                counts[ds.labels[i] as usize] += 1;
+            }
+            counts.iter().max().unwrap() * 2 > s.len()
+        });
+        assert!(concentrated, "alpha=0.1 produced near-uniform shards");
+    }
+
+    #[test]
+    fn dirichlet_large_alpha_approaches_iid() {
+        let ds = tiny();
+        let shards = shard_indices(&ds, 4, Sharding::Dirichlet { alpha: 1000.0 }, 5);
+        assert_partition(&ds, &shards);
+        for s in &shards {
+            let frac = s.len() as f64 / ds.len() as f64;
+            assert!((frac - 0.25).abs() < 0.1, "shard fraction {frac}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = tiny();
+        let a = shard_indices(&ds, 7, Sharding::Dirichlet { alpha: 0.5 }, 9);
+        let b = shard_indices(&ds, 7, Sharding::Dirichlet { alpha: 0.5 }, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parse_sharding() {
+        assert_eq!(Sharding::parse("iid").unwrap(), Sharding::Iid);
+        assert_eq!(
+            Sharding::parse("dirichlet:0.3").unwrap(),
+            Sharding::Dirichlet { alpha: 0.3 }
+        );
+        assert!(Sharding::parse("nope").is_err());
+        assert!(Sharding::parse("dirichlet:-1").is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! # FedDQ — communication-efficient federated learning with descending quantization
+//!
+//! Full-system reproduction of *FedDQ* (Qu, Song, Tsui, 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated-learning coordinator: round loop,
+//!   client workers, the paper's adaptive quantization policies
+//!   ([`quant`]), a bit-exact wire format ([`wire`]), data pipeline
+//!   ([`data`]) and metrics ([`metrics`]).
+//! * **L2/L1 (build-time python, `python/compile/`)** — JAX model zoo and
+//!   Pallas codec kernels, AOT-lowered to HLO text under `artifacts/` and
+//!   executed from Rust through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` once, then the
+//! `feddq` binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use feddq::config::RunConfig;
+//! use feddq::coordinator::Session;
+//!
+//! let mut cfg = RunConfig::default_for("mlp");
+//! cfg.rounds = 20;
+//! cfg.policy = feddq::quant::PolicyConfig::FedDq { resolution: 0.005 };
+//! let mut session = Session::new(cfg).unwrap();
+//! let report = session.run().unwrap();
+//! println!("final acc {:.3}", report.rounds.last().unwrap().test_accuracy);
+//! ```
+
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod wire;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

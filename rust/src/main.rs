@@ -1,0 +1,190 @@
+//! `feddq` — the FedDQ federated-learning launcher.
+//!
+//! Subcommands:
+//!   train    single-process federated run (simulated clients)
+//!   serve    federated server, accepts TCP workers
+//!   worker   one federated client process
+//!   info     inspect the artifact manifest
+//!
+//! Run `feddq <cmd> --help` (or no args) for flags.
+
+use anyhow::Result;
+
+use feddq::cli::{run_config_from_args, Args};
+use feddq::coordinator::{topology, Session};
+use feddq::metrics::gbits;
+use feddq::runtime::Runtime;
+use feddq::util::log::{set_level, Level};
+
+const USAGE: &str = "\
+feddq — communication-efficient federated learning with descending quantization
+
+USAGE: feddq <COMMAND> [FLAGS]
+
+COMMANDS:
+  train    run a federated training session in-process
+  serve    run the federated server (TCP), waiting for workers
+  worker   run one federated client process (TCP)
+  info     print the artifact manifest summary
+
+COMMON TRAIN FLAGS:
+  --model <mlp|vanilla_cnn|cnn4|resnet18>   model/benchmark    [mlp]
+  --policy <feddq[:res]|adaquantfl[:s0]|fixed:<bits>|fp32>     [feddq:0.005]
+  --rounds <n>          communication rounds                   [50]
+  --lr <f>              local SGD step size                    [0.1]
+  --seed <n>            root seed                              [17]
+  --sharding <iid|dirichlet:<alpha>>                           [iid]
+  --eval-every <k>      evaluate every k rounds                [1]
+  --train-size <n>      synthetic train set size               [4000]
+  --test-size <n>       synthetic test set size                [1000]
+  --target-acc <f>      stop at this test accuracy             [off]
+  --artifacts <dir>     AOT artifacts directory                [artifacts]
+  --data-dir <dir>      real dataset directory                 [data]
+  --out <path>          write the per-round report (.csv/.json)
+  --quiet               suppress per-round progress
+
+SERVE/WORKER FLAGS:
+  --addr <host:port>    server address          [127.0.0.1:7177]
+  --id <n>              worker client id (worker only)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    if args.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    match cmd {
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
+        "info" => cmd_info(&args),
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config_from_args(args, "mlp")?;
+    let out = args.get("out").map(String::from);
+    let quiet = args.flag("quiet");
+    let _ = args.flag("verbose");
+    args.finish()?;
+
+    let mut session = Session::new(cfg)?;
+    println!(
+        "model={} d={} clients={} data={} policy={}",
+        session.config().model,
+        session.manifest().d,
+        session.manifest().n_clients,
+        session.data_source,
+        session.config().policy.label()
+    );
+    let report = session.run_with(|m, rec| {
+        if !quiet {
+            println!(
+                "round {m:>4}  train_loss {:.4}  test_acc {}  bits/elem {:.2}  cum {:.4} Gb",
+                rec.train_loss,
+                if rec.evaluated() {
+                    format!("{:.4}", rec.test_accuracy)
+                } else {
+                    "  -   ".to_string()
+                },
+                rec.mean_bits,
+                gbits(rec.cum_uplink_bits),
+            );
+        }
+    })?;
+    let best = report.best_accuracy();
+    println!(
+        "done: {} rounds, best test acc {:.4}, total uplink {:.4} Gb",
+        report.rounds.len(),
+        best,
+        gbits(report.total_uplink_bits())
+    );
+    if let Some(path) = out {
+        if path.ends_with(".csv") {
+            report.write_csv(&path)?;
+        } else {
+            report.write_json(&path)?;
+        }
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = run_config_from_args(args, "mlp")?;
+    let addr = args.get_or("addr", "127.0.0.1:7177").to_string();
+    let out = args.get("out").map(String::from);
+    let quiet = args.flag("quiet");
+    args.finish()?;
+    let report = topology::serve(&cfg, &addr, |m, rec| {
+        if !quiet {
+            println!(
+                "round {m:>4}  train_loss {:.4}  test_acc {:.4}  cum {:.4} Gb",
+                rec.train_loss, rec.test_accuracy, gbits(rec.cum_uplink_bits)
+            );
+        }
+    })?;
+    println!(
+        "done: {} rounds, best acc {:.4}, total uplink {:.4} Gb",
+        report.rounds.len(),
+        report.best_accuracy(),
+        gbits(report.total_uplink_bits())
+    );
+    if let Some(path) = out {
+        if path.ends_with(".csv") {
+            report.write_csv(&path)?;
+        } else {
+            report.write_json(&path)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7177").to_string();
+    let id: u32 = args
+        .get_parse("id")?
+        .ok_or_else(|| anyhow::anyhow!("worker needs --id"))?;
+    let artifacts = args
+        .get_or("artifacts", &Runtime::default_artifacts_dir())
+        .to_string();
+    args.finish()?;
+    topology::worker(&addr, id, &artifacts)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .get_or("artifacts", &Runtime::default_artifacts_dir())
+        .to_string();
+    args.finish()?;
+    let rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {dir}");
+    for (name, mm) in &rt.manifest.models {
+        println!(
+            "  {name}: d={} segments={} tau={} batch={} eval_batch={} clients={} input={:?}",
+            mm.d,
+            mm.num_segments(),
+            mm.tau,
+            mm.batch,
+            mm.eval_batch,
+            mm.n_clients,
+            mm.input_shape
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Metrics: per-round records, the communication ledger and CSV/JSON
+//! emitters used by the figure/table benches.
+
+use std::io::Write;
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Everything measured in one federated round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u32,
+    /// Global average training loss (weighted by client sample counts).
+    pub train_loss: f32,
+    /// Test loss (mean NLL over the server validation set); NaN if the
+    /// round was not evaluated.
+    pub test_loss: f32,
+    /// Test accuracy in [0,1]; NaN if not evaluated.
+    pub test_accuracy: f32,
+    /// Uplink payload bits this round (sum over clients, packed size).
+    pub uplink_bits: u64,
+    /// Cumulative uplink bits including this round.
+    pub cum_uplink_bits: u64,
+    /// Mean bits/element across clients and segments (Fig. 5's y-axis).
+    pub mean_bits: f32,
+    /// Mean update range across clients and segments (Fig. 1b's y-axis).
+    pub mean_range: f32,
+    /// Per-segment mean ranges across clients (Fig. 1b per-layer curves).
+    pub seg_ranges: Vec<f32>,
+    /// Wall-clock seconds spent in this round.
+    pub wall_secs: f64,
+}
+
+impl RoundRecord {
+    pub fn evaluated(&self) -> bool {
+        !self.test_accuracy.is_nan()
+    }
+}
+
+/// A completed run: config label + per-round records.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub label: String,
+    pub model: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunReport {
+    /// First round index (1-based count) at which smoothed test accuracy
+    /// reaches `target`, along with cumulative bits at that point.
+    pub fn rounds_to_accuracy(&self, target: f32) -> Option<(usize, u64)> {
+        for r in &self.rounds {
+            if r.evaluated() && r.test_accuracy >= target {
+                return Some((r.round as usize + 1, r.cum_uplink_bits));
+            }
+        }
+        None
+    }
+
+    /// Best test accuracy seen.
+    pub fn best_accuracy(&self) -> f32 {
+        self.rounds
+            .iter()
+            .filter(|r| r.evaluated())
+            .map(|r| r.test_accuracy)
+            .fold(f32::NAN, f32::max)
+    }
+
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.rounds.last().map(|r| r.cum_uplink_bits).unwrap_or(0)
+    }
+
+    /// CSV with a fixed schema (one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{:.6}\n",
+                r.round,
+                r.train_loss,
+                r.test_loss,
+                r.test_accuracy,
+                r.uplink_bits,
+                r.cum_uplink_bits,
+                r.mean_bits,
+                r.mean_range,
+                r.wall_secs
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("model", Json::from(self.model.clone())),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::from(r.round)),
+                                ("train_loss", Json::from(r.train_loss as f64)),
+                                ("test_loss", Json::from(r.test_loss as f64)),
+                                ("test_acc", Json::from(r.test_accuracy as f64)),
+                                ("uplink_bits", Json::from(r.uplink_bits as f64)),
+                                ("cum_uplink_bits", Json::from(r.cum_uplink_bits as f64)),
+                                ("mean_bits", Json::from(r.mean_bits as f64)),
+                                ("mean_range", Json::from(r.mean_range as f64)),
+                                (
+                                    "seg_ranges",
+                                    Json::Arr(
+                                        r.seg_ranges
+                                            .iter()
+                                            .map(|&x| Json::from(x as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("wall_secs", Json::from(r.wall_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().to_string_pretty().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Format a bit count the way the paper's Table I does (Gb = 1e9 bits).
+pub fn gbits(bits: u64) -> f64 {
+    bits as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: u32, acc: f32, cum: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_loss: 1.0,
+            test_accuracy: acc,
+            uplink_bits: 100,
+            cum_uplink_bits: cum,
+            mean_bits: 8.0,
+            mean_range: 0.1,
+            seg_ranges: vec![0.1, 0.2],
+            wall_secs: 0.5,
+        }
+    }
+
+    #[test]
+    fn rounds_to_accuracy_finds_first_crossing() {
+        let rep = RunReport {
+            label: "x".into(),
+            model: "mlp".into(),
+            rounds: vec![record(0, 0.2, 100), record(1, 0.6, 200), record(2, 0.7, 300)],
+        };
+        assert_eq!(rep.rounds_to_accuracy(0.5), Some((2, 200)));
+        assert_eq!(rep.rounds_to_accuracy(0.9), None);
+        assert!((rep.best_accuracy() - 0.7).abs() < 1e-6);
+        assert_eq!(rep.total_uplink_bits(), 300);
+    }
+
+    #[test]
+    fn skips_unevaluated_rounds() {
+        let mut r = record(0, f32::NAN, 50);
+        assert!(!r.evaluated());
+        r.test_accuracy = 0.9;
+        let rep = RunReport {
+            label: "x".into(),
+            model: "mlp".into(),
+            rounds: vec![record(0, f32::NAN, 50), r],
+        };
+        assert_eq!(rep.rounds_to_accuracy(0.5).unwrap().0, 1);
+    }
+
+    #[test]
+    fn csv_and_json_emit() {
+        let rep = RunReport {
+            label: "feddq".into(),
+            model: "mlp".into(),
+            rounds: vec![record(0, 0.5, 100)],
+        };
+        let csv = rep.to_csv();
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("feddq") == false); // label not in rows
+        let j = rep.to_json();
+        assert_eq!(j.at(&["label"]).unwrap().as_str(), Some("feddq"));
+    }
+
+    #[test]
+    fn gbits_scale() {
+        assert!((gbits(2_070_000_000) - 2.07).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,111 @@
+//! AdaQuantFL (Jhunjhunwala et al., ICASSP 2021) — the ascending adaptive
+//! baseline the paper compares against.
+//!
+//! The quantization level at round `m` is derived from the global training
+//! loss trajectory:
+//!
+//! ```text
+//! s_m = s_0 * sqrt( F(X_0) / F(X_m) )
+//! ```
+//!
+//! Training loss decreases with training, so `s_m` (and the bit-width)
+//! *increases* — the "ascending-trend" scheme whose inefficiency FedDQ's
+//! analysis exposes.  The level is global (same for every client and
+//! segment), matching the reference algorithm.
+
+use super::{math, Decision, PolicyInputs, QuantPolicy};
+
+pub struct AdaQuantFl {
+    s0: u32,
+    max_bits: u32,
+}
+
+impl AdaQuantFl {
+    pub fn new(s0: u32) -> Self {
+        AdaQuantFl { s0: s0.max(1), max_bits: 16 }
+    }
+
+    pub fn with_max_bits(mut self, b: u32) -> Self {
+        assert!((1..=16).contains(&b));
+        self.max_bits = b;
+        self
+    }
+
+    fn level(&self, inputs: &PolicyInputs) -> u32 {
+        let (Some(f0), Some(fm)) = (inputs.initial_loss, inputs.prev_loss) else {
+            // Round 0: no loss observed yet; the reference starts at s_0.
+            return self.s0;
+        };
+        if !(f0.is_finite() && fm.is_finite()) || f0 <= 0.0 || fm <= 0.0 {
+            return self.s0;
+        }
+        let s = (self.s0 as f64 * (f0 as f64 / fm as f64).sqrt()).round();
+        let cap = math::max_level_for_bits(self.max_bits) as f64;
+        s.clamp(1.0, cap) as u32
+    }
+}
+
+impl QuantPolicy for AdaQuantFl {
+    fn name(&self) -> &'static str {
+        "adaquantfl"
+    }
+
+    fn decide(&mut self, inputs: &PolicyInputs) -> Decision {
+        let s = self.level(inputs);
+        Decision {
+            levels: Some(vec![s; inputs.ranges.len()]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(f0: Option<f32>, fm: Option<f32>) -> PolicyInputs<'static> {
+        PolicyInputs {
+            round: 1,
+            client_id: 0,
+            ranges: &[0.1, 0.2],
+            initial_loss: f0,
+            prev_loss: fm,
+        }
+    }
+
+    #[test]
+    fn starts_at_s0() {
+        let mut p = AdaQuantFl::new(2);
+        assert_eq!(p.decide(&inputs(None, None)).levels.unwrap(), vec![2, 2]);
+    }
+
+    #[test]
+    fn ascends_as_loss_falls() {
+        let mut p = AdaQuantFl::new(2);
+        let s_early = p.decide(&inputs(Some(2.3), Some(2.3))).levels.unwrap()[0];
+        let s_mid = p.decide(&inputs(Some(2.3), Some(1.0))).levels.unwrap()[0];
+        let s_late = p.decide(&inputs(Some(2.3), Some(0.1))).levels.unwrap()[0];
+        assert!(s_early <= s_mid && s_mid < s_late, "{s_early} {s_mid} {s_late}");
+        assert_eq!(s_early, 2);
+        assert_eq!(s_late, (2.0f64 * (2.3f64 / 0.1).sqrt()).round() as u32);
+    }
+
+    #[test]
+    fn clamps_at_max_bits() {
+        let mut p = AdaQuantFl::new(2).with_max_bits(4);
+        let s = p.decide(&inputs(Some(100.0), Some(1e-6))).levels.unwrap()[0];
+        assert_eq!(s, 15);
+    }
+
+    #[test]
+    fn degenerate_losses_fall_back_to_s0() {
+        let mut p = AdaQuantFl::new(3);
+        for (f0, fm) in [
+            (Some(0.0), Some(1.0)),
+            (Some(1.0), Some(0.0)),
+            (Some(f32::NAN), Some(1.0)),
+            (Some(1.0), Some(f32::NEG_INFINITY)),
+        ] {
+            assert_eq!(p.decide(&inputs(f0, fm)).levels.unwrap()[0], 3);
+        }
+    }
+}

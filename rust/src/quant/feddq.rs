@@ -1,0 +1,147 @@
+//! FedDQ — the paper's descending quantization policy (Eq. 10).
+//!
+//! The optimal quantization level is proportional to the range of the
+//! model update (Eq. 7), so each round each client sets, per segment,
+//!
+//! ```text
+//! bit_l = ceil( log2( range_l / resolution ) )
+//! s_l   = 2^bit_l - 1
+//! ```
+//!
+//! Since the update range shrinks as training converges (Fig. 1b), the
+//! bit-width *descends* — the opposite of AdaQuantFL.  `resolution` is
+//! the paper's accuracy/volume trade-off hyper-parameter (0.005 in §IV).
+//!
+//! Granularity: the paper computes one range per client update; Fig. 1b
+//! plots per-layer ranges.  We support both — per-segment (default, finer)
+//! and whole-model (`granularity = Whole`, ablation bench) where a single
+//! bit-width derived from the *global* update range applies to every
+//! segment.
+
+use super::{math, Decision, PolicyInputs, QuantPolicy};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One bit-width per parameter segment (layer).
+    PerSegment,
+    /// One bit-width for the entire update (the paper's Eq. 10 as written).
+    Whole,
+}
+
+pub struct FedDq {
+    resolution: f32,
+    max_bits: u32,
+    granularity: Granularity,
+}
+
+impl FedDq {
+    pub fn new(resolution: f32) -> Self {
+        FedDq {
+            resolution,
+            max_bits: 16,
+            granularity: Granularity::PerSegment,
+        }
+    }
+
+    pub fn with_granularity(mut self, g: Granularity) -> Self {
+        self.granularity = g;
+        self
+    }
+
+    pub fn with_max_bits(mut self, b: u32) -> Self {
+        assert!((1..=16).contains(&b));
+        self.max_bits = b;
+        self
+    }
+}
+
+impl QuantPolicy for FedDq {
+    fn name(&self) -> &'static str {
+        "feddq"
+    }
+
+    fn decide(&mut self, inputs: &PolicyInputs) -> Decision {
+        let levels = match self.granularity {
+            Granularity::PerSegment => inputs
+                .ranges
+                .iter()
+                .map(|&r| {
+                    let bits = math::feddq_bits(r, self.resolution, self.max_bits);
+                    math::max_level_for_bits(bits)
+                })
+                .collect(),
+            Granularity::Whole => {
+                // Range of the whole update = max over segments of the
+                // segment ranges' envelope; we approximate with the max
+                // segment range (exact when segments share the extremes).
+                let r = inputs.ranges.iter().copied().fold(0.0f32, f32::max);
+                let bits = math::feddq_bits(r, self.resolution, self.max_bits);
+                let s = math::max_level_for_bits(bits);
+                vec![s; inputs.ranges.len()]
+            }
+        };
+        Decision { levels: Some(levels) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(ranges: &[f32]) -> PolicyInputs {
+        PolicyInputs {
+            round: 0,
+            client_id: 0,
+            ranges,
+            initial_loss: None,
+            prev_loss: None,
+        }
+    }
+
+    #[test]
+    fn per_segment_levels_follow_ranges() {
+        let mut p = FedDq::new(0.005);
+        let d = p.decide(&inputs(&[1.0, 0.01, 0.0]));
+        let levels = d.levels.unwrap();
+        assert_eq!(levels.len(), 3);
+        assert_eq!(math::bits_for_level(levels[0]), 8);
+        assert_eq!(math::bits_for_level(levels[1]), 1);
+        assert_eq!(math::bits_for_level(levels[2]), 1);
+    }
+
+    #[test]
+    fn descends_as_ranges_shrink() {
+        let mut p = FedDq::new(0.005);
+        let early: u32 = p
+            .decide(&inputs(&[0.8, 0.6]))
+            .levels
+            .unwrap()
+            .iter()
+            .map(|&s| math::bits_for_level(s))
+            .sum();
+        let late: u32 = p
+            .decide(&inputs(&[0.05, 0.02]))
+            .levels
+            .unwrap()
+            .iter()
+            .map(|&s| math::bits_for_level(s))
+            .sum();
+        assert!(late < early, "late {late} >= early {early}");
+    }
+
+    #[test]
+    fn whole_granularity_is_uniform() {
+        let mut p = FedDq::new(0.005).with_granularity(Granularity::Whole);
+        let d = p.decide(&inputs(&[1.0, 0.01, 0.3]));
+        let levels = d.levels.unwrap();
+        assert!(levels.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(math::bits_for_level(levels[0]), 8); // driven by max range
+    }
+
+    #[test]
+    fn max_bits_clamps() {
+        let mut p = FedDq::new(1e-9).with_max_bits(4);
+        let d = p.decide(&inputs(&[10.0]));
+        assert_eq!(math::bits_for_level(d.levels.unwrap()[0]), 4);
+    }
+}

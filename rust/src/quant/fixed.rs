@@ -1,0 +1,79 @@
+//! Fixed-bit and fp32 baselines (QSGD-style static quantization).
+
+use super::{math, Decision, PolicyInputs, QuantPolicy};
+
+/// Constant bit-width for every segment, every round.
+pub struct Fixed {
+    level: u32,
+}
+
+impl Fixed {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "fixed bits in 1..=16");
+        Fixed {
+            level: math::max_level_for_bits(bits),
+        }
+    }
+}
+
+impl QuantPolicy for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn decide(&mut self, inputs: &PolicyInputs) -> Decision {
+        Decision {
+            levels: Some(vec![self.level; inputs.ranges.len()]),
+        }
+    }
+}
+
+/// No quantization: raw f32 uplink (the FedAvg baseline).
+pub struct Fp32;
+
+impl QuantPolicy for Fp32 {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+
+    fn decide(&mut self, _inputs: &PolicyInputs) -> Decision {
+        Decision::fp32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(ranges: &'static [f32]) -> PolicyInputs<'static> {
+        PolicyInputs {
+            round: 0,
+            client_id: 0,
+            ranges,
+            initial_loss: None,
+            prev_loss: None,
+        }
+    }
+
+    #[test]
+    fn fixed_levels() {
+        let mut p = Fixed::new(8);
+        let d = p.decide(&inputs(&[0.1, 100.0]));
+        assert_eq!(d.bits(0), 8);
+        assert_eq!(d.levels.unwrap(), vec![255, 255]);
+    }
+
+    #[test]
+    fn fp32_is_passthrough() {
+        let mut p = Fp32;
+        let d = p.decide(&inputs(&[0.5]));
+        assert_eq!(d, Decision::fp32());
+        assert_eq!(d.bits(0), 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_bits() {
+        Fixed::new(0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Level/bit arithmetic and the paper's communication-cost model.
+
+/// Wire bits for quantization level `s` (codes in `0..=s`):
+/// `bit = ceil(log2(s + 1))` — paper §IV and the `C_s` model.
+#[inline]
+pub fn bits_for_level(s: u32) -> u32 {
+    crate::wire::bitpack::width_for_level(s)
+}
+
+/// Largest level representable in `bits` wire bits: `2^bits - 1`.
+#[inline]
+pub fn max_level_for_bits(bits: u32) -> u32 {
+    debug_assert!(bits >= 1 && bits <= 32);
+    if bits >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << bits) - 1
+    }
+}
+
+/// The paper's Eq. 10: `bit_m = ceil(log2(range_m / resolution))`, clamped
+/// to `[1, max_bits]`.  Degenerate ranges (0, subnormal, non-finite) fall
+/// back to 1 bit — the update is constant, one bin suffices.
+pub fn feddq_bits(range: f32, resolution: f32, max_bits: u32) -> u32 {
+    if range.is_infinite() && range > 0.0 {
+        return max_bits; // defensive: a blown-up update gets max precision
+    }
+    if !range.is_finite() || range <= 0.0 {
+        return 1;
+    }
+    let ratio = range / resolution;
+    if ratio <= 1.0 {
+        return 1;
+    }
+    let bits = (ratio.log2()).ceil() as u32;
+    bits.clamp(1, max_bits)
+}
+
+/// Uplink cost in bits of one client update under per-segment levels:
+/// `sum_l d_l * bits(s_l) + header_bits_per_segment * L` plus the fixed
+/// message envelope.  Matches what the wire encoder actually produces
+/// (asserted by integration tests).
+pub fn update_payload_bits(seg_sizes: &[usize], bits: &[u32]) -> u64 {
+    debug_assert_eq!(seg_sizes.len(), bits.len());
+    seg_sizes
+        .iter()
+        .zip(bits)
+        .map(|(&d, &b)| d as u64 * b as u64)
+        .sum()
+}
+
+/// Per-segment header overhead on the wire:
+/// bits(u8) + level(u16) + min(f32) + step(f32) — see wire::messages.
+pub const SEGMENT_HEADER_BITS: u64 = 8 + 16 + 32 + 32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_level_inverse() {
+        for bits in 1..=16u32 {
+            let s = max_level_for_bits(bits);
+            assert_eq!(bits_for_level(s), bits);
+            assert_eq!(bits_for_level(s + 1), bits + 1);
+        }
+    }
+
+    #[test]
+    fn feddq_bits_descends_with_range() {
+        let res = 0.005;
+        let b_wide = feddq_bits(1.0, res, 16); // range 1.0 => ~7.6 -> 8 bits
+        let b_mid = feddq_bits(0.1, res, 16);
+        let b_narrow = feddq_bits(0.01, res, 16);
+        assert!(b_wide > b_mid && b_mid > b_narrow, "{b_wide} {b_mid} {b_narrow}");
+        assert_eq!(feddq_bits(1.0, 0.005, 16), 8); // log2(200) = 7.64 -> 8
+    }
+
+    #[test]
+    fn feddq_bits_degenerate_ranges() {
+        assert_eq!(feddq_bits(0.0, 0.005, 16), 1);
+        assert_eq!(feddq_bits(-1.0, 0.005, 16), 1);
+        assert_eq!(feddq_bits(f32::NAN, 0.005, 16), 1);
+        assert_eq!(feddq_bits(f32::INFINITY, 0.005, 16), 16); // clamped
+        assert_eq!(feddq_bits(0.004, 0.005, 16), 1); // below resolution
+    }
+
+    #[test]
+    fn payload_bits_sums_segments() {
+        assert_eq!(update_payload_bits(&[100, 50], &[8, 4]), 1000);
+        assert_eq!(update_payload_bits(&[], &[]), 0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Quantization policies — the paper's contribution lives here.
+//!
+//! A [`QuantPolicy`] decides, per client per round, the quantization level
+//! `s` for every parameter segment, given the observed update ranges and
+//! the global training-loss trajectory:
+//!
+//! * [`feddq::FedDq`] — the paper: `bit = ceil(log2(range / resolution))`
+//!   (Eq. 10), which *descends* as the model converges.
+//! * [`adaquantfl::AdaQuantFl`] — the prior SOTA baseline:
+//!   `s_m = s_0 * sqrt(F_0 / F_m)` from the global loss, which *ascends*.
+//! * [`fixed::Fixed`] / [`fixed::Fp32`] — fixed-bit and no-quantization
+//!   baselines.
+
+pub mod adaquantfl;
+pub mod feddq;
+pub mod fixed;
+pub mod math;
+
+use crate::Result;
+
+/// Everything a policy may condition on at round `m` for one client.
+#[derive(Clone, Debug)]
+pub struct PolicyInputs<'a> {
+    pub round: u32,
+    pub client_id: u32,
+    /// Per-segment update ranges observed *this* round (max - min).
+    pub ranges: &'a [f32],
+    /// Global average training loss of round 0 (set after the first
+    /// round's updates arrive; policies must handle `None` at m=0).
+    pub initial_loss: Option<f32>,
+    /// Global average training loss of the previous round.
+    pub prev_loss: Option<f32>,
+}
+
+/// Per-segment quantization decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    /// Quantization level `s` per segment (codes in 0..=s).  `None`
+    /// means fp32 passthrough for every segment.
+    pub levels: Option<Vec<u32>>,
+}
+
+impl Decision {
+    pub fn fp32() -> Self {
+        Decision { levels: None }
+    }
+
+    /// Wire bits per element for segment `l` under this decision.
+    pub fn bits(&self, l: usize) -> u32 {
+        match &self.levels {
+            None => 32,
+            Some(ls) => math::bits_for_level(ls[l]),
+        }
+    }
+}
+
+/// A quantization-level scheduling policy.
+pub trait QuantPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Choose quantization levels for one client's update.
+    fn decide(&mut self, inputs: &PolicyInputs) -> Decision;
+}
+
+/// Config-level policy selection (parsed from CLI / config JSON).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyConfig {
+    FedDq { resolution: f32 },
+    /// FedDQ with a single bit-width from the whole-model range
+    /// (Eq. 10 as literally written; the per-segment default is finer).
+    FedDqWhole { resolution: f32 },
+    /// `s0`: initial quantization level (paper [12] uses small s0, e.g. 2).
+    AdaQuantFl { s0: u32 },
+    Fixed { bits: u32 },
+    Fp32,
+}
+
+impl PolicyConfig {
+    /// Parse `feddq[:res]`, `adaquantfl[:s0]`, `fixed:<bits>`, `fp32`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "feddq" => {
+                let resolution = arg.map(str::parse).transpose()?.unwrap_or(0.005);
+                anyhow::ensure!(resolution > 0.0, "resolution must be positive");
+                Ok(PolicyConfig::FedDq { resolution })
+            }
+            "feddq-whole" => {
+                let resolution = arg.map(str::parse).transpose()?.unwrap_or(0.005);
+                anyhow::ensure!(resolution > 0.0, "resolution must be positive");
+                Ok(PolicyConfig::FedDqWhole { resolution })
+            }
+            "adaquantfl" => {
+                let s0 = arg.map(str::parse).transpose()?.unwrap_or(2);
+                anyhow::ensure!(s0 >= 1, "s0 must be >= 1");
+                Ok(PolicyConfig::AdaQuantFl { s0 })
+            }
+            "fixed" => {
+                let bits: u32 = arg
+                    .ok_or_else(|| anyhow::anyhow!("fixed policy needs :<bits>"))?
+                    .parse()?;
+                anyhow::ensure!((1..=16).contains(&bits), "fixed bits in 1..=16");
+                Ok(PolicyConfig::Fixed { bits })
+            }
+            "fp32" => Ok(PolicyConfig::Fp32),
+            _ => anyhow::bail!("unknown policy {s:?}"),
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn QuantPolicy> {
+        match self {
+            PolicyConfig::FedDq { resolution } => {
+                Box::new(feddq::FedDq::new(*resolution))
+            }
+            PolicyConfig::FedDqWhole { resolution } => Box::new(
+                feddq::FedDq::new(*resolution)
+                    .with_granularity(feddq::Granularity::Whole),
+            ),
+            PolicyConfig::AdaQuantFl { s0 } => {
+                Box::new(adaquantfl::AdaQuantFl::new(*s0))
+            }
+            PolicyConfig::Fixed { bits } => Box::new(fixed::Fixed::new(*bits)),
+            PolicyConfig::Fp32 => Box::new(fixed::Fp32),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyConfig::FedDq { resolution } => format!("feddq:{resolution}"),
+            PolicyConfig::FedDqWhole { resolution } => format!("feddq-whole:{resolution}"),
+            PolicyConfig::AdaQuantFl { s0 } => format!("adaquantfl:{s0}"),
+            PolicyConfig::Fixed { bits } => format!("fixed:{bits}"),
+            PolicyConfig::Fp32 => "fp32".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(
+            PolicyConfig::parse("feddq").unwrap(),
+            PolicyConfig::FedDq { resolution: 0.005 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("feddq:0.01").unwrap(),
+            PolicyConfig::FedDq { resolution: 0.01 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("adaquantfl:4").unwrap(),
+            PolicyConfig::AdaQuantFl { s0: 4 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("fixed:8").unwrap(),
+            PolicyConfig::Fixed { bits: 8 }
+        );
+        assert_eq!(PolicyConfig::parse("fp32").unwrap(), PolicyConfig::Fp32);
+        assert!(PolicyConfig::parse("nope").is_err());
+        assert!(PolicyConfig::parse("fixed").is_err());
+        assert!(PolicyConfig::parse("fixed:40").is_err());
+        assert!(PolicyConfig::parse("feddq:-1").is_err());
+    }
+
+    #[test]
+    fn label_roundtrip() {
+        for s in ["feddq:0.005", "feddq-whole:0.01", "adaquantfl:2", "fixed:8", "fp32"] {
+            let p = PolicyConfig::parse(s).unwrap();
+            assert_eq!(PolicyConfig::parse(&p.label()).unwrap(), p);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! The artifact manifest: single source of truth about every AOT-lowered
+//! executable, written by `python/compile/aot.py` and parsed here with the
+//! in-tree JSON parser.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One quantization segment (= one parameter tensor / layer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Everything Rust needs to drive one model's executables.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    /// Flat parameter dimension.
+    pub d: usize,
+    pub segments: Vec<Segment>,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub tau: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub n_clients: usize,
+    /// executable name -> HLO file name.
+    pub files: BTreeMap<String, String>,
+}
+
+impl ModelManifest {
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Elements of one input image.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Segment sizes in order (the quantizer's unit of work).
+    pub fn segment_sizes(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.size).collect()
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let usize_at = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest: model {name}: missing/bad {key}"))
+        };
+        let mut segments = Vec::new();
+        for (i, s) in j
+            .get("segments")
+            .and_then(Json::as_arr)
+            .context("manifest: segments missing")?
+            .iter()
+            .enumerate()
+        {
+            let seg = Segment {
+                name: s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("segment {i} name"))?
+                    .to_string(),
+                offset: s.get("offset").and_then(Json::as_usize).context("offset")?,
+                size: s.get("size").and_then(Json::as_usize).context("size")?,
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().context("shape elem"))
+                    .collect::<Result<_>>()?,
+            };
+            segments.push(seg);
+        }
+        let mut files = BTreeMap::new();
+        for (ename, e) in j
+            .get("executables")
+            .and_then(Json::as_obj)
+            .context("manifest: executables missing")?
+        {
+            files.insert(
+                ename.clone(),
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("executable {ename} file"))?
+                    .to_string(),
+            );
+        }
+        let mm = ModelManifest {
+            name: name.to_string(),
+            d: usize_at("d")?,
+            segments,
+            input_shape: j
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .context("input_shape")?
+                .iter()
+                .map(|x| x.as_usize().context("input_shape elem"))
+                .collect::<Result<_>>()?,
+            classes: usize_at("classes")?,
+            tau: usize_at("tau")?,
+            batch: usize_at("batch")?,
+            eval_batch: usize_at("eval_batch")?,
+            n_clients: usize_at("n_clients")?,
+            files,
+        };
+        mm.validate()?;
+        Ok(mm)
+    }
+
+    /// Structural invariants every well-formed manifest satisfies.
+    pub fn validate(&self) -> Result<()> {
+        let mut expect_off = 0usize;
+        for s in &self.segments {
+            if s.offset != expect_off {
+                bail!(
+                    "model {}: segment {} offset {} != running total {}",
+                    self.name, s.name, s.offset, expect_off
+                );
+            }
+            let prod: usize = s.shape.iter().product();
+            if prod != s.size {
+                bail!("model {}: segment {} shape/size mismatch", self.name, s.name);
+            }
+            expect_off += s.size;
+        }
+        if expect_off != self.d {
+            bail!("model {}: segments sum {} != d {}", self.name, expect_off, self.d);
+        }
+        for required in ["init", "round", "evaluate", "ranges", "quantize", "aggregate"] {
+            if !self.files.contains_key(required) {
+                bail!("model {}: executable {required} missing", self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest version")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("manifest models")?
+        {
+            models.insert(name.clone(), ModelManifest::from_json(name, mj)?);
+        }
+        Ok(Manifest { version, models })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+          "version": 2,
+          "models": {
+            "tiny": {
+              "d": 6, "padded": 2048, "tile": 1024, "tiles": 2,
+              "num_segments": 2,
+              "segments": [
+                {"name": "w", "offset": 0, "size": 4, "shape": [2, 2]},
+                {"name": "b", "offset": 4, "size": 2, "shape": [2]}
+              ],
+              "input_shape": [2, 1, 1], "classes": 2,
+              "tau": 3, "batch": 4, "eval_batch": 8, "n_clients": 2,
+              "executables": {
+                "init": {"file": "tiny_init.hlo.txt", "args": []},
+                "round": {"file": "tiny_round.hlo.txt", "args": []},
+                "evaluate": {"file": "tiny_evaluate.hlo.txt", "args": []},
+                "ranges": {"file": "tiny_ranges.hlo.txt", "args": []},
+                "quantize": {"file": "tiny_quantize.hlo.txt", "args": []},
+                "aggregate": {"file": "tiny_aggregate.hlo.txt", "args": []}
+              }
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.version, 2);
+        let t = &m.models["tiny"];
+        assert_eq!(t.d, 6);
+        assert_eq!(t.num_segments(), 2);
+        assert_eq!(t.segment_sizes(), vec![4, 2]);
+        assert_eq!(t.input_len(), 2);
+        assert_eq!(t.files["round"], "tiny_round.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_gapped_segments() {
+        let bad = sample().replace(r#""offset": 4"#, r#""offset": 5"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_executable() {
+        let bad = sample().replace(r#""quantize": {"file": "tiny_quantize.hlo.txt", "args": []},"#, "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_size_mismatch() {
+        let bad = sample().replace(r#""shape": [2, 2]"#, r#""shape": [3, 2]"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

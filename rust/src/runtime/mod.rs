@@ -1,0 +1,68 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and exposes them as typed executables.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`), never a
+//! serialized proto: jax >= 0.5 emits 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! See /opt/xla-example/README.md and DESIGN.md §2.
+
+pub mod manifest;
+pub mod model_exec;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{Manifest, ModelManifest, Segment};
+pub use model_exec::ModelRuntime;
+
+/// Shared PJRT CPU client.  One per process; executables are compiled
+/// against it and can be executed from any thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifacts_dir: String,
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts_dir` (must contain manifest.json).
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {artifacts_dir}"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            artifacts_dir: artifacts_dir.to_string(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = format!("{}/{}", self.artifacts_dir, file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))
+    }
+
+    /// Load every executable of `model` into a [`ModelRuntime`].
+    pub fn load_model(&self, model: &str) -> Result<ModelRuntime> {
+        let mm = self
+            .manifest
+            .models
+            .get(model)
+            .with_context(|| format!("model {model:?} not in manifest"))?
+            .clone();
+        ModelRuntime::load(self, mm)
+    }
+
+    /// Default artifacts directory: `$FEDDQ_ARTIFACTS` or `artifacts`.
+    pub fn default_artifacts_dir() -> String {
+        std::env::var("FEDDQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}

@@ -1,0 +1,175 @@
+//! Typed wrappers over one model's six AOT executables.
+//!
+//! Each wrapper builds input literals from plain slices, executes on the
+//! PJRT CPU client and unpacks the tuple outputs (everything is lowered
+//! with `return_tuple=True`).  These calls are the *entire* compute hot
+//! path of the coordinator — Python is never involved at runtime.
+
+use anyhow::{ensure, Context, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use super::manifest::ModelManifest;
+use super::Runtime;
+
+/// One model's compiled executables plus its manifest.
+pub struct ModelRuntime {
+    pub mm: ModelManifest,
+    init: PjRtLoadedExecutable,
+    round: PjRtLoadedExecutable,
+    evaluate: PjRtLoadedExecutable,
+    ranges: PjRtLoadedExecutable,
+    quantize: PjRtLoadedExecutable,
+    aggregate: PjRtLoadedExecutable,
+}
+
+fn vec_literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshape f32 literal")
+}
+
+fn vec_literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshape i32 literal")
+}
+
+fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Literal> {
+    let result = exe.execute::<Literal>(args).context("PJRT execute")?;
+    result[0][0].to_literal_sync().context("fetch result literal")
+}
+
+impl ModelRuntime {
+    pub fn load(rt: &Runtime, mm: ModelManifest) -> Result<Self> {
+        Ok(ModelRuntime {
+            init: rt.compile(&mm.files["init"])?,
+            round: rt.compile(&mm.files["round"])?,
+            evaluate: rt.compile(&mm.files["evaluate"])?,
+            ranges: rt.compile(&mm.files["ranges"])?,
+            quantize: rt.compile(&mm.files["quantize"])?,
+            aggregate: rt.compile(&mm.files["aggregate"])?,
+            mm,
+        })
+    }
+
+    /// Initialize a fresh flat parameter vector.
+    pub fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        let out = run(&self.init, &[Literal::scalar(seed)])?;
+        let params = out.to_tuple1()?.to_vec::<f32>()?;
+        ensure!(params.len() == self.mm.d, "init returned wrong length");
+        Ok(params)
+    }
+
+    /// Run tau local SGD steps; returns (delta, mean train loss).
+    ///
+    /// `xs` is `[tau * batch * input_len]` flat NHWC, `ys` is `[tau * batch]`.
+    pub fn local_round(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let (tau, b) = (self.mm.tau as i64, self.mm.batch as i64);
+        ensure!(params.len() == self.mm.d, "params length");
+        ensure!(
+            xs.len() == (tau * b) as usize * self.mm.input_len(),
+            "xs length {} != tau*B*input", xs.len()
+        );
+        ensure!(ys.len() == (tau * b) as usize, "ys length");
+        let mut xdims = vec![tau, b];
+        xdims.extend(self.mm.input_shape.iter().map(|&v| v as i64));
+        let args = [
+            Literal::vec1(params),
+            vec_literal_f32(xs, &xdims)?,
+            vec_literal_i32(ys, &[tau, b])?,
+            Literal::scalar(lr),
+        ];
+        let (delta, loss) = run(&self.round, &args)?.to_tuple2()?;
+        Ok((
+            delta.to_vec::<f32>()?,
+            loss.get_first_element::<f32>()?,
+        ))
+    }
+
+    /// Evaluate on one test batch; returns (loss_sum, correct_count).
+    pub fn evaluate(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<(f32, i32)> {
+        let e = self.mm.eval_batch as i64;
+        ensure!(xs.len() == e as usize * self.mm.input_len(), "eval xs length");
+        ensure!(ys.len() == e as usize, "eval ys length");
+        let mut xdims = vec![e];
+        xdims.extend(self.mm.input_shape.iter().map(|&v| v as i64));
+        let args = [
+            Literal::vec1(params),
+            vec_literal_f32(xs, &xdims)?,
+            Literal::vec1(ys),
+        ];
+        let (loss, correct) = run(&self.evaluate, &args)?.to_tuple2()?;
+        Ok((
+            loss.get_first_element::<f32>()?,
+            correct.get_first_element::<i32>()?,
+        ))
+    }
+
+    /// Per-segment (min, range) of a model update.
+    pub fn ranges(&self, delta: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(delta.len() == self.mm.d, "delta length");
+        let (mins, ranges) = run(&self.ranges, &[Literal::vec1(delta)])?.to_tuple2()?;
+        Ok((mins.to_vec::<f32>()?, ranges.to_vec::<f32>()?))
+    }
+
+    /// Stochastic quantization -> integer-valued codes (as f32).
+    ///
+    /// `sinv[l] = s_l / range_l` (0 collapses the segment), `maxcode[l] = s_l`.
+    pub fn quantize(
+        &self,
+        delta: &[f32],
+        mins: &[f32],
+        sinv: &[f32],
+        maxcode: &[f32],
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let l = self.mm.num_segments();
+        ensure!(delta.len() == self.mm.d, "delta length");
+        ensure!(mins.len() == l && sinv.len() == l && maxcode.len() == l, "segment params");
+        let args = [
+            Literal::vec1(delta),
+            Literal::vec1(mins),
+            Literal::vec1(sinv),
+            Literal::vec1(maxcode),
+            Literal::scalar(seed),
+        ];
+        let codes = run(&self.quantize, &args)?.to_tuple1()?;
+        Ok(codes.to_vec::<f32>()?)
+    }
+
+    /// Fused dequantize + weighted aggregate over all n clients.
+    ///
+    /// `codes` is `[n * d]` row-major, `mins`/`steps` are `[n * L]`,
+    /// `weights` is `[n]` (the paper's `p_i`, summing to 1).
+    pub fn aggregate(
+        &self,
+        codes: &[f32],
+        mins: &[f32],
+        steps: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = self.mm.n_clients;
+        let l = self.mm.num_segments();
+        ensure!(codes.len() == n * self.mm.d, "codes shape");
+        ensure!(mins.len() == n * l && steps.len() == n * l, "headers shape");
+        ensure!(weights.len() == n, "weights shape");
+        let args = [
+            vec_literal_f32(codes, &[n as i64, self.mm.d as i64])?,
+            vec_literal_f32(mins, &[n as i64, l as i64])?,
+            vec_literal_f32(steps, &[n as i64, l as i64])?,
+            Literal::vec1(weights),
+        ];
+        let delta = run(&self.aggregate, &args)?.to_tuple1()?;
+        Ok(delta.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,12 @@
+//! Network simulation: translate measured bit volumes into wall-clock
+//! time under a parametric uplink/downlink model.
+//!
+//! The paper's metric is communicated *bits*; what a deployment feels is
+//! *time-to-accuracy* under constrained links.  [`NetworkModel`] replays a
+//! [`RunReport`](crate::metrics::RunReport) against per-client bandwidth
+//! and per-round latency and produces the time axis for the same curves —
+//! used by the ablation bench and available to downstream users.
+
+pub mod network;
+
+pub use network::{NetworkModel, TimedRound};

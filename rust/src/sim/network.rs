@@ -1,0 +1,198 @@
+//! Parametric FL network model.
+//!
+//! Round structure (synchronous FedAvg, as in the paper):
+//!
+//! ```text
+//! t_round = latency_rtt                                  (control)
+//!         + downlink_bits / downlink_bps                 (broadcast, shared)
+//!         + max_i( uplink_bits_i / uplink_bps_i )        (stragglers!)
+//!         + compute_secs                                 (local training)
+//! ```
+//!
+//! The uplink is the term quantization shrinks; with heterogeneous client
+//! bandwidths the *slowest* client gates the round, which is why adaptive
+//! per-client bit-widths (FedDQ quantizes each client by its own range)
+//! also tighten the straggler tail.
+
+use crate::metrics::{RoundRecord, RunReport};
+use crate::util::rng::Rng;
+
+/// Per-deployment link parameters.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// Mean client uplink, bits/second (e.g. 10 Mbps home uplink = 10e6).
+    pub uplink_bps: f64,
+    /// Server->client broadcast bandwidth, bits/second.
+    pub downlink_bps: f64,
+    /// Per-round control-plane latency, seconds.
+    pub latency: f64,
+    /// Log-uniform spread factor for per-client uplink heterogeneity:
+    /// client bandwidth ~ uplink_bps * U[1/spread, spread].  1.0 = uniform.
+    pub spread: f64,
+    /// Number of clients (straggler max is taken over this many draws).
+    pub n_clients: usize,
+}
+
+impl NetworkModel {
+    /// A 10 Mbps-up / 50 Mbps-down WAN profile with mild heterogeneity.
+    pub fn wan(n_clients: usize) -> Self {
+        NetworkModel {
+            uplink_bps: 10e6,
+            downlink_bps: 50e6,
+            latency: 0.05,
+            spread: 3.0,
+            n_clients,
+        }
+    }
+
+    /// Per-client uplink bandwidths for one round (deterministic in seed).
+    fn client_bps(&self, rng: &mut Rng) -> Vec<f64> {
+        (0..self.n_clients)
+            .map(|_| {
+                if self.spread <= 1.0 {
+                    self.uplink_bps
+                } else {
+                    let u = rng.next_f64() * 2.0 - 1.0; // [-1, 1)
+                    self.uplink_bps * self.spread.powf(u)
+                }
+            })
+            .collect()
+    }
+
+    /// Wall-clock for one round given its measured bit volumes.
+    ///
+    /// `uplink_bits_total` is the round's summed uplink; per-client volume
+    /// is approximated as total/n (exact when clients quantize alike; the
+    /// straggler max over heterogeneous *bandwidths* still dominates).
+    pub fn round_secs(
+        &self,
+        rec: &RoundRecord,
+        downlink_bits_per_client: u64,
+        rng: &mut Rng,
+    ) -> f64 {
+        let bps = self.client_bps(rng);
+        let per_client_bits = rec.uplink_bits as f64 / self.n_clients as f64;
+        let slowest_upload = bps
+            .iter()
+            .map(|&b| per_client_bits / b)
+            .fold(0.0f64, f64::max);
+        let broadcast =
+            (downlink_bits_per_client as f64 * self.n_clients as f64) / self.downlink_bps;
+        self.latency + broadcast + slowest_upload + rec.wall_secs
+    }
+
+    /// Replay a whole report; returns per-round cumulative times.
+    pub fn replay(&self, report: &RunReport, model_d: usize, seed: u64) -> Vec<TimedRound> {
+        let mut rng = Rng::new(seed).derive("netsim");
+        // fp32 downlink of the full model + framing, as the coordinator sends.
+        let downlink_bits = (model_d as u64) * 32 + 1024;
+        let mut t = 0.0;
+        report
+            .rounds
+            .iter()
+            .map(|r| {
+                t += self.round_secs(r, downlink_bits, &mut rng);
+                TimedRound {
+                    round: r.round,
+                    cum_secs: t,
+                    test_accuracy: r.test_accuracy,
+                    cum_uplink_bits: r.cum_uplink_bits,
+                }
+            })
+            .collect()
+    }
+
+    /// Seconds until `target` accuracy is first reached, if ever.
+    pub fn time_to_accuracy(
+        &self,
+        report: &RunReport,
+        model_d: usize,
+        seed: u64,
+        target: f32,
+    ) -> Option<f64> {
+        self.replay(report, model_d, seed)
+            .into_iter()
+            .find(|t| !t.test_accuracy.is_nan() && t.test_accuracy >= target)
+            .map(|t| t.cum_secs)
+    }
+}
+
+/// One replayed round on the simulated network.
+#[derive(Clone, Debug)]
+pub struct TimedRound {
+    pub round: u32,
+    pub cum_secs: f64,
+    pub test_accuracy: f32,
+    pub cum_uplink_bits: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn rec(round: u32, uplink_bits: u64, acc: f32) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_loss: 1.0,
+            test_accuracy: acc,
+            uplink_bits,
+            cum_uplink_bits: uplink_bits * (round as u64 + 1),
+            mean_bits: 8.0,
+            mean_range: 0.1,
+            seg_ranges: vec![],
+            wall_secs: 1.0,
+        }
+    }
+
+    fn report(rounds: Vec<RoundRecord>) -> RunReport {
+        RunReport { label: "t".into(), model: "mlp".into(), rounds }
+    }
+
+    #[test]
+    fn fewer_bits_means_less_time() {
+        let nm = NetworkModel::wan(10);
+        let small = report(vec![rec(0, 1_000_000, 0.9)]);
+        let large = report(vec![rec(0, 32_000_000, 0.9)]);
+        let ts = nm.time_to_accuracy(&small, 100_000, 1, 0.5).unwrap();
+        let tl = nm.time_to_accuracy(&large, 100_000, 1, 0.5).unwrap();
+        assert!(ts < tl, "{ts} !< {tl}");
+    }
+
+    #[test]
+    fn replay_is_monotone_and_deterministic() {
+        let nm = NetworkModel::wan(4);
+        let rep = report((0..5).map(|m| rec(m, 2_000_000, 0.1 * m as f32)).collect());
+        let a = nm.replay(&rep, 50_000, 7);
+        let b = nm.replay(&rep, 50_000, 7);
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[1].cum_secs > w[0].cum_secs));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cum_secs, y.cum_secs);
+        }
+    }
+
+    #[test]
+    fn unreached_target_is_none() {
+        let nm = NetworkModel::wan(4);
+        let rep = report(vec![rec(0, 1_000, 0.2)]);
+        assert!(nm.time_to_accuracy(&rep, 1_000, 1, 0.9).is_none());
+    }
+
+    #[test]
+    fn straggler_spread_increases_round_time() {
+        let mut uniform = NetworkModel::wan(10);
+        uniform.spread = 1.0;
+        let spread = NetworkModel::wan(10); // spread = 3
+        let r = rec(0, 10_000_000, 0.5);
+        // average over several seeds: heterogeneity must cost time
+        let avg = |nm: &NetworkModel| -> f64 {
+            (0..20)
+                .map(|s| nm.round_secs(&r, 1_000_000, &mut Rng::new(s)))
+                .sum::<f64>()
+                / 20.0
+        };
+        assert!(avg(&spread) > avg(&uniform));
+    }
+}

@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, timed iterations, outlier-robust statistics and a
+//! stable one-line report format that the `cargo bench` targets print and
+//! `bench_output.txt` archives.  Deliberately minimal: monotonic clock,
+//! median/p5/p95, and a throughput helper.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p05: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+    /// Optional bytes processed per iteration (enables GB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| {
+            b as f64 / self.median.as_secs_f64() / 1.0e9
+        })
+    }
+
+    pub fn report_line(&self) -> String {
+        let thr = match self.throughput_gbps() {
+            Some(gbps) => format!("  {gbps:8.3} GB/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} median  [{:>12} .. {:>12}]  {} iters{}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p05),
+            fmt_dur(self.p95),
+            self.iters,
+            thr
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 3,
+            max_iters: 2_000,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` repeatedly; `f` returns a value that is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_bytes(name, None, &mut f)
+    }
+
+    /// Like [`Self::bench`] but annotates bytes/iter for GB/s reporting.
+    pub fn bench_bytes<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        bytes_per_iter: Option<u64>,
+        f: &mut F,
+    ) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed iterations.
+        let mut samples: Vec<f64> = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            median: Duration::from_secs_f64(stats::percentile(&samples, 50.0)),
+            p05: Duration::from_secs_f64(stats::percentile(&samples, 5.0)),
+            p95: Duration::from_secs_f64(stats::percentile(&samples, 95.0)),
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            bytes_per_iter,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from eliding benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Shared header printed by every bench binary.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_sane_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 3);
+        assert!(r.p05 <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_secs(1),
+            p05: Duration::from_secs(1),
+            p95: Duration::from_secs(1),
+            mean: Duration::from_secs(1),
+            bytes_per_iter: Some(2_000_000_000),
+        };
+        assert!((r.throughput_gbps().unwrap() - 2.0).abs() < 1e-9);
+    }
+}

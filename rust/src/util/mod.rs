@@ -1,0 +1,11 @@
+//! From-scratch substrates: the build environment has no crate registry
+//! access, so JSON, PRNG, CLI parsing, stats, logging, the micro-bench
+//! harness and the property-testing harness are all implemented here
+//! (DESIGN.md §5).
+
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,295 @@
+//! Exact-width bit packing of quantization codes.
+//!
+//! Codes are integers in `{0, .., s}` where `s` is the quantization level;
+//! each occupies exactly `width = ceil(log2(s+1))` bits on the wire —
+//! the `C_s = d * ceil(log2(s+1))` cost model of the paper (Appendix,
+//! Eq. 23 context).  Packing is little-endian within a `u64` accumulator,
+//! which compiles to a handful of shifts per code (no per-bit loops);
+//! see the `perf_hotpath` bench for measured GB/s.
+
+/// Number of wire bits for quantization level `s` (codes in `0..=s`).
+#[inline]
+pub fn width_for_level(s: u32) -> u32 {
+    // ceil(log2(s + 1)) — number of bits to represent s distinct steps + 0.
+    32 - s.leading_zeros()
+}
+
+/// Writer that packs variable-width unsigned integers into bytes.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bytes),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Append `width` low bits of `value` (width in 0..=32).
+    #[inline]
+    pub fn put(&mut self, value: u32, width: u32) {
+        debug_assert!(width <= 32);
+        debug_assert!(width == 32 || value < (1u32 << width).max(1));
+        self.acc |= (value as u64) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Pack a whole slice of codes at a fixed width (hot path).
+    ///
+    /// §Perf: flushes the accumulator four bytes at a time instead of the
+    /// scalar path's byte-wise Vec::push (EXPERIMENTS.md §Perf L3-3).
+    pub fn put_slice(&mut self, codes: &[u32], width: u32) {
+        if width == 0 {
+            return;
+        }
+        self.buf.reserve((codes.len() * width as usize + 7) / 8 + 8);
+        let mut acc = self.acc;
+        let mut nbits = self.nbits;
+        for &c in codes {
+            debug_assert!(width == 32 || c < (1u32 << width).max(1));
+            acc |= (c as u64) << nbits;
+            nbits += width;
+            if nbits >= 32 {
+                self.buf.extend_from_slice(&(acc as u32).to_le_bytes());
+                acc >>= 32;
+                nbits -= 32;
+            }
+        }
+        self.acc = acc;
+        self.nbits = nbits;
+        while self.nbits >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Flush the final partial byte and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.buf
+    }
+}
+
+/// Reader over bit-packed bytes.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader {
+            buf,
+            byte: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Read `width` bits (width in 0..=32); `None` past end of buffer.
+    #[inline]
+    pub fn get(&mut self, width: u32) -> Option<u32> {
+        debug_assert!(width <= 32);
+        if width == 0 {
+            return Some(0);
+        }
+        while self.nbits < width {
+            let b = *self.buf.get(self.byte)?;
+            self.acc |= (b as u64) << self.nbits;
+            self.nbits += 8;
+            self.byte += 1;
+        }
+        let mask = if width == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << width) - 1
+        };
+        let v = (self.acc & mask) as u32;
+        self.acc >>= width;
+        self.nbits -= width;
+        Some(v)
+    }
+
+    /// Unpack `n` codes at fixed width into `out` (hot path).
+    ///
+    /// §Perf: refills the accumulator with 32-bit unaligned loads instead
+    /// of the scalar path's byte-wise loop (EXPERIMENTS.md §Perf L3-3).
+    pub fn get_slice(&mut self, out: &mut Vec<u32>, n: usize, width: u32) -> Option<()> {
+        debug_assert!(width <= 32);
+        out.reserve(n);
+        if width == 0 {
+            out.extend(std::iter::repeat(0).take(n));
+            return Some(());
+        }
+        let mask = if width == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << width) - 1
+        };
+        let mut acc = self.acc;
+        let mut nbits = self.nbits;
+        let mut byte = self.byte;
+        for _ in 0..n {
+            while nbits < width {
+                if nbits <= 32 && byte + 4 <= self.buf.len() {
+                    let w = u32::from_le_bytes(self.buf[byte..byte + 4].try_into().unwrap());
+                    acc |= (w as u64) << nbits;
+                    nbits += 32;
+                    byte += 4;
+                } else if byte < self.buf.len() {
+                    acc |= (self.buf[byte] as u64) << nbits;
+                    nbits += 8;
+                    byte += 1;
+                } else {
+                    // commit nothing: leave reader state unchanged on error
+                    return None;
+                }
+            }
+            out.push((acc & mask) as u32);
+            acc >>= width;
+            nbits -= width;
+        }
+        self.acc = acc;
+        self.nbits = nbits;
+        self.byte = byte;
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn width_for_levels() {
+        assert_eq!(width_for_level(0), 0);
+        assert_eq!(width_for_level(1), 1);
+        assert_eq!(width_for_level(2), 2);
+        assert_eq!(width_for_level(3), 2);
+        assert_eq!(width_for_level(4), 3);
+        assert_eq!(width_for_level(255), 8);
+        assert_eq!(width_for_level(256), 9);
+        assert_eq!(width_for_level(u32::MAX), 32);
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.put(5, 3);
+        w.put(0, 1);
+        w.put(1023, 10);
+        w.put(7, 32);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3), Some(5));
+        assert_eq!(r.get(1), Some(0));
+        assert_eq!(r.get(10), Some(1023));
+        assert_eq!(r.get(32), Some(7));
+    }
+
+    #[test]
+    fn bit_len_is_exact() {
+        let mut w = BitWriter::new();
+        w.put_slice(&[1, 2, 3, 4, 5], 5);
+        assert_eq!(w.bit_len(), 25);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 4); // ceil(25/8)
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.put(3, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(2), Some(3));
+        assert_eq!(r.get(8), None); // only 6 padding bits remain
+    }
+
+    #[test]
+    fn prop_roundtrip_mixed_widths() {
+        check("bitpack-roundtrip", 200, |g: &mut Gen| {
+            let n = g.size(0, 300);
+            let items: Vec<(u32, u32)> = g.vec_of(n, |g| {
+                let width = g.int(0, 32) as u32;
+                let max = if width == 0 {
+                    0
+                } else if width == 32 {
+                    u32::MAX
+                } else {
+                    (1u32 << width) - 1
+                };
+                let v = if max == 0 {
+                    0
+                } else {
+                    (g.rng.next_u64() % (max as u64 + 1)) as u32
+                };
+                (v, width)
+            });
+            let mut w = BitWriter::new();
+            for &(v, width) in &items {
+                w.put(v, width);
+            }
+            let expect_bits: u64 = items.iter().map(|&(_, w)| w as u64).sum();
+            if w.bit_len() != expect_bits {
+                return Err(format!("bit_len {} != {}", w.bit_len(), expect_bits));
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for (i, &(v, width)) in items.iter().enumerate() {
+                match r.get(width) {
+                    Some(got) if got == v => {}
+                    other => return Err(format!("item {i}: expected {v}, got {other:?}")),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_slice_matches_scalar_path() {
+        check("bitpack-slice-equiv", 100, |g: &mut Gen| {
+            let width = g.int(1, 16) as u32;
+            let n = g.size(0, 500);
+            let max = (1u64 << width) - 1;
+            let codes: Vec<u32> =
+                g.vec_of(n, |g| (g.rng.next_u64() % (max + 1)) as u32);
+            let mut w1 = BitWriter::new();
+            w1.put_slice(&codes, width);
+            let mut w2 = BitWriter::new();
+            for &c in &codes {
+                w2.put(c, width);
+            }
+            if w1.finish() != w2.finish() {
+                return Err("slice path diverged from scalar path".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,356 @@
+//! Wire message types and their binary serialization.
+//!
+//! The format is a hand-rolled little-endian binary layout (no serde
+//! offline): one tag byte, then fixed-width fields, then length-prefixed
+//! payloads.  The *uplink* `Update` message is the object of study — its
+//! size is exactly what the paper's "communicated bit volume" counts:
+//! per-segment headers (bits, min, step — the `2 x 32` bit overhead per
+//! segment acknowledged in the paper's `C_s` model) plus the bit-packed
+//! codes.
+
+use anyhow::{bail, Result};
+
+/// Per-segment quantization header.
+///
+/// The decoder needs (bits, min, step); `level` (the quantization level
+/// `s`) additionally lets the server recover the client's observed update
+/// range as `step * level` for telemetry (Fig. 1b) without a second pass.
+/// All four fields are wire-accounted: 8 + 16 + 32 + 32 = 88 bits per
+/// segment (the paper's overhead model counts the two f32s).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentHeader {
+    /// Wire bits per code; 32 means raw f32 passthrough (fp32 policy).
+    pub bits: u8,
+    /// Quantization level `s` (codes in 0..=s); 0 for fp32 segments.
+    pub level: u16,
+    pub min: f32,
+    pub step: f32,
+}
+
+impl SegmentHeader {
+    /// The update range this header implies (telemetry).
+    pub fn range(&self) -> f32 {
+        if self.bits == 32 {
+            self.step // fp32 convention: step field carries the raw range
+        } else {
+            self.step * self.level as f32
+        }
+    }
+}
+
+/// A client's quantized model update for one round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Update {
+    pub round: u32,
+    pub client_id: u32,
+    /// Client dataset size (aggregation weight numerator, paper `p_i`).
+    pub num_samples: u32,
+    /// Mean local training loss over the tau local steps (AdaQuantFL input).
+    pub train_loss: f32,
+    pub segments: Vec<SegmentHeader>,
+    /// Bit-packed codes (or raw f32 LE bytes for 32-bit segments).
+    pub payload: Vec<u8>,
+}
+
+/// Everything that can cross a transport.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Client -> server: join the federation.
+    Join { client_id: u32 },
+    /// Server -> client: accepted; carries the run-config JSON so remote
+    /// workers configure themselves identically.
+    Welcome { client_id: u32, config_json: String },
+    /// Server -> client: global model for round `round` (fp32 downlink,
+    /// as in the paper — only the uplink is quantized).  Carries the
+    /// global loss trajectory (initial, previous-round) that loss-driven
+    /// policies (AdaQuantFL) condition on; `None` before round 1.
+    Broadcast {
+        round: u32,
+        params: Vec<f32>,
+        losses: Option<(f32, f32)>,
+    },
+    /// Client -> server: the quantized update.
+    Update(Update),
+    /// Server -> client: training is over.
+    Shutdown,
+}
+
+const TAG_JOIN: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_BROADCAST: u8 = 3;
+const TAG_UPDATE: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        // bulk copy — this is the downlink hot path
+        let ptr = v.as_ptr() as *const u8;
+        let bytes = unsafe { std::slice::from_raw_parts(ptr, v.len() * 4) };
+        if cfg!(target_endian = "little") {
+            self.buf.extend_from_slice(bytes);
+        } else {
+            for x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("message truncated: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn str(&mut self) -> Result<String> {
+        Ok(String::from_utf8(self.bytes()?)?)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes in message: {} of {}", self.pos, self.buf.len());
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Serialize to the wire byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Message::Join { client_id } => {
+                w.u8(TAG_JOIN);
+                w.u32(*client_id);
+            }
+            Message::Welcome { client_id, config_json } => {
+                w.u8(TAG_WELCOME);
+                w.u32(*client_id);
+                w.str(config_json);
+            }
+            Message::Broadcast { round, params, losses } => {
+                w.u8(TAG_BROADCAST);
+                w.u32(*round);
+                match losses {
+                    None => w.u8(0),
+                    Some((f0, fm)) => {
+                        w.u8(1);
+                        w.f32(*f0);
+                        w.f32(*fm);
+                    }
+                }
+                w.f32s(params);
+            }
+            Message::Update(u) => {
+                w.u8(TAG_UPDATE);
+                w.u32(u.round);
+                w.u32(u.client_id);
+                w.u32(u.num_samples);
+                w.f32(u.train_loss);
+                w.u32(u.segments.len() as u32);
+                for s in &u.segments {
+                    w.u8(s.bits);
+                    w.u16(s.level);
+                    w.f32(s.min);
+                    w.f32(s.step);
+                }
+                w.bytes(&u.payload);
+            }
+            Message::Shutdown => w.u8(TAG_SHUTDOWN),
+        }
+        w.buf
+    }
+
+    /// Parse from the wire byte layout (strict: rejects trailing bytes).
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            TAG_JOIN => Message::Join { client_id: r.u32()? },
+            TAG_WELCOME => Message::Welcome {
+                client_id: r.u32()?,
+                config_json: r.str()?,
+            },
+            TAG_BROADCAST => {
+                let round = r.u32()?;
+                let losses = match r.u8()? {
+                    0 => None,
+                    1 => Some((r.f32()?, r.f32()?)),
+                    t => bail!("bad losses flag {t}"),
+                };
+                Message::Broadcast { round, params: r.f32s()?, losses }
+            }
+            TAG_UPDATE => {
+                let round = r.u32()?;
+                let client_id = r.u32()?;
+                let num_samples = r.u32()?;
+                let train_loss = r.f32()?;
+                let nseg = r.u32()? as usize;
+                if nseg > 1_000_000 {
+                    bail!("absurd segment count {nseg}");
+                }
+                let mut segments = Vec::with_capacity(nseg);
+                for _ in 0..nseg {
+                    segments.push(SegmentHeader {
+                        bits: r.u8()?,
+                        level: r.u16()?,
+                        min: r.f32()?,
+                        step: r.f32()?,
+                    });
+                }
+                Message::Update(Update {
+                    round,
+                    client_id,
+                    num_samples,
+                    train_loss,
+                    segments,
+                    payload: r.bytes()?,
+                })
+            }
+            TAG_SHUTDOWN => Message::Shutdown,
+            t => bail!("unknown message tag {t}"),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn roundtrip(m: &Message) {
+        let bytes = m.encode();
+        let back = Message::decode(&bytes).unwrap();
+        assert_eq!(*m, back);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(&Message::Join { client_id: 7 });
+        roundtrip(&Message::Welcome {
+            client_id: 7,
+            config_json: r#"{"model":"mlp"}"#.into(),
+        });
+        roundtrip(&Message::Broadcast {
+            round: 3,
+            params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+            losses: None,
+        });
+        roundtrip(&Message::Broadcast {
+            round: 4,
+            params: vec![0.5; 3],
+            losses: Some((2.3, 0.7)),
+        });
+        roundtrip(&Message::Update(Update {
+            round: 3,
+            client_id: 1,
+            num_samples: 600,
+            train_loss: 1.25,
+            segments: vec![
+                SegmentHeader { bits: 7, level: 100, min: -0.5, step: 0.01 },
+                SegmentHeader { bits: 32, level: 0, min: 0.0, step: 0.0 },
+            ],
+            payload: vec![0xde, 0xad, 0xbe, 0xef],
+        }));
+        roundtrip(&Message::Shutdown);
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let bytes = Message::Broadcast { round: 1, params: vec![1.0; 8], losses: None }.encode();
+        assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(Message::decode(&extended).is_err());
+        assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn prop_update_roundtrip() {
+        check("message-update-roundtrip", 100, |g: &mut Gen| {
+            let nseg = g.size(0, 40);
+            let u = Update {
+                round: g.rng.next_u32(),
+                client_id: g.rng.next_u32(),
+                num_samples: g.rng.next_u32(),
+                train_loss: g.f32_wide(),
+                segments: g.vec_of(nseg, |g| SegmentHeader {
+                    bits: g.int(0, 32) as u8,
+                    level: g.int(0, 65535) as u16,
+                    min: g.f32_wide(),
+                    step: g.f32_wide(),
+                }),
+                payload: { let n = g.size(0, 2000); g.vec_of(n, |g| g.rng.next_u32() as u8) },
+            };
+            let m = Message::Update(u);
+            let back = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
+            if back != m {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

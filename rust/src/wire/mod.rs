@@ -1,0 +1,14 @@
+//! Wire layer: bit-exact encoding of quantized model updates and the
+//! transports that carry them.
+//!
+//! The paper's headline metric is *communicated bit volume*; this module
+//! makes the measurement honest by actually packing each code into its
+//! `ceil(log2(s+1))`-bit slot ([`bitpack`]), framing updates as messages
+//! ([`messages`], [`frame`]) and shipping them over an in-process channel
+//! or a real TCP socket ([`transport`]).  The ledger counts the bytes that
+//! cross the transport — not an analytic estimate.
+
+pub mod bitpack;
+pub mod frame;
+pub mod messages;
+pub mod transport;

@@ -1,0 +1,341 @@
+//! Integration tests over the real AOT artifacts: runtime numerics,
+//! codec round-trips through the actual executables, full sessions, and
+//! the TCP topology.  Require `make artifacts` to have been run.
+
+use feddq::config::RunConfig;
+use feddq::coordinator::codec::{self, QuantPlan};
+use feddq::coordinator::{topology, Session};
+use feddq::data::{shard::Sharding, DatasetKind};
+use feddq::quant::{math, PolicyConfig};
+use feddq::runtime::Runtime;
+use feddq::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new("artifacts").expect("run `make artifacts` before cargo test")
+}
+
+fn ramp(d: usize) -> Vec<f32> {
+    (0..d)
+        .map(|i| -2.0 + 5.0 * i as f32 / (d as f32 - 1.0))
+        .collect()
+}
+
+#[test]
+fn manifest_lists_all_four_models() {
+    let rt = runtime();
+    for m in ["mlp", "vanilla_cnn", "cnn4", "resnet18"] {
+        assert!(rt.manifest.models.contains_key(m), "{m} missing");
+        rt.manifest.models[m].validate().unwrap();
+    }
+}
+
+#[test]
+fn ranges_executable_matches_cpu_oracle() {
+    let rt = runtime();
+    let model = rt.load_model("mlp").unwrap();
+    let delta = ramp(model.mm.d);
+    let (mins, ranges) = model.ranges(&delta).unwrap();
+    // oracle: direct slice min/max
+    for (l, seg) in model.mm.segments.iter().enumerate() {
+        let s = &delta[seg.offset..seg.offset + seg.size];
+        let lo = s.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        assert!((mins[l] - lo).abs() < 1e-5, "seg {l} min");
+        assert!((ranges[l] - (hi - lo)).abs() < 1e-5, "seg {l} range");
+    }
+}
+
+#[test]
+fn quantize_executable_codes_are_valid_and_unbiased_ish() {
+    let rt = runtime();
+    let model = rt.load_model("mlp").unwrap();
+    let d = model.mm.d;
+    let delta = ramp(d);
+    let (mins, ranges) = model.ranges(&delta).unwrap();
+    let levels: Vec<u32> = vec![255; model.mm.num_segments()];
+    let plan = QuantPlan::new(&levels, &ranges);
+    let codes = model
+        .quantize(&delta, &mins, &plan.sinv, &plan.maxcode, 7)
+        .unwrap();
+    assert_eq!(codes.len(), d);
+    // codes integral, within [0, s]; dequantization close to the input
+    for (l, seg) in model.mm.segments.iter().enumerate() {
+        let mut max_err = 0.0f32;
+        for j in seg.offset..seg.offset + seg.size {
+            let c = codes[j];
+            assert_eq!(c, c.round(), "non-integral code at {j}");
+            assert!((0.0..=255.0).contains(&c));
+            let deq = mins[l] + c * plan.step[l];
+            max_err = max_err.max((deq - delta[j]).abs());
+        }
+        // per-segment quantization error bounded by one step
+        assert!(
+            max_err <= plan.step[l] * 1.001 + 1e-6,
+            "seg {l}: err {max_err} > step {}",
+            plan.step[l]
+        );
+    }
+}
+
+#[test]
+fn aggregate_executable_is_weighted_mean_of_dequants() {
+    let rt = runtime();
+    let model = rt.load_model("mlp").unwrap();
+    let mm = &model.mm;
+    let (n, d, l) = (mm.n_clients, mm.d, mm.num_segments());
+    let mut rng = Rng::new(5);
+    let codes: Vec<f32> = (0..n * d).map(|_| rng.below(16) as f32).collect();
+    let mins: Vec<f32> = (0..n * l).map(|_| rng.next_f32() - 0.5).collect();
+    let steps: Vec<f32> = (0..n * l).map(|_| rng.next_f32() * 0.01).collect();
+    let mut weights: Vec<f32> = (0..n).map(|_| 0.1 + rng.next_f32()).collect();
+    let sum: f32 = weights.iter().sum();
+    weights.iter_mut().for_each(|w| *w /= sum);
+
+    let got = model.aggregate(&codes, &mins, &steps, &weights).unwrap();
+
+    // oracle in plain rust
+    let mut want = vec![0.0f64; d];
+    for i in 0..n {
+        for (sl, seg) in mm.segments.iter().enumerate() {
+            let (mn, st) = (mins[i * l + sl] as f64, steps[i * l + sl] as f64);
+            for j in seg.offset..seg.offset + seg.size {
+                want[j] += weights[i] as f64 * (codes[i * d + j] as f64 * st + mn);
+            }
+        }
+    }
+    for j in 0..d {
+        assert!(
+            (got[j] as f64 - want[j]).abs() < 1e-4,
+            "elem {j}: {} vs {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+#[test]
+fn codec_roundtrip_through_real_quantizer() {
+    // encode_quantized -> decode_update must reproduce codes/mins/steps
+    // bit-exactly for real executable outputs.
+    let rt = runtime();
+    let model = rt.load_model("mlp").unwrap();
+    let mm = &model.mm;
+    let delta = ramp(mm.d);
+    let (mins, ranges) = model.ranges(&delta).unwrap();
+    let levels: Vec<u32> = (0..mm.num_segments())
+        .map(|l| [1u32, 7, 255, 65535][l % 4])
+        .collect();
+    let plan = QuantPlan::new(&levels, &ranges);
+    let codes = model
+        .quantize(&delta, &mins, &plan.sinv, &plan.maxcode, 99)
+        .unwrap();
+    let (headers, payload) = codec::encode_quantized(mm, &plan, &mins, &codes);
+    // wire size matches the analytic model
+    let seg_sizes = mm.segment_sizes();
+    let bits: Vec<u32> = levels.iter().map(|&s| math::bits_for_level(s)).collect();
+    let payload_bits = math::update_payload_bits(&seg_sizes, &bits);
+    assert_eq!(payload.len() as u64, (payload_bits + 7) / 8);
+    let u = feddq::wire::messages::Update {
+        round: 0,
+        client_id: 0,
+        num_samples: 1,
+        train_loss: 0.0,
+        segments: headers,
+        payload,
+    };
+    let dec = codec::decode_update(mm, &u).unwrap();
+    assert_eq!(dec.codes, codes);
+    for l in 0..mm.num_segments() {
+        assert_eq!(dec.mins[l], mins[l]);
+        assert!((dec.steps[l] - plan.step[l]).abs() < 1e-12);
+    }
+}
+
+fn tiny_cfg(policy: PolicyConfig) -> RunConfig {
+    let mut cfg = RunConfig::default_for("mlp");
+    cfg.rounds = 3;
+    cfg.train_size = 600;
+    cfg.test_size = 500; // one eval batch
+    cfg.policy = policy;
+    cfg
+}
+
+#[test]
+fn session_runs_and_accounts_bits_feddq() {
+    let mut session = Session::new(tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 })).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.rounds.len(), 3);
+    for r in &report.rounds {
+        assert!(r.train_loss.is_finite());
+        assert!(r.uplink_bits > 0);
+        assert!(r.mean_bits >= 1.0 && r.mean_bits <= 16.0);
+        assert!(r.mean_range > 0.0);
+    }
+    // cumulative bits strictly increasing
+    assert!(report
+        .rounds
+        .windows(2)
+        .all(|w| w[1].cum_uplink_bits > w[0].cum_uplink_bits));
+}
+
+#[test]
+fn session_fp32_costs_32_bits_per_element() {
+    let mut session = Session::new(tiny_cfg(PolicyConfig::Fp32)).unwrap();
+    let report = session.run().unwrap();
+    let r = &report.rounds[0];
+    assert!((r.mean_bits - 32.0).abs() < 1e-6);
+    let mm_d = session.manifest().d as u64;
+    let l = session.manifest().num_segments() as u64;
+    let n = session.manifest().n_clients as u64;
+    let expect = n * (mm_d * 32 + l * math::SEGMENT_HEADER_BITS);
+    assert_eq!(r.uplink_bits, expect);
+}
+
+#[test]
+fn session_fixed_bits_match_policy() {
+    let mut session = Session::new(tiny_cfg(PolicyConfig::Fixed { bits: 4 })).unwrap();
+    let report = session.run().unwrap();
+    assert!((report.rounds[0].mean_bits - 4.0).abs() < 1e-6);
+}
+
+#[test]
+fn feddq_bits_descend_over_training() {
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg.rounds = 8;
+    let mut session = Session::new(cfg).unwrap();
+    let report = session.run().unwrap();
+    let first = report.rounds.first().unwrap().mean_bits;
+    let last = report.rounds.last().unwrap().mean_bits;
+    assert!(
+        last < first,
+        "FedDQ bits should descend: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let r1 = Session::new(tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 }))
+        .unwrap()
+        .run()
+        .unwrap();
+    let r2 = Session::new(tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 }))
+        .unwrap()
+        .run()
+        .unwrap();
+    for (a, b) in r1.rounds.iter().zip(&r2.rounds) {
+        assert_eq!(a.train_loss, b.train_loss);
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+    }
+}
+
+#[test]
+fn dirichlet_sharding_session_runs() {
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg.sharding = Sharding::Dirichlet { alpha: 0.3 };
+    let report = Session::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 3);
+}
+
+#[test]
+fn dataset_model_mismatch_rejected() {
+    let mut cfg = tiny_cfg(PolicyConfig::Fp32);
+    cfg.dataset = DatasetKind::Cifar10; // mlp expects 28x28x1
+    assert!(Session::new(cfg).is_err());
+}
+
+#[test]
+fn tcp_topology_matches_nothing_burns() {
+    // Serve a 2-round run over real TCP with in-process worker threads
+    // (each worker gets its own PJRT runtime, as in multi-process mode).
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg.rounds = 2;
+    let addr = "127.0.0.1:17871";
+    let n = 10;
+    let workers: Vec<_> = (0..n)
+        .map(|id| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                // retry until the server is listening
+                for _ in 0..100 {
+                    match topology::worker(&addr, id, "artifacts") {
+                        Ok(()) => return,
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            if msg.contains("Connection refused") {
+                                std::thread::sleep(std::time::Duration::from_millis(100));
+                                continue;
+                            }
+                            panic!("worker {id}: {msg}");
+                        }
+                    }
+                }
+                panic!("worker {id}: server never came up");
+            })
+        })
+        .collect();
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(report.rounds.len(), 2);
+
+    // Same run in-process must produce identical losses and bit volumes
+    // (the data pipeline and quantizer streams are seed-deterministic).
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg2.rounds = 2;
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.train_loss, b.train_loss, "tcp vs local train loss");
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tcp vs local bits");
+    }
+}
+
+#[test]
+fn error_feedback_session_runs_and_stays_finite() {
+    let mut cfg = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
+    cfg.error_feedback = true;
+    cfg.rounds = 5;
+    let report = Session::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 5);
+    for r in &report.rounds {
+        assert!(r.train_loss.is_finite());
+    }
+    // EF must change the trajectory vs plain 2-bit (residuals feed back)
+    let mut cfg2 = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
+    cfg2.rounds = 5;
+    let plain = Session::new(cfg2).unwrap().run().unwrap();
+    assert_ne!(
+        report.rounds.last().unwrap().train_loss,
+        plain.rounds.last().unwrap().train_loss
+    );
+}
+
+#[test]
+fn feddq_whole_granularity_is_uniform_and_coarser() {
+    let mut cfg = tiny_cfg(PolicyConfig::FedDqWhole { resolution: 0.005 });
+    cfg.rounds = 2;
+    let whole = Session::new(cfg).unwrap().run().unwrap();
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg2.rounds = 2;
+    let per_seg = Session::new(cfg2).unwrap().run().unwrap();
+    // whole-model bit budget >= per-segment budget (max range rules all)
+    assert!(whole.rounds[0].mean_bits >= per_seg.rounds[0].mean_bits);
+}
+
+#[test]
+fn network_model_orders_policies_by_bits() {
+    use feddq::sim::NetworkModel;
+    let fed = Session::new(tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 }))
+        .unwrap()
+        .run()
+        .unwrap();
+    let fp = Session::new(tiny_cfg(PolicyConfig::Fp32)).unwrap().run().unwrap();
+    let nm = NetworkModel::wan(10);
+    let t_fed = nm.replay(&fed, 101770, 1).last().unwrap().cum_secs;
+    let t_fp = nm.replay(&fp, 101770, 1).last().unwrap().cum_secs;
+    assert!(
+        t_fed < t_fp,
+        "quantized run must be faster on a constrained uplink: {t_fed} vs {t_fp}"
+    );
+}
