@@ -1,7 +1,11 @@
 //! L3 hot-path micro-benchmarks: the pure-Rust wire work (bit packing,
-//! unpacking, message encode/decode, CRC framing) plus one full
-//! end-to-end federated round.  §Perf targets: pack/unpack >= 1 GB/s per
-//! core; round orchestration overhead small vs the XLA execute time.
+//! unpacking, message encode/decode, CRC framing) plus end-to-end
+//! federated rounds at threads=1 vs threads=4 — the parallel round
+//! engine's headline number.  §Perf targets: pack/unpack >= 1 GB/s per
+//! core; >= 2x s/round at threads=4 on a multi-core host.
+//!
+//! Emits `BENCH_hotpath.json` (name -> GB/s and s/round) so the perf
+//! trajectory is tracked across PRs.
 
 use feddq::bench_support as bs;
 use feddq::config::RunConfig;
@@ -13,9 +17,39 @@ use feddq::wire::bitpack::{BitReader, BitWriter};
 use feddq::wire::frame;
 use feddq::wire::messages::{Message, SegmentHeader, Update};
 
+/// One e2e run at `threads` workers; returns s/round.
+fn e2e_round_secs(threads: usize, rounds: usize) -> anyhow::Result<f64> {
+    let setup = bs::setup_for("mlp");
+    let mut cfg = RunConfig::default_for("mlp");
+    cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
+    cfg.rounds = rounds;
+    cfg.train_size = setup.train_size.min(1500);
+    cfg.test_size = 500;
+    cfg.eval_every = 1000; // isolate the round path from eval
+    cfg.threads = threads;
+    let t0 = std::time::Instant::now();
+    let mut session = Session::new(cfg)?;
+    let setup_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let report = session.run()?;
+    let run_secs = t1.elapsed().as_secs_f64();
+    let per_round = run_secs / report.rounds.len() as f64;
+    println!(
+        "threads={threads}: setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
+        setup_secs,
+        report.rounds.len(),
+        run_secs,
+        per_round,
+        session.manifest().n_clients,
+        session.manifest().tau,
+    );
+    Ok(per_round)
+}
+
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::default();
     let mut rng = Rng::new(7);
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     bench_header("bit packing / unpacking (1M codes)");
     let n = 1_000_000usize;
@@ -23,20 +57,22 @@ fn main() -> anyhow::Result<()> {
         let max = (1u64 << bits) - 1;
         let codes: Vec<u32> = (0..n).map(|_| (rng.next_u64() % (max + 1)) as u32).collect();
         let in_bytes = (n * 4) as u64; // source f32/u32 stream
-        b.bench_bytes(&format!("pack {bits}-bit"), Some(in_bytes), &mut || {
+        let r = b.bench_bytes(&format!("pack {bits}-bit"), Some(in_bytes), &mut || {
             let mut w = BitWriter::with_capacity(n * bits as usize / 8 + 8);
             w.put_slice(&codes, bits);
             black_box(w.finish())
         });
+        json.push((format!("pack_{bits}bit_gbps"), r.throughput_gbps().unwrap_or(0.0)));
         let mut w = BitWriter::new();
         w.put_slice(&codes, bits);
         let packed = w.finish();
-        b.bench_bytes(&format!("unpack {bits}-bit"), Some(in_bytes), &mut || {
+        let r = b.bench_bytes(&format!("unpack {bits}-bit"), Some(in_bytes), &mut || {
             let mut r = BitReader::new(&packed);
             let mut out = Vec::new();
             r.get_slice(&mut out, n, bits).unwrap();
             black_box(out)
         });
+        json.push((format!("unpack_{bits}bit_gbps"), r.throughput_gbps().unwrap_or(0.0)));
     }
 
     bench_header("message encode/decode (100k-element update, 8-bit)");
@@ -58,36 +94,30 @@ fn main() -> anyhow::Result<()> {
     let msg = Message::Update(update);
     let encoded = msg.encode();
     let bytes = encoded.len() as u64;
-    b.bench_bytes("encode Update", Some(bytes), &mut || black_box(msg.encode()));
-    b.bench_bytes("decode Update", Some(bytes), &mut || {
+    let r = b.bench_bytes("encode Update", Some(bytes), &mut || black_box(msg.encode()));
+    json.push(("encode_update_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    let r = b.bench_bytes("decode Update", Some(bytes), &mut || {
         black_box(Message::decode(&encoded).unwrap())
     });
-    b.bench_bytes("crc32 frame", Some(bytes), &mut || {
+    json.push(("decode_update_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    let r = b.bench_bytes("crc32 frame", Some(bytes), &mut || {
         black_box(frame::crc32(&encoded))
     });
+    json.push(("crc32_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
 
-    bench_header("end-to-end federated round (mlp, 10 clients, in-proc)");
-    let setup = bs::setup_for("mlp");
-    let mut cfg = RunConfig::default_for("mlp");
-    cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
-    cfg.rounds = 6;
-    cfg.train_size = setup.train_size.min(1500);
-    cfg.test_size = 500;
-    cfg.eval_every = 1000; // isolate the round path from eval
-    let t0 = std::time::Instant::now();
-    let mut session = Session::new(cfg)?;
-    let setup_secs = t0.elapsed().as_secs_f64();
-    let t1 = std::time::Instant::now();
-    let report = session.run()?;
-    let run_secs = t1.elapsed().as_secs_f64();
+    bench_header("end-to-end federated rounds (mlp, 10 clients, in-proc)");
+    let rounds = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 3 } else { 6 };
+    let t1 = e2e_round_secs(1, rounds)?;
+    let t4 = e2e_round_secs(4, rounds)?;
+    let speedup = t1 / t4;
     println!(
-        "session setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
-        setup_secs,
-        report.rounds.len(),
-        run_secs,
-        run_secs / report.rounds.len() as f64,
-        session.manifest().n_clients,
-        session.manifest().tau,
+        "round engine speedup threads=4 vs threads=1: {speedup:.2}x ({} cores available)",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
     );
+    json.push(("e2e_round_secs_threads1".into(), t1));
+    json.push(("e2e_round_secs_threads4".into(), t4));
+    json.push(("e2e_round_speedup_t4_vs_t1".into(), speedup));
+
+    bs::write_bench_json("hotpath", &json);
     Ok(())
 }

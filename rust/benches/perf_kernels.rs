@@ -1,7 +1,10 @@
-//! L1/L2 micro-benchmarks: latency of each AOT executable in isolation
-//! (the coordinator's entire compute budget), across the model zoo.
-//! Used by the §Perf pass in EXPERIMENTS.md.
+//! L1/L2 micro-benchmarks: latency of each model executable in
+//! isolation (the coordinator's entire compute budget), across every
+//! model the active backend can load.  Used by the §Perf pass in
+//! EXPERIMENTS.md.  Emits `BENCH_kernels.json` (name -> GB/s or secs)
+//! for cross-PR tracking.
 
+use feddq::bench_support as bs;
 use feddq::coordinator::codec::QuantPlan;
 use feddq::runtime::Runtime;
 use feddq::util::bench::{bench_header, Bencher};
@@ -10,6 +13,7 @@ use feddq::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new("artifacts")?;
     let mut b = Bencher::quick();
+    let mut json: Vec<(String, f64)> = Vec::new();
     let models: Vec<String> = if std::env::var("FEDDQ_BENCH_FAST").is_ok() {
         vec!["mlp".into()]
     } else {
@@ -17,7 +21,14 @@ fn main() -> anyhow::Result<()> {
     };
 
     for name in models {
-        let model = rt.load_model(&name)?;
+        let model = match rt.load_model(&name) {
+            Ok(m) => m,
+            Err(e) => {
+                // conv models need AOT artifacts + the pjrt feature
+                println!("skipping {name}: {e:#}");
+                continue;
+            }
+        };
         let mm = model.mm.clone();
         bench_header(&format!(
             "{name}: d={} segments={} tau={} B={}",
@@ -49,24 +60,33 @@ fn main() -> anyhow::Result<()> {
         // a single timed execution is the honest, affordable measurement.
         let t0 = std::time::Instant::now();
         model.local_round(&params, &xs, &ys, 0.1)?;
+        let round_secs = t0.elapsed().as_secs_f64();
         println!("{:<44} {:>12.3?} single-shot", format!("{name}/round (tau={} SGD steps)", mm.tau), t0.elapsed());
+        json.push((format!("{name}_round_secs"), round_secs));
         let t0 = std::time::Instant::now();
         model.evaluate(&params, &exs, &eys)?;
+        let eval_secs = t0.elapsed().as_secs_f64();
         println!("{:<44} {:>12.3?} single-shot", format!("{name}/evaluate (E={})", mm.eval_batch), t0.elapsed());
+        json.push((format!("{name}_evaluate_secs"), eval_secs));
         let dbytes = (mm.d * 4) as u64;
-        b.bench_bytes(&format!("{name}/ranges"), Some(dbytes), &mut || {
+        let r = b.bench_bytes(&format!("{name}/ranges"), Some(dbytes), &mut || {
             model.ranges(&delta).unwrap()
         });
-        b.bench_bytes(&format!("{name}/quantize"), Some(dbytes), &mut || {
+        json.push((format!("{name}_ranges_gbps"), r.throughput_gbps().unwrap_or(0.0)));
+        let r = b.bench_bytes(&format!("{name}/quantize"), Some(dbytes), &mut || {
             model
                 .quantize(&delta, &mins, &plan.sinv, &plan.maxcode, 2)
                 .unwrap()
         });
-        b.bench_bytes(
+        json.push((format!("{name}_quantize_gbps"), r.throughput_gbps().unwrap_or(0.0)));
+        let r = b.bench_bytes(
             &format!("{name}/aggregate (n={n})"),
             Some(dbytes * n as u64),
             &mut || model.aggregate(&codes_n, &mins_n, &steps_n, &w).unwrap(),
         );
+        json.push((format!("{name}_aggregate_gbps"), r.throughput_gbps().unwrap_or(0.0)));
     }
+
+    bs::write_bench_json("kernels", &json);
     Ok(())
 }

@@ -125,3 +125,22 @@ pub fn save(report: &RunReport, name: &str) {
         println!("# saved {path}");
     }
 }
+
+/// Write a flat `name -> number` JSON map as `BENCH_<name>.json` in the
+/// working directory (the repo root under `cargo bench`), so the perf
+/// trajectory is tracked across PRs instead of scraped from stdout.
+/// Keys are sorted (BTreeMap) for stable diffs.
+pub fn write_bench_json(name: &str, entries: &[(String, f64)]) {
+    use crate::util::json::Json;
+    let obj = Json::Obj(
+        entries
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::from(*v)))
+            .collect(),
+    );
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, obj.to_string_pretty() + "\n") {
+        Ok(()) => println!("# saved {path}"),
+        Err(e) => eprintln!("# could not save {path}: {e}"),
+    }
+}

@@ -138,6 +138,12 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if args.flag("error-feedback") {
         cfg.error_feedback = true;
     }
+    if let Some(t) = args.get_parse::<usize>("threads")? {
+        cfg.threads = t;
+    }
+    if let Some(a) = args.get("aggregate") {
+        cfg.aggregate = crate::config::AggregateMode::parse(a)?;
+    }
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -179,7 +185,8 @@ mod tests {
     fn config_from_args() {
         let a = Args::parse(&argv(
             "--model cnn4 --policy adaquantfl:4 --rounds 12 --lr 0.05 \
-             --sharding dirichlet:0.5 --target-acc 0.8",
+             --sharding dirichlet:0.5 --target-acc 0.8 --threads 4 \
+             --aggregate fused",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -187,6 +194,14 @@ mod tests {
         assert_eq!(cfg.rounds, 12);
         assert_eq!(cfg.lr, 0.05);
         assert_eq!(cfg.target_accuracy, Some(0.8));
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.aggregate, crate::config::AggregateMode::Fused);
         a.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_aggregate_mode_rejected() {
+        let a = Args::parse(&argv("--aggregate turbo")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
     }
 }

@@ -8,6 +8,34 @@ use crate::data::{shard::Sharding, DatasetKind};
 use crate::quant::PolicyConfig;
 use crate::util::json::Json;
 
+/// How the server folds decoded client updates into the global delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregateMode {
+    /// Stream each update into a single `d`-length accumulator as it is
+    /// decoded — allocation-free, no `n x d` materialization (default).
+    Streaming,
+    /// Materialize all `n` decoded updates and run the fused
+    /// dequantize-aggregate executable (the XLA/Pallas kernel path).
+    Fused,
+}
+
+impl AggregateMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "streaming" => Ok(AggregateMode::Streaming),
+            "fused" => Ok(AggregateMode::Fused),
+            _ => anyhow::bail!("unknown aggregate mode {s:?} (want streaming|fused)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggregateMode::Streaming => "streaming",
+            AggregateMode::Fused => "fused",
+        }
+    }
+}
+
 /// Full configuration of one federated run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -40,6 +68,13 @@ pub struct RunConfig {
     /// residual and fold it into the next round's update (EF-SGD family;
     /// an extension beyond the paper, off by default).
     pub error_feedback: bool,
+    /// Worker threads for in-process client rounds; 0 = auto
+    /// (min(n_clients, available cores)).  Any value yields the same
+    /// `RunReport` bit-for-bit — see the determinism contract in lib.rs.
+    pub threads: usize,
+    /// Server-side aggregation strategy (streaming by default; the fused
+    /// executable only when configured).
+    pub aggregate: AggregateMode,
 }
 
 impl RunConfig {
@@ -68,7 +103,21 @@ impl RunConfig {
             data_dir: "data".to_string(),
             target_accuracy: None,
             error_feedback: false,
+            threads: 0,
+            aggregate: AggregateMode::Streaming,
         }
+    }
+
+    /// Resolve the worker-thread count for `n_clients` in-process
+    /// clients: explicit value, or min(n_clients, cores) when 0 — and
+    /// never more threads than clients.
+    pub fn resolved_threads(&self, n_clients: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.clamp(1, n_clients.max(1))
     }
 
     /// Human-readable run label (used in report files).
@@ -110,6 +159,8 @@ impl RunConfig {
                 },
             ),
             ("error_feedback", Json::from(self.error_feedback)),
+            ("threads", Json::from(self.threads)),
+            ("aggregate", Json::from(self.aggregate.label())),
         ])
     }
 
@@ -144,6 +195,13 @@ impl RunConfig {
                 .get("error_feedback")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            // both absent in pre-threading configs: default sequentially
+            // compatible values (auto threads, streaming aggregation)
+            threads: j.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            aggregate: match j.get("aggregate").and_then(Json::as_str) {
+                Some(s) => AggregateMode::parse(s)?,
+                None => AggregateMode::Streaming,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -186,6 +244,8 @@ mod tests {
         c.sharding = Sharding::Dirichlet { alpha: 0.5 };
         c.target_accuracy = Some(0.8);
         c.error_feedback = true;
+        c.threads = 6;
+        c.aggregate = AggregateMode::Fused;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
@@ -205,5 +265,31 @@ mod tests {
         let mut c = RunConfig::default_for("mlp");
         c.target_accuracy = Some(2.0);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn missing_threading_fields_default_compatibly() {
+        // configs serialized before the parallel round engine existed
+        let c = RunConfig::default_for("mlp");
+        let mut j = c.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("threads");
+            o.remove("aggregate");
+        }
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.threads, 0);
+        assert_eq!(back.aggregate, AggregateMode::Streaming);
+    }
+
+    #[test]
+    fn resolved_threads_clamps() {
+        let mut c = RunConfig::default_for("mlp");
+        c.threads = 64;
+        assert_eq!(c.resolved_threads(10), 10);
+        c.threads = 3;
+        assert_eq!(c.resolved_threads(10), 3);
+        c.threads = 0;
+        let auto = c.resolved_threads(10);
+        assert!((1..=10).contains(&auto));
     }
 }

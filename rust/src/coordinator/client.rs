@@ -7,6 +7,8 @@
 //! simulator and the remote TCP worker, so both modes exercise identical
 //! code.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::codec::{self, QuantPlan};
@@ -18,9 +20,16 @@ use crate::util::rng::Rng;
 use crate::wire::messages::Update;
 
 /// One federated client's local state.
+///
+/// Owns no thread affinity: the round engine moves a `ClientState`
+/// through its worker pool each round, so everything here is `Send` and
+/// all randomness comes from per-client streams derived at construction
+/// (bit-identical results whatever thread runs the round).
 pub struct ClientState {
     pub id: u32,
-    shard: Dataset,
+    /// Shared (read-only) training shard — `Arc` so the session keeps
+    /// one copy per client across runs instead of cloning per state.
+    shard: Arc<Dataset>,
     cursor: BatchCursor,
     policy: Box<dyn QuantPolicy>,
     lr: f32,
@@ -40,7 +49,7 @@ pub struct ClientState {
 impl ClientState {
     pub fn new(
         id: u32,
-        shard: Dataset,
+        shard: Arc<Dataset>,
         policy: Box<dyn QuantPolicy>,
         lr: f32,
         model: &ModelRuntime,
@@ -53,7 +62,7 @@ impl ClientState {
     #[allow(clippy::too_many_arguments)]
     pub fn with_options(
         id: u32,
-        shard: Dataset,
+        shard: Arc<Dataset>,
         policy: Box<dyn QuantPolicy>,
         lr: f32,
         model: &ModelRuntime,

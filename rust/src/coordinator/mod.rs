@@ -1,10 +1,13 @@
 //! The FL coordinator — L3's contribution: round orchestration, the
 //! client uplink path (local round → range → policy → quantize → pack) and
 //! the server downlink/aggregation path, over pluggable client handles
-//! (in-process or TCP workers).
+//! (in-process pool workers or TCP workers).  In-process client rounds
+//! run concurrently on a persistent thread pool ([`pool`]) with
+//! bit-deterministic results for any thread count.
 
 pub mod client;
 pub mod codec;
+pub mod pool;
 pub mod server;
 pub mod topology;
 

@@ -1,0 +1,109 @@
+//! Persistent worker pool for in-process client rounds.
+//!
+//! The single-process `Session` used to run every client's local round
+//! sequentially on the session thread; with tau SGD steps per client
+//! this serialized the entire compute of a round.  The pool runs
+//! [`ClientState::process_round`] for many clients concurrently on a
+//! fixed set of `std::thread` workers (the `threads` knob in
+//! [`RunConfig`](crate::config::RunConfig); default min(n_clients,
+//! cores)).
+//!
+//! ## Determinism contract
+//!
+//! Scheduling is work-stealing (a shared job queue), so *which* worker
+//! runs a client, and in what order rounds complete, is nondeterministic
+//! — but the results are not:
+//!
+//! * each job owns its `ClientState` (moved in, moved back out), so no
+//!   client state is ever shared between threads;
+//! * every stochastic stream (batch cursor, quantizer seeds) is derived
+//!   per client at construction, not from a shared generator;
+//! * the server collects replies per client and sorts updates by
+//!   `client_id` before aggregating.
+//!
+//! A round therefore produces a bit-identical `RunReport` for any
+//! thread count, which `rust/tests/parallel_determinism.rs` asserts.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::client::ClientState;
+use crate::runtime::ModelRuntime;
+use crate::wire::messages::Update;
+
+/// One client-round job: state in, (state, update) out.
+pub struct Job {
+    pub state: ClientState,
+    pub round: u32,
+    pub params: Arc<[f32]>,
+    pub losses: Option<(f32, f32)>,
+    pub reply: Sender<Result<(ClientState, Update)>>,
+}
+
+/// Fixed-size pool of round workers sharing one [`ModelRuntime`].
+pub struct WorkerPool {
+    jobs: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (>= 1) over a shared job queue.
+    pub fn new(threads: usize, model: Arc<ModelRuntime>) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let model = Arc::clone(&model);
+                std::thread::Builder::new()
+                    .name(format!("feddq-round-{i}"))
+                    .spawn(move || worker_loop(&rx, &model))
+                    .expect("spawn round worker")
+            })
+            .collect();
+        WorkerPool { jobs: Some(tx), workers }
+    }
+
+    /// A submission handle clients keep without borrowing the pool;
+    /// jobs queue on it and results arrive on each job's `reply`.
+    pub fn sender(&self) -> Sender<Job> {
+        self.jobs.as_ref().expect("pool alive").clone()
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>, model: &ModelRuntime) {
+    loop {
+        // Hold the lock only for the dequeue, never across a round.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // a sibling panicked mid-dequeue
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => return, // all senders dropped: shut down
+        };
+        let Job { mut state, round, params, losses, reply } = job;
+        let result = state
+            .process_round(model, round, &params, losses)
+            .map(|update| (state, update));
+        // A dropped receiver just means the session gave up on the round.
+        let _ = reply.send(result);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Close the queue, then wait for in-flight rounds to finish.
+        // (Clients holding `sender()` clones must be dropped first or
+        // the workers keep serving them — the session drops its clients
+        // before the pool by declaration order.)
+        self.jobs.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

@@ -1,26 +1,60 @@
 //! Server-side FL logic: the round loop, aggregation and evaluation —
-//! plus [`Session`], the single-process driver that wires local clients
-//! to the server through the same message types the TCP mode uses.
+//! plus [`Session`], the single-process driver that runs client rounds
+//! on a persistent worker pool ([`super::pool`]) and talks to the server
+//! through the same message types the TCP mode uses.
+//!
+//! ## Round data path
+//!
+//! * **Broadcast** is zero-copy: the global parameters live in an
+//!   `Arc<[f32]>`, the `Broadcast` message is encoded **once** per round
+//!   and every client handle receives the shared buffer / pre-encoded
+//!   bytes ([`ClientHandle::send_broadcast`]).  After the round, the
+//!   server updates the vector in place (`Arc::get_mut` — by then all
+//!   clients have dropped their references).
+//! * **Aggregation** streams by default
+//!   ([`AggregateMode::Streaming`]): each update is decoded into a
+//!   round-persistent scratch ([`codec::DecodedUpdate`]) and its
+//!   weighted dequantized delta is folded directly into one `d`-length
+//!   accumulator — no `n x d` codes matrix.  The fused
+//!   dequantize-aggregate executable remains available as
+//!   [`AggregateMode::Fused`].
+//!
+//! Both paths visit updates in ascending `client_id` order, so reports
+//! are bit-identical across thread counts.  Across the two aggregation
+//! *modes*, equality holds element-for-element on the native backend
+//! (same fixed-order f32 arithmetic); a hardware-backed fused kernel
+//! may reduce in a different order and is only guaranteed close, not
+//! bit-equal (see `streaming_and_fused_aggregation_agree`).
 
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
 use super::client::ClientState;
 use super::codec;
-use crate::config::RunConfig;
+use super::pool::{Job, WorkerPool};
+use crate::config::{AggregateMode, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::wire::frame;
-use crate::wire::messages::{Message, Update};
+use crate::wire::messages::{self, Message, Update};
 
 /// A connected client as the server sees it.
 pub trait ClientHandle {
     fn id(&self) -> u32;
     fn send(&mut self, msg: &Message) -> Result<()>;
+    /// Broadcast fast path: `encoded` is `msg.encode()`, produced once
+    /// by the server for the whole round.  Implementations must not
+    /// re-encode; the default falls back to [`Self::send`].
+    fn send_broadcast(&mut self, msg: &Message, encoded: &[u8]) -> Result<()> {
+        let _ = encoded;
+        self.send(msg)
+    }
     fn recv_update(&mut self) -> Result<Update>;
     /// Cumulative uplink bytes (client -> server), framed size.
     fn uplink_bytes(&self) -> u64;
@@ -31,24 +65,57 @@ pub trait ClientHandle {
 /// The federated server: owns the global model and the round loop.
 pub struct Server<'rt> {
     pub model: &'rt ModelRuntime,
-    pub params: Vec<f32>,
-    test: data::Dataset,
+    params: Arc<[f32]>,
+    test: Arc<data::Dataset>,
+    aggregate_mode: AggregateMode,
     initial_loss: Option<f32>,
     prev_loss: Option<f32>,
     cum_uplink_bits: u64,
+    // round-persistent scratch (allocation-free steady state)
+    dec: codec::DecodedUpdate,
+    acc: Vec<f32>,
 }
 
 impl<'rt> Server<'rt> {
-    pub fn new(model: &'rt ModelRuntime, test: data::Dataset, seed: u32) -> Result<Self> {
-        let params = model.init(seed)?;
+    pub fn new(
+        model: &'rt ModelRuntime,
+        test: Arc<data::Dataset>,
+        seed: u32,
+        aggregate_mode: AggregateMode,
+    ) -> Result<Self> {
+        let params: Arc<[f32]> = model.init(seed)?.into();
         Ok(Server {
             model,
             params,
             test,
+            aggregate_mode,
             initial_loss: None,
             prev_loss: None,
             cum_uplink_bits: 0,
+            dec: codec::DecodedUpdate::new(),
+            acc: Vec::new(),
         })
+    }
+
+    /// The current global parameter vector.
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// FNV-1a hash over the exact parameter bits (determinism checks).
+    pub fn params_hash(&self) -> u64 {
+        hash_f32_bits(&self.params)
+    }
+
+    /// Mutable view of the parameters.  Zero-copy when the server holds
+    /// the only reference (the steady state: all per-round broadcast
+    /// clones are dropped by aggregation time); falls back to
+    /// copy-on-write otherwise.
+    fn params_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.params).is_none() {
+            self.params = self.params.to_vec().into();
+        }
+        Arc::get_mut(&mut self.params).expect("unique after copy-on-write")
     }
 
     /// Drive one round across `clients`; returns the round record.
@@ -63,21 +130,25 @@ impl<'rt> Server<'rt> {
         let n = clients.len();
         ensure!(n == mm.n_clients, "manifest expects {} clients, got {n}", mm.n_clients);
 
-        // Broadcast the global model (+ loss trajectory for AdaQuantFL).
+        // Broadcast the global model (+ loss trajectory for AdaQuantFL):
+        // one Arc clone per client, one encode per round.
         let losses = match (self.initial_loss, self.prev_loss) {
             (Some(f0), Some(fm)) => Some((f0, fm)),
             _ => None,
         };
         let bcast = Message::Broadcast {
             round,
-            params: self.params.clone(),
+            params: Arc::clone(&self.params),
             losses,
         };
+        let encoded = bcast.encode();
         for c in clients.iter_mut() {
-            c.send(&bcast)?;
+            c.send_broadcast(&bcast, &encoded)?;
         }
+        drop(bcast);
+        drop(encoded);
 
-        // Collect updates.
+        // Collect updates (blocking per client; pool clients overlap).
         let mut updates: Vec<Update> = Vec::with_capacity(n);
         for c in clients.iter_mut() {
             let u = c.recv_update()?;
@@ -86,27 +157,13 @@ impl<'rt> Server<'rt> {
         }
         updates.sort_by_key(|u| u.client_id);
 
-        // Decode into the aggregate executable's inputs.
-        let l = mm.num_segments();
-        let mut codes = Vec::with_capacity(n * mm.d);
-        let mut mins = Vec::with_capacity(n * l);
-        let mut steps = Vec::with_capacity(n * l);
-        let mut weights = Vec::with_capacity(n);
         let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
         ensure!(total_samples > 0, "no samples reported");
-        for u in &updates {
-            let dec = codec::decode_update(mm, u)
-                .with_context(|| format!("decoding update from client {}", u.client_id))?;
-            codes.extend_from_slice(&dec.codes);
-            mins.extend_from_slice(&dec.mins);
-            steps.extend_from_slice(&dec.steps);
-            weights.push(u.num_samples as f32 / total_samples as f32);
-        }
 
-        // Fused dequantize + weighted aggregate, then apply (Eq. 4).
-        let delta = self.model.aggregate(&codes, &mins, &steps, &weights)?;
-        for (p, d) in self.params.iter_mut().zip(&delta) {
-            *p += d;
+        // Decode + aggregate, then apply (Eq. 4).
+        match self.aggregate_mode {
+            AggregateMode::Streaming => self.aggregate_streaming(&updates, total_samples)?,
+            AggregateMode::Fused => self.aggregate_fused(&updates, total_samples)?,
         }
 
         // Loss bookkeeping for loss-driven policies.
@@ -127,6 +184,7 @@ impl<'rt> Server<'rt> {
         self.cum_uplink_bits += uplink_bits;
 
         // Telemetry: mean bits/element and ranges (Figs. 1b, 5).
+        let l = mm.num_segments();
         let seg_sizes = mm.segment_sizes();
         let mut mean_bits_acc = 0.0f64;
         let mut mean_range_acc = 0.0f64;
@@ -167,6 +225,61 @@ impl<'rt> Server<'rt> {
         })
     }
 
+    /// Streaming decode-aggregate: fold each update's weighted
+    /// dequantized delta into one accumulator as it is decoded.  Visits
+    /// updates in sorted order with fixed-order f32 arithmetic, matching
+    /// the fused kernel's client-major accumulation element for element.
+    fn aggregate_streaming(&mut self, updates: &[Update], total_samples: u64) -> Result<()> {
+        let mm = &self.model.mm;
+        self.acc.clear();
+        self.acc.resize(mm.d, 0.0);
+        for u in updates {
+            codec::decode_update_into(mm, u, &mut self.dec)
+                .with_context(|| format!("decoding update from client {}", u.client_id))?;
+            let w = u.num_samples as f32 / total_samples as f32;
+            for (l, seg) in mm.segments.iter().enumerate() {
+                let (mn, st) = (self.dec.mins[l], self.dec.steps[l]);
+                let codes = &self.dec.codes[seg.offset..seg.offset + seg.size];
+                let acc = &mut self.acc[seg.offset..seg.offset + seg.size];
+                for (a, &c) in acc.iter_mut().zip(codes) {
+                    *a += w * (c * st + mn);
+                }
+            }
+        }
+        // Borrow dance: take the accumulator, apply, put it back.
+        let acc = std::mem::take(&mut self.acc);
+        for (p, d) in self.params_mut().iter_mut().zip(&acc) {
+            *p += d;
+        }
+        self.acc = acc;
+        Ok(())
+    }
+
+    /// Fused path: materialize the `n x d` inputs and run the aggregate
+    /// executable (XLA/Pallas kernel when built with `pjrt`).
+    fn aggregate_fused(&mut self, updates: &[Update], total_samples: u64) -> Result<()> {
+        let mm = &self.model.mm;
+        let n = updates.len();
+        let l = mm.num_segments();
+        let mut codes = Vec::with_capacity(n * mm.d);
+        let mut mins = Vec::with_capacity(n * l);
+        let mut steps = Vec::with_capacity(n * l);
+        let mut weights = Vec::with_capacity(n);
+        for u in updates {
+            codec::decode_update_into(mm, u, &mut self.dec)
+                .with_context(|| format!("decoding update from client {}", u.client_id))?;
+            codes.extend_from_slice(&self.dec.codes);
+            mins.extend_from_slice(&self.dec.mins);
+            steps.extend_from_slice(&self.dec.steps);
+            weights.push(u.num_samples as f32 / total_samples as f32);
+        }
+        let delta = self.model.aggregate(&codes, &mins, &steps, &weights)?;
+        for (p, d) in self.params_mut().iter_mut().zip(&delta) {
+            *p += d;
+        }
+        Ok(())
+    }
+
     /// Full-test-set evaluation in `eval_batch` chunks (the AOT executable
     /// has a static batch; a trailing partial chunk is dropped, which is
     /// deterministic and identical across policies).
@@ -190,42 +303,87 @@ impl<'rt> Server<'rt> {
     }
 }
 
+/// FNV-1a over the bit patterns of an f32 slice.
+pub fn hash_f32_bits(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
 // ---------------------------------------------------------------------------
 // in-process session
 // ---------------------------------------------------------------------------
 
-/// In-process client handle: same `Message` traffic as TCP, byte-accounted
-/// at framed size, executed synchronously on the session thread (the XLA
-/// CPU client already parallelizes each execution across cores).
-struct LocalClient<'rt> {
-    state: ClientState,
-    model: &'rt ModelRuntime,
-    pending: Option<Update>,
+/// In-process client handle backed by the worker pool: same `Message`
+/// traffic as TCP, byte-accounted at framed size from exact encoded
+/// lengths (nothing is serialized on this path except the shared
+/// broadcast).  `send_broadcast` queues the round; `recv_update` blocks
+/// for the result, so all clients compute concurrently between the two.
+struct PoolClient {
+    id: u32,
+    state: Option<ClientState>,
+    jobs: Sender<Job>,
+    pending: Option<Receiver<Result<(ClientState, Update)>>>,
     up_bytes: u64,
     down_bytes: u64,
 }
 
-impl<'rt> ClientHandle for LocalClient<'rt> {
-    fn id(&self) -> u32 {
-        self.state.id
-    }
-
-    fn send(&mut self, msg: &Message) -> Result<()> {
-        self.down_bytes += frame::framed_len(msg.encode().len());
+impl PoolClient {
+    fn dispatch(&mut self, msg: &Message) -> Result<()> {
         if let Message::Broadcast { round, params, losses } = msg {
-            let u = self.state.process_round(self.model, *round, params, *losses)?;
-            self.pending = Some(u);
+            let state = self
+                .state
+                .take()
+                .context("client already has a round in flight")?;
+            let (tx, rx) = channel();
+            self.jobs
+                .send(Job {
+                    state,
+                    round: *round,
+                    params: Arc::clone(params),
+                    losses: *losses,
+                    reply: tx,
+                })
+                .ok()
+                .context("worker pool hung up")?;
+            self.pending = Some(rx);
         }
         Ok(())
     }
+}
+
+impl ClientHandle for PoolClient {
+    fn id(&self) -> u32 {
+        self.id
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.down_bytes += frame::framed_len(msg.encoded_len());
+        self.dispatch(msg)
+    }
+
+    fn send_broadcast(&mut self, msg: &Message, encoded: &[u8]) -> Result<()> {
+        self.down_bytes += frame::framed_len(encoded.len());
+        self.dispatch(msg)
+    }
 
     fn recv_update(&mut self) -> Result<Update> {
-        let u = self
+        let rx = self
             .pending
             .take()
             .context("no update pending (send a Broadcast first)")?;
-        self.up_bytes += frame::framed_len(Message::Update(u.clone()).encode().len());
-        Ok(u)
+        let (state, update) = rx
+            .recv()
+            .context("round worker died (panicked?)")?
+            .with_context(|| format!("client {} round failed", self.id))?;
+        self.state = Some(state);
+        self.up_bytes += frame::framed_len(1 + messages::update_encoded_len(&update));
+        Ok(update)
     }
 
     fn uplink_bytes(&self) -> u64 {
@@ -240,11 +398,11 @@ impl<'rt> ClientHandle for LocalClient<'rt> {
 /// A complete single-process federated run.
 pub struct Session {
     cfg: RunConfig,
-    #[allow(dead_code)] // owns the PJRT client backing `model`
+    #[allow(dead_code)] // owns the backend (PJRT client) behind `model`
     runtime: Runtime,
-    model: ModelRuntime,
-    train_shards: Vec<data::Dataset>,
-    test: data::Dataset,
+    model: Arc<ModelRuntime>,
+    train_shards: Vec<Arc<data::Dataset>>,
+    test: Arc<data::Dataset>,
     pub data_source: &'static str,
 }
 
@@ -252,7 +410,7 @@ impl Session {
     pub fn new(cfg: RunConfig) -> Result<Session> {
         cfg.validate()?;
         let runtime = Runtime::new(&cfg.artifacts_dir)?;
-        let model = runtime.load_model(&cfg.model)?;
+        let model = Arc::new(runtime.load_model(&cfg.model)?);
         let mm = &model.mm;
         ensure!(
             cfg.dataset.shape()
@@ -269,13 +427,16 @@ impl Session {
             cfg.seed,
         )?;
         let shards = shard::shard_indices(&train, mm.n_clients, cfg.sharding, cfg.seed);
-        let train_shards = shards.iter().map(|idx| train.subset(idx)).collect();
+        let train_shards = shards
+            .iter()
+            .map(|idx| Arc::new(train.subset(idx)))
+            .collect();
         Ok(Session {
             cfg,
             runtime,
             model,
             train_shards,
-            test,
+            test: Arc::new(test),
             data_source: source,
         })
     }
@@ -299,23 +460,33 @@ impl Session {
         mut observer: impl FnMut(u32, &RoundRecord),
     ) -> Result<RunReport> {
         let root = Rng::new(self.cfg.seed);
-        let mut server = Server::new(&self.model, self.test.clone(), self.cfg.seed as u32)?;
+        let threads = self.cfg.resolved_threads(self.train_shards.len());
+        // Declared before `clients` so the clients (holding job senders)
+        // drop first and the pool's Drop can join its workers.
+        let pool = WorkerPool::new(threads, Arc::clone(&self.model));
+        let mut server = Server::new(
+            &self.model,
+            Arc::clone(&self.test),
+            self.cfg.seed as u32,
+            self.cfg.aggregate,
+        )?;
         let mut clients: Vec<Box<dyn ClientHandle + '_>> = self
             .train_shards
             .iter()
             .enumerate()
             .map(|(i, shard)| {
-                Box::new(LocalClient {
-                    state: ClientState::with_options(
+                Box::new(PoolClient {
+                    id: i as u32,
+                    state: Some(ClientState::with_options(
                         i as u32,
-                        shard.clone(),
+                        Arc::clone(shard),
                         self.cfg.policy.build(),
                         self.cfg.lr,
                         &self.model,
                         &root,
                         self.cfg.error_feedback,
-                    ),
-                    model: &self.model,
+                    )),
+                    jobs: pool.sender(),
                     pending: None,
                     up_bytes: 0,
                     down_bytes: 0,
@@ -338,10 +509,13 @@ impl Session {
                 break;
             }
         }
+        let params_hash = server.params_hash();
+        drop(clients);
         Ok(RunReport {
             label: self.cfg.label(),
             model: self.cfg.model.clone(),
             rounds,
+            params_hash,
         })
     }
 }

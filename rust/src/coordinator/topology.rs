@@ -5,6 +5,7 @@
 //! agree across modes.
 
 use std::net::TcpListener;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -31,6 +32,11 @@ impl ClientHandle for RemoteClient {
 
     fn send(&mut self, msg: &Message) -> Result<()> {
         self.t.send(msg)
+    }
+
+    fn send_broadcast(&mut self, _msg: &Message, encoded: &[u8]) -> Result<()> {
+        // one encode per round (done by the server), n transmissions
+        self.t.send_encoded(encoded)
     }
 
     fn recv_update(&mut self) -> Result<Update> {
@@ -89,7 +95,7 @@ pub fn serve(
         ensure!(c.id() == i as u32, "duplicate or missing client ids");
     }
 
-    let mut server = Server::new(&model, test, cfg.seed as u32)?;
+    let mut server = Server::new(&model, Arc::new(test), cfg.seed as u32, cfg.aggregate)?;
     let mut rounds = Vec::with_capacity(cfg.rounds);
     for m in 0..cfg.rounds {
         let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
@@ -111,6 +117,7 @@ pub fn serve(
         label: format!("{}-tcp", cfg.label()),
         model: cfg.model.clone(),
         rounds,
+        params_hash: server.params_hash(),
     })
 }
 
@@ -145,7 +152,7 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
         cfg.seed,
     )?;
     let shards = shard::shard_indices(&train, mm.n_clients, cfg.sharding, cfg.seed);
-    let my_shard = train.subset(&shards[id as usize]);
+    let my_shard = Arc::new(train.subset(&shards[id as usize]));
     let root = Rng::new(cfg.seed);
     let mut state = ClientState::with_options(
         id, my_shard, cfg.policy.build(), cfg.lr, &model, &root, cfg.error_feedback,

@@ -12,7 +12,37 @@
 //!   executed from Rust through the PJRT CPU client ([`runtime`]).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
-//! `feddq` binary is self-contained.
+//! `feddq` binary is self-contained.  Without artifacts, the pure-Rust
+//! native backend ([`runtime::native`]) runs the MLP benchmark out of the
+//! box; the PJRT path is behind the `pjrt` cargo feature.
+//!
+//! ## Parallel round engine
+//!
+//! The in-process [`coordinator::Session`] runs client local rounds on a
+//! persistent worker pool ([`coordinator::pool`]); the thread count is
+//! the `threads` knob in [`config::RunConfig`] (default: min(n_clients,
+//! cores)).  The broadcast is zero-copy — global parameters live in an
+//! `Arc<[f32]>`, the `Broadcast` message is encoded once per round — and
+//! the server folds updates with a streaming decode-aggregate
+//! ([`config::AggregateMode::Streaming`], the default): each update is
+//! decoded into a round-persistent scratch and its weighted dequantized
+//! delta is accumulated directly, so no `n x d` codes matrix is ever
+//! materialized.  The fused XLA aggregate executable remains available
+//! as [`config::AggregateMode::Fused`] — prefer it when a hardware
+//! backend makes the single fused dispatch cheaper than the streaming
+//! fold; prefer streaming for low memory traffic and allocation-free
+//! steady state on CPU.
+//!
+//! ### Determinism contract
+//!
+//! A run is a pure function of its [`config::RunConfig`]: for any
+//! `threads` value the engine produces a bit-identical
+//! [`metrics::RunReport`] (per-round records, bit ledger, and the final
+//! parameter hash).  This holds because client states own independently
+//! derived RNG streams, jobs move client state to exactly one worker at
+//! a time, and
+//! the server sorts updates by `client_id` before folding them in fixed
+//! order.  `rust/tests/parallel_determinism.rs` enforces the contract.
 //!
 //! ## Quick tour
 //!

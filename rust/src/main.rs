@@ -38,6 +38,8 @@ COMMON TRAIN FLAGS:
   --train-size <n>      synthetic train set size               [4000]
   --test-size <n>       synthetic test set size                [1000]
   --target-acc <f>      stop at this test accuracy             [off]
+  --threads <n>         client worker threads (0 = cores)      [0]
+  --aggregate <streaming|fused>  server aggregation path       [streaming]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)

@@ -43,6 +43,11 @@ pub struct RunReport {
     pub label: String,
     pub model: String,
     pub rounds: Vec<RoundRecord>,
+    /// FNV-1a hash over the final global parameters' exact f32 bits.
+    /// Lets determinism tests compare whole runs (e.g. threads=1 vs
+    /// threads=4) without shipping the parameter vector around; 0 when
+    /// the producer does not track parameters.
+    pub params_hash: u64,
 }
 
 impl RunReport {
@@ -96,6 +101,8 @@ impl RunReport {
         Json::obj(vec![
             ("label", Json::from(self.label.clone())),
             ("model", Json::from(self.model.clone())),
+            // hex string: f64-backed Json numbers cannot hold u64 exactly
+            ("params_hash", Json::from(format!("{:016x}", self.params_hash))),
             (
                 "rounds",
                 Json::Arr(
@@ -172,6 +179,7 @@ mod tests {
             label: "x".into(),
             model: "mlp".into(),
             rounds: vec![record(0, 0.2, 100), record(1, 0.6, 200), record(2, 0.7, 300)],
+            params_hash: 0,
         };
         assert_eq!(rep.rounds_to_accuracy(0.5), Some((2, 200)));
         assert_eq!(rep.rounds_to_accuracy(0.9), None);
@@ -188,6 +196,7 @@ mod tests {
             label: "x".into(),
             model: "mlp".into(),
             rounds: vec![record(0, f32::NAN, 50), r],
+            params_hash: 0,
         };
         assert_eq!(rep.rounds_to_accuracy(0.5).unwrap().0, 1);
     }
@@ -198,6 +207,7 @@ mod tests {
             label: "feddq".into(),
             model: "mlp".into(),
             rounds: vec![record(0, 0.5, 100)],
+            params_hash: 0,
         };
         let csv = rep.to_csv();
         assert!(csv.lines().count() == 2);

@@ -153,6 +153,63 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The manifest the native backend ships with when no AOT artifacts
+    /// are present: the MLP benchmark at the exact shapes
+    /// `python/compile/configs.py` bakes (784 → 128 → 10, d = 101770,
+    /// tau = 5, B = 32, E = 500, 10 clients).  The `files` entries are
+    /// placeholders — the native executor needs no HLO.
+    pub fn builtin() -> Manifest {
+        let (din, hidden, classes) = (28 * 28, 128, 10);
+        let segments = vec![
+            Segment {
+                name: "fc1.w".into(),
+                offset: 0,
+                size: din * hidden,
+                shape: vec![din, hidden],
+            },
+            Segment {
+                name: "fc1.b".into(),
+                offset: din * hidden,
+                size: hidden,
+                shape: vec![hidden],
+            },
+            Segment {
+                name: "fc2.w".into(),
+                offset: din * hidden + hidden,
+                size: hidden * classes,
+                shape: vec![hidden, classes],
+            },
+            Segment {
+                name: "fc2.b".into(),
+                offset: din * hidden + hidden + hidden * classes,
+                size: classes,
+                shape: vec![classes],
+            },
+        ];
+        let d = din * hidden + hidden + hidden * classes + classes;
+        let files: BTreeMap<String, String> =
+            ["init", "round", "evaluate", "ranges", "quantize", "aggregate"]
+                .iter()
+                .map(|&k| (k.to_string(), "<native>".to_string()))
+                .collect();
+        let mlp = ModelManifest {
+            name: "mlp".into(),
+            d,
+            segments,
+            input_shape: vec![28, 28, 1],
+            classes,
+            tau: 5,
+            batch: 32,
+            eval_batch: 500,
+            n_clients: 10,
+            files,
+        };
+        mlp.validate().expect("builtin manifest is well-formed");
+        let mut models = BTreeMap::new();
+        models.insert("mlp".to_string(), mlp);
+        Manifest { version: 2, models }
+    }
+
     pub fn load(dir: &str) -> Result<Manifest> {
         let path = format!("{dir}/manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -1,53 +1,100 @@
-//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
-//! and exposes them as typed executables.
+//! Model runtime: the six per-model executables behind one typed facade.
 //!
-//! Interchange is HLO **text** (`HloModuleProto::from_text_file`), never a
-//! serialized proto: jax >= 0.5 emits 64-bit instruction ids that the
-//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
-//! See /opt/xla-example/README.md and DESIGN.md §2.
+//! Two backends implement the executable contract of
+//! `python/compile/model.py`:
+//!
+//! * **native** (default, [`native`]) — pure-Rust implementations over
+//!   flat `f32` slices; no artifacts and no external libraries.  Covers
+//!   the MLP layout, which drives the tests, the quickstart and the
+//!   hot-path benches.  All methods are deterministic and `Sync`, so the
+//!   parallel round engine shares one [`ModelRuntime`] across worker
+//!   threads.
+//! * **pjrt** (`--features pjrt`, [`pjrt`]) — loads the AOT artifacts
+//!   emitted by `python/compile/aot.py` (HLO **text**, see DESIGN.md §2)
+//!   and executes them through the PJRT CPU client.  Required for the
+//!   conv/resnet benchmarks.
+//!
+//! [`Runtime::new`] picks the backend by inspecting the artifacts dir:
+//! a `manifest.json` selects the artifact manifest (and PJRT when the
+//! feature is compiled in); otherwise the built-in native manifest is
+//! used so a fresh checkout runs without any build-time Python step.
 
 pub mod manifest;
 pub mod model_exec;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use anyhow::{Context, Result};
 
 pub use manifest::{Manifest, ModelManifest, Segment};
 pub use model_exec::ModelRuntime;
 
-/// Shared PJRT CPU client.  One per process; executables are compiled
-/// against it and can be executed from any thread.
+/// Backend-owning runtime.  One per process; models loaded from it can
+/// be executed from any thread.
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
+    /// Only the PJRT backend reads artifacts after construction.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     artifacts_dir: String,
+    from_artifacts: bool,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
 }
 
 impl Runtime {
-    /// Create a runtime over `artifacts_dir` (must contain manifest.json).
+    /// Create a runtime over `artifacts_dir`: uses `manifest.json` when
+    /// present, else falls back to the built-in native manifest.
     pub fn new(artifacts_dir: &str) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)
-            .with_context(|| format!("loading manifest from {artifacts_dir}"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest_path = format!("{artifacts_dir}/manifest.json");
+        let from_artifacts = std::path::Path::new(&manifest_path).exists();
+        let manifest = if from_artifacts {
+            Manifest::load(artifacts_dir)
+                .with_context(|| format!("loading manifest from {artifacts_dir}"))?
+        } else {
+            // Loud, so a typo'd --artifacts dir can't silently switch an
+            // experiment onto the native backend's different numerics.
+            crate::info!(
+                "runtime",
+                "no manifest.json under {artifacts_dir:?} — using the built-in \
+                 native manifest (pure-Rust MLP backend)"
+            );
+            Manifest::builtin()
+        };
         Ok(Runtime {
-            client,
             manifest,
             artifacts_dir: artifacts_dir.to_string(),
+            from_artifacts,
+            #[cfg(feature = "pjrt")]
+            client: if from_artifacts {
+                Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?)
+            } else {
+                None
+            },
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// True when running on the built-in native manifest (no artifacts).
+    pub fn is_builtin(&self) -> bool {
+        !self.from_artifacts
     }
 
-    /// Compile one HLO-text artifact.
+    pub fn platform(&self) -> String {
+        #[cfg(feature = "pjrt")]
+        if let Some(c) = &self.client {
+            return c.platform_name();
+        }
+        "native-cpu".to_string()
+    }
+
+    /// Compile one HLO-text artifact (PJRT backend only).
+    #[cfg(feature = "pjrt")]
     pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
-        let path = format!("{}/{}", self.artifacts_dir, file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path}"))
+        let client = self
+            .client
+            .as_ref()
+            .context("PJRT client unavailable (running on the builtin manifest)")?;
+        pjrt::compile(client, &self.artifacts_dir, file)
     }
 
     /// Load every executable of `model` into a [`ModelRuntime`].
@@ -58,7 +105,11 @@ impl Runtime {
             .get(model)
             .with_context(|| format!("model {model:?} not in manifest"))?
             .clone();
-        ModelRuntime::load(self, mm)
+        #[cfg(feature = "pjrt")]
+        if self.from_artifacts {
+            return ModelRuntime::load_pjrt(self, mm);
+        }
+        ModelRuntime::load_native(mm)
     }
 
     /// Default artifacts directory: `$FEDDQ_ARTIFACTS` or `artifacts`.

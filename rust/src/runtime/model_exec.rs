@@ -1,67 +1,53 @@
-//! Typed wrappers over one model's six AOT executables.
+//! Typed facade over one model's six executables, backend-dispatched.
 //!
-//! Each wrapper builds input literals from plain slices, executes on the
-//! PJRT CPU client and unpacks the tuple outputs (everything is lowered
-//! with `return_tuple=True`).  These calls are the *entire* compute hot
-//! path of the coordinator — Python is never involved at runtime.
+//! Every call validates its input shapes once here, so both backends
+//! see identical contracts.  A `ModelRuntime` is `Send + Sync` and all
+//! methods take `&self`: the parallel round engine shares one instance
+//! across its worker threads (`coordinator::pool`).
 
-use anyhow::{ensure, Context, Result};
-use xla::{Literal, PjRtLoadedExecutable};
+use anyhow::{ensure, Result};
 
 use super::manifest::ModelManifest;
-use super::Runtime;
+use super::native;
 
-/// One model's compiled executables plus its manifest.
+/// One model's executables plus its manifest.
 pub struct ModelRuntime {
     pub mm: ModelManifest,
-    init: PjRtLoadedExecutable,
-    round: PjRtLoadedExecutable,
-    evaluate: PjRtLoadedExecutable,
-    ranges: PjRtLoadedExecutable,
-    quantize: PjRtLoadedExecutable,
-    aggregate: PjRtLoadedExecutable,
+    exec: Exec,
 }
 
-fn vec_literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
-    let lit = Literal::vec1(data);
-    if dims.len() == 1 {
-        return Ok(lit);
-    }
-    lit.reshape(dims).context("reshape f32 literal")
-}
-
-fn vec_literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
-    let lit = Literal::vec1(data);
-    if dims.len() == 1 {
-        return Ok(lit);
-    }
-    lit.reshape(dims).context("reshape i32 literal")
-}
-
-fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Literal> {
-    let result = exe.execute::<Literal>(args).context("PJRT execute")?;
-    result[0][0].to_literal_sync().context("fetch result literal")
+enum Exec {
+    Native(native::NativeMlp),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtModel),
 }
 
 impl ModelRuntime {
-    pub fn load(rt: &Runtime, mm: ModelManifest) -> Result<Self> {
-        Ok(ModelRuntime {
-            init: rt.compile(&mm.files["init"])?,
-            round: rt.compile(&mm.files["round"])?,
-            evaluate: rt.compile(&mm.files["evaluate"])?,
-            ranges: rt.compile(&mm.files["ranges"])?,
-            quantize: rt.compile(&mm.files["quantize"])?,
-            aggregate: rt.compile(&mm.files["aggregate"])?,
-            mm,
-        })
+    /// Load on the pure-Rust native backend.
+    pub fn load_native(mm: ModelManifest) -> Result<Self> {
+        let exec = Exec::Native(native::NativeMlp::from_manifest(&mm)?);
+        Ok(ModelRuntime { mm, exec })
+    }
+
+    /// Load compiled AOT executables on the PJRT backend.
+    #[cfg(feature = "pjrt")]
+    pub fn load_pjrt(rt: &super::Runtime, mm: ModelManifest) -> Result<Self> {
+        let exec = Exec::Pjrt(super::pjrt::PjrtModel::load(rt, &mm)?);
+        Ok(ModelRuntime { mm, exec })
+    }
+
+    /// True when running on the native backend.
+    pub fn is_native(&self) -> bool {
+        matches!(self.exec, Exec::Native(_))
     }
 
     /// Initialize a fresh flat parameter vector.
     pub fn init(&self, seed: u32) -> Result<Vec<f32>> {
-        let out = run(&self.init, &[Literal::scalar(seed)])?;
-        let params = out.to_tuple1()?.to_vec::<f32>()?;
-        ensure!(params.len() == self.mm.d, "init returned wrong length");
-        Ok(params)
+        match &self.exec {
+            Exec::Native(n) => n.init(&self.mm, seed),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.init(&self.mm, seed),
+        }
     }
 
     /// Run tau local SGD steps; returns (delta, mean train loss).
@@ -74,52 +60,42 @@ impl ModelRuntime {
         ys: &[i32],
         lr: f32,
     ) -> Result<(Vec<f32>, f32)> {
-        let (tau, b) = (self.mm.tau as i64, self.mm.batch as i64);
-        ensure!(params.len() == self.mm.d, "params length");
+        let mm = &self.mm;
+        ensure!(params.len() == mm.d, "params length");
         ensure!(
-            xs.len() == (tau * b) as usize * self.mm.input_len(),
-            "xs length {} != tau*B*input", xs.len()
+            xs.len() == mm.tau * mm.batch * mm.input_len(),
+            "xs length {} != tau*B*input",
+            xs.len()
         );
-        ensure!(ys.len() == (tau * b) as usize, "ys length");
-        let mut xdims = vec![tau, b];
-        xdims.extend(self.mm.input_shape.iter().map(|&v| v as i64));
-        let args = [
-            Literal::vec1(params),
-            vec_literal_f32(xs, &xdims)?,
-            vec_literal_i32(ys, &[tau, b])?,
-            Literal::scalar(lr),
-        ];
-        let (delta, loss) = run(&self.round, &args)?.to_tuple2()?;
-        Ok((
-            delta.to_vec::<f32>()?,
-            loss.get_first_element::<f32>()?,
-        ))
+        ensure!(ys.len() == mm.tau * mm.batch, "ys length");
+        match &self.exec {
+            Exec::Native(n) => n.local_round(mm, params, xs, ys, lr),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.local_round(mm, params, xs, ys, lr),
+        }
     }
 
     /// Evaluate on one test batch; returns (loss_sum, correct_count).
     pub fn evaluate(&self, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<(f32, i32)> {
-        let e = self.mm.eval_batch as i64;
-        ensure!(xs.len() == e as usize * self.mm.input_len(), "eval xs length");
-        ensure!(ys.len() == e as usize, "eval ys length");
-        let mut xdims = vec![e];
-        xdims.extend(self.mm.input_shape.iter().map(|&v| v as i64));
-        let args = [
-            Literal::vec1(params),
-            vec_literal_f32(xs, &xdims)?,
-            Literal::vec1(ys),
-        ];
-        let (loss, correct) = run(&self.evaluate, &args)?.to_tuple2()?;
-        Ok((
-            loss.get_first_element::<f32>()?,
-            correct.get_first_element::<i32>()?,
-        ))
+        let mm = &self.mm;
+        ensure!(params.len() == mm.d, "params length");
+        ensure!(xs.len() == mm.eval_batch * mm.input_len(), "eval xs length");
+        ensure!(ys.len() == mm.eval_batch, "eval ys length");
+        match &self.exec {
+            Exec::Native(n) => n.evaluate(mm, params, xs, ys),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.evaluate(mm, params, xs, ys),
+        }
     }
 
     /// Per-segment (min, range) of a model update.
     pub fn ranges(&self, delta: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
         ensure!(delta.len() == self.mm.d, "delta length");
-        let (mins, ranges) = run(&self.ranges, &[Literal::vec1(delta)])?.to_tuple2()?;
-        Ok((mins.to_vec::<f32>()?, ranges.to_vec::<f32>()?))
+        match &self.exec {
+            Exec::Native(_) => Ok(native::segment_ranges(&self.mm, delta)),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.ranges(delta),
+        }
     }
 
     /// Stochastic quantization -> integer-valued codes (as f32).
@@ -136,15 +112,13 @@ impl ModelRuntime {
         let l = self.mm.num_segments();
         ensure!(delta.len() == self.mm.d, "delta length");
         ensure!(mins.len() == l && sinv.len() == l && maxcode.len() == l, "segment params");
-        let args = [
-            Literal::vec1(delta),
-            Literal::vec1(mins),
-            Literal::vec1(sinv),
-            Literal::vec1(maxcode),
-            Literal::scalar(seed),
-        ];
-        let codes = run(&self.quantize, &args)?.to_tuple1()?;
-        Ok(codes.to_vec::<f32>()?)
+        match &self.exec {
+            Exec::Native(_) => Ok(native::stochastic_quantize(
+                &self.mm, delta, mins, sinv, maxcode, seed,
+            )),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.quantize(delta, mins, sinv, maxcode, seed),
+        }
     }
 
     /// Fused dequantize + weighted aggregate over all n clients.
@@ -163,13 +137,12 @@ impl ModelRuntime {
         ensure!(codes.len() == n * self.mm.d, "codes shape");
         ensure!(mins.len() == n * l && steps.len() == n * l, "headers shape");
         ensure!(weights.len() == n, "weights shape");
-        let args = [
-            vec_literal_f32(codes, &[n as i64, self.mm.d as i64])?,
-            vec_literal_f32(mins, &[n as i64, l as i64])?,
-            vec_literal_f32(steps, &[n as i64, l as i64])?,
-            Literal::vec1(weights),
-        ];
-        let delta = run(&self.aggregate, &args)?.to_tuple1()?;
-        Ok(delta.to_vec::<f32>()?)
+        match &self.exec {
+            Exec::Native(_) => Ok(native::dequant_aggregate(
+                &self.mm, codes, mins, steps, weights,
+            )),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(p) => p.aggregate(&self.mm, codes, mins, steps, weights),
+        }
     }
 }

@@ -1,0 +1,459 @@
+//! Pure-Rust execution backend: the six model executables implemented
+//! directly over flat `f32` slices, no PJRT and no AOT artifacts.
+//!
+//! This is the default backend.  It implements the same executable
+//! contract as `python/compile/model.py` (init / round / evaluate /
+//! ranges / quantize / aggregate) for the MLP layout — 784 → hidden →
+//! classes with ReLU and softmax cross-entropy — which is the model the
+//! integration tests, the quickstart and the perf benches drive.  The
+//! conv benchmarks still require the AOT artifacts and the `pjrt`
+//! feature (see [`super::pjrt`]).
+//!
+//! Numerics are deliberately plain: fixed-order f32 accumulation,
+//! per-client sequential loops.  A given (seed, input) pair therefore
+//! produces bit-identical outputs no matter which thread of the round
+//! engine's worker pool executes the call — the determinism contract the
+//! parallel `Session` relies on (see `coordinator::pool`).
+
+use anyhow::{ensure, Result};
+
+use super::manifest::ModelManifest;
+use crate::util::rng::Rng;
+
+/// Native executor for the two-layer MLP layout.
+///
+/// Stateless: all methods take `&self` plus plain slices, so one
+/// instance can be shared across worker threads.
+pub struct NativeMlp {
+    din: usize,
+    hidden: usize,
+    classes: usize,
+    /// Flat offsets of (fc1.w, fc1.b, fc2.w, fc2.b).
+    off: [usize; 4],
+}
+
+impl NativeMlp {
+    /// Build from a manifest whose segment table matches the MLP layout
+    /// `[w1 [din,h], b1 [h], w2 [h,c], b2 [c]]`.
+    pub fn from_manifest(mm: &ModelManifest) -> Result<NativeMlp> {
+        let unsupported = || {
+            anyhow::anyhow!(
+                "model {}: layout not supported by the native backend (MLP only); \
+                 conv models need `make artifacts` plus a build with the `pjrt` \
+                 feature AND the `xla` bindings dependency added to Cargo.toml \
+                 (see rust/src/runtime/pjrt.rs — the offline registry lacks it)",
+                mm.name
+            )
+        };
+        if mm.segments.len() != 4 {
+            return Err(unsupported());
+        }
+        let (s0, s1, s2, s3) = (&mm.segments[0], &mm.segments[1], &mm.segments[2], &mm.segments[3]);
+        if s0.shape.len() != 2 || s1.shape.len() != 1 || s2.shape.len() != 2 || s3.shape.len() != 1 {
+            return Err(unsupported());
+        }
+        let (din, hidden) = (s0.shape[0], s0.shape[1]);
+        let classes = s3.shape[0];
+        if s1.shape[0] != hidden || s2.shape != vec![hidden, classes] {
+            return Err(unsupported());
+        }
+        ensure!(mm.input_len() == din, "model {}: input_len != fc1 fan-in", mm.name);
+        ensure!(mm.classes == classes, "model {}: classes mismatch", mm.name);
+        Ok(NativeMlp {
+            din,
+            hidden,
+            classes,
+            off: [s0.offset, s1.offset, s2.offset, s3.offset],
+        })
+    }
+
+    fn split<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (din, h, c) = (self.din, self.hidden, self.classes);
+        (
+            &p[self.off[0]..self.off[0] + din * h],
+            &p[self.off[1]..self.off[1] + h],
+            &p[self.off[2]..self.off[2] + h * c],
+            &p[self.off[3]..self.off[3] + c],
+        )
+    }
+
+    /// Deterministic parameter init: He for fc1.w, Glorot for fc2.w,
+    /// zeros for biases — mirroring `python/compile/models/common.py`,
+    /// with this crate's PRNG in place of JAX's.
+    pub fn init(&self, mm: &ModelManifest, seed: u32) -> Result<Vec<f32>> {
+        let mut params = vec![0.0f32; mm.d];
+        let root = Rng::new(seed as u64);
+        let he = (2.0 / self.din as f32).sqrt();
+        let glorot = (2.0 / (self.hidden + self.classes) as f32).sqrt();
+        for (l, seg) in mm.segments.iter().enumerate() {
+            let std = match l {
+                0 => he,
+                2 => glorot,
+                _ => continue, // biases stay zero
+            };
+            let mut rng = root.derive(&format!("init.{}", seg.name));
+            for x in &mut params[seg.offset..seg.offset + seg.size] {
+                *x = rng.next_normal() * std;
+            }
+        }
+        Ok(params)
+    }
+
+    /// Forward pass for a batch: fills `hact` `[b, hidden]` (post-ReLU)
+    /// and `logits` `[b, classes]`.
+    fn forward(&self, p: &[f32], xs: &[f32], bsz: usize, hact: &mut [f32], logits: &mut [f32]) {
+        let (w1, b1, w2, b2) = self.split(p);
+        let (din, h, c) = (self.din, self.hidden, self.classes);
+        for b in 0..bsz {
+            hact[b * h..(b + 1) * h].copy_from_slice(b1);
+        }
+        for b in 0..bsz {
+            let x = &xs[b * din..(b + 1) * din];
+            let z = &mut hact[b * h..(b + 1) * h];
+            for (i, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &w1[i * h..(i + 1) * h];
+                for (zj, &wj) in z.iter_mut().zip(row) {
+                    *zj += xv * wj;
+                }
+            }
+            for zj in z.iter_mut() {
+                if *zj < 0.0 {
+                    *zj = 0.0;
+                }
+            }
+        }
+        for b in 0..bsz {
+            logits[b * c..(b + 1) * c].copy_from_slice(b2);
+            let hrow = &hact[b * h..(b + 1) * h];
+            let lrow = &mut logits[b * c..(b + 1) * c];
+            for (j, &hv) in hrow.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &w2[j * c..(j + 1) * c];
+                for (lk, &wk) in lrow.iter_mut().zip(wrow) {
+                    *lk += hv * wk;
+                }
+            }
+        }
+    }
+
+    /// Softmax cross-entropy over `logits` in place: returns the loss sum
+    /// and overwrites `logits` with `softmax - onehot` (the logit grad
+    /// *before* the 1/B batch-mean scale).
+    fn loss_and_dlogits(&self, logits: &mut [f32], ys: &[i32], bsz: usize) -> f32 {
+        let c = self.classes;
+        let mut loss_sum = 0.0f32;
+        for b in 0..bsz {
+            let row = &mut logits[b * c..(b + 1) * c];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            let y = ys[b] as usize;
+            loss_sum += -(row[y] / sum).ln();
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+            row[y] -= 1.0;
+        }
+        loss_sum
+    }
+
+    /// One SGD step on `p` in place; returns the mean batch loss.
+    #[allow(clippy::too_many_arguments)]
+    fn sgd_step(
+        &self,
+        p: &mut [f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+        bsz: usize,
+        hact: &mut [f32],
+        logits: &mut [f32],
+        grad: &mut [f32],
+    ) -> f32 {
+        let (din, h, c) = (self.din, self.hidden, self.classes);
+        self.forward(p, xs, bsz, hact, logits);
+        let loss_sum = self.loss_and_dlogits(logits, ys, bsz);
+        let scale = 1.0 / bsz as f32;
+
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let (go1, gb1o, go2, gb2o) = (self.off[0], self.off[1], self.off[2], self.off[3]);
+        // fc2 grads + dz1 (reusing one hidden-width scratch row per sample)
+        let w2 = self.off[2];
+        let mut dz1 = vec![0.0f32; h];
+        for b in 0..bsz {
+            let dl = &logits[b * c..(b + 1) * c]; // softmax - onehot
+            let hrow = &hact[b * h..(b + 1) * h];
+            // gb2 += dl ; gW2[j,k] += h[j] * dl[k] ; dh[j] = sum_k dl[k] W2[j,k]
+            for (g, &d) in grad[gb2o..gb2o + c].iter_mut().zip(dl) {
+                *g += d * scale;
+            }
+            for j in 0..h {
+                let hv = hrow[j];
+                let wrow = &p[w2 + j * c..w2 + (j + 1) * c];
+                let grow = &mut grad[go2 + j * c..go2 + (j + 1) * c];
+                let mut dh = 0.0f32;
+                for k in 0..c {
+                    dh += dl[k] * wrow[k];
+                    if hv != 0.0 {
+                        grow[k] += hv * dl[k] * scale;
+                    }
+                }
+                // ReLU mask: hact == 0 ⇔ pre-activation <= 0
+                dz1[j] = if hv > 0.0 { dh * scale } else { 0.0 };
+            }
+            // gb1 += dz1 ; gW1[i,j] += x[i] * dz1[j]
+            for (g, &d) in grad[gb1o..gb1o + h].iter_mut().zip(&dz1) {
+                *g += d;
+            }
+            let x = &xs[b * din..(b + 1) * din];
+            for (i, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let grow = &mut grad[go1 + i * h..go1 + (i + 1) * h];
+                for (g, &d) in grow.iter_mut().zip(&dz1[..]) {
+                    *g += xv * d;
+                }
+            }
+        }
+        for (pv, &g) in p.iter_mut().zip(&grad[..]) {
+            *pv -= lr * g;
+        }
+        loss_sum * scale
+    }
+
+    /// tau local SGD steps: returns `(p_final - params, mean step loss)`.
+    pub fn local_round(
+        &self,
+        mm: &ModelManifest,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let (tau, bsz) = (mm.tau, mm.batch);
+        let mut p = params.to_vec();
+        let mut hact = vec![0.0f32; bsz * self.hidden];
+        let mut logits = vec![0.0f32; bsz * self.classes];
+        let mut grad = vec![0.0f32; mm.d];
+        let mut loss_acc = 0.0f32;
+        let step_x = bsz * self.din;
+        for t in 0..tau {
+            loss_acc += self.sgd_step(
+                &mut p,
+                &xs[t * step_x..(t + 1) * step_x],
+                &ys[t * bsz..(t + 1) * bsz],
+                lr,
+                bsz,
+                &mut hact,
+                &mut logits,
+                &mut grad,
+            );
+        }
+        for (dv, &pv) in p.iter_mut().zip(params) {
+            *dv -= pv;
+        }
+        Ok((p, loss_acc / tau as f32))
+    }
+
+    /// Full-batch evaluation: `(sum of NLL, correct count)`.
+    pub fn evaluate(&self, mm: &ModelManifest, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<(f32, i32)> {
+        let e = mm.eval_batch;
+        let c = self.classes;
+        let mut hact = vec![0.0f32; e * self.hidden];
+        let mut logits = vec![0.0f32; e * c];
+        self.forward(params, xs, e, &mut hact, &mut logits);
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0i32;
+        for b in 0..e {
+            let row = &logits[b * c..(b + 1) * c];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+            let y = ys[b] as usize;
+            ensure!(y < c, "label {y} out of range");
+            loss_sum += lse - row[y];
+            // first-max argmax (matches jnp.argmax tie-breaking)
+            let mut best = 0usize;
+            for (k, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = k;
+                }
+            }
+            if best == y {
+                correct += 1;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// architecture-independent kernels (segment-wise over the manifest)
+// ---------------------------------------------------------------------------
+
+/// Per-segment `(min, range)` of an update vector.
+pub fn segment_ranges(mm: &ModelManifest, delta: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let l = mm.num_segments();
+    let mut mins = Vec::with_capacity(l);
+    let mut ranges = Vec::with_capacity(l);
+    for seg in &mm.segments {
+        let s = &delta[seg.offset..seg.offset + seg.size];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in s {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        mins.push(lo);
+        ranges.push(hi - lo);
+    }
+    (mins, ranges)
+}
+
+/// Elementwise stochastic rounding with per-segment `(min, sinv, maxcode)`:
+/// `code = clip(floor((x - min) * sinv + u), 0, maxcode)`, `u ~ U[0,1)`
+/// drawn deterministically from `seed` in flat element order — the same
+/// contract as the quantize executable (`kernels/ref.py`).
+pub fn stochastic_quantize(
+    mm: &ModelManifest,
+    delta: &[f32],
+    mins: &[f32],
+    sinv: &[f32],
+    maxcode: &[f32],
+    seed: u32,
+) -> Vec<f32> {
+    let mut rng = Rng::new(seed as u64);
+    let mut codes = vec![0.0f32; mm.d];
+    for (l, seg) in mm.segments.iter().enumerate() {
+        let (mn, si, mc) = (mins[l], sinv[l], maxcode[l]);
+        for j in seg.offset..seg.offset + seg.size {
+            let u = rng.next_f32();
+            let y = ((delta[j] - mn) * si + u).floor();
+            codes[j] = y.clamp(0.0, mc);
+        }
+    }
+    codes
+}
+
+/// Weighted sum of per-client dequantized updates (`kernels/ref.py`
+/// semantics): `out[j] = Σ_i w[i] * (codes[i,j] * step[i,seg] + min[i,seg])`.
+pub fn dequant_aggregate(
+    mm: &ModelManifest,
+    codes: &[f32],
+    mins: &[f32],
+    steps: &[f32],
+    weights: &[f32],
+) -> Vec<f32> {
+    let (d, l) = (mm.d, mm.num_segments());
+    let n = weights.len();
+    let mut out = vec![0.0f32; d];
+    for i in 0..n {
+        let w = weights[i];
+        let row = &codes[i * d..(i + 1) * d];
+        for (sl, seg) in mm.segments.iter().enumerate() {
+            let (mn, st) = (mins[i * l + sl], steps[i * l + sl]);
+            for j in seg.offset..seg.offset + seg.size {
+                out[j] += w * (row[j] * st + mn);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn mlp() -> (ModelManifest, NativeMlp) {
+        let mm = Manifest::builtin().models["mlp"].clone();
+        let nat = NativeMlp::from_manifest(&mm).unwrap();
+        (mm, nat)
+    }
+
+    #[test]
+    fn builtin_mlp_layout_accepted() {
+        let (mm, nat) = mlp();
+        assert_eq!(mm.d, 101_770);
+        assert_eq!(nat.din, 784);
+        assert_eq!(nat.hidden, 128);
+        assert_eq!(nat.classes, 10);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let (mm, nat) = mlp();
+        let a = nat.init(&mm, 7).unwrap();
+        let b = nat.init(&mm, 7).unwrap();
+        assert_eq!(a, b);
+        let c = nat.init(&mm, 8).unwrap();
+        assert_ne!(a, c);
+        // biases zero
+        let s1 = &mm.segments[1];
+        assert!(a[s1.offset..s1.offset + s1.size].iter().all(|&x| x == 0.0));
+        // He std ~ sqrt(2/784)
+        let s0 = &mm.segments[0];
+        let w = &a[s0.offset..s0.offset + s0.size];
+        let var = w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / w.len() as f64;
+        let want = 2.0 / 784.0;
+        assert!((var - want).abs() < want * 0.1, "var {var} vs {want}");
+    }
+
+    #[test]
+    fn local_round_reduces_loss_on_learnable_data() {
+        let (mm, nat) = mlp();
+        let params = nat.init(&mm, 3).unwrap();
+        // one-hot-ish synthetic batch: class = brightest quadrant
+        let mut rng = Rng::new(11);
+        let n = mm.tau * mm.batch;
+        let mut xs = vec![0.0f32; n * mm.input_len()];
+        let mut ys = vec![0i32; n];
+        for s in 0..n {
+            let y = (s % mm.classes) as i32;
+            ys[s] = y;
+            for j in 0..mm.input_len() {
+                let base = if j % mm.classes == y as usize { 0.9 } else { 0.1 };
+                xs[s * mm.input_len() + j] = base + 0.05 * rng.next_f32();
+            }
+        }
+        let (delta, loss0) = nat.local_round(&mm, &params, &xs, &ys, 0.1).unwrap();
+        assert_eq!(delta.len(), mm.d);
+        assert!(loss0.is_finite() && loss0 > 0.0);
+        // apply the update and re-run: training loss must drop
+        let p2: Vec<f32> = params.iter().zip(&delta).map(|(p, d)| p + d).collect();
+        let (_, loss1) = nat.local_round(&mm, &p2, &xs, &ys, 0.1).unwrap();
+        assert!(loss1 < loss0, "loss did not drop: {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn quantize_codes_bounded_and_close() {
+        let (mm, _nat) = mlp();
+        let delta: Vec<f32> = (0..mm.d)
+            .map(|i| -1.0 + 2.0 * i as f32 / (mm.d - 1) as f32)
+            .collect();
+        let (mins, ranges) = segment_ranges(&mm, &delta);
+        let levels = vec![15u32; mm.num_segments()];
+        let plan = crate::coordinator::codec::QuantPlan::new(&levels, &ranges);
+        let codes = stochastic_quantize(&mm, &delta, &mins, &plan.sinv, &plan.maxcode, 5);
+        for (l, seg) in mm.segments.iter().enumerate() {
+            for j in seg.offset..seg.offset + seg.size {
+                let c = codes[j];
+                assert_eq!(c, c.round());
+                assert!((0.0..=15.0).contains(&c));
+                let deq = mins[l] + c * plan.step[l];
+                assert!((deq - delta[j]).abs() <= plan.step[l] * 1.001 + 1e-6);
+            }
+        }
+        // deterministic in the seed
+        let again = stochastic_quantize(&mm, &delta, &mins, &plan.sinv, &plan.maxcode, 5);
+        assert_eq!(codes, again);
+    }
+}

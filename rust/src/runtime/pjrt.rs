@@ -1,0 +1,172 @@
+//! PJRT/XLA execution backend (feature `pjrt`).
+//!
+//! Loads the AOT artifacts emitted by `python/compile/aot.py` and
+//! exposes them as typed executables.  Interchange is HLO **text**
+//! (`HloModuleProto::from_text_file`), never a serialized proto: jax >=
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.  See DESIGN.md §2.
+//!
+//! Enabling this module requires the `xla` bindings crate, which the
+//! offline registry does not carry — add it alongside the feature:
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { version = "0.1", optional = true }
+//! [features]
+//! pjrt = ["dep:xla"]
+//! ```
+
+use anyhow::{ensure, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::ModelManifest;
+use super::Runtime;
+
+/// Compile one HLO-text artifact against `client`.
+pub fn compile(client: &PjRtClient, artifacts_dir: &str, file: &str) -> Result<PjRtLoadedExecutable> {
+    let path = format!("{artifacts_dir}/{file}");
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .with_context(|| format!("parsing HLO text {path}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path}"))
+}
+
+/// One model's six compiled executables.
+pub struct PjrtModel {
+    init: PjRtLoadedExecutable,
+    round: PjRtLoadedExecutable,
+    evaluate: PjRtLoadedExecutable,
+    ranges: PjRtLoadedExecutable,
+    quantize: PjRtLoadedExecutable,
+    aggregate: PjRtLoadedExecutable,
+}
+
+// PJRT CPU executables are immutable after compilation and `Execute` is
+// documented thread-safe (the CPU client dispatches each execution onto
+// its own thread pool); the round engine's workers share one model.
+unsafe impl Send for PjrtModel {}
+unsafe impl Sync for PjrtModel {}
+
+fn vec_literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshape f32 literal")
+}
+
+fn vec_literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).context("reshape i32 literal")
+}
+
+fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Literal> {
+    let result = exe.execute::<Literal>(args).context("PJRT execute")?;
+    result[0][0].to_literal_sync().context("fetch result literal")
+}
+
+impl PjrtModel {
+    pub fn load(rt: &Runtime, mm: &ModelManifest) -> Result<Self> {
+        Ok(PjrtModel {
+            init: rt.compile(&mm.files["init"])?,
+            round: rt.compile(&mm.files["round"])?,
+            evaluate: rt.compile(&mm.files["evaluate"])?,
+            ranges: rt.compile(&mm.files["ranges"])?,
+            quantize: rt.compile(&mm.files["quantize"])?,
+            aggregate: rt.compile(&mm.files["aggregate"])?,
+        })
+    }
+
+    pub fn init(&self, mm: &ModelManifest, seed: u32) -> Result<Vec<f32>> {
+        let out = run(&self.init, &[Literal::scalar(seed)])?;
+        let params = out.to_tuple1()?.to_vec::<f32>()?;
+        ensure!(params.len() == mm.d, "init returned wrong length");
+        Ok(params)
+    }
+
+    pub fn local_round(
+        &self,
+        mm: &ModelManifest,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let (tau, b) = (mm.tau as i64, mm.batch as i64);
+        let mut xdims = vec![tau, b];
+        xdims.extend(mm.input_shape.iter().map(|&v| v as i64));
+        let args = [
+            Literal::vec1(params),
+            vec_literal_f32(xs, &xdims)?,
+            vec_literal_i32(ys, &[tau, b])?,
+            Literal::scalar(lr),
+        ];
+        let (delta, loss) = run(&self.round, &args)?.to_tuple2()?;
+        Ok((delta.to_vec::<f32>()?, loss.get_first_element::<f32>()?))
+    }
+
+    pub fn evaluate(&self, mm: &ModelManifest, params: &[f32], xs: &[f32], ys: &[i32]) -> Result<(f32, i32)> {
+        let e = mm.eval_batch as i64;
+        let mut xdims = vec![e];
+        xdims.extend(mm.input_shape.iter().map(|&v| v as i64));
+        let args = [
+            Literal::vec1(params),
+            vec_literal_f32(xs, &xdims)?,
+            Literal::vec1(ys),
+        ];
+        let (loss, correct) = run(&self.evaluate, &args)?.to_tuple2()?;
+        Ok((
+            loss.get_first_element::<f32>()?,
+            correct.get_first_element::<i32>()?,
+        ))
+    }
+
+    pub fn ranges(&self, delta: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (mins, ranges) = run(&self.ranges, &[Literal::vec1(delta)])?.to_tuple2()?;
+        Ok((mins.to_vec::<f32>()?, ranges.to_vec::<f32>()?))
+    }
+
+    pub fn quantize(
+        &self,
+        delta: &[f32],
+        mins: &[f32],
+        sinv: &[f32],
+        maxcode: &[f32],
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let args = [
+            Literal::vec1(delta),
+            Literal::vec1(mins),
+            Literal::vec1(sinv),
+            Literal::vec1(maxcode),
+            Literal::scalar(seed),
+        ];
+        let codes = run(&self.quantize, &args)?.to_tuple1()?;
+        Ok(codes.to_vec::<f32>()?)
+    }
+
+    pub fn aggregate(
+        &self,
+        mm: &ModelManifest,
+        codes: &[f32],
+        mins: &[f32],
+        steps: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = weights.len();
+        let l = mm.num_segments();
+        let args = [
+            vec_literal_f32(codes, &[n as i64, mm.d as i64])?,
+            vec_literal_f32(mins, &[n as i64, l as i64])?,
+            vec_literal_f32(steps, &[n as i64, l as i64])?,
+            Literal::vec1(weights),
+        ];
+        let delta = run(&self.aggregate, &args)?.to_tuple1()?;
+        Ok(delta.to_vec::<f32>()?)
+    }
+}

@@ -147,7 +147,7 @@ mod tests {
     }
 
     fn report(rounds: Vec<RoundRecord>) -> RunReport {
-        RunReport { label: "t".into(), model: "mlp".into(), rounds }
+        RunReport { label: "t".into(), model: "mlp".into(), rounds, params_hash: 0 }
     }
 
     #[test]

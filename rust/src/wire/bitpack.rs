@@ -137,8 +137,11 @@ impl<'a> BitReader<'a> {
 
     /// Unpack `n` codes at fixed width into `out` (hot path).
     ///
-    /// §Perf: refills the accumulator with 32-bit unaligned loads instead
-    /// of the scalar path's byte-wise loop (EXPERIMENTS.md §Perf L3-3).
+    /// §Perf: refills a 128-bit accumulator with 64-bit unaligned loads —
+    /// at width <= 16 that is one load per four-plus codes, roughly
+    /// halving the refill traffic of the earlier 32-bit scheme (see
+    /// `perf_hotpath` / BENCH_hotpath.json).  Falls back to byte loads
+    /// near the end of the buffer.
     pub fn get_slice(&mut self, out: &mut Vec<u32>, n: usize, width: u32) -> Option<()> {
         debug_assert!(width <= 32);
         out.reserve(n);
@@ -151,18 +154,22 @@ impl<'a> BitReader<'a> {
         } else {
             (1u64 << width) - 1
         };
-        let mut acc = self.acc;
+        // The resident accumulator is a u64 holding < 64 bits; widen to
+        // u128 locally so a full u64 refill always fits.  Refills only
+        // trigger at nbits < width <= 32, so nbits never exceeds
+        // width + 63 and the final residue fits back into the u64.
+        let mut acc = self.acc as u128;
         let mut nbits = self.nbits;
         let mut byte = self.byte;
         for _ in 0..n {
             while nbits < width {
-                if nbits <= 32 && byte + 4 <= self.buf.len() {
-                    let w = u32::from_le_bytes(self.buf[byte..byte + 4].try_into().unwrap());
-                    acc |= (w as u64) << nbits;
-                    nbits += 32;
-                    byte += 4;
+                if byte + 8 <= self.buf.len() {
+                    let w = u64::from_le_bytes(self.buf[byte..byte + 8].try_into().unwrap());
+                    acc |= (w as u128) << nbits;
+                    nbits += 64;
+                    byte += 8;
                 } else if byte < self.buf.len() {
-                    acc |= (self.buf[byte] as u64) << nbits;
+                    acc |= (self.buf[byte] as u128) << nbits;
                     nbits += 8;
                     byte += 1;
                 } else {
@@ -170,11 +177,12 @@ impl<'a> BitReader<'a> {
                     return None;
                 }
             }
-            out.push((acc & mask) as u32);
+            out.push((acc as u64 & mask) as u32);
             acc >>= width;
             nbits -= width;
         }
-        self.acc = acc;
+        debug_assert!(nbits < 64, "residue must fit the u64 accumulator");
+        self.acc = acc as u64;
         self.nbits = nbits;
         self.byte = byte;
         Some(())

@@ -8,6 +8,8 @@
 //! segment acknowledged in the paper's `C_s` model) plus the bit-packed
 //! codes.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 /// Per-segment quantization header.
@@ -64,15 +66,26 @@ pub enum Message {
     /// as in the paper — only the uplink is quantized).  Carries the
     /// global loss trajectory (initial, previous-round) that loss-driven
     /// policies (AdaQuantFL) condition on; `None` before round 1.
+    ///
+    /// `params` is an `Arc` so the coordinator broadcasts the same
+    /// buffer to every client without copying it n times per round:
+    /// cloning the message is a refcount bump, and the round engine's
+    /// worker pool reads the shared vector concurrently.
     Broadcast {
         round: u32,
-        params: Vec<f32>,
+        params: Arc<[f32]>,
         losses: Option<(f32, f32)>,
     },
     /// Client -> server: the quantized update.
     Update(Update),
     /// Server -> client: training is over.
     Shutdown,
+}
+
+/// Encoded size of an [`Update`]'s body (without the message tag byte):
+/// fixed header fields + segment headers + length-prefixed payload.
+pub fn update_encoded_len(u: &Update) -> usize {
+    4 + 4 + 4 + 4 + 4 + u.segments.len() * (1 + 2 + 4 + 4) + 4 + u.payload.len()
 }
 
 const TAG_JOIN: u8 = 1;
@@ -111,15 +124,7 @@ impl Writer {
     fn f32s(&mut self, v: &[f32]) {
         self.u32(v.len() as u32);
         // bulk copy — this is the downlink hot path
-        let ptr = v.as_ptr() as *const u8;
-        let bytes = unsafe { std::slice::from_raw_parts(ptr, v.len() * 4) };
-        if cfg!(target_endian = "little") {
-            self.buf.extend_from_slice(bytes);
-        } else {
-            for x in v {
-                self.buf.extend_from_slice(&x.to_le_bytes());
-            }
-        }
+        super::extend_f32_le(&mut self.buf, v);
     }
 }
 
@@ -223,6 +228,28 @@ impl Message {
         w.buf
     }
 
+    /// Exact length of [`Self::encode`]'s output, computed without
+    /// allocating or serializing.  The in-process transports account
+    /// framed byte volumes from this, which keeps a whole
+    /// encode-per-client off the round hot path (the bytes never cross a
+    /// real wire there).  Must stay in lockstep with `encode`; a
+    /// property test asserts equality.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Message::Join { .. } => 1 + 4,
+            Message::Welcome { config_json, .. } => 1 + 4 + 4 + config_json.len(),
+            Message::Broadcast { params, losses, .. } => {
+                let losses_len = match losses {
+                    None => 1,
+                    Some(_) => 1 + 4 + 4,
+                };
+                1 + 4 + losses_len + 4 + params.len() * 4
+            }
+            Message::Update(u) => 1 + update_encoded_len(u),
+            Message::Shutdown => 1,
+        }
+    }
+
     /// Parse from the wire byte layout (strict: rejects trailing bytes).
     pub fn decode(buf: &[u8]) -> Result<Message> {
         let mut r = Reader::new(buf);
@@ -239,7 +266,7 @@ impl Message {
                     1 => Some((r.f32()?, r.f32()?)),
                     t => bail!("bad losses flag {t}"),
                 };
-                Message::Broadcast { round, params: r.f32s()?, losses }
+                Message::Broadcast { round, params: r.f32s()?.into(), losses }
             }
             TAG_UPDATE => {
                 let round = r.u32()?;
@@ -296,12 +323,12 @@ mod tests {
         });
         roundtrip(&Message::Broadcast {
             round: 3,
-            params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+            params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE].into(),
             losses: None,
         });
         roundtrip(&Message::Broadcast {
             round: 4,
-            params: vec![0.5; 3],
+            params: vec![0.5; 3].into(),
             losses: Some((2.3, 0.7)),
         });
         roundtrip(&Message::Update(Update {
@@ -320,12 +347,51 @@ mod tests {
 
     #[test]
     fn rejects_truncation_and_trailing() {
-        let bytes = Message::Broadcast { round: 1, params: vec![1.0; 8], losses: None }.encode();
+        let bytes = Message::Broadcast { round: 1, params: vec![1.0; 8].into(), losses: None }.encode();
         assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
         let mut extended = bytes.clone();
         extended.push(0);
         assert!(Message::decode(&extended).is_err());
         assert!(Message::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn encoded_len_matches_encode() {
+        let msgs = vec![
+            Message::Join { client_id: 7 },
+            Message::Welcome { client_id: 7, config_json: r#"{"model":"mlp"}"#.into() },
+            Message::Broadcast { round: 3, params: vec![1.0; 13].into(), losses: None },
+            Message::Broadcast { round: 4, params: vec![0.5; 3].into(), losses: Some((2.3, 0.7)) },
+            Message::Shutdown,
+        ];
+        for m in &msgs {
+            assert_eq!(m.encoded_len(), m.encode().len(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn prop_update_encoded_len() {
+        check("message-update-encoded-len", 50, |g: &mut Gen| {
+            let nseg = g.size(0, 40);
+            let u = Update {
+                round: g.rng.next_u32(),
+                client_id: g.rng.next_u32(),
+                num_samples: g.rng.next_u32(),
+                train_loss: g.f32_wide(),
+                segments: g.vec_of(nseg, |g| SegmentHeader {
+                    bits: g.int(0, 32) as u8,
+                    level: g.int(0, 65535) as u16,
+                    min: g.f32_wide(),
+                    step: g.f32_wide(),
+                }),
+                payload: { let n = g.size(0, 2000); g.vec_of(n, |g| g.rng.next_u32() as u8) },
+            };
+            let m = Message::Update(u);
+            if m.encoded_len() != m.encode().len() {
+                return Err("encoded_len diverged from encode".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -12,3 +12,35 @@ pub mod bitpack;
 pub mod frame;
 pub mod messages;
 pub mod transport;
+
+/// Append `src` to `dst` as little-endian f32 bytes: one bulk memcpy on
+/// little-endian targets, a per-element conversion elsewhere.  Shared by
+/// the downlink broadcast writer and the fp32 uplink codec (both hot
+/// paths).
+pub fn extend_f32_le(dst: &mut Vec<u8>, src: &[f32]) {
+    if cfg!(target_endian = "little") {
+        // f32 slice -> byte view: safe for any properly-sized allocation
+        let bytes =
+            unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 4) };
+        dst.extend_from_slice(bytes);
+    } else {
+        for x in src {
+            dst.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn extend_f32_le_matches_per_element() {
+        let xs = [1.5f32, -0.0, f32::MIN_POSITIVE, f32::NAN, 7e9];
+        let mut bulk = Vec::new();
+        super::extend_f32_le(&mut bulk, &xs);
+        let mut scalar = Vec::new();
+        for x in &xs {
+            scalar.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(bulk, scalar);
+    }
+}

@@ -24,6 +24,11 @@ use super::messages::Message;
 /// A bidirectional, byte-accounted message pipe.
 pub trait Transport: Send {
     fn send(&mut self, msg: &Message) -> Result<()>;
+    /// Send a message the caller already encoded (`msg.encode()` done
+    /// once, fanned out to many peers — the broadcast hot path).
+    /// Implementations must transmit and account `encoded` without
+    /// re-serializing.
+    fn send_encoded(&mut self, encoded: &[u8]) -> Result<()>;
     fn recv(&mut self) -> Result<Message>;
     /// Bytes sent so far (framed size).
     fn bytes_sent(&self) -> u64;
@@ -58,6 +63,12 @@ impl Transport for InProcTransport {
         let payload = msg.encode();
         self.sent += frame::framed_len(payload.len());
         self.tx.send(payload).context("in-proc peer hung up")?;
+        Ok(())
+    }
+
+    fn send_encoded(&mut self, encoded: &[u8]) -> Result<()> {
+        self.sent += frame::framed_len(encoded.len());
+        self.tx.send(encoded.to_vec()).context("in-proc peer hung up")?;
         Ok(())
     }
 
@@ -107,6 +118,11 @@ impl Transport for TcpTransport {
         frame::write_frame(&mut self.stream, &payload)
     }
 
+    fn send_encoded(&mut self, encoded: &[u8]) -> Result<()> {
+        self.sent += frame::framed_len(encoded.len());
+        frame::write_frame(&mut self.stream, encoded)
+    }
+
     fn recv(&mut self) -> Result<Message> {
         let payload = frame::read_frame(&mut self.stream)?;
         self.received += frame::framed_len(payload.len());
@@ -131,12 +147,24 @@ mod tests {
     #[test]
     fn in_proc_roundtrip_and_accounting() {
         let (mut server, mut client) = in_proc_pair();
-        let msg = Message::Broadcast { round: 1, params: vec![0.5; 100], losses: None };
+        let msg = Message::Broadcast { round: 1, params: vec![0.5; 100].into(), losses: None };
         server.send(&msg).unwrap();
         let got = client.recv().unwrap();
         assert_eq!(got, msg);
         assert_eq!(server.bytes_sent(), client.bytes_received());
         assert!(server.bytes_sent() > 400); // 100 f32 + header
+    }
+
+    #[test]
+    fn send_encoded_matches_send() {
+        let msg = Message::Broadcast { round: 2, params: vec![0.25; 64].into(), losses: None };
+        let (mut a, mut b) = in_proc_pair();
+        a.send(&msg).unwrap();
+        let via_send = a.bytes_sent();
+        a.send_encoded(&msg.encode()).unwrap();
+        assert_eq!(a.bytes_sent(), via_send * 2, "pre-encoded path must account identically");
+        assert_eq!(b.recv().unwrap(), msg);
+        assert_eq!(b.recv().unwrap(), msg);
     }
 
     #[test]
@@ -162,7 +190,7 @@ mod tests {
 
     #[test]
     fn in_proc_and_tcp_account_identically() {
-        let msg = Message::Broadcast { round: 9, params: vec![1.0; 257], losses: Some((2.3, 1.1)) };
+        let msg = Message::Broadcast { round: 9, params: vec![1.0; 257].into(), losses: Some((2.3, 1.1)) };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();
         b.recv().unwrap();

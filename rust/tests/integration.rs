@@ -1,6 +1,9 @@
-//! Integration tests over the real AOT artifacts: runtime numerics,
-//! codec round-trips through the actual executables, full sessions, and
-//! the TCP topology.  Require `make artifacts` to have been run.
+//! Integration tests over the model runtime: numerics, codec
+//! round-trips through the actual executables, full sessions, and the
+//! TCP topology.  They run against the AOT artifacts when `make
+//! artifacts` has produced them (and the `pjrt` feature is enabled),
+//! and against the built-in native MLP backend otherwise — the session,
+//! codec and wire behavior under test is identical either way.
 
 use feddq::config::RunConfig;
 use feddq::coordinator::codec::{self, QuantPlan};
@@ -11,7 +14,7 @@ use feddq::runtime::Runtime;
 use feddq::util::rng::Rng;
 
 fn runtime() -> Runtime {
-    Runtime::new("artifacts").expect("run `make artifacts` before cargo test")
+    Runtime::new("artifacts").expect("runtime over artifacts or builtin manifest")
 }
 
 fn ramp(d: usize) -> Vec<f32> {
@@ -21,11 +24,18 @@ fn ramp(d: usize) -> Vec<f32> {
 }
 
 #[test]
-fn manifest_lists_all_four_models() {
+fn manifest_lists_expected_models() {
     let rt = runtime();
-    for m in ["mlp", "vanilla_cnn", "cnn4", "resnet18"] {
-        assert!(rt.manifest.models.contains_key(m), "{m} missing");
-        rt.manifest.models[m].validate().unwrap();
+    // The built-in native manifest carries only the MLP benchmark; real
+    // AOT artifacts must list the full model zoo.
+    let expected: &[&str] = if rt.is_builtin() {
+        &["mlp"]
+    } else {
+        &["mlp", "vanilla_cnn", "cnn4", "resnet18"]
+    };
+    for m in expected {
+        assert!(rt.manifest.models.contains_key(*m), "{m} missing");
+        rt.manifest.models[*m].validate().unwrap();
     }
 }
 

@@ -1,0 +1,98 @@
+//! The parallel round engine's determinism contract: for any worker
+//! thread count the in-process `Session` must produce a bit-identical
+//! `RunReport` — same round records, same bit ledger, same final
+//! parameter hash.  Also pins the streaming-vs-fused aggregation
+//! equivalence on the mlp config.
+
+use feddq::config::{AggregateMode, RunConfig};
+use feddq::coordinator::Session;
+use feddq::metrics::RunReport;
+use feddq::quant::PolicyConfig;
+
+fn mlp_cfg(threads: usize) -> RunConfig {
+    let mut cfg = RunConfig::default_for("mlp");
+    cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
+    cfg.rounds = 4;
+    cfg.train_size = 600;
+    cfg.test_size = 500; // one eval batch
+    cfg.threads = threads;
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunReport {
+    Session::new(cfg).unwrap().run().unwrap()
+}
+
+/// Bitwise equality of two reports (NaN-tolerant via f32 bit patterns).
+fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.round, rb.round, "{what}");
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "{what}: train_loss r{}", ra.round);
+        assert_eq!(ra.test_loss.to_bits(), rb.test_loss.to_bits(), "{what}: test_loss r{}", ra.round);
+        assert_eq!(
+            ra.test_accuracy.to_bits(),
+            rb.test_accuracy.to_bits(),
+            "{what}: test_accuracy r{}",
+            ra.round
+        );
+        assert_eq!(ra.uplink_bits, rb.uplink_bits, "{what}: uplink_bits r{}", ra.round);
+        assert_eq!(ra.cum_uplink_bits, rb.cum_uplink_bits, "{what}: cum bits r{}", ra.round);
+        assert_eq!(ra.mean_bits.to_bits(), rb.mean_bits.to_bits(), "{what}: mean_bits r{}", ra.round);
+        assert_eq!(ra.mean_range.to_bits(), rb.mean_range.to_bits(), "{what}: mean_range r{}", ra.round);
+        let sa: Vec<u32> = ra.seg_ranges.iter().map(|x| x.to_bits()).collect();
+        let sb: Vec<u32> = rb.seg_ranges.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(sa, sb, "{what}: seg_ranges r{}", ra.round);
+    }
+    assert_ne!(a.params_hash, 0, "{what}: params hash must be tracked");
+    assert_eq!(a.params_hash, b.params_hash, "{what}: final params diverged");
+}
+
+#[test]
+fn threads_1_and_4_produce_identical_reports() {
+    let seq = run(mlp_cfg(1));
+    let par = run(mlp_cfg(4));
+    assert_reports_identical(&seq, &par, "threads=1 vs threads=4");
+}
+
+#[test]
+fn auto_threads_matches_sequential() {
+    let seq = run(mlp_cfg(1));
+    let auto = run(mlp_cfg(0)); // min(n_clients, cores)
+    assert_reports_identical(&seq, &auto, "threads=1 vs auto");
+}
+
+#[test]
+fn determinism_holds_under_error_feedback_and_fixed_bits() {
+    // EF keeps per-client residual state alive across rounds — the
+    // moved-state pool path must preserve it exactly.
+    let mut a = mlp_cfg(1);
+    a.policy = PolicyConfig::Fixed { bits: 2 };
+    a.error_feedback = true;
+    let mut b = mlp_cfg(3);
+    b.policy = PolicyConfig::Fixed { bits: 2 };
+    b.error_feedback = true;
+    assert_reports_identical(&run(a), &run(b), "EF threads=1 vs threads=3");
+}
+
+#[test]
+fn streaming_and_fused_aggregation_agree() {
+    let mut s = mlp_cfg(2);
+    s.aggregate = AggregateMode::Streaming;
+    let mut f = mlp_cfg(2);
+    f.aggregate = AggregateMode::Fused;
+    let (rs, rf) = (run(s), run(f));
+    assert_eq!(rs.rounds.len(), rf.rounds.len());
+    for (a, b) in rs.rounds.iter().zip(&rf.rounds) {
+        // identical wire traffic; numerics may differ only by summation
+        // implementation, and on the native backend not even by that
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert!(
+            (a.train_loss - b.train_loss).abs() <= 1e-4 * a.train_loss.abs().max(1.0),
+            "round {}: {} vs {}",
+            a.round,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+}
