@@ -1,31 +1,59 @@
 //! Distributed mode demo: a real multi-endpoint federation over TCP in
-//! one process — the server and ten worker clients each own a PJRT
-//! runtime and speak the framed wire protocol on localhost sockets,
-//! exactly what `feddq serve` / `feddq worker` do across machines.
+//! one process — the server and its workers each own a model runtime
+//! and speak the framed wire protocol on localhost sockets, exactly
+//! what `feddq serve` / `feddq worker` do across machines.
 //!
-//!     cargo run --release --example distributed
+//!     cargo run --release --example distributed -- [train flags]
+//!
+//! The artifacts directory is routed through the backend seam
+//! (`--artifacts` / `FEDDQ_ARTIFACTS`, default `artifacts`), so with no
+//! AOT artifacts present everything runs on the built-in native MLP
+//! backend — no `make artifacts` required.  One worker is spawned per
+//! manifest client; CI smokes the topology with
+//! `FEDDQ_NATIVE_CLIENTS=2` and `--rounds 2`.
 
-use feddq::config::RunConfig;
+use feddq::cli::{run_config_from_args, Args};
 use feddq::coordinator::topology;
 use feddq::metrics::gbits;
 use feddq::quant::PolicyConfig;
+use feddq::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let addr = "127.0.0.1:17878";
-    let mut cfg = RunConfig::default_for("mlp");
-    cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
-    cfg.rounds = 5;
-    cfg.train_size = 2000;
-    cfg.test_size = 500;
-    let n = 10u32;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let addr = args.get_or("addr", "127.0.0.1:17878").to_string();
+    let mut cfg = run_config_from_args(&args, "mlp")?;
+    // Demo-sized defaults for anything the caller didn't pin down.
+    if args.get("policy").is_none() {
+        cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
+    }
+    if args.get("rounds").is_none() {
+        cfg.rounds = 5;
+    }
+    if args.get("train-size").is_none() {
+        cfg.train_size = 2000;
+    }
+    if args.get("test-size").is_none() {
+        cfg.test_size = 500;
+    }
+    args.finish()?;
+
+    // Worker count comes from the manifest the backend seam resolves
+    // (built-in native manifest when the artifacts dir has none), never
+    // from a hardcoded artifacts path.
+    let n = {
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        rt.load_model(&cfg.model)?.mm.n_clients as u32
+    };
 
     println!("spawning {n} TCP workers + server on {addr}");
     let workers: Vec<_> = (0..n)
         .map(|id| {
-            let addr = addr.to_string();
+            let addr = addr.clone();
+            let artifacts = cfg.artifacts_dir.clone();
             std::thread::spawn(move || {
                 for _ in 0..100 {
-                    match topology::worker(&addr, id, "artifacts") {
+                    match topology::worker(&addr, id, &artifacts) {
                         Ok(()) => return Ok(()),
                         Err(e) if format!("{e:#}").contains("Connection refused") => {
                             std::thread::sleep(std::time::Duration::from_millis(100));
@@ -38,10 +66,16 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let report = topology::serve(&cfg, addr, |m, rec| {
+    let report = topology::serve(&cfg, &addr, |m, rec| {
         println!(
-            "round {m}: loss {:.4} acc {:.3} bits/elem {:.2} cum {:.4} Gb",
-            rec.train_loss, rec.test_accuracy, rec.mean_bits, gbits(rec.cum_uplink_bits)
+            "round {m}: loss {:.4} acc {:.3} bits/elem {:.2} cum {:.4} Gb (recv+decode {:.3}s agg {:.3}s eval {:.3}s)",
+            rec.train_loss,
+            rec.test_accuracy,
+            rec.mean_bits,
+            gbits(rec.cum_uplink_bits),
+            rec.recv_decode_secs,
+            rec.agg_secs,
+            rec.eval_secs,
         );
     })?;
     for w in workers {

@@ -1,16 +1,24 @@
 //! L3 hot-path micro-benchmarks: the pure-Rust wire work (bit packing,
-//! unpacking, message encode/decode, CRC framing) plus end-to-end
-//! federated rounds at threads=1 vs threads=4 — the parallel round
-//! engine's headline number.  §Perf targets: pack/unpack >= 1 GB/s per
-//! core; >= 2x s/round at threads=4 on a multi-core host.
+//! unpacking, message encode/decode, CRC framing), the server's sharded
+//! accumulator fold and parallel eval, plus end-to-end federated rounds
+//! at threads=1 vs threads=4 — the parallel round engine's headline
+//! number.  §Perf targets: pack/unpack >= 1 GB/s per core; >= 2x
+//! s/round at threads=4 on a multi-core host.
 //!
 //! Emits `BENCH_hotpath.json` (name -> GB/s and s/round) so the perf
-//! trajectory is tracked across PRs.
+//! trajectory is tracked across PRs; CI's `bench-smoke` job gates on
+//! the `_gbps` rows regressing vs the committed baseline.
+
+use std::sync::Arc;
 
 use feddq::bench_support as bs;
-use feddq::config::RunConfig;
-use feddq::coordinator::Session;
+use feddq::config::{AggregateMode, RunConfig};
+use feddq::coordinator::codec::{self, QuantPlan};
+use feddq::coordinator::pool::{self, Task, WorkerPool};
+use feddq::coordinator::{Server, ServerOpts, Session};
+use feddq::data::{self, DatasetKind};
 use feddq::quant::PolicyConfig;
+use feddq::runtime::Runtime;
 use feddq::util::bench::{bench_header, black_box, Bencher};
 use feddq::util::rng::Rng;
 use feddq::wire::bitpack::{BitReader, BitWriter};
@@ -104,6 +112,90 @@ fn main() -> anyhow::Result<()> {
         black_box(frame::crc32(&encoded))
     });
     json.push(("crc32_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+
+    bench_header("server hot path: sharded aggregation (mlp layout)");
+    // Fixture: n decoded 8-bit updates produced through the real codec.
+    let rt = Runtime::new("artifacts")?;
+    let model = Arc::new(rt.load_model("mlp")?);
+    let mm = Arc::new(model.mm.clone());
+    let n_agg = 32usize;
+    let mut decs: Vec<codec::DecodedUpdate> = Vec::with_capacity(n_agg);
+    for i in 0..n_agg {
+        let levels = vec![255u32; mm.num_segments()];
+        let ranges = vec![1.0f32; mm.num_segments()];
+        let plan = QuantPlan::new(&levels, &ranges);
+        let codes: Vec<f32> = (0..mm.d).map(|j| ((i + j) % 256) as f32).collect();
+        let mins = vec![-0.5f32; mm.num_segments()];
+        let (headers, payload) = codec::encode_quantized(&mm, &plan, &mins, &codes);
+        let u = Update {
+            round: 0,
+            client_id: i as u32,
+            num_samples: 100,
+            train_loss: 0.0,
+            segments: headers,
+            payload,
+        };
+        decs.push(codec::decode_update(&mm, &u)?);
+    }
+    let w = 1.0f32 / n_agg as f32;
+    let fold_bytes = (n_agg * mm.d * 4) as u64;
+    let r = b.bench_bytes(&format!("agg fold serial (n={n_agg})"), Some(fold_bytes), &mut || {
+        let mut acc = vec![0.0f32; mm.d];
+        for dec in &decs {
+            codec::fold_range(&mm, dec, w, 0, mm.d, &mut acc);
+        }
+        black_box(acc)
+    });
+    json.push(("agg_fold_serial_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    let pool = WorkerPool::new(4, Arc::clone(&model));
+    let tasks: std::sync::mpsc::Sender<Task> = pool.sender();
+    let shards = 4usize;
+    let shared: Arc<Vec<codec::DecodedUpdate>> = Arc::new(std::mem::take(&mut decs));
+    let ws: Arc<Vec<f32>> = Arc::new(vec![w; n_agg]);
+    // drives pool::sharded_fold — the exact production aggregation path
+    let r = b.bench_bytes(
+        &format!("agg fold sharded x{shards} (n={n_agg})"),
+        Some(fold_bytes),
+        &mut || {
+            black_box(
+                pool::sharded_fold(&tasks, &model, &shared, &ws, shards, Vec::new()).unwrap(),
+            )
+        },
+    );
+    json.push(("agg_sharded_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+
+    bench_header("server hot path: parallel eval (mlp, 4 eval batches)");
+    // Server eval over a 4-batch synthetic test set, serial vs sliced
+    // across the same pool (timing rows — CI gates only on throughput).
+    let (_, test, _) = data::load_or_synthesize(DatasetKind::FashionMnist, "data", 64, 4 * 500, 17)?;
+    let test = Arc::new(test);
+    let server_serial = Server::new(
+        Arc::clone(&model),
+        Arc::clone(&test),
+        17,
+        ServerOpts::serial(AggregateMode::Streaming),
+    )?;
+    let r = b.bench("eval serial (4 batches)", || server_serial.evaluate().unwrap());
+    let eval_serial = r.median.as_secs_f64();
+    json.push(("eval_serial_secs".into(), eval_serial));
+    let server_par = Server::new(
+        Arc::clone(&model),
+        Arc::clone(&test),
+        17,
+        ServerOpts {
+            aggregate: AggregateMode::Streaming,
+            agg_shards: 1,
+            eval_threads: 4,
+            tasks: Some(pool.sender()),
+        },
+    )?;
+    let r = b.bench("eval parallel x4 (4 batches)", || server_par.evaluate().unwrap());
+    let eval_par = r.median.as_secs_f64();
+    json.push(("eval_parallel_secs".into(), eval_par));
+    json.push(("eval_parallel_speedup".into(), eval_serial / eval_par.max(1e-12)));
+    drop(server_par);
+    drop(server_serial);
+    drop(tasks);
 
     bench_header("end-to-end federated rounds (mlp, 10 clients, in-proc)");
     let rounds = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 3 } else { 6 };

@@ -1,14 +1,20 @@
 //! L1/L2 micro-benchmarks: latency of each model executable in
 //! isolation (the coordinator's entire compute budget), across every
-//! model the active backend can load.  Used by the §Perf pass in
+//! model the active backend can load, plus the coordinator's sharded
+//! decode-fold over the same layout.  Used by the §Perf pass in
 //! EXPERIMENTS.md.  Emits `BENCH_kernels.json` (name -> GB/s or secs)
-//! for cross-PR tracking.
+//! for cross-PR tracking; CI's `bench-smoke` job gates the `_gbps`
+//! rows against the committed baseline.
+
+use std::sync::Arc;
 
 use feddq::bench_support as bs;
-use feddq::coordinator::codec::QuantPlan;
+use feddq::coordinator::codec::{self, QuantPlan};
+use feddq::coordinator::pool::{self, WorkerPool};
 use feddq::runtime::Runtime;
 use feddq::util::bench::{bench_header, Bencher};
 use feddq::util::rng::Rng;
+use feddq::wire::messages::Update;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new("artifacts")?;
@@ -22,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     for name in models {
         let model = match rt.load_model(&name) {
-            Ok(m) => m,
+            Ok(m) => Arc::new(m),
             Err(e) => {
                 // conv models need AOT artifacts + the pjrt feature
                 println!("skipping {name}: {e:#}");
@@ -85,6 +91,34 @@ fn main() -> anyhow::Result<()> {
             &mut || model.aggregate(&codes_n, &mins_n, &steps_n, &w).unwrap(),
         );
         json.push((format!("{name}_aggregate_gbps"), r.throughput_gbps().unwrap_or(0.0)));
+
+        // Coordinator-level sharded decode-fold over this layout: the
+        // streaming aggregation path's parallel fold (4 shards on a
+        // 4-worker pool), byte-equivalent work to the fused aggregate.
+        let (headers, payload) = codec::encode_quantized(&mm, &plan, &mins, &codes);
+        let u = Update {
+            round: 0,
+            client_id: 0,
+            num_samples: 1,
+            train_loss: 0.0,
+            segments: headers,
+            payload,
+        };
+        let decs: Arc<Vec<codec::DecodedUpdate>> = Arc::new(
+            (0..n).map(|_| codec::decode_update(&mm, &u).unwrap()).collect(),
+        );
+        let ws: Arc<Vec<f32>> = Arc::new(vec![1.0f32 / n as f32; n]);
+        let pool = WorkerPool::new(4, Arc::clone(&model));
+        let tasks = pool.sender();
+        let shards = 4usize;
+        // drives pool::sharded_fold — the exact production aggregation path
+        let r = b.bench_bytes(
+            &format!("{name}/agg fold sharded x{shards} (n={n})"),
+            Some(dbytes * n as u64),
+            &mut || pool::sharded_fold(&tasks, &model, &decs, &ws, shards, Vec::new()).unwrap(),
+        );
+        json.push((format!("{name}_agg_sharded_gbps"), r.throughput_gbps().unwrap_or(0.0)));
+        drop(tasks);
     }
 
     bs::write_bench_json("kernels", &json);

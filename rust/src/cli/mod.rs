@@ -144,6 +144,12 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(a) = args.get("aggregate") {
         cfg.aggregate = crate::config::AggregateMode::parse(a)?;
     }
+    if let Some(s) = args.get_parse::<usize>("agg-shards")? {
+        cfg.agg_shards = s;
+    }
+    if let Some(t) = args.get_parse::<usize>("eval-threads")? {
+        cfg.eval_threads = t;
+    }
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -186,7 +192,7 @@ mod tests {
         let a = Args::parse(&argv(
             "--model cnn4 --policy adaquantfl:4 --rounds 12 --lr 0.05 \
              --sharding dirichlet:0.5 --target-acc 0.8 --threads 4 \
-             --aggregate fused",
+             --aggregate fused --agg-shards 6 --eval-threads 2",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -196,6 +202,8 @@ mod tests {
         assert_eq!(cfg.target_accuracy, Some(0.8));
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.aggregate, crate::config::AggregateMode::Fused);
+        assert_eq!(cfg.agg_shards, 6);
+        assert_eq!(cfg.eval_threads, 2);
         a.finish().unwrap();
     }
 

@@ -75,6 +75,17 @@ pub struct RunConfig {
     /// Server-side aggregation strategy (streaming by default; the fused
     /// executable only when configured).
     pub aggregate: AggregateMode,
+    /// Accumulator shards for the server's parallel decode-fold; 0 =
+    /// auto (match the worker pool), 1 = serial fold.  Sharding splits
+    /// the `d`-length accumulator into contiguous element ranges and
+    /// never reorders per-element arithmetic, so any value yields a
+    /// bit-identical `RunReport`.
+    pub agg_shards: usize,
+    /// Worker slices for server-side evaluation batches; 0 = auto
+    /// (match the worker pool), 1 = serial.  The reduction walks
+    /// batches in a fixed order, so any value yields a bit-identical
+    /// `RunReport`.
+    pub eval_threads: usize,
 }
 
 impl RunConfig {
@@ -105,6 +116,8 @@ impl RunConfig {
             error_feedback: false,
             threads: 0,
             aggregate: AggregateMode::Streaming,
+            agg_shards: 0,
+            eval_threads: 0,
         }
     }
 
@@ -118,6 +131,37 @@ impl RunConfig {
             self.threads
         };
         t.clamp(1, n_clients.max(1))
+    }
+
+    /// Resolve the thread count for a **server-only** pool (`feddq
+    /// serve`): the remote workers own the round compute, so unlike
+    /// [`Self::resolved_threads`] the cohort size is no cap here —
+    /// explicit `threads` value, or available cores when 0.
+    pub fn resolved_server_threads(&self) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.clamp(1, 256)
+    }
+
+    /// Resolve the accumulator shard count for the server's parallel
+    /// fold: explicit value, or the server pool's thread count when 0
+    /// (capped so degenerate configs can't explode into thousands of
+    /// tiny chunk tasks).
+    pub fn resolved_agg_shards(&self, pool_threads: usize) -> usize {
+        let s = if self.agg_shards == 0 { pool_threads } else { self.agg_shards };
+        s.clamp(1, 256)
+    }
+
+    /// Resolve server-side eval parallelism: explicit value, or the
+    /// server pool's thread count when 0 — slicing finer than the pool
+    /// that executes the slices is pure dispatch overhead.  The eval
+    /// path additionally clamps to the number of eval batches.
+    pub fn resolved_eval_threads(&self, pool_threads: usize) -> usize {
+        let t = if self.eval_threads == 0 { pool_threads } else { self.eval_threads };
+        t.clamp(1, 256)
     }
 
     /// Human-readable run label (used in report files).
@@ -161,6 +205,8 @@ impl RunConfig {
             ("error_feedback", Json::from(self.error_feedback)),
             ("threads", Json::from(self.threads)),
             ("aggregate", Json::from(self.aggregate.label())),
+            ("agg_shards", Json::from(self.agg_shards)),
+            ("eval_threads", Json::from(self.eval_threads)),
         ])
     }
 
@@ -202,6 +248,9 @@ impl RunConfig {
                 Some(s) => AggregateMode::parse(s)?,
                 None => AggregateMode::Streaming,
             },
+            // absent in pre-sharding configs: auto everywhere
+            agg_shards: j.get("agg_shards").and_then(Json::as_usize).unwrap_or(0),
+            eval_threads: j.get("eval_threads").and_then(Json::as_usize).unwrap_or(0),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -246,6 +295,8 @@ mod tests {
         c.error_feedback = true;
         c.threads = 6;
         c.aggregate = AggregateMode::Fused;
+        c.agg_shards = 8;
+        c.eval_threads = 3;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
@@ -275,10 +326,14 @@ mod tests {
         if let Json::Obj(o) = &mut j {
             o.remove("threads");
             o.remove("aggregate");
+            o.remove("agg_shards");
+            o.remove("eval_threads");
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.threads, 0);
         assert_eq!(back.aggregate, AggregateMode::Streaming);
+        assert_eq!(back.agg_shards, 0);
+        assert_eq!(back.eval_threads, 0);
     }
 
     #[test]
@@ -291,5 +346,22 @@ mod tests {
         c.threads = 0;
         let auto = c.resolved_threads(10);
         assert!((1..=10).contains(&auto));
+    }
+
+    #[test]
+    fn resolved_server_knobs_follow_pool_and_clamp() {
+        let mut c = RunConfig::default_for("mlp");
+        // auto: both server knobs follow the pool
+        assert_eq!(c.resolved_agg_shards(4), 4);
+        assert_eq!(c.resolved_eval_threads(4), 4);
+        // explicit values win, degenerate ones clamp
+        c.agg_shards = 7;
+        assert_eq!(c.resolved_agg_shards(4), 7);
+        c.agg_shards = 100_000;
+        assert_eq!(c.resolved_agg_shards(4), 256);
+        c.eval_threads = 5;
+        assert_eq!(c.resolved_eval_threads(4), 5);
+        c.eval_threads = 100_000;
+        assert_eq!(c.resolved_eval_threads(4), 256);
     }
 }

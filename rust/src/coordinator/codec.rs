@@ -185,6 +185,41 @@ pub fn decode_update_into(mm: &ModelManifest, u: &Update, out: &mut DecodedUpdat
     Ok(())
 }
 
+/// Fold `w * dequant(dec)` into `acc` for the flat element range
+/// `[lo, hi)`; `acc[0]` aligns with flat index `lo` and `acc` must be
+/// exactly `hi - lo` long.
+///
+/// The per-element expression is the aggregation path's single source
+/// of truth: because element `j`'s accumulation never reads any other
+/// element, folding an arbitrary contiguous partition of `[0, d)`
+/// shard-by-shard — with the same client order inside every shard — is
+/// bit-identical to one serial pass over the whole vector.  That is the
+/// sharded accumulator's determinism argument (see
+/// `coordinator::server`).
+pub fn fold_range(
+    mm: &ModelManifest,
+    dec: &DecodedUpdate,
+    w: f32,
+    lo: usize,
+    hi: usize,
+    acc: &mut [f32],
+) {
+    debug_assert_eq!(acc.len(), hi - lo);
+    for (l, seg) in mm.segments.iter().enumerate() {
+        let a = seg.offset.max(lo);
+        let b = (seg.offset + seg.size).min(hi);
+        if a >= b {
+            continue;
+        }
+        let (mn, st) = (dec.mins[l], dec.steps[l]);
+        let codes = &dec.codes[a..b];
+        let out = &mut acc[a - lo..b - lo];
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o += w * (c * st + mn);
+        }
+    }
+}
+
 /// Decode an update into freshly allocated buffers (convenience wrapper
 /// over [`decode_update_into`]).
 pub fn decode_update(mm: &ModelManifest, u: &Update) -> Result<DecodedUpdate> {
@@ -328,6 +363,38 @@ mod tests {
             payload,
         };
         assert!(decode_update(&m, &u).is_err());
+    }
+
+    #[test]
+    fn fold_range_partitions_reassemble_bit_identically() {
+        let m = mm();
+        let plan = QuantPlan::new(&[15, 7], &[1.0, 0.5]);
+        let codes = vec![1.0, 5.0, 9.0, 15.0, 0.0, 3.0, 7.0];
+        let (headers, payload) = encode_quantized(&m, &plan, &[-0.3, 0.1], &codes);
+        let u = Update {
+            round: 0,
+            client_id: 0,
+            num_samples: 4,
+            train_loss: 0.0,
+            segments: headers,
+            payload,
+        };
+        let dec = decode_update(&m, &u).unwrap();
+        let w = 0.251f32;
+        let mut serial = vec![0.1f32; m.d];
+        fold_range(&m, &dec, w, 0, m.d, &mut serial);
+        // every two-way split, including ones that cut segment "a" in
+        // half, must reproduce the serial fold bit for bit
+        for split in 1..m.d {
+            let mut left = vec![0.1f32; split];
+            let mut right = vec![0.1f32; m.d - split];
+            fold_range(&m, &dec, w, 0, split, &mut left);
+            fold_range(&m, &dec, w, split, m.d, &mut right);
+            left.extend_from_slice(&right);
+            let got: Vec<u32> = left.iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = serial.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "split at {split}");
+        }
     }
 
     #[test]

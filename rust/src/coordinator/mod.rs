@@ -1,9 +1,18 @@
 //! The FL coordinator — L3's contribution: round orchestration, the
 //! client uplink path (local round → range → policy → quantize → pack) and
 //! the server downlink/aggregation path, over pluggable client handles
-//! (in-process pool workers or TCP workers).  In-process client rounds
-//! run concurrently on a persistent thread pool ([`pool`]) with
-//! bit-deterministic results for any thread count.
+//! (in-process pool workers or TCP workers).
+//!
+//! Both sides of a round are parallel on one persistent thread pool
+//! ([`pool`]): in-process client rounds run concurrently, and the
+//! server's three hot stages scale on the same workers — update decode
+//! is **pipelined with receive** (each `Update` is handed to a worker
+//! as it lands), the streaming accumulator is **sharded** into
+//! contiguous per-worker chunk ranges ([`codec::fold_range`]), and
+//! evaluation batches split into per-worker slices.  Every
+//! configuration (thread count, `agg_shards`, `eval_threads`) is
+//! bit-deterministic: folds visit clients in sorted order inside each
+//! shard, and reductions walk batches in a fixed order.
 
 pub mod client;
 pub mod codec;
@@ -12,4 +21,4 @@ pub mod server;
 pub mod topology;
 
 pub use client::ClientState;
-pub use server::{Server, Session};
+pub use server::{Server, ServerOpts, Session};

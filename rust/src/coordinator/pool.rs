@@ -1,4 +1,4 @@
-//! Persistent worker pool for in-process client rounds.
+//! Persistent worker pool shared by the round engine's two sides.
 //!
 //! The single-process `Session` used to run every client's local round
 //! sequentially on the session thread; with tau SGD steps per client
@@ -8,29 +8,40 @@
 //! [`RunConfig`](crate::config::RunConfig); default min(n_clients,
 //! cores)).
 //!
+//! The same workers also execute the **server's** hot stages as generic
+//! [`Task::Exec`] closures: update decoding pipelined with receive,
+//! the sharded accumulator fold, and evaluation batch slices (see
+//! [`super::server`]).  One pool, two kinds of work — server tasks are
+//! only submitted at points where no client job can be waiting on them
+//! (decode after a client replied, fold/eval after all replies), so the
+//! shared queue cannot deadlock.
+//!
 //! ## Determinism contract
 //!
 //! Scheduling is work-stealing (a shared job queue), so *which* worker
-//! runs a client, and in what order rounds complete, is nondeterministic
-//! — but the results are not:
+//! runs a client or server task, and in what order tasks complete, is
+//! nondeterministic — but the results are not:
 //!
-//! * each job owns its `ClientState` (moved in, moved back out), so no
-//!   client state is ever shared between threads;
+//! * each round job owns its `ClientState` (moved in, moved back out),
+//!   so no client state is ever shared between threads;
 //! * every stochastic stream (batch cursor, quantizer seeds) is derived
 //!   per client at construction, not from a shared generator;
 //! * the server collects replies per client and sorts updates by
-//!   `client_id` before aggregating.
+//!   `client_id` before folding, and [`scatter`] returns results in
+//!   submission order so sharded reductions reassemble deterministically.
 //!
 //! A round therefore produces a bit-identical `RunReport` for any
-//! thread count, which `rust/tests/parallel_determinism.rs` asserts.
+//! thread count, shard count or eval slice count, which
+//! `rust/tests/parallel_determinism.rs` asserts.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::client::ClientState;
+use super::codec::{self, DecodedUpdate};
 use crate::runtime::ModelRuntime;
 use crate::wire::messages::Update;
 
@@ -43,17 +54,24 @@ pub struct Job {
     pub reply: Sender<Result<(ClientState, Update)>>,
 }
 
-/// Fixed-size pool of round workers sharing one [`ModelRuntime`].
+/// A unit of pool work: a client local round, or an arbitrary
+/// server-side closure (update decode, shard fold, eval slice).
+pub enum Task {
+    Round(Job),
+    Exec(Box<dyn FnOnce() + Send + 'static>),
+}
+
+/// Fixed-size pool of workers sharing one [`ModelRuntime`].
 pub struct WorkerPool {
-    jobs: Option<Sender<Job>>,
+    tasks: Option<Sender<Task>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn `threads` workers (>= 1) over a shared job queue.
+    /// Spawn `threads` workers (>= 1) over a shared task queue.
     pub fn new(threads: usize, model: Arc<ModelRuntime>) -> WorkerPool {
         let threads = threads.max(1);
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..threads)
             .map(|i| {
@@ -65,43 +83,177 @@ impl WorkerPool {
                     .expect("spawn round worker")
             })
             .collect();
-        WorkerPool { jobs: Some(tx), workers }
+        WorkerPool { tasks: Some(tx), workers }
     }
 
-    /// A submission handle clients keep without borrowing the pool;
-    /// jobs queue on it and results arrive on each job's `reply`.
-    pub fn sender(&self) -> Sender<Job> {
-        self.jobs.as_ref().expect("pool alive").clone()
+    /// A submission handle callers keep without borrowing the pool;
+    /// tasks queue on it and round results arrive on each job's `reply`.
+    pub fn sender(&self) -> Sender<Task> {
+        self.tasks.as_ref().expect("pool alive").clone()
     }
 }
 
-fn worker_loop(rx: &Mutex<Receiver<Job>>, model: &ModelRuntime) {
+/// Split `[0, total)` into `parts` contiguous `(lo, hi)` ranges, the
+/// first `total % parts` ranges one element longer.  The single source
+/// of the chunk layout used by the sharded accumulator fold, the eval
+/// slicer and the perf benches — covers `[0, total)` exactly, no
+/// overlaps, `parts.min(total).max(1)` non-empty ranges.
+pub fn chunk_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, total.max(1));
+    let per = total / parts;
+    let rem = total % parts;
+    let mut ranges = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for s in 0..parts {
+        let hi = lo + per + usize::from(s < rem);
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    ranges
+}
+
+/// The sharded weighted fold — THE production aggregation kernel, also
+/// driven directly by the perf benches so they measure this exact code
+/// path.  Splits `[0, d)` into `shards` chunk ranges ([`chunk_ranges`])
+/// and folds every decoded update into each chunk concurrently on the
+/// pool; within a chunk, updates fold in the caller's (sorted-client)
+/// order, so any shard count is bit-identical to a serial
+/// [`codec::fold_range`] pass.
+///
+/// `chunks` supplies reusable per-shard buffers (missing ones are
+/// allocated); returns `(ranges, folded_chunks)` in range order.  Each
+/// shard drops its `Arc` clones before replying, so once this returns
+/// the caller holds the only reference to `decoded`/`weights`.
+pub fn sharded_fold(
+    tasks: &Sender<Task>,
+    model: &Arc<ModelRuntime>,
+    decoded: &Arc<Vec<DecodedUpdate>>,
+    weights: &Arc<Vec<f32>>,
+    shards: usize,
+    mut chunks: Vec<Vec<f32>>,
+) -> Result<(Vec<(usize, usize)>, Vec<Vec<f32>>)> {
+    let d = model.mm.d;
+    let ranges = chunk_ranges(d, shards);
+    while chunks.len() < ranges.len() {
+        chunks.push(Vec::new());
+    }
+    chunks.truncate(ranges.len());
+    type FoldShard = Box<dyn FnOnce() -> Vec<f32> + Send>;
+    let mut fns: Vec<FoldShard> = Vec::with_capacity(ranges.len());
+    for (&(clo, chi), mut chunk) in ranges.iter().zip(chunks.into_iter()) {
+        let model = Arc::clone(model);
+        let decoded = Arc::clone(decoded);
+        let ws = Arc::clone(weights);
+        fns.push(Box::new(move || {
+            chunk.clear();
+            chunk.resize(chi - clo, 0.0);
+            for (dec, &w) in decoded.iter().zip(ws.iter()) {
+                codec::fold_range(&model.mm, dec, w, clo, chi, &mut chunk);
+            }
+            // Release the shared handles *before* replying so the
+            // caller can deterministically reclaim the decode buffers.
+            drop(decoded);
+            drop(ws);
+            drop(model);
+            chunk
+        }));
+    }
+    let folded = scatter(tasks, fns)?;
+    Ok((ranges, folded))
+}
+
+/// Run `fns` on the pool and return their results **in submission
+/// order** (the caller's reduction order stays deterministic however
+/// the workers interleave).  Blocks the calling thread, which
+/// contributes no work of its own — the pool executes everything.
+pub fn scatter<T, F>(tasks: &Sender<Task>, fns: Vec<F>) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = fns.len();
+    let (tx, rx) = channel::<(usize, T)>();
+    for (i, f) in fns.into_iter().enumerate() {
+        let tx = tx.clone();
+        tasks
+            .send(Task::Exec(Box::new(move || {
+                let v = f();
+                let _ = tx.send((i, v));
+            })))
+            .ok()
+            .context("worker pool hung up")?;
+    }
+    drop(tx);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for _ in 0..n {
+        let (i, v) = rx.recv().context("pool worker died (panicked?)")?;
+        out[i] = Some(v);
+    }
+    Ok(out
+        .into_iter()
+        .map(|v| v.expect("each index replies exactly once"))
+        .collect())
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Task>>, model: &ModelRuntime) {
     loop {
-        // Hold the lock only for the dequeue, never across a round.
-        let job = match rx.lock() {
+        // Hold the lock only for the dequeue, never across a task.
+        let task = match rx.lock() {
             Ok(guard) => guard.recv(),
             Err(_) => return, // a sibling panicked mid-dequeue
         };
-        let job = match job {
-            Ok(j) => j,
+        let task = match task {
+            Ok(t) => t,
             Err(_) => return, // all senders dropped: shut down
         };
-        let Job { mut state, round, params, losses, reply } = job;
-        let result = state
-            .process_round(model, round, &params, losses)
-            .map(|update| (state, update));
-        // A dropped receiver just means the session gave up on the round.
-        let _ = reply.send(result);
+        match task {
+            Task::Round(job) => {
+                let Job { mut state, round, params, losses, reply } = job;
+                let result = state
+                    .process_round(model, round, &params, losses)
+                    .map(|update| (state, update));
+                // A dropped receiver just means the session gave up on
+                // the round.
+                let _ = reply.send(result);
+            }
+            Task::Exec(f) => f(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::chunk_ranges;
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for total in [0usize, 1, 7, 100, 101_770] {
+            for parts in [1usize, 2, 3, 5, 64, 300] {
+                let ranges = chunk_ranges(total, parts);
+                assert!(!ranges.is_empty());
+                assert_eq!(ranges.first().unwrap().0, 0);
+                assert_eq!(ranges.last().unwrap().1, total);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap/overlap at {w:?}");
+                }
+                if total > 0 {
+                    assert!(ranges.iter().all(|&(lo, hi)| hi > lo));
+                    assert_eq!(ranges.len(), parts.min(total));
+                }
+            }
+        }
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // Close the queue, then wait for in-flight rounds to finish.
-        // (Clients holding `sender()` clones must be dropped first or
-        // the workers keep serving them — the session drops its clients
-        // before the pool by declaration order.)
-        self.jobs.take();
+        // Close the queue, then wait for in-flight tasks to finish.
+        // (Anyone holding `sender()` clones — pool clients, the server —
+        // must be dropped first or the workers keep serving them; the
+        // session and the TCP server both declare the pool before those
+        // holders, so the holders drop first.)
+        self.tasks.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }

@@ -11,20 +11,36 @@
 //!   bytes ([`ClientHandle::send_broadcast`]).  After the round, the
 //!   server updates the vector in place (`Arc::get_mut` — by then all
 //!   clients have dropped their references).
-//! * **Aggregation** streams by default
-//!   ([`AggregateMode::Streaming`]): each update is decoded into a
-//!   round-persistent scratch ([`codec::DecodedUpdate`]) and its
-//!   weighted dequantized delta is folded directly into one `d`-length
-//!   accumulator — no `n x d` codes matrix.  The fused
-//!   dequantize-aggregate executable remains available as
-//!   [`AggregateMode::Fused`].
+//! * **Receive and decode are pipelined** when a pool is attached
+//!   ([`ServerOpts::tasks`]): each arriving `ClientUpdate` is handed to
+//!   a worker the moment it lands, decoding into a round-persistent
+//!   [`codec::DecodedUpdate`] buffer while the server blocks on the
+//!   next client's reply.  Updates are then ordered by `client_id`.
+//!   In TCP mode the pool has nothing else to do, so decode overlaps
+//!   receive fully; in-process, decode tasks share one FIFO queue with
+//!   the round jobs and so only overlap the *tail* of the round (a
+//!   priority lane for server tasks is a noted future lever).
+//! * **Aggregation** folds the decoded updates into the `d`-length
+//!   accumulator.  With `agg_shards > 1` the accumulator is split into
+//!   contiguous per-worker chunk ranges and the decode-free fold runs
+//!   concurrently, each shard visiting clients in the same sorted
+//!   order ([`codec::fold_range`]) — element-wise arithmetic never
+//!   crosses a chunk boundary, so any shard count is bit-identical to
+//!   the serial fold.  The fused dequantize-aggregate executable
+//!   remains available as [`AggregateMode::Fused`].
+//! * **Evaluation** splits the test set's eval batches into contiguous
+//!   slices across the pool (`eval_threads`), then reduces the
+//!   per-batch partials in batch order — bit-identical to the serial
+//!   loop for any slice count.
 //!
-//! Both paths visit updates in ascending `client_id` order, so reports
-//! are bit-identical across thread counts.  Across the two aggregation
-//! *modes*, equality holds element-for-element on the native backend
-//! (same fixed-order f32 arithmetic); a hardware-backed fused kernel
-//! may reduce in a different order and is only guaranteed close, not
-//! bit-equal (see `streaming_and_fused_aggregation_agree`).
+//! All paths visit updates in ascending `client_id` order, so reports
+//! are bit-identical across thread counts, shard counts and eval slice
+//! counts (enforced by `rust/tests/parallel_determinism.rs`).  Across
+//! the two aggregation *modes*, equality holds element-for-element on
+//! the native backend (same fixed-order f32 arithmetic); a
+//! hardware-backed fused kernel may reduce in a different order and is
+//! only guaranteed close, not bit-equal (see
+//! `streaming_and_fused_aggregation_agree`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -34,7 +50,7 @@ use anyhow::{ensure, Context, Result};
 
 use super::client::ClientState;
 use super::codec;
-use super::pool::{Job, WorkerPool};
+use super::pool::{self, Job, Task, WorkerPool};
 use crate::config::{AggregateMode, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
@@ -62,38 +78,68 @@ pub trait ClientHandle {
     fn downlink_bytes(&self) -> u64;
 }
 
+/// How the server schedules its own hot stages.
+pub struct ServerOpts {
+    /// Decode-fold strategy (streaming by default, fused executable on
+    /// request).
+    pub aggregate: AggregateMode,
+    /// Accumulator shards for the parallel fold (>= 1); 1 = serial
+    /// fold.  Bit-identical results for any value.
+    pub agg_shards: usize,
+    /// Worker slices for server-side eval batches (>= 1); 1 = serial.
+    /// Bit-identical results for any value.
+    pub eval_threads: usize,
+    /// Pool handle for server-side stages (decode pipeline, shard fold,
+    /// eval slices); `None` runs the server fully serial.
+    pub tasks: Option<Sender<Task>>,
+}
+
+impl ServerOpts {
+    /// Fully serial server (no pool): the pre-parallel behavior.
+    pub fn serial(aggregate: AggregateMode) -> ServerOpts {
+        ServerOpts { aggregate, agg_shards: 1, eval_threads: 1, tasks: None }
+    }
+}
+
 /// The federated server: owns the global model and the round loop.
-pub struct Server<'rt> {
-    pub model: &'rt ModelRuntime,
+pub struct Server {
+    pub model: Arc<ModelRuntime>,
     params: Arc<[f32]>,
     test: Arc<data::Dataset>,
-    aggregate_mode: AggregateMode,
+    opts: ServerOpts,
     initial_loss: Option<f32>,
     prev_loss: Option<f32>,
     cum_uplink_bits: u64,
     // round-persistent scratch (allocation-free steady state)
     dec: codec::DecodedUpdate,
     acc: Vec<f32>,
+    /// Free decode buffers for the recv/decode pipeline (grows to one
+    /// per client, then recycles round over round).
+    dec_pool: Vec<codec::DecodedUpdate>,
+    /// Per-shard chunk accumulators for the sharded fold.
+    chunks: Vec<Vec<f32>>,
 }
 
-impl<'rt> Server<'rt> {
+impl Server {
     pub fn new(
-        model: &'rt ModelRuntime,
+        model: Arc<ModelRuntime>,
         test: Arc<data::Dataset>,
         seed: u32,
-        aggregate_mode: AggregateMode,
+        opts: ServerOpts,
     ) -> Result<Self> {
         let params: Arc<[f32]> = model.init(seed)?.into();
         Ok(Server {
             model,
             params,
             test,
-            aggregate_mode,
+            opts,
             initial_loss: None,
             prev_loss: None,
             cum_uplink_bits: 0,
             dec: codec::DecodedUpdate::new(),
             acc: Vec::new(),
+            dec_pool: Vec::new(),
+            chunks: Vec::new(),
         })
     }
 
@@ -126,9 +172,12 @@ impl<'rt> Server<'rt> {
         evaluate: bool,
     ) -> Result<RoundRecord> {
         let t0 = Instant::now();
-        let mm = &self.model.mm;
         let n = clients.len();
-        ensure!(n == mm.n_clients, "manifest expects {} clients, got {n}", mm.n_clients);
+        ensure!(
+            n == self.model.mm.n_clients,
+            "manifest expects {} clients, got {n}",
+            self.model.mm.n_clients
+        );
 
         // Broadcast the global model (+ loss trajectory for AdaQuantFL):
         // one Arc clone per client, one encode per round.
@@ -149,22 +198,40 @@ impl<'rt> Server<'rt> {
         drop(encoded);
 
         // Collect updates (blocking per client; pool clients overlap).
-        let mut updates: Vec<Update> = Vec::with_capacity(n);
-        for c in clients.iter_mut() {
-            let u = c.recv_update()?;
-            ensure!(u.round == round, "client {} answered round {} for {round}", c.id(), u.round);
-            updates.push(u);
-        }
-        updates.sort_by_key(|u| u.client_id);
+        // With a pool attached and the streaming/sharded fold selected,
+        // each update's decode is dispatched as it lands, overlapping
+        // the remaining receives.
+        let t_recv = Instant::now();
+        let pipelined =
+            self.opts.tasks.is_some() && self.opts.aggregate == AggregateMode::Streaming;
+        let (updates, decoded) = if pipelined {
+            self.recv_decode_pipelined(round, clients)?
+        } else {
+            let mut updates: Vec<Update> = Vec::with_capacity(n);
+            for c in clients.iter_mut() {
+                let u = c.recv_update()?;
+                ensure!(u.round == round, "client {} answered round {} for {round}", c.id(), u.round);
+                updates.push(u);
+            }
+            updates.sort_by_key(|u| u.client_id);
+            (updates, Vec::new())
+        };
+        let recv_decode_secs = t_recv.elapsed().as_secs_f64();
 
         let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
         ensure!(total_samples > 0, "no samples reported");
 
         // Decode + aggregate, then apply (Eq. 4).
-        match self.aggregate_mode {
-            AggregateMode::Streaming => self.aggregate_streaming(&updates, total_samples)?,
-            AggregateMode::Fused => self.aggregate_fused(&updates, total_samples)?,
+        let t_agg = Instant::now();
+        if pipelined {
+            self.aggregate_decoded(&updates, decoded, total_samples)?;
+        } else {
+            match self.opts.aggregate {
+                AggregateMode::Streaming => self.aggregate_streaming(&updates, total_samples)?,
+                AggregateMode::Fused => self.aggregate_fused(&updates, total_samples)?,
+            }
         }
+        let agg_secs = t_agg.elapsed().as_secs_f64();
 
         // Loss bookkeeping for loss-driven policies.
         let train_loss = updates
@@ -177,6 +244,7 @@ impl<'rt> Server<'rt> {
         self.prev_loss = Some(train_loss);
 
         // Communication accounting: the paper counts uplink payloads.
+        let mm = &self.model.mm;
         let uplink_bits: u64 = updates
             .iter()
             .map(|u| codec::update_wire_bits(mm, u))
@@ -205,11 +273,13 @@ impl<'rt> Server<'rt> {
         }
 
         // Periodic server-side validation.
+        let t_eval = Instant::now();
         let (test_loss, test_accuracy) = if evaluate {
             self.evaluate()?
         } else {
             (f32::NAN, f32::NAN)
         };
+        let eval_secs = if evaluate { t_eval.elapsed().as_secs_f64() } else { 0.0 };
 
         Ok(RoundRecord {
             round,
@@ -222,34 +292,141 @@ impl<'rt> Server<'rt> {
             mean_range: (mean_range_acc / n as f64) as f32,
             seg_ranges,
             wall_secs: t0.elapsed().as_secs_f64(),
+            recv_decode_secs,
+            agg_secs,
+            eval_secs,
         })
     }
 
-    /// Streaming decode-aggregate: fold each update's weighted
-    /// dequantized delta into one accumulator as it is decoded.  Visits
-    /// updates in sorted order with fixed-order f32 arithmetic, matching
-    /// the fused kernel's client-major accumulation element for element.
-    fn aggregate_streaming(&mut self, updates: &[Update], total_samples: u64) -> Result<()> {
-        let mm = &self.model.mm;
-        self.acc.clear();
-        self.acc.resize(mm.d, 0.0);
-        for u in updates {
-            codec::decode_update_into(mm, u, &mut self.dec)
-                .with_context(|| format!("decoding update from client {}", u.client_id))?;
-            let w = u.num_samples as f32 / total_samples as f32;
-            for (l, seg) in mm.segments.iter().enumerate() {
-                let (mn, st) = (self.dec.mins[l], self.dec.steps[l]);
-                let codes = &self.dec.codes[seg.offset..seg.offset + seg.size];
-                let acc = &mut self.acc[seg.offset..seg.offset + seg.size];
-                for (a, &c) in acc.iter_mut().zip(codes) {
-                    *a += w * (c * st + mn);
+    /// Receive every client's update, dispatching each one's decode to
+    /// the pool the moment it arrives (decode overlaps the remaining
+    /// receives and the still-running client rounds).  Returns updates
+    /// and their decoded rows, both sorted by `client_id`.
+    fn recv_decode_pipelined(
+        &mut self,
+        round: u32,
+        clients: &mut [Box<dyn ClientHandle + '_>],
+    ) -> Result<(Vec<Update>, Vec<codec::DecodedUpdate>)> {
+        let tasks = self
+            .opts
+            .tasks
+            .as_ref()
+            .expect("pipelined path requires a pool")
+            .clone();
+        let n = clients.len();
+        type Reply = (Update, codec::DecodedUpdate, Result<()>);
+        let (tx, rx) = channel::<Reply>();
+        for c in clients.iter_mut() {
+            let u = c.recv_update()?;
+            ensure!(u.round == round, "client {} answered round {} for {round}", c.id(), u.round);
+            let mut buf = self.dec_pool.pop().unwrap_or_default();
+            let model = Arc::clone(&self.model);
+            let tx = tx.clone();
+            tasks
+                .send(Task::Exec(Box::new(move || {
+                    let res = codec::decode_update_into(&model.mm, &u, &mut buf);
+                    drop(model);
+                    let _ = tx.send((u, buf, res));
+                })))
+                .ok()
+                .context("worker pool hung up")?;
+        }
+        drop(tx);
+        let mut pairs: Vec<(Update, codec::DecodedUpdate)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (u, buf, res) = rx.recv().context("decode worker died (panicked?)")?;
+            res.with_context(|| format!("decoding update from client {}", u.client_id))?;
+            pairs.push((u, buf));
+        }
+        pairs.sort_by_key(|(u, _)| u.client_id);
+        let mut updates = Vec::with_capacity(n);
+        let mut decoded = Vec::with_capacity(n);
+        for (u, d) in pairs {
+            updates.push(u);
+            decoded.push(d);
+        }
+        Ok((updates, decoded))
+    }
+
+    /// Fold pre-decoded updates into the parameters: sharded across the
+    /// pool when `agg_shards > 1`, serial otherwise.  Client order and
+    /// per-element arithmetic are identical in both cases (and identical
+    /// to [`Self::aggregate_streaming`]), so every configuration
+    /// produces bit-identical parameters.
+    fn aggregate_decoded(
+        &mut self,
+        updates: &[Update],
+        decoded: Vec<codec::DecodedUpdate>,
+        total_samples: u64,
+    ) -> Result<()> {
+        let d = self.model.mm.d;
+        let weights: Vec<f32> = updates
+            .iter()
+            .map(|u| u.num_samples as f32 / total_samples as f32)
+            .collect();
+        let shards = self.opts.agg_shards.clamp(1, d.max(1));
+        if shards <= 1 || self.opts.tasks.is_none() {
+            self.acc.clear();
+            self.acc.resize(d, 0.0);
+            for (dec, &w) in decoded.iter().zip(&weights) {
+                codec::fold_range(&self.model.mm, dec, w, 0, d, &mut self.acc);
+            }
+            // Borrow dance: take the accumulator, apply, put it back.
+            let acc = std::mem::take(&mut self.acc);
+            for (p, a) in self.params_mut().iter_mut().zip(&acc) {
+                *p += a;
+            }
+            self.acc = acc;
+            self.dec_pool.extend(decoded);
+            return Ok(());
+        }
+
+        let tasks = self.opts.tasks.as_ref().expect("checked above").clone();
+        let shared: Arc<Vec<codec::DecodedUpdate>> = Arc::new(decoded);
+        let ws: Arc<Vec<f32>> = Arc::new(weights);
+        let bufs = std::mem::take(&mut self.chunks);
+        let (ranges, chunks) =
+            pool::sharded_fold(&tasks, &self.model, &shared, &ws, shards, bufs)?;
+        {
+            let params = self.params_mut();
+            for (&(clo, chi), chunk) in ranges.iter().zip(&chunks) {
+                debug_assert_eq!(chunk.len(), chi - clo);
+                for (p, a) in params[clo..chi].iter_mut().zip(chunk.iter()) {
+                    *p += *a;
                 }
             }
         }
+        self.chunks = chunks;
+        // Every shard dropped its clone before replying, so this always
+        // succeeds in practice; on a straggler we just reallocate next
+        // round.
+        if let Ok(bufs) = Arc::try_unwrap(shared) {
+            self.dec_pool.extend(bufs);
+        }
+        Ok(())
+    }
+
+    /// Streaming decode-aggregate (serial, no pool): fold each update's
+    /// weighted dequantized delta into one accumulator as it is decoded.
+    /// Visits updates in sorted order with fixed-order f32 arithmetic,
+    /// matching both the sharded fold and the fused kernel's
+    /// client-major accumulation element for element.
+    fn aggregate_streaming(&mut self, updates: &[Update], total_samples: u64) -> Result<()> {
+        let d = self.model.mm.d;
+        self.acc.clear();
+        self.acc.resize(d, 0.0);
+        for u in updates {
+            let mut dec = std::mem::take(&mut self.dec);
+            codec::decode_update_into(&self.model.mm, u, &mut dec)
+                .with_context(|| format!("decoding update from client {}", u.client_id))?;
+            let w = u.num_samples as f32 / total_samples as f32;
+            codec::fold_range(&self.model.mm, &dec, w, 0, d, &mut self.acc);
+            self.dec = dec;
+        }
         // Borrow dance: take the accumulator, apply, put it back.
         let acc = std::mem::take(&mut self.acc);
-        for (p, d) in self.params_mut().iter_mut().zip(&acc) {
-            *p += d;
+        for (p, a) in self.params_mut().iter_mut().zip(&acc) {
+            *p += a;
         }
         self.acc = acc;
         Ok(())
@@ -258,43 +435,87 @@ impl<'rt> Server<'rt> {
     /// Fused path: materialize the `n x d` inputs and run the aggregate
     /// executable (XLA/Pallas kernel when built with `pjrt`).
     fn aggregate_fused(&mut self, updates: &[Update], total_samples: u64) -> Result<()> {
-        let mm = &self.model.mm;
         let n = updates.len();
-        let l = mm.num_segments();
-        let mut codes = Vec::with_capacity(n * mm.d);
+        let l = self.model.mm.num_segments();
+        let d = self.model.mm.d;
+        let mut codes = Vec::with_capacity(n * d);
         let mut mins = Vec::with_capacity(n * l);
         let mut steps = Vec::with_capacity(n * l);
         let mut weights = Vec::with_capacity(n);
         for u in updates {
-            codec::decode_update_into(mm, u, &mut self.dec)
+            let mut dec = std::mem::take(&mut self.dec);
+            codec::decode_update_into(&self.model.mm, u, &mut dec)
                 .with_context(|| format!("decoding update from client {}", u.client_id))?;
-            codes.extend_from_slice(&self.dec.codes);
-            mins.extend_from_slice(&self.dec.mins);
-            steps.extend_from_slice(&self.dec.steps);
+            codes.extend_from_slice(&dec.codes);
+            mins.extend_from_slice(&dec.mins);
+            steps.extend_from_slice(&dec.steps);
+            self.dec = dec;
             weights.push(u.num_samples as f32 / total_samples as f32);
         }
         let delta = self.model.aggregate(&codes, &mins, &steps, &weights)?;
-        for (p, d) in self.params_mut().iter_mut().zip(&delta) {
-            *p += d;
+        for (p, dv) in self.params_mut().iter_mut().zip(&delta) {
+            *p += dv;
         }
         Ok(())
     }
 
     /// Full-test-set evaluation in `eval_batch` chunks (the AOT executable
     /// has a static batch; a trailing partial chunk is dropped, which is
-    /// deterministic and identical across policies).
+    /// deterministic and identical across policies).  With
+    /// `eval_threads > 1` and a pool attached, contiguous batch slices
+    /// run concurrently; the reduction always walks batches in order, so
+    /// the result is bit-identical for any slice count.
     pub fn evaluate(&self) -> Result<(f32, f32)> {
         let mm = &self.model.mm;
         let e = mm.eval_batch;
         let fl = self.test.feature_len();
         let batches = self.test.len() / e;
         ensure!(batches > 0, "test set smaller than eval batch");
+        let slices = self.opts.eval_threads.clamp(1, batches);
+        let per_batch: Vec<(f32, i32)> = if slices > 1 && self.opts.tasks.is_some() {
+            let tasks = self.opts.tasks.as_ref().expect("checked above").clone();
+            type EvalSlice = Box<dyn FnOnce() -> Result<Vec<(f32, i32)>> + Send>;
+            let mut fns: Vec<EvalSlice> = Vec::with_capacity(slices);
+            for (b0, b1) in pool::chunk_ranges(batches, slices) {
+                let model = Arc::clone(&self.model);
+                let test = Arc::clone(&self.test);
+                let params = Arc::clone(&self.params);
+                fns.push(Box::new(move || {
+                    let mut out = Vec::with_capacity(b1 - b0);
+                    for b in b0..b1 {
+                        let xs = &test.features[b * e * fl..(b + 1) * e * fl];
+                        let ys = &test.labels[b * e..(b + 1) * e];
+                        out.push(model.evaluate(&params, xs, ys)?);
+                    }
+                    // Drop the shared handles before replying so the
+                    // server's params Arc is unique again by the time
+                    // the next round applies its aggregate.
+                    drop(params);
+                    drop(test);
+                    drop(model);
+                    Ok(out)
+                }));
+            }
+            let results = pool::scatter(&tasks, fns)?;
+            let mut per_batch = Vec::with_capacity(batches);
+            for r in results {
+                per_batch.extend(r?);
+            }
+            per_batch
+        } else {
+            let mut out = Vec::with_capacity(batches);
+            for b in 0..batches {
+                let xs = &self.test.features[b * e * fl..(b + 1) * e * fl];
+                let ys = &self.test.labels[b * e..(b + 1) * e];
+                out.push(self.model.evaluate(&self.params, xs, ys)?);
+            }
+            out
+        };
+        // Fixed-order reduction over batches — identical for any
+        // eval_threads value (and to the pre-parallel serial loop).
         let mut loss_sum = 0.0f64;
         let mut correct = 0i64;
-        for b in 0..batches {
-            let xs = &self.test.features[b * e * fl..(b + 1) * e * fl];
-            let ys = &self.test.labels[b * e..(b + 1) * e];
-            let (ls, cc) = self.model.evaluate(&self.params, xs, ys)?;
+        for &(ls, cc) in &per_batch {
             loss_sum += ls as f64;
             correct += cc as i64;
         }
@@ -327,7 +548,7 @@ pub fn hash_f32_bits(xs: &[f32]) -> u64 {
 struct PoolClient {
     id: u32,
     state: Option<ClientState>,
-    jobs: Sender<Job>,
+    jobs: Sender<Task>,
     pending: Option<Receiver<Result<(ClientState, Update)>>>,
     up_bytes: u64,
     down_bytes: u64,
@@ -342,13 +563,13 @@ impl PoolClient {
                 .context("client already has a round in flight")?;
             let (tx, rx) = channel();
             self.jobs
-                .send(Job {
+                .send(Task::Round(Job {
                     state,
                     round: *round,
                     params: Arc::clone(params),
                     losses: *losses,
                     reply: tx,
-                })
+                }))
                 .ok()
                 .context("worker pool hung up")?;
             self.pending = Some(rx);
@@ -461,14 +682,19 @@ impl Session {
     ) -> Result<RunReport> {
         let root = Rng::new(self.cfg.seed);
         let threads = self.cfg.resolved_threads(self.train_shards.len());
-        // Declared before `clients` so the clients (holding job senders)
-        // drop first and the pool's Drop can join its workers.
+        // Declared before `server` and `clients` so both (holding task
+        // senders) drop first and the pool's Drop can join its workers.
         let pool = WorkerPool::new(threads, Arc::clone(&self.model));
         let mut server = Server::new(
-            &self.model,
+            Arc::clone(&self.model),
             Arc::clone(&self.test),
             self.cfg.seed as u32,
-            self.cfg.aggregate,
+            ServerOpts {
+                aggregate: self.cfg.aggregate,
+                agg_shards: self.cfg.resolved_agg_shards(threads),
+                eval_threads: self.cfg.resolved_eval_threads(threads),
+                tasks: Some(pool.sender()),
+            },
         )?;
         let mut clients: Vec<Box<dyn ClientHandle + '_>> = self
             .train_shards
@@ -511,6 +737,7 @@ impl Session {
         }
         let params_hash = server.params_hash();
         drop(clients);
+        drop(server);
         Ok(RunReport {
             label: self.cfg.label(),
             model: self.cfg.model.clone(),

@@ -10,7 +10,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use super::client::ClientState;
-use super::server::{ClientHandle, Server};
+use super::pool::WorkerPool;
+use super::server::{ClientHandle, Server, ServerOpts};
 use crate::config::RunConfig;
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
@@ -63,8 +64,15 @@ pub fn serve(
     mut observer: impl FnMut(u32, &RoundRecord),
 ) -> Result<RunReport> {
     let runtime = Runtime::new(&cfg.artifacts_dir)?;
-    let model = runtime.load_model(&cfg.model)?;
+    let model = Arc::new(runtime.load_model(&cfg.model)?);
     let n = model.mm.n_clients;
+    // Server-side pool: the remote workers own their round compute, so
+    // these threads only serve the server's stages (the recv/decode
+    // pipeline, the sharded accumulator fold, eval slices) — sized by
+    // cores, not cohort.  Declared before `server` so the server's
+    // task sender drops first and the pool can join its workers.
+    let server_threads = cfg.resolved_server_threads();
+    let pool = WorkerPool::new(server_threads, Arc::clone(&model));
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     crate::info!("serve", "listening on {addr}, waiting for {n} workers");
 
@@ -95,7 +103,17 @@ pub fn serve(
         ensure!(c.id() == i as u32, "duplicate or missing client ids");
     }
 
-    let mut server = Server::new(&model, Arc::new(test), cfg.seed as u32, cfg.aggregate)?;
+    let mut server = Server::new(
+        Arc::clone(&model),
+        Arc::new(test),
+        cfg.seed as u32,
+        ServerOpts {
+            aggregate: cfg.aggregate,
+            agg_shards: cfg.resolved_agg_shards(server_threads),
+            eval_threads: cfg.resolved_eval_threads(server_threads),
+            tasks: Some(pool.sender()),
+        },
+    )?;
     let mut rounds = Vec::with_capacity(cfg.rounds);
     for m in 0..cfg.rounds {
         let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;

@@ -22,26 +22,39 @@
 //! persistent worker pool ([`coordinator::pool`]); the thread count is
 //! the `threads` knob in [`config::RunConfig`] (default: min(n_clients,
 //! cores)).  The broadcast is zero-copy — global parameters live in an
-//! `Arc<[f32]>`, the `Broadcast` message is encoded once per round — and
-//! the server folds updates with a streaming decode-aggregate
-//! ([`config::AggregateMode::Streaming`], the default): each update is
-//! decoded into a round-persistent scratch and its weighted dequantized
-//! delta is accumulated directly, so no `n x d` codes matrix is ever
-//! materialized.  The fused XLA aggregate executable remains available
-//! as [`config::AggregateMode::Fused`] — prefer it when a hardware
+//! `Arc<[f32]>`, the `Broadcast` message is encoded once per round.
+//!
+//! The **server's** three hot stages scale on the same pool (both
+//! in-process and under `feddq serve`):
+//!
+//! * **recv/decode pipeline** — each arriving `ClientUpdate` is handed
+//!   to a worker the moment it lands, decoding into round-persistent
+//!   scratch buffers while the server blocks on the next reply;
+//! * **sharded accumulator** — the `d`-length streaming fold splits
+//!   into contiguous per-worker chunk ranges (`agg_shards`; 0 = follow
+//!   the pool), each shard folding clients in sorted order, so no
+//!   `n x d` matrix is needed and the fold scales with cores;
+//! * **parallel eval** — test batches split into per-worker slices
+//!   (`eval_threads`; 0 = follow the pool), reduced in fixed batch
+//!   order.
+//!
+//! Per-stage wall times land in every `RoundRecord`
+//! (`recv_decode_secs` / `agg_secs` / `eval_secs`).  The fused XLA
+//! aggregate executable remains available as
+//! [`config::AggregateMode::Fused`] — prefer it when a hardware
 //! backend makes the single fused dispatch cheaper than the streaming
-//! fold; prefer streaming for low memory traffic and allocation-free
-//! steady state on CPU.
+//! fold.
 //!
 //! ### Determinism contract
 //!
 //! A run is a pure function of its [`config::RunConfig`]: for any
-//! `threads` value the engine produces a bit-identical
-//! [`metrics::RunReport`] (per-round records, bit ledger, and the final
-//! parameter hash).  This holds because client states own independently
-//! derived RNG streams, jobs move client state to exactly one worker at
-//! a time, and
-//! the server sorts updates by `client_id` before folding them in fixed
+//! `threads`, `agg_shards` or `eval_threads` value the engine produces
+//! a bit-identical [`metrics::RunReport`] (per-round records, bit
+//! ledger, and the final parameter hash).  This holds because client
+//! states own independently derived RNG streams, jobs move client
+//! state to exactly one worker at a time, the server sorts updates by
+//! `client_id` before folding them in fixed order within every
+//! accumulator shard, and eval reduces per-batch partials in batch
 //! order.  `rust/tests/parallel_determinism.rs` enforces the contract.
 //!
 //! ## Quick tour

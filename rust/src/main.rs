@@ -40,6 +40,8 @@ COMMON TRAIN FLAGS:
   --target-acc <f>      stop at this test accuracy             [off]
   --threads <n>         client worker threads (0 = cores)      [0]
   --aggregate <streaming|fused>  server aggregation path       [streaming]
+  --agg-shards <n>      accumulator shards (0 = pool, 1 = serial) [0]
+  --eval-threads <n>    server eval slices (0 = pool, 1 = serial)  [0]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)

@@ -29,6 +29,13 @@ pub struct RoundRecord {
     pub seg_ranges: Vec<f32>,
     /// Wall-clock seconds spent in this round.
     pub wall_secs: f64,
+    /// Seconds in the receive stage; with a pool attached, update
+    /// decoding is pipelined into the same window.
+    pub recv_decode_secs: f64,
+    /// Seconds folding the (sharded) accumulator and applying it.
+    pub agg_secs: f64,
+    /// Seconds in server-side evaluation (0 when the round skipped it).
+    pub eval_secs: f64,
 }
 
 impl RoundRecord {
@@ -78,11 +85,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -91,7 +98,10 @@ impl RunReport {
                 r.cum_uplink_bits,
                 r.mean_bits,
                 r.mean_range,
-                r.wall_secs
+                r.wall_secs,
+                r.recv_decode_secs,
+                r.agg_secs,
+                r.eval_secs
             ));
         }
         out
@@ -128,6 +138,9 @@ impl RunReport {
                                     ),
                                 ),
                                 ("wall_secs", Json::from(r.wall_secs)),
+                                ("recv_decode_secs", Json::from(r.recv_decode_secs)),
+                                ("agg_secs", Json::from(r.agg_secs)),
+                                ("eval_secs", Json::from(r.eval_secs)),
                             ])
                         })
                         .collect(),
@@ -170,6 +183,9 @@ mod tests {
             mean_range: 0.1,
             seg_ranges: vec![0.1, 0.2],
             wall_secs: 0.5,
+            recv_decode_secs: 0.2,
+            agg_secs: 0.1,
+            eval_secs: 0.05,
         }
     }
 

@@ -158,7 +158,27 @@ impl Manifest {
     /// `python/compile/configs.py` bakes (784 → 128 → 10, d = 101770,
     /// tau = 5, B = 32, E = 500, 10 clients).  The `files` entries are
     /// placeholders — the native executor needs no HLO.
+    ///
+    /// `FEDDQ_NATIVE_CLIENTS` overrides the cohort size (>= 1); it
+    /// exists for smoke tests that spawn one real process/thread per
+    /// manifest client (e.g. CI runs the TCP example with 2 workers)
+    /// and must be set identically on server and workers, which share
+    /// all other shapes regardless.
     pub fn builtin() -> Manifest {
+        let n_clients = std::env::var("FEDDQ_NATIVE_CLIENTS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(10);
+        if n_clients != 10 {
+            // Loud: a forgotten export changes sharding (and thus every
+            // native-backend result) for all later runs in this shell.
+            crate::warn_!(
+                "manifest",
+                "FEDDQ_NATIVE_CLIENTS={n_clients} overrides the built-in cohort of 10 \
+                 (smoke-test knob — unset it for normal runs)"
+            );
+        }
         let (din, hidden, classes) = (28 * 28, 128, 10);
         let segments = vec![
             Segment {
@@ -201,7 +221,7 @@ impl Manifest {
             tau: 5,
             batch: 32,
             eval_batch: 500,
-            n_clients: 10,
+            n_clients,
             files,
         };
         mlp.validate().expect("builtin manifest is well-formed");

@@ -39,7 +39,7 @@ pub struct Runtime {
     artifacts_dir: String,
     from_artifacts: bool,
     #[cfg(feature = "pjrt")]
-    client: Option<xla::PjRtClient>,
+    client: Option<pjrt::xla::PjRtClient>,
 }
 
 impl Runtime {
@@ -67,7 +67,7 @@ impl Runtime {
             from_artifacts,
             #[cfg(feature = "pjrt")]
             client: if from_artifacts {
-                Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?)
+                Some(pjrt::xla::PjRtClient::cpu().context("creating PJRT CPU client")?)
             } else {
                 None
             },
@@ -89,7 +89,7 @@ impl Runtime {
 
     /// Compile one HLO-text artifact (PJRT backend only).
     #[cfg(feature = "pjrt")]
-    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn compile(&self, file: &str) -> Result<pjrt::xla::PjRtLoadedExecutable> {
         let client = self
             .client
             .as_ref()

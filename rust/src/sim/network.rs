@@ -143,6 +143,9 @@ mod tests {
             mean_range: 0.1,
             seg_ranges: vec![],
             wall_secs: 1.0,
+            recv_decode_secs: 0.5,
+            agg_secs: 0.2,
+            eval_secs: 0.1,
         }
     }
 

@@ -1,8 +1,9 @@
 //! The parallel round engine's determinism contract: for any worker
-//! thread count the in-process `Session` must produce a bit-identical
-//! `RunReport` — same round records, same bit ledger, same final
-//! parameter hash.  Also pins the streaming-vs-fused aggregation
-//! equivalence on the mlp config.
+//! thread count, accumulator shard count and eval slice count the
+//! in-process `Session` must produce a bit-identical `RunReport` —
+//! same round records, same bit ledger, same final parameter hash.
+//! Also pins the streaming-vs-fused aggregation equivalence on the mlp
+//! config.
 
 use feddq::config::{AggregateMode, RunConfig};
 use feddq::coordinator::Session;
@@ -73,6 +74,51 @@ fn determinism_holds_under_error_feedback_and_fixed_bits() {
     b.policy = PolicyConfig::Fixed { bits: 2 };
     b.error_feedback = true;
     assert_reports_identical(&run(a), &run(b), "EF threads=1 vs threads=3");
+}
+
+#[test]
+fn sharded_aggregation_matches_serial_fold() {
+    // Sharding splits the accumulator into contiguous element ranges;
+    // per-element arithmetic and client order are unchanged, so any
+    // shard count must reproduce the serial fold bit for bit — down to
+    // params_hash.
+    let mut serial = mlp_cfg(2);
+    serial.agg_shards = 1;
+    let mut sharded = mlp_cfg(2);
+    sharded.agg_shards = 5; // deliberately != threads and != clients
+    assert_reports_identical(&run(serial), &run(sharded), "agg_shards=1 vs 5");
+}
+
+#[test]
+fn parallel_eval_matches_serial_eval() {
+    // Multi-batch test set so eval actually splits across slices; the
+    // reduction walks batches in order, so slice count cannot matter.
+    let mut serial = mlp_cfg(2);
+    serial.test_size = 1500; // three eval batches
+    serial.eval_threads = 1;
+    let mut parallel = mlp_cfg(2);
+    parallel.test_size = 1500;
+    parallel.eval_threads = 4; // clamps to 3 slices internally
+    assert_reports_identical(&run(serial), &run(parallel), "eval_threads=1 vs 4");
+}
+
+#[test]
+fn fully_parallel_server_matches_fully_serial_server() {
+    // The whole matrix at once: threads x shards x eval slices against
+    // the all-serial configuration.
+    let mut serial = mlp_cfg(1);
+    serial.test_size = 1000;
+    serial.agg_shards = 1;
+    serial.eval_threads = 1;
+    let mut parallel = mlp_cfg(4);
+    parallel.test_size = 1000;
+    parallel.agg_shards = 3;
+    parallel.eval_threads = 2;
+    assert_reports_identical(
+        &run(serial),
+        &run(parallel),
+        "serial server vs threads=4/agg_shards=3/eval_threads=2",
+    );
 }
 
 #[test]

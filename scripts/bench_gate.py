@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the flat BENCH_*.json maps.
+
+Compares a freshly generated bench JSON against the committed baseline
+and fails (exit 1) when any tracked *throughput* row regresses more
+than the tolerance (default 30%, override with BENCH_GATE_TOLERANCE,
+e.g. 0.30).
+
+Gating policy, chosen to keep CI signal high on shared runners:
+
+* ``*_gbps`` keys (higher is better) are **gated**: fresh must be at
+  least ``baseline * (1 - tolerance)``.
+* ``*_secs`` and ``*_speedup*`` keys are **informational only** — raw
+  wall times on shared CI hardware are too noisy to fail a build on,
+  and speedups divide two noisy numbers.
+* Baseline values that are zero or negative are treated as *unseeded*:
+  reported, never failed.  This bootstraps the gate on a machine class
+  that has not produced a calibrated baseline yet; commit a real bench
+  run's JSON to arm it.
+* A **gated** (``*_gbps``) row with an armed baseline that is missing
+  from the fresh run **fails**: renaming or deleting a bench must come
+  with a baseline update, otherwise coverage would silently disappear.
+  Missing informational rows only warn.
+* Keys present only in the fresh run are new rows — reported, passing.
+
+Usage:
+    bench_gate.py --baseline path/to/committed.json --fresh path/to/new.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        sys.exit(f"{path}: expected a flat JSON object of name -> number")
+    return {k: v for k, v in data.items() if isinstance(v, (int, float))}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True, help="freshly generated JSON")
+    args = ap.parse_args()
+
+    tolerance = float(os.environ.get("BENCH_GATE_TOLERANCE", "0.30"))
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+
+    failures = []
+    print(f"== bench gate: {args.fresh} vs {args.baseline} (tolerance {tolerance:.0%}) ==")
+    for key in sorted(set(baseline) | set(fresh)):
+        b = baseline.get(key)
+        f = fresh.get(key)
+        if f is None:
+            if key.endswith("_gbps") and b is not None and b > 0:
+                failures.append((key, b, None))
+                print(f"  FAIL     {key}: armed baseline row missing from fresh run (update the baseline if the bench was renamed/removed)")
+            else:
+                print(f"  MISSING  {key}: in baseline but not regenerated")
+            continue
+        if b is None:
+            print(f"  NEW      {key}: {f:.4g}")
+            continue
+        if not key.endswith("_gbps"):
+            print(f"  INFO     {key}: {b:.4g} -> {f:.4g}")
+            continue
+        if b <= 0:
+            print(f"  UNSEEDED {key}: baseline {b:.4g}, fresh {f:.4g} (commit a calibrated baseline to arm)")
+            continue
+        floor = b * (1.0 - tolerance)
+        if f < floor:
+            failures.append((key, b, f))
+            print(f"  FAIL     {key}: {f:.4g} GB/s < {floor:.4g} (baseline {b:.4g}, -{(1 - f / b):.0%})")
+        else:
+            print(f"  OK       {key}: {b:.4g} -> {f:.4g} GB/s ({(f / b - 1):+.0%})")
+
+    if failures:
+        print(f"\n{len(failures)} throughput row(s) regressed more than {tolerance:.0%} or went missing")
+        sys.exit(1)
+    gated = [k for k in baseline if k.endswith("_gbps")]
+    if gated and all(baseline[k] <= 0 for k in gated):
+        print("\nWARNING: every gated row is unseeded — the regression gate is UNARMED.")
+        print("Commit a calibrated bench run's JSON as the baseline to arm it.")
+    print("\nbench gate passed")
+
+
+if __name__ == "__main__":
+    main()
