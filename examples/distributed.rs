@@ -11,6 +11,12 @@
 //! backend — no `make artifacts` required.  One worker is spawned per
 //! manifest client; CI smokes the topology with
 //! `FEDDQ_NATIVE_CLIENTS=2` and `--rounds 2`.
+//!
+//! All scheduler knobs flow through: `--agg-shards`, `--eval-threads`,
+//! `--decode-buffers` (bounded decode pool) and `--fold-overlap`
+//! (per-shard prefix folds overlapping straggler arrivals — active
+//! over TCP from round 1, once the server has learned every worker's
+//! sample count).
 
 use feddq::cli::{run_config_from_args, Args};
 use feddq::coordinator::topology;
@@ -46,7 +52,10 @@ fn main() -> anyhow::Result<()> {
         rt.load_model(&cfg.model)?.mm.n_clients as u32
     };
 
-    println!("spawning {n} TCP workers + server on {addr}");
+    println!(
+        "spawning {n} TCP workers + server on {addr} (fold_overlap={}, decode_buffers={})",
+        cfg.fold_overlap, cfg.decode_buffers
+    );
     let workers: Vec<_> = (0..n)
         .map(|id| {
             let addr = addr.clone();

@@ -1,24 +1,29 @@
 //! L3 hot-path micro-benchmarks: the pure-Rust wire work (bit packing,
 //! unpacking, message encode/decode, CRC framing), the server's sharded
-//! accumulator fold and parallel eval, plus end-to-end federated rounds
-//! at threads=1 vs threads=4 — the parallel round engine's headline
-//! number.  §Perf targets: pack/unpack >= 1 GB/s per core; >= 2x
-//! s/round at threads=4 on a multi-core host.
+//! accumulator fold and parallel eval, the two-lane scheduler's
+//! in-process decode overlap (priority lane vs single-FIFO), plus
+//! end-to-end federated rounds at threads=1 vs threads=4 and fold
+//! overlap on vs off — the parallel round engine's headline numbers.
+//! §Perf targets: pack/unpack >= 1 GB/s per core; >= 2x s/round at
+//! threads=4 on a multi-core host; priority-lane decode completion
+//! beating the FIFO baseline whenever round jobs are queued.
 //!
 //! Emits `BENCH_hotpath.json` (name -> GB/s and s/round) so the perf
 //! trajectory is tracked across PRs; CI's `bench-smoke` job gates on
 //! the `_gbps` rows regressing vs the committed baseline.
 
+use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::time::Instant;
 
 use feddq::bench_support as bs;
 use feddq::config::{AggregateMode, RunConfig};
 use feddq::coordinator::codec::{self, QuantPlan};
-use feddq::coordinator::pool::{self, Task, WorkerPool};
+use feddq::coordinator::pool::{self, Task, TaskFn, WorkerPool};
 use feddq::coordinator::{Server, ServerOpts, Session};
 use feddq::data::{self, DatasetKind};
 use feddq::quant::PolicyConfig;
-use feddq::runtime::Runtime;
+use feddq::runtime::{ModelRuntime, Runtime};
 use feddq::util::bench::{bench_header, black_box, Bencher};
 use feddq::util::rng::Rng;
 use feddq::wire::bitpack::{BitReader, BitWriter};
@@ -26,7 +31,7 @@ use feddq::wire::frame;
 use feddq::wire::messages::{Message, SegmentHeader, Update};
 
 /// One e2e run at `threads` workers; returns s/round.
-fn e2e_round_secs(threads: usize, rounds: usize) -> anyhow::Result<f64> {
+fn e2e_round_secs(threads: usize, rounds: usize, fold_overlap: bool) -> anyhow::Result<f64> {
     let setup = bs::setup_for("mlp");
     let mut cfg = RunConfig::default_for("mlp");
     cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
@@ -35,6 +40,7 @@ fn e2e_round_secs(threads: usize, rounds: usize) -> anyhow::Result<f64> {
     cfg.test_size = 500;
     cfg.eval_every = 1000; // isolate the round path from eval
     cfg.threads = threads;
+    cfg.fold_overlap = fold_overlap;
     let t0 = std::time::Instant::now();
     let mut session = Session::new(cfg)?;
     let setup_secs = t0.elapsed().as_secs_f64();
@@ -43,7 +49,7 @@ fn e2e_round_secs(threads: usize, rounds: usize) -> anyhow::Result<f64> {
     let run_secs = t1.elapsed().as_secs_f64();
     let per_round = run_secs / report.rounds.len() as f64;
     println!(
-        "threads={threads}: setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
+        "threads={threads} fold_overlap={fold_overlap}: setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
         setup_secs,
         report.rounds.len(),
         run_secs,
@@ -52,6 +58,68 @@ fn e2e_round_secs(threads: usize, rounds: usize) -> anyhow::Result<f64> {
         session.manifest().tau,
     );
     Ok(per_round)
+}
+
+/// In-process recv/decode overlap: median time until the last of
+/// `n_dec` decode tasks finishes when they arrive *behind* `n_round`
+/// already-queued round jobs.  `priority = true` is the two-lane
+/// scheduler (decodes jump the queue on the server lane); `false`
+/// replays the old single-FIFO behavior by queueing the decodes on the
+/// round lane, where they wait for every round job to start first.
+fn decode_overlap_secs(
+    pool: &WorkerPool,
+    model: &Arc<ModelRuntime>,
+    update: &Arc<Update>,
+    priority: bool,
+    reps: usize,
+) -> f64 {
+    let tasks = pool.sender();
+    let n_round = 8usize;
+    let n_dec = 4usize;
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (rtx, rrx) = channel::<()>();
+        let (dtx, drx) = channel::<()>();
+        let t0 = Instant::now();
+        for _ in 0..n_round {
+            let model = Arc::clone(model);
+            let u = Arc::clone(update);
+            let rtx = rtx.clone();
+            // A round-job stand-in: ~4 decode-equivalents of compute.
+            tasks
+                .send(Task::RoundExec(Box::new(move || {
+                    let mut buf = codec::DecodedUpdate::new();
+                    for _ in 0..4 {
+                        codec::decode_update_into(&model.mm, &u, &mut buf).unwrap();
+                    }
+                    let _ = rtx.send(());
+                })))
+                .unwrap();
+        }
+        for _ in 0..n_dec {
+            let model = Arc::clone(model);
+            let u = Arc::clone(update);
+            let dtx = dtx.clone();
+            let f: TaskFn = Box::new(move || {
+                let mut buf = codec::DecodedUpdate::new();
+                codec::decode_update_into(&model.mm, &u, &mut buf).unwrap();
+                let _ = dtx.send(());
+            });
+            tasks
+                .send(if priority { Task::Exec(f) } else { Task::RoundExec(f) })
+                .unwrap();
+        }
+        for _ in 0..n_dec {
+            drx.recv().unwrap();
+        }
+        samples.push(t0.elapsed().as_secs_f64());
+        // Drain the round jobs before the next repetition.
+        for _ in 0..n_round {
+            rrx.recv().unwrap();
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
 }
 
 fn main() -> anyhow::Result<()> {
@@ -148,7 +216,7 @@ fn main() -> anyhow::Result<()> {
     });
     json.push(("agg_fold_serial_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
     let pool = WorkerPool::new(4, Arc::clone(&model));
-    let tasks: std::sync::mpsc::Sender<Task> = pool.sender();
+    let tasks = pool.sender();
     let shards = 4usize;
     let shared: Arc<Vec<codec::DecodedUpdate>> = Arc::new(std::mem::take(&mut decs));
     let ws: Arc<Vec<f32>> = Arc::new(vec![w; n_agg]);
@@ -186,6 +254,8 @@ fn main() -> anyhow::Result<()> {
             aggregate: AggregateMode::Streaming,
             agg_shards: 1,
             eval_threads: 4,
+            fold_overlap: false,
+            decode_buffers: 0,
             tasks: Some(pool.sender()),
         },
     )?;
@@ -197,10 +267,44 @@ fn main() -> anyhow::Result<()> {
     drop(server_serial);
     drop(tasks);
 
+    bench_header("two-lane scheduler: in-process decode overlap (priority vs FIFO)");
+    // Decode tasks landing behind 8 queued round jobs: the priority
+    // lane must finish them well before the single-FIFO baseline, which
+    // makes them wait for every round job to start first.
+    let ov_update = {
+        let levels = vec![255u32; mm.num_segments()];
+        let ranges = vec![1.0f32; mm.num_segments()];
+        let plan = QuantPlan::new(&levels, &ranges);
+        let codes: Vec<f32> = (0..mm.d).map(|j| (j % 256) as f32).collect();
+        let mins = vec![-0.5f32; mm.num_segments()];
+        let (headers, payload) = codec::encode_quantized(&mm, &plan, &mins, &codes);
+        Arc::new(Update {
+            round: 0,
+            client_id: 0,
+            num_samples: 100,
+            train_loss: 0.0,
+            segments: headers,
+            payload,
+        })
+    };
+    let reps = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 5 } else { 15 };
+    let fifo = decode_overlap_secs(&pool, &model, &ov_update, false, reps);
+    let prio = decode_overlap_secs(&pool, &model, &ov_update, true, reps);
+    let overlap_speedup = fifo / prio.max(1e-12);
+    println!(
+        "last-decode latency behind 8 round jobs: FIFO {:.2} ms vs priority lane {:.2} ms = {overlap_speedup:.2}x",
+        fifo * 1e3,
+        prio * 1e3,
+    );
+    json.push(("inproc_decode_fifo_secs".into(), fifo));
+    json.push(("inproc_decode_priority_secs".into(), prio));
+    json.push(("inproc_decode_overlap_speedup".into(), overlap_speedup));
+
     bench_header("end-to-end federated rounds (mlp, 10 clients, in-proc)");
     let rounds = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 3 } else { 6 };
-    let t1 = e2e_round_secs(1, rounds)?;
-    let t4 = e2e_round_secs(4, rounds)?;
+    let t1 = e2e_round_secs(1, rounds, true)?;
+    let t4 = e2e_round_secs(4, rounds, true)?;
+    let t4_no_overlap = e2e_round_secs(4, rounds, false)?;
     let speedup = t1 / t4;
     println!(
         "round engine speedup threads=4 vs threads=1: {speedup:.2}x ({} cores available)",
@@ -209,6 +313,8 @@ fn main() -> anyhow::Result<()> {
     json.push(("e2e_round_secs_threads1".into(), t1));
     json.push(("e2e_round_secs_threads4".into(), t4));
     json.push(("e2e_round_speedup_t4_vs_t1".into(), speedup));
+    json.push(("e2e_round_secs_threads4_no_fold_overlap".into(), t4_no_overlap));
+    json.push(("fold_overlap_speedup".into(), t4_no_overlap / t4.max(1e-12)));
 
     bs::write_bench_json("hotpath", &json);
     Ok(())

@@ -150,6 +150,12 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(t) = args.get_parse::<usize>("eval-threads")? {
         cfg.eval_threads = t;
     }
+    if let Some(b) = args.get_parse::<usize>("decode-buffers")? {
+        cfg.decode_buffers = b;
+    }
+    if let Some(f) = args.get_parse::<bool>("fold-overlap")? {
+        cfg.fold_overlap = f;
+    }
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -192,7 +198,8 @@ mod tests {
         let a = Args::parse(&argv(
             "--model cnn4 --policy adaquantfl:4 --rounds 12 --lr 0.05 \
              --sharding dirichlet:0.5 --target-acc 0.8 --threads 4 \
-             --aggregate fused --agg-shards 6 --eval-threads 2",
+             --aggregate fused --agg-shards 6 --eval-threads 2 \
+             --decode-buffers 3 --fold-overlap false",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -204,6 +211,8 @@ mod tests {
         assert_eq!(cfg.aggregate, crate::config::AggregateMode::Fused);
         assert_eq!(cfg.agg_shards, 6);
         assert_eq!(cfg.eval_threads, 2);
+        assert_eq!(cfg.decode_buffers, 3);
+        assert!(!cfg.fold_overlap);
         a.finish().unwrap();
     }
 

@@ -86,6 +86,20 @@ pub struct RunConfig {
     /// batches in a fixed order, so any value yields a bit-identical
     /// `RunReport`.
     pub eval_threads: usize,
+    /// Decode-buffer bound for the recv/decode pipeline; 0 = unbounded
+    /// (one buffer per client, the historical behavior).  With fold
+    /// overlap active this is a hard cap on live `DecodedUpdate`
+    /// buffers — the pipeline's memory becomes O(workers + k) instead
+    /// of O(n_clients) — otherwise it caps buffers retained between
+    /// rounds.  Any value yields a bit-identical `RunReport`.
+    pub decode_buffers: usize,
+    /// Overlap the sharded accumulator fold with still-arriving updates
+    /// (per-shard prefix folds in sorted client order; on by default).
+    /// Requires the streaming aggregate and a pool; falls back to the
+    /// after-barrier fold otherwise.  Per-element arithmetic and fold
+    /// order are unchanged, so either setting yields a bit-identical
+    /// `RunReport`.
+    pub fold_overlap: bool,
 }
 
 impl RunConfig {
@@ -118,6 +132,8 @@ impl RunConfig {
             aggregate: AggregateMode::Streaming,
             agg_shards: 0,
             eval_threads: 0,
+            decode_buffers: 0,
+            fold_overlap: true,
         }
     }
 
@@ -207,6 +223,8 @@ impl RunConfig {
             ("aggregate", Json::from(self.aggregate.label())),
             ("agg_shards", Json::from(self.agg_shards)),
             ("eval_threads", Json::from(self.eval_threads)),
+            ("decode_buffers", Json::from(self.decode_buffers)),
+            ("fold_overlap", Json::from(self.fold_overlap)),
         ])
     }
 
@@ -251,6 +269,10 @@ impl RunConfig {
             // absent in pre-sharding configs: auto everywhere
             agg_shards: j.get("agg_shards").and_then(Json::as_usize).unwrap_or(0),
             eval_threads: j.get("eval_threads").and_then(Json::as_usize).unwrap_or(0),
+            // absent in pre-scheduler configs: unbounded buffers,
+            // overlap on (bit-identical to the old after-barrier fold)
+            decode_buffers: j.get("decode_buffers").and_then(Json::as_usize).unwrap_or(0),
+            fold_overlap: j.get("fold_overlap").and_then(Json::as_bool).unwrap_or(true),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -297,6 +319,8 @@ mod tests {
         c.aggregate = AggregateMode::Fused;
         c.agg_shards = 8;
         c.eval_threads = 3;
+        c.decode_buffers = 4;
+        c.fold_overlap = false;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
@@ -328,12 +352,16 @@ mod tests {
             o.remove("aggregate");
             o.remove("agg_shards");
             o.remove("eval_threads");
+            o.remove("decode_buffers");
+            o.remove("fold_overlap");
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.threads, 0);
         assert_eq!(back.aggregate, AggregateMode::Streaming);
         assert_eq!(back.agg_shards, 0);
         assert_eq!(back.eval_threads, 0);
+        assert_eq!(back.decode_buffers, 0);
+        assert!(back.fold_overlap);
     }
 
     #[test]

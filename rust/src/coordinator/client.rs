@@ -120,11 +120,13 @@ impl ClientState {
         let (mins, ranges) = model.ranges(&delta)?;
         self.last_ranges = ranges.iter().map(|&r| r.max(0.0)).collect();
 
-        // 3. policy decision
+        // 3. policy decision (mins + ranges = the exact per-segment
+        // envelope, so whole-model policies see the true global range)
         let decision = self.policy.decide(&PolicyInputs {
             round,
             client_id: self.id,
             ranges: &self.last_ranges,
+            mins: &mins,
             initial_loss: losses.map(|(f0, _)| f0),
             prev_loss: losses.map(|(_, fm)| fm),
         });

@@ -348,6 +348,46 @@ mod tests {
     }
 
     #[test]
+    fn prop_quant_plan_finite_for_degenerate_ranges() {
+        use crate::util::prop::{check, Gen};
+        // Frozen/blown-up layers report ranges of 0, subnormals, inf or
+        // NaN: the plan must collapse those segments (sinv = step = 0)
+        // and never leak a non-finite scale into the quantize kernel.
+        check("quant-plan-degenerate", 100, |g: &mut Gen| {
+            let l = g.size(1, 8);
+            let levels: Vec<u32> = g.vec_of(l, |g| g.int(0, 65_535) as u32);
+            let ranges: Vec<f32> = g.vec_of(l, |g| match g.int(0, 5) {
+                0 => 0.0,
+                1 => 1.0e-40, // subnormal: below RANGE_EPS, must collapse
+                2 => f32::INFINITY,
+                3 => f32::NAN,
+                4 => -g.f32(0.0, 1.0),
+                _ => g.f32(1e-6, 10.0),
+            });
+            let plan = QuantPlan::new(&levels, &ranges);
+            for i in 0..l {
+                if !plan.sinv[i].is_finite() || !plan.step[i].is_finite() {
+                    return Err(format!(
+                        "segment {i}: non-finite plan (sinv {}, step {}) for range {}",
+                        plan.sinv[i], plan.step[i], ranges[i]
+                    ));
+                }
+                if plan.levels[i] < 1 || plan.maxcode[i] < 1.0 {
+                    return Err(format!("segment {i}: degenerate level"));
+                }
+                let degenerate = !(ranges[i] > RANGE_EPS && ranges[i].is_finite());
+                if degenerate && (plan.sinv[i] != 0.0 || plan.step[i] != 0.0) {
+                    return Err(format!(
+                        "segment {i}: range {} must collapse, got sinv {}",
+                        ranges[i], plan.sinv[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn truncated_payload_rejected() {
         let m = mm();
         let plan = QuantPlan::new(&[255, 255], &[1.0, 1.0]);

@@ -1,4 +1,5 @@
-//! Persistent worker pool shared by the round engine's two sides.
+//! Persistent worker pool shared by the round engine's two sides — now a
+//! **two-lane scheduler**.
 //!
 //! The single-process `Session` used to run every client's local round
 //! sequentially on the session thread; with tau SGD steps per client
@@ -8,17 +9,43 @@
 //! [`RunConfig`](crate::config::RunConfig); default min(n_clients,
 //! cores)).
 //!
-//! The same workers also execute the **server's** hot stages as generic
-//! [`Task::Exec`] closures: update decoding pipelined with receive,
-//! the sharded accumulator fold, and evaluation batch slices (see
-//! [`super::server`]).  One pool, two kinds of work — server tasks are
-//! only submitted at points where no client job can be waiting on them
-//! (decode after a client replied, fold/eval after all replies), so the
-//! shared queue cannot deadlock.
+//! ## Two lanes
+//!
+//! The same workers also execute the **server's** hot stages: update
+//! decoding pipelined with receive, the sharded accumulator fold
+//! (including the per-client prefix folds of the fold-overlap path),
+//! and evaluation batch slices (see [`super::server`]).  Those server
+//! tasks land in a **priority lane** that every worker drains before
+//! pulling the next client round job from the **round lane**:
+//!
+//! * [`Task::Exec`] → priority lane (server work: decode, fold, eval);
+//! * [`Task::Round`] / [`Task::RoundExec`] → round lane (client work).
+//!
+//! Queue-jumping is what lets an in-process decode overlap the
+//! *remaining* receives of a round instead of sitting FIFO behind
+//! not-yet-started round jobs (TCP mode always overlapped fully because
+//! its pool has no round jobs; in-process mode now matches it).
+//!
+//! The lanes cannot deadlock or starve each other: a running task is
+//! never preempted, priority tasks are self-contained compute (they
+//! never block on round results or submit round jobs), and the server
+//! only produces priority work in response to *completed* round work —
+//! each client reply spawns at most one decode plus a bounded number of
+//! fold/eval tasks — so the priority lane drains between arrivals and
+//! round jobs always get workers back.
+//!
+//! ## Worker survival
+//!
+//! Task execution is wrapped in `catch_unwind`: a panicking task no
+//! longer kills its worker thread (which silently shrank the pool and
+//! surfaced as a generic "pool worker died" at the collector).  The
+//! worker survives and the panic payload is reported to the submitter
+//! as a task-level `Err` — [`scatter`] callers get it in their result,
+//! round jobs get it on their reply channel.
 //!
 //! ## Determinism contract
 //!
-//! Scheduling is work-stealing (a shared job queue), so *which* worker
+//! Scheduling is work-stealing (two shared queues), so *which* worker
 //! runs a client or server task, and in what order tasks complete, is
 //! nondeterministic — but the results are not:
 //!
@@ -31,14 +58,17 @@
 //!   submission order so sharded reductions reassemble deterministically.
 //!
 //! A round therefore produces a bit-identical `RunReport` for any
-//! thread count, shard count or eval slice count, which
-//! `rust/tests/parallel_determinism.rs` asserts.
+//! thread count, shard count, eval slice count, decode-buffer bound or
+//! fold-overlap setting, which `rust/tests/parallel_determinism.rs`
+//! asserts.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::client::ClientState;
 use super::codec::{self, DecodedUpdate};
@@ -54,41 +84,119 @@ pub struct Job {
     pub reply: Sender<Result<(ClientState, Update)>>,
 }
 
-/// A unit of pool work: a client local round, or an arbitrary
-/// server-side closure (update decode, shard fold, eval slice).
+/// A boxed pool closure.
+pub type TaskFn = Box<dyn FnOnce() + Send + 'static>;
+
+/// A unit of pool work.  The variant selects the lane: `Exec` is server
+/// work and goes to the priority lane; `Round` (a client local round)
+/// and `RoundExec` (an arbitrary closure standing in for client-side
+/// work — benches and tests) go to the round lane.
 pub enum Task {
     Round(Job),
-    Exec(Box<dyn FnOnce() + Send + 'static>),
+    Exec(TaskFn),
+    RoundExec(TaskFn),
+}
+
+/// The two task lanes plus the live-sender count used for shutdown.
+struct Lanes {
+    /// Priority lane: server tasks (decode, folds, eval slices).
+    server: VecDeque<Task>,
+    /// Round lane: client round jobs.
+    rounds: VecDeque<Task>,
+    /// Live [`TaskSender`] handles; workers exit once this hits zero
+    /// *and* both lanes are drained (in-flight work always finishes).
+    senders: usize,
+}
+
+/// The shared two-lane queue.
+struct TwoLaneQueue {
+    state: Mutex<Lanes>,
+    available: Condvar,
+}
+
+impl TwoLaneQueue {
+    fn lock(&self) -> MutexGuard<'_, Lanes> {
+        // Tasks never run under the lock and panics never escape
+        // `run_task`, so poisoning is unreachable; recover anyway.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A cloneable submission handle onto the pool's two lanes.  Dropping
+/// the last handle shuts the pool down once the lanes drain.
+pub struct TaskSender {
+    q: Arc<TwoLaneQueue>,
+}
+
+impl Clone for TaskSender {
+    fn clone(&self) -> TaskSender {
+        self.q.lock().senders += 1;
+        TaskSender { q: Arc::clone(&self.q) }
+    }
+}
+
+impl Drop for TaskSender {
+    fn drop(&mut self) {
+        let mut st = self.q.lock();
+        st.senders -= 1;
+        if st.senders == 0 {
+            drop(st);
+            // Wake every worker so they can observe the shutdown.
+            self.q.available.notify_all();
+        }
+    }
+}
+
+impl TaskSender {
+    /// Enqueue a task on its lane.  Never blocks; the queue is unbounded
+    /// (back-pressure comes from the submitters' own reply channels).
+    pub fn send(&self, task: Task) -> Result<()> {
+        {
+            let mut st = self.q.lock();
+            match task {
+                Task::Exec(_) => st.server.push_back(task),
+                Task::Round(_) | Task::RoundExec(_) => st.rounds.push_back(task),
+            }
+        }
+        self.q.available.notify_one();
+        Ok(())
+    }
 }
 
 /// Fixed-size pool of workers sharing one [`ModelRuntime`].
 pub struct WorkerPool {
-    tasks: Option<Sender<Task>>,
+    tasks: Option<TaskSender>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn `threads` workers (>= 1) over a shared task queue.
+    /// Spawn `threads` workers (>= 1) over the shared two-lane queue.
     pub fn new(threads: usize, model: Arc<ModelRuntime>) -> WorkerPool {
         let threads = threads.max(1);
-        let (tx, rx) = channel::<Task>();
-        let rx = Arc::new(Mutex::new(rx));
+        let q = Arc::new(TwoLaneQueue {
+            state: Mutex::new(Lanes {
+                server: VecDeque::new(),
+                rounds: VecDeque::new(),
+                senders: 1, // the pool's own handle below
+            }),
+            available: Condvar::new(),
+        });
         let workers = (0..threads)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let q = Arc::clone(&q);
                 let model = Arc::clone(&model);
                 std::thread::Builder::new()
                     .name(format!("feddq-round-{i}"))
-                    .spawn(move || worker_loop(&rx, &model))
+                    .spawn(move || worker_loop(&q, &model))
                     .expect("spawn round worker")
             })
             .collect();
-        WorkerPool { tasks: Some(tx), workers }
+        WorkerPool { tasks: Some(TaskSender { q }), workers }
     }
 
     /// A submission handle callers keep without borrowing the pool;
     /// tasks queue on it and round results arrive on each job's `reply`.
-    pub fn sender(&self) -> Sender<Task> {
+    pub fn sender(&self) -> TaskSender {
         self.tasks.as_ref().expect("pool alive").clone()
     }
 }
@@ -125,7 +233,7 @@ pub fn chunk_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
 /// shard drops its `Arc` clones before replying, so once this returns
 /// the caller holds the only reference to `decoded`/`weights`.
 pub fn sharded_fold(
-    tasks: &Sender<Task>,
+    tasks: &TaskSender,
     model: &Arc<ModelRuntime>,
     decoded: &Arc<Vec<DecodedUpdate>>,
     weights: &Arc<Vec<f32>>,
@@ -162,33 +270,44 @@ pub fn sharded_fold(
     Ok((ranges, folded))
 }
 
-/// Run `fns` on the pool and return their results **in submission
-/// order** (the caller's reduction order stays deterministic however
-/// the workers interleave).  Blocks the calling thread, which
+/// Render a panic payload's message (the common `&str`/`String` cases).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `fns` on the pool's priority lane and return their results **in
+/// submission order** (the caller's reduction order stays deterministic
+/// however the workers interleave).  Blocks the calling thread, which
 /// contributes no work of its own — the pool executes everything.
-pub fn scatter<T, F>(tasks: &Sender<Task>, fns: Vec<F>) -> Result<Vec<T>>
+///
+/// A panicking closure does not kill its worker; it surfaces here as an
+/// `Err` carrying the panic payload's message.
+pub fn scatter<T, F>(tasks: &TaskSender, fns: Vec<F>) -> Result<Vec<T>>
 where
     T: Send + 'static,
     F: FnOnce() -> T + Send + 'static,
 {
     let n = fns.len();
-    let (tx, rx) = channel::<(usize, T)>();
+    let (tx, rx) = channel::<(usize, std::result::Result<T, String>)>();
     for (i, f) in fns.into_iter().enumerate() {
         let tx = tx.clone();
-        tasks
-            .send(Task::Exec(Box::new(move || {
-                let v = f();
-                let _ = tx.send((i, v));
-            })))
-            .ok()
-            .context("worker pool hung up")?;
+        tasks.send(Task::Exec(Box::new(move || {
+            let v = catch_unwind(AssertUnwindSafe(f)).map_err(|p| panic_message(&*p));
+            let _ = tx.send((i, v));
+        })))?;
     }
     drop(tx);
     let mut out: Vec<Option<T>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     for _ in 0..n {
-        let (i, v) = rx.recv().context("pool worker died (panicked?)")?;
-        out[i] = Some(v);
+        let (i, v) = rx.recv().context("pool worker died")?;
+        out[i] = Some(v.map_err(|msg| anyhow!("pool task panicked: {msg}"))?);
     }
     Ok(out
         .into_iter()
@@ -196,35 +315,81 @@ where
         .collect())
 }
 
-fn worker_loop(rx: &Mutex<Receiver<Task>>, model: &ModelRuntime) {
+fn worker_loop(q: &TwoLaneQueue, model: &ModelRuntime) {
     loop {
         // Hold the lock only for the dequeue, never across a task.
-        let task = match rx.lock() {
-            Ok(guard) => guard.recv(),
-            Err(_) => return, // a sibling panicked mid-dequeue
-        };
-        let task = match task {
-            Ok(t) => t,
-            Err(_) => return, // all senders dropped: shut down
-        };
-        match task {
-            Task::Round(job) => {
-                let Job { mut state, round, params, losses, reply } = job;
-                let result = state
-                    .process_round(model, round, &params, losses)
-                    .map(|update| (state, update));
-                // A dropped receiver just means the session gave up on
-                // the round.
-                let _ = reply.send(result);
+        let task = {
+            let mut st = q.lock();
+            loop {
+                // Priority lane first: server tasks jump the queue so
+                // decode/fold/eval never wait behind unstarted rounds.
+                if let Some(t) = st.server.pop_front() {
+                    break t;
+                }
+                if let Some(t) = st.rounds.pop_front() {
+                    break t;
+                }
+                if st.senders == 0 {
+                    return; // all senders gone and lanes drained
+                }
+                st = q.available.wait(st).unwrap_or_else(|e| e.into_inner());
             }
-            Task::Exec(f) => f(),
+        };
+        run_task(task, model);
+    }
+}
+
+/// Execute one task, containing any panic to a task-level error so the
+/// worker thread survives.
+fn run_task(task: Task, model: &ModelRuntime) {
+    match task {
+        Task::Round(job) => {
+            let Job { state, round, params, losses, reply } = job;
+            let result = catch_unwind(AssertUnwindSafe(move || {
+                let mut state = state;
+                state
+                    .process_round(model, round, &params, losses)
+                    .map(|update| (state, update))
+            }))
+            .unwrap_or_else(|p| Err(anyhow!("client round panicked: {}", panic_message(&*p))));
+            // A dropped receiver just means the session gave up on the
+            // round.
+            let _ = reply.send(result);
+        }
+        // Exec closures that need to report a panic payload wrap
+        // themselves (see `scatter` and the server's decode/fold
+        // tasks); this outer catch is the backstop that keeps the
+        // worker alive either way.
+        Task::Exec(f) | Task::RoundExec(f) => {
+            let _ = catch_unwind(AssertUnwindSafe(f));
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Drop the pool's own sender, then wait for in-flight tasks to
+        // finish.  (Anyone holding `sender()` clones — pool clients,
+        // the server — must be dropped first or the workers keep
+        // serving them; the session and the TCP server both declare the
+        // pool before those holders, so the holders drop first.)
+        self.tasks.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::chunk_ranges;
+    use super::*;
+    use crate::runtime::{Manifest, ModelRuntime};
+
+    fn test_pool(threads: usize) -> WorkerPool {
+        let mm = Manifest::builtin().models.get("mlp").unwrap().clone();
+        let model = Arc::new(ModelRuntime::load_native(mm).unwrap());
+        WorkerPool::new(threads, model)
+    }
 
     #[test]
     fn chunk_ranges_partition_exactly() {
@@ -244,18 +409,87 @@ mod tests {
             }
         }
     }
-}
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        // Close the queue, then wait for in-flight tasks to finish.
-        // (Anyone holding `sender()` clones — pool clients, the server —
-        // must be dropped first or the workers keep serving them; the
-        // session and the TCP server both declare the pool before those
-        // holders, so the holders drop first.)
-        self.tasks.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    #[test]
+    fn panicking_task_reports_err_and_worker_survives() {
+        let pool = test_pool(1);
+        let tasks = pool.sender();
+        // One good closure, one that panics: the panic must come back
+        // as a task-level Err carrying the payload message...
+        let boom: Box<dyn FnOnce() -> i32 + Send> = Box::new(|| panic!("boom in task"));
+        let err = scatter(&tasks, vec![boom]).unwrap_err();
+        assert!(format!("{err:#}").contains("boom in task"), "{err:#}");
+        // ...and the single worker must still be alive to run new work.
+        let ok = scatter(&tasks, vec![|| 41 + 1]).unwrap();
+        assert_eq!(ok, vec![42]);
+    }
+
+    #[test]
+    fn round_lane_panic_reports_on_reply_channel() {
+        let pool = test_pool(1);
+        let tasks = pool.sender();
+        let (tx, rx) = channel::<&'static str>();
+        tasks
+            .send(Task::RoundExec(Box::new(|| panic!("round-side boom"))))
+            .unwrap();
+        // Worker survived the round-lane panic: this closure still runs.
+        tasks
+            .send(Task::RoundExec(Box::new(move || {
+                let _ = tx.send("alive");
+            })))
+            .unwrap();
+        assert_eq!(rx.recv().unwrap(), "alive");
+    }
+
+    #[test]
+    fn priority_lane_jumps_ahead_of_queued_round_work() {
+        let pool = test_pool(1);
+        let tasks = pool.sender();
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+
+        // Occupy the single worker until released, so the next two
+        // submissions are both *queued* (not running).
+        let (started_tx, started_rx) = channel::<()>();
+        let (release_tx, release_rx) = channel::<()>();
+        tasks
+            .send(Task::RoundExec(Box::new(move || {
+                let _ = started_tx.send(());
+                let _ = release_rx.recv();
+            })))
+            .unwrap();
+        started_rx.recv().unwrap();
+
+        // Round-lane work enqueued FIRST, priority work SECOND ...
+        let o1 = Arc::clone(&order);
+        tasks
+            .send(Task::RoundExec(Box::new(move || {
+                o1.lock().unwrap().push("round");
+            })))
+            .unwrap();
+        let o2 = Arc::clone(&order);
+        let (done_tx, done_rx) = channel::<()>();
+        tasks
+            .send(Task::Exec(Box::new(move || {
+                o2.lock().unwrap().push("server");
+                let _ = done_tx.send(());
+            })))
+            .unwrap();
+
+        release_tx.send(()).unwrap();
+        done_rx.recv().unwrap();
+        // ... yet the priority task ran first.
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got[0], "server", "priority lane must jump the round queue: {got:?}");
+        // Let the round task finish before the pool drops.
+        drop(tasks);
+    }
+
+    #[test]
+    fn scatter_preserves_submission_order() {
+        let pool = test_pool(3);
+        let tasks = pool.sender();
+        let fns: Vec<_> = (0..20).map(|i| move || i * 2).collect();
+        let out = scatter(&tasks, fns).unwrap();
+        assert_eq!(out, (0..20).map(|i| i * 2).collect::<Vec<_>>());
     }
 }

@@ -13,13 +13,27 @@
 //!   clients have dropped their references).
 //! * **Receive and decode are pipelined** when a pool is attached
 //!   ([`ServerOpts::tasks`]): each arriving `ClientUpdate` is handed to
-//!   a worker the moment it lands, decoding into a round-persistent
-//!   [`codec::DecodedUpdate`] buffer while the server blocks on the
-//!   next client's reply.  Updates are then ordered by `client_id`.
-//!   In TCP mode the pool has nothing else to do, so decode overlaps
-//!   receive fully; in-process, decode tasks share one FIFO queue with
-//!   the round jobs and so only overlap the *tail* of the round (a
-//!   priority lane for server tasks is a noted future lever).
+//!   a worker the moment it lands, on the pool's **priority lane**, so
+//!   in-process decodes jump ahead of not-yet-started round jobs and
+//!   overlap the receive window fully (matching TCP mode).  Updates are
+//!   then ordered by `client_id`.
+//! * **Fold overlap** ([`ServerOpts::fold_overlap`], on by default):
+//!   when every client's sample count is known before the round (always
+//!   in-process; from round 1 over TCP), aggregation weights are fixed
+//!   up front and each accumulator shard folds the next client in
+//!   sorted order *as soon as its decode lands* — per-shard prefix
+//!   folds that overlap the still-arriving updates.  The fold order and
+//!   per-element arithmetic are exactly those of the after-barrier
+//!   sharded fold, so results stay bit-identical.  A client's decode
+//!   buffer is recycled the moment every shard has folded it, which
+//!   bounds the pipeline's live memory and enables:
+//! * **Bounded decode buffers** ([`ServerOpts::decode_buffers`]): with
+//!   fold overlap active, at most `k` decode buffers are ever allocated
+//!   (`0` = unbounded, the historical behavior); the receive loop
+//!   blocks for a recycled buffer while still servicing decode/fold
+//!   completions, so progress is always possible.  Without fold overlap
+//!   every decoded row must survive until aggregation, so there the
+//!   knob only caps how many buffers are *retained* between rounds.
 //! * **Aggregation** folds the decoded updates into the `d`-length
 //!   accumulator.  With `agg_shards > 1` the accumulator is split into
 //!   contiguous per-worker chunk ranges and the decode-free fold runs
@@ -34,23 +48,30 @@
 //!   loop for any slice count.
 //!
 //! All paths visit updates in ascending `client_id` order, so reports
-//! are bit-identical across thread counts, shard counts and eval slice
-//! counts (enforced by `rust/tests/parallel_determinism.rs`).  Across
-//! the two aggregation *modes*, equality holds element-for-element on
-//! the native backend (same fixed-order f32 arithmetic); a
-//! hardware-backed fused kernel may reduce in a different order and is
-//! only guaranteed close, not bit-equal (see
-//! `streaming_and_fused_aggregation_agree`).
+//! are bit-identical across thread counts, shard counts, eval slice
+//! counts, decode-buffer bounds and fold-overlap settings (enforced by
+//! `rust/tests/parallel_determinism.rs`).  Across the two aggregation
+//! *modes*, equality holds element-for-element on the native backend
+//! (same fixed-order f32 arithmetic); a hardware-backed fused kernel
+//! may reduce in a different order and is only guaranteed close, not
+//! bit-equal (see `streaming_and_fused_aggregation_agree`).
+//!
+//! Timing note: with fold overlap active the shard folds execute inside
+//! the receive window, so `recv_decode_secs` absorbs most of the fold
+//! work and `agg_secs` shrinks to the final chunk application — that
+//! shift *is* the overlap win.
 
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use super::client::ClientState;
 use super::codec;
-use super::pool::{self, Job, Task, WorkerPool};
+use super::pool::{self, Job, Task, TaskSender, WorkerPool};
 use crate::config::{AggregateMode, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
@@ -72,6 +93,14 @@ pub trait ClientHandle {
         self.send(msg)
     }
     fn recv_update(&mut self) -> Result<Update>;
+    /// The client's dataset size, when known *before* its update
+    /// arrives (the fold-overlap path needs aggregation weights up
+    /// front).  In-process handles know it from construction; remote
+    /// handles return `None` and the server learns it from the first
+    /// round's updates.
+    fn num_samples(&self) -> Option<u32> {
+        None
+    }
     /// Cumulative uplink bytes (client -> server), framed size.
     fn uplink_bytes(&self) -> u64;
     /// Cumulative downlink bytes (server -> client), framed size.
@@ -89,15 +118,188 @@ pub struct ServerOpts {
     /// Worker slices for server-side eval batches (>= 1); 1 = serial.
     /// Bit-identical results for any value.
     pub eval_threads: usize,
+    /// Overlap the sharded fold with still-arriving updates (per-shard
+    /// prefix folds in sorted client order).  Requires a pool, the
+    /// streaming aggregate and known sample counts; silently falls back
+    /// to the after-barrier fold otherwise.  Bit-identical either way.
+    pub fold_overlap: bool,
+    /// Decode-buffer bound for the recv/decode pipeline: with fold
+    /// overlap active at most this many `DecodedUpdate` buffers are
+    /// ever live (0 = unbounded, one per client).  Without fold overlap
+    /// it only caps the buffers retained between rounds.  Bit-identical
+    /// results for any value.
+    pub decode_buffers: usize,
     /// Pool handle for server-side stages (decode pipeline, shard fold,
     /// eval slices); `None` runs the server fully serial.
-    pub tasks: Option<Sender<Task>>,
+    pub tasks: Option<TaskSender>,
 }
 
 impl ServerOpts {
     /// Fully serial server (no pool): the pre-parallel behavior.
     pub fn serial(aggregate: AggregateMode) -> ServerOpts {
-        ServerOpts { aggregate, agg_shards: 1, eval_threads: 1, tasks: None }
+        ServerOpts {
+            aggregate,
+            agg_shards: 1,
+            eval_threads: 1,
+            fold_overlap: false,
+            decode_buffers: 0,
+            tasks: None,
+        }
+    }
+}
+
+/// What the fold-overlap receive returns: updates in sorted-id order
+/// plus the fully folded accumulator as `(ranges, chunks)`.
+type OverlappedRound = (Vec<Update>, Vec<(usize, usize)>, Vec<Vec<f32>>);
+
+/// Events of the fold-overlap receive loop: a finished decode or a
+/// shard's finished per-client prefix fold.  Errors (including panic
+/// payload messages) travel in-band so the orchestrator can fail fast.
+enum OverlapEv {
+    /// `pos` is the client's position in sorted-id fold order.
+    Decoded(usize, DecodeReply),
+    /// Shard index plus its chunk buffer back for the next fold.
+    Folded(usize, std::result::Result<Vec<f32>, String>),
+}
+
+/// What a pipelined decode task replies with: the update plus its
+/// decoded row, or a task-level error message (decode failure or panic
+/// payload) — shared by both the plain pipeline and the overlap path.
+type DecodeReply = std::result::Result<(Update, codec::DecodedUpdate), String>;
+
+/// Run one update's decode inside a pool task, containing panics: the
+/// body of every pipelined decode closure.
+fn decode_task(model: &ModelRuntime, u: Update, mut buf: codec::DecodedUpdate) -> DecodeReply {
+    let cid = u.client_id;
+    let out = catch_unwind(AssertUnwindSafe(move || {
+        let res = codec::decode_update_into(&model.mm, &u, &mut buf)
+            .map_err(|e| format!("decoding update from client {cid}: {e:#}"));
+        (u, buf, res)
+    }));
+    match out {
+        Ok((u, buf, Ok(()))) => Ok((u, buf)),
+        Ok((_, _, Err(m))) => Err(m),
+        Err(p) => Err(format!("decode task panicked: {}", pool::panic_message(&*p))),
+    }
+}
+
+/// Bookkeeping for one fold-overlap round (see
+/// [`Server::recv_fold_overlapped`]).
+struct OverlapState<'a> {
+    tasks: &'a TaskSender,
+    tx: &'a Sender<OverlapEv>,
+    model: &'a Arc<ModelRuntime>,
+    /// Aggregation weight per sorted client position.
+    weights: &'a [f32],
+    /// Accumulator chunk range per shard.
+    ranges: &'a [(usize, usize)],
+    /// Decoded rows by sorted position (None = not yet decoded or
+    /// already fully folded and recycled).
+    bufs: Vec<Option<Arc<codec::DecodedUpdate>>>,
+    /// Updates by sorted position.
+    updates: Vec<Option<Update>>,
+    decoded: Vec<bool>,
+    /// Leading run of decoded clients — the fold-eligible prefix.
+    decoded_prefix: usize,
+    /// Shards that have folded each client (recycle at == ranges.len()).
+    folds_done: Vec<usize>,
+    /// Next client each shard will fold.
+    shard_next: Vec<usize>,
+    /// Each shard's chunk buffer when idle (None = fold in flight).
+    shard_chunk: Vec<Option<Vec<f32>>>,
+    /// Recycled decode buffers.
+    free: Vec<codec::DecodedUpdate>,
+    /// Buffers allocated so far (the bound's ledger).
+    allocated: usize,
+}
+
+impl OverlapState<'_> {
+    fn n(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Every shard folded every client and returned its chunk.
+    fn complete(&self) -> bool {
+        let n = self.n();
+        self.shard_next.iter().all(|&x| x == n)
+            && self.shard_chunk.iter().all(Option::is_some)
+    }
+
+    /// Absorb one completion event, then dispatch any newly eligible
+    /// per-shard prefix folds.
+    fn process(&mut self, ev: OverlapEv) -> Result<()> {
+        match ev {
+            OverlapEv::Decoded(pos, out) => {
+                let (u, b) = out.map_err(|m| anyhow!("{m}"))?;
+                self.updates[pos] = Some(u);
+                self.bufs[pos] = Some(Arc::new(b));
+                self.decoded[pos] = true;
+                while self.decoded_prefix < self.decoded.len()
+                    && self.decoded[self.decoded_prefix]
+                {
+                    self.decoded_prefix += 1;
+                }
+            }
+            OverlapEv::Folded(s, out) => {
+                let chunk = out.map_err(|m| anyhow!("shard {s} fold failed: {m}"))?;
+                let p = self.shard_next[s];
+                self.shard_next[s] = p + 1;
+                self.shard_chunk[s] = Some(chunk);
+                self.folds_done[p] += 1;
+                if self.folds_done[p] == self.ranges.len() {
+                    // Every shard folded client p: recycle its buffer.
+                    // Each fold task drops its Arc clone before
+                    // replying, so unwrapping succeeds; if a clone ever
+                    // straggled, give the cap a replacement allowance
+                    // instead of deadlocking the acquire loop.
+                    if let Some(arc) = self.bufs[p].take() {
+                        match Arc::try_unwrap(arc) {
+                            Ok(buf) => self.free.push(buf),
+                            Err(_) => self.allocated = self.allocated.saturating_sub(1),
+                        }
+                    }
+                }
+            }
+        }
+        self.dispatch_folds()
+    }
+
+    /// For every idle shard whose next client (in sorted order) is
+    /// decoded, launch its fold on the pool's priority lane.  At most
+    /// one fold per shard is ever in flight, which serializes each
+    /// shard's folds in sorted client order — the determinism argument.
+    fn dispatch_folds(&mut self) -> Result<()> {
+        for s in 0..self.shard_next.len() {
+            let p = self.shard_next[s];
+            if p >= self.decoded_prefix {
+                continue;
+            }
+            let Some(mut chunk) = self.shard_chunk[s].take() else {
+                continue;
+            };
+            let (clo, chi) = self.ranges[s];
+            let dec = Arc::clone(self.bufs[p].as_ref().expect("prefix client decoded"));
+            let w = self.weights[p];
+            let zero = p == 0;
+            let model = Arc::clone(self.model);
+            let tx = self.tx.clone();
+            self.tasks.send(Task::Exec(Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(move || {
+                    if zero {
+                        chunk.clear();
+                        chunk.resize(chi - clo, 0.0);
+                    }
+                    codec::fold_range(&model.mm, &dec, w, clo, chi, &mut chunk);
+                    // Drop the Arc clone *before* replying so the
+                    // orchestrator can recycle the decode buffer.
+                    drop(dec);
+                    chunk
+                }))
+                .map_err(|p| pool::panic_message(&*p));
+                let _ = tx.send(OverlapEv::Folded(s, out));
+            })))?;
+        }
+        Ok(())
     }
 }
 
@@ -110,11 +312,15 @@ pub struct Server {
     initial_loss: Option<f32>,
     prev_loss: Option<f32>,
     cum_uplink_bits: u64,
+    /// Per-client sample counts, learned from handles (in-process) or
+    /// from received updates (TCP, available from round 1) — the
+    /// fold-overlap path needs aggregation weights before updates land.
+    samples_by_id: BTreeMap<u32, u32>,
     // round-persistent scratch (allocation-free steady state)
     dec: codec::DecodedUpdate,
     acc: Vec<f32>,
-    /// Free decode buffers for the recv/decode pipeline (grows to one
-    /// per client, then recycles round over round).
+    /// Free decode buffers for the recv/decode pipeline (recycled round
+    /// over round; retention capped by `decode_buffers`).
     dec_pool: Vec<codec::DecodedUpdate>,
     /// Per-shard chunk accumulators for the sharded fold.
     chunks: Vec<Vec<f32>>,
@@ -136,6 +342,7 @@ impl Server {
             initial_loss: None,
             prev_loss: None,
             cum_uplink_bits: 0,
+            samples_by_id: BTreeMap::new(),
             dec: codec::DecodedUpdate::new(),
             acc: Vec::new(),
             dec_pool: Vec::new(),
@@ -164,6 +371,27 @@ impl Server {
         Arc::get_mut(&mut self.params).expect("unique after copy-on-write")
     }
 
+    /// Aggregation weights in sorted-id order when every client's
+    /// sample count is already known (and positive in total) — the
+    /// precondition for fold overlap.
+    fn fold_plan(&self, clients: &[Box<dyn ClientHandle + '_>]) -> Option<Vec<f32>> {
+        let mut ids: Vec<u32> = clients.iter().map(|c| c.id()).collect();
+        ids.sort_unstable();
+        let mut counts = Vec::with_capacity(ids.len());
+        let mut total: u64 = 0;
+        for id in &ids {
+            let s = *self.samples_by_id.get(id)?;
+            counts.push(s);
+            total += s as u64;
+        }
+        if total == 0 {
+            return None;
+        }
+        // Exactly the non-overlap path's arithmetic: u32 -> f32 over
+        // u64 -> f32, so weights are bit-identical across paths.
+        Some(counts.iter().map(|&s| s as f32 / total as f32).collect())
+    }
+
     /// Drive one round across `clients`; returns the round record.
     pub fn run_round(
         &mut self,
@@ -178,6 +406,14 @@ impl Server {
             "manifest expects {} clients, got {n}",
             self.model.mm.n_clients
         );
+
+        // Handles that know their dataset size up front seed the
+        // fold-overlap weight plan before any update arrives.
+        for c in clients.iter() {
+            if let Some(s) = c.num_samples() {
+                self.samples_by_id.insert(c.id(), s);
+            }
+        }
 
         // Broadcast the global model (+ loss trajectory for AdaQuantFL):
         // one Arc clone per client, one encode per round.
@@ -198,13 +434,24 @@ impl Server {
         drop(encoded);
 
         // Collect updates (blocking per client; pool clients overlap).
-        // With a pool attached and the streaming/sharded fold selected,
-        // each update's decode is dispatched as it lands, overlapping
-        // the remaining receives.
+        // With a pool attached and the streaming fold selected, each
+        // update's decode is dispatched to the priority lane as it
+        // lands; with fold overlap additionally eligible, the sharded
+        // fold itself runs inside this window (prefix folds).
         let t_recv = Instant::now();
         let pipelined =
             self.opts.tasks.is_some() && self.opts.aggregate == AggregateMode::Streaming;
-        let (updates, decoded) = if pipelined {
+        let overlap_plan = if pipelined && self.opts.fold_overlap {
+            self.fold_plan(clients)
+        } else {
+            None
+        };
+        let mut fold_ready: Option<(Vec<(usize, usize)>, Vec<Vec<f32>>)> = None;
+        let (updates, decoded) = if let Some(weights) = overlap_plan {
+            let (ups, ranges, chunks) = self.recv_fold_overlapped(round, clients, &weights)?;
+            fold_ready = Some((ranges, chunks));
+            (ups, Vec::new())
+        } else if pipelined {
             self.recv_decode_pipelined(round, clients)?
         } else {
             let mut updates: Vec<Update> = Vec::with_capacity(n);
@@ -220,10 +467,20 @@ impl Server {
 
         let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
         ensure!(total_samples > 0, "no samples reported");
+        // Remember the counts so TCP cohorts become fold-overlap
+        // eligible from the next round on.
+        for u in &updates {
+            self.samples_by_id.insert(u.client_id, u.num_samples);
+        }
 
-        // Decode + aggregate, then apply (Eq. 4).
+        // Decode + aggregate, then apply (Eq. 4).  Under fold overlap
+        // the folds already happened inside the receive window; only
+        // the chunk application remains here.
         let t_agg = Instant::now();
-        if pipelined {
+        if let Some((ranges, chunks)) = fold_ready {
+            self.apply_chunks(&ranges, &chunks);
+            self.chunks = chunks;
+        } else if pipelined {
             self.aggregate_decoded(&updates, decoded, total_samples)?;
         } else {
             match self.opts.aggregate {
@@ -298,6 +555,17 @@ impl Server {
         })
     }
 
+    /// Add folded per-shard chunks onto the parameters.
+    fn apply_chunks(&mut self, ranges: &[(usize, usize)], chunks: &[Vec<f32>]) {
+        let params = self.params_mut();
+        for (&(clo, chi), chunk) in ranges.iter().zip(chunks) {
+            debug_assert_eq!(chunk.len(), chi - clo);
+            for (p, a) in params[clo..chi].iter_mut().zip(chunk.iter()) {
+                *p += *a;
+            }
+        }
+    }
+
     /// Receive every client's update, dispatching each one's decode to
     /// the pool the moment it arrives (decode overlaps the remaining
     /// receives and the still-running client rounds).  Returns updates
@@ -314,28 +582,22 @@ impl Server {
             .expect("pipelined path requires a pool")
             .clone();
         let n = clients.len();
-        type Reply = (Update, codec::DecodedUpdate, Result<()>);
-        let (tx, rx) = channel::<Reply>();
+        let (tx, rx) = channel::<DecodeReply>();
         for c in clients.iter_mut() {
             let u = c.recv_update()?;
             ensure!(u.round == round, "client {} answered round {} for {round}", c.id(), u.round);
-            let mut buf = self.dec_pool.pop().unwrap_or_default();
+            let buf = self.dec_pool.pop().unwrap_or_default();
             let model = Arc::clone(&self.model);
             let tx = tx.clone();
-            tasks
-                .send(Task::Exec(Box::new(move || {
-                    let res = codec::decode_update_into(&model.mm, &u, &mut buf);
-                    drop(model);
-                    let _ = tx.send((u, buf, res));
-                })))
-                .ok()
-                .context("worker pool hung up")?;
+            tasks.send(Task::Exec(Box::new(move || {
+                let _ = tx.send(decode_task(&model, u, buf));
+            })))?;
         }
         drop(tx);
         let mut pairs: Vec<(Update, codec::DecodedUpdate)> = Vec::with_capacity(n);
         for _ in 0..n {
-            let (u, buf, res) = rx.recv().context("decode worker died (panicked?)")?;
-            res.with_context(|| format!("decoding update from client {}", u.client_id))?;
+            let r = rx.recv().context("decode worker died")?;
+            let (u, buf) = r.map_err(|m| anyhow!("{m}"))?;
             pairs.push((u, buf));
         }
         pairs.sort_by_key(|(u, _)| u.client_id);
@@ -346,6 +608,146 @@ impl Server {
             decoded.push(d);
         }
         Ok((updates, decoded))
+    }
+
+    /// Receive updates while overlapping BOTH decode and the sharded
+    /// fold with still-arriving replies (the fold-overlap path).
+    ///
+    /// Each arriving update's decode goes to the priority lane; as soon
+    /// as the next client in sorted-id order is decoded, every idle
+    /// shard folds it into its chunk ([`OverlapState::dispatch_folds`]).
+    /// `weights` comes from [`Self::fold_plan`] and each update is
+    /// checked against it.  Returns the sorted updates plus the folded
+    /// `(ranges, chunks)` ready to apply.
+    ///
+    /// With `decode_buffers = k > 0` at most `k` decode buffers are
+    /// ever allocated: the receive loop blocks for a recycled buffer
+    /// while continuing to service decode/fold completion events, so
+    /// every held buffer eventually frees and the loop cannot deadlock.
+    fn recv_fold_overlapped(
+        &mut self,
+        round: u32,
+        clients: &mut [Box<dyn ClientHandle + '_>],
+        weights: &[f32],
+    ) -> Result<OverlappedRound> {
+        let tasks = self
+            .opts
+            .tasks
+            .as_ref()
+            .expect("fold overlap requires a pool")
+            .clone();
+        let n = clients.len();
+        let d = self.model.mm.d;
+        let shards = self.opts.agg_shards.clamp(1, d.max(1));
+        let ranges = pool::chunk_ranges(d, shards);
+        let cap = self.opts.decode_buffers;
+
+        // Receive in sorted-id order (not raw handle order): decode
+        // dispatch then matches the fold order, so every buffer held
+        // when the bounded acquire loop blocks belongs to an *earlier*
+        // sorted position whose decode+fold chain completes without
+        // further receives — the no-deadlock argument needs this even
+        // for callers that pass handles unsorted.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| clients[i].id());
+
+        // Recycled chunk buffers, one per shard.
+        let mut chunk_bufs = std::mem::take(&mut self.chunks);
+        while chunk_bufs.len() < ranges.len() {
+            chunk_bufs.push(Vec::new());
+        }
+        chunk_bufs.truncate(ranges.len());
+        let free = std::mem::take(&mut self.dec_pool);
+        let allocated = free.len();
+
+        let (tx, rx) = channel::<OverlapEv>();
+        let mut st = OverlapState {
+            tasks: &tasks,
+            tx: &tx,
+            model: &self.model,
+            weights,
+            ranges: &ranges,
+            bufs: (0..n).map(|_| None).collect(),
+            updates: (0..n).map(|_| None).collect(),
+            decoded: vec![false; n],
+            decoded_prefix: 0,
+            folds_done: vec![0; n],
+            shard_next: vec![0; ranges.len()],
+            shard_chunk: chunk_bufs.into_iter().map(Some).collect(),
+            free,
+            allocated,
+        };
+
+        for (pos, &i) in order.iter().enumerate() {
+            let id = clients[i].id();
+            let u = clients[i].recv_update()?;
+            ensure!(u.round == round, "client {id} answered round {} for {round}", u.round);
+            ensure!(
+                u.client_id == id,
+                "handle {id} delivered an update for client {}",
+                u.client_id
+            );
+            let expect = self
+                .samples_by_id
+                .get(&id)
+                .copied()
+                .context("fold plan lost a client")?;
+            ensure!(
+                u.num_samples == expect,
+                "client {id} reported {} samples but the fold plan used {expect}",
+                u.num_samples
+            );
+
+            // Acquire a decode buffer under the bound, servicing
+            // completions while we wait so held buffers can free.
+            let buf = loop {
+                if let Some(b) = st.free.pop() {
+                    break b;
+                }
+                if cap == 0 || st.allocated < cap {
+                    st.allocated += 1;
+                    break codec::DecodedUpdate::new();
+                }
+                let ev = rx.recv().context("pool worker died mid-overlap")?;
+                st.process(ev)?;
+            };
+
+            // Dispatch the decode on the priority lane.
+            let model = Arc::clone(&self.model);
+            let tx2 = tx.clone();
+            tasks.send(Task::Exec(Box::new(move || {
+                let _ = tx2.send(OverlapEv::Decoded(pos, decode_task(&model, u, buf)));
+            })))?;
+
+            // Opportunistically absorb completions between receives so
+            // folds launch as early as possible.
+            while let Ok(ev) = rx.try_recv() {
+                st.process(ev)?;
+            }
+        }
+
+        // Drain: every decode and every shard's full prefix fold.
+        while !st.complete() {
+            let ev = rx.recv().context("pool worker died mid-overlap")?;
+            st.process(ev)?;
+        }
+
+        let updates: Vec<Update> = st
+            .updates
+            .into_iter()
+            .map(|u| u.expect("all clients decoded"))
+            .collect();
+        let chunks: Vec<Vec<f32>> = st
+            .shard_chunk
+            .into_iter()
+            .map(|c| c.expect("complete() checked"))
+            .collect();
+        let mut free = st.free;
+        if cap > 0 {
+            free.truncate(cap);
+        }
+        self.dec_pool = free;
+        Ok((updates, ranges, chunks))
     }
 
     /// Fold pre-decoded updates into the parameters: sharded across the
@@ -377,7 +779,7 @@ impl Server {
                 *p += a;
             }
             self.acc = acc;
-            self.dec_pool.extend(decoded);
+            self.recycle_decoded(decoded);
             return Ok(());
         }
 
@@ -387,23 +789,24 @@ impl Server {
         let bufs = std::mem::take(&mut self.chunks);
         let (ranges, chunks) =
             pool::sharded_fold(&tasks, &self.model, &shared, &ws, shards, bufs)?;
-        {
-            let params = self.params_mut();
-            for (&(clo, chi), chunk) in ranges.iter().zip(&chunks) {
-                debug_assert_eq!(chunk.len(), chi - clo);
-                for (p, a) in params[clo..chi].iter_mut().zip(chunk.iter()) {
-                    *p += *a;
-                }
-            }
-        }
+        self.apply_chunks(&ranges, &chunks);
         self.chunks = chunks;
         // Every shard dropped its clone before replying, so this always
         // succeeds in practice; on a straggler we just reallocate next
         // round.
         if let Ok(bufs) = Arc::try_unwrap(shared) {
-            self.dec_pool.extend(bufs);
+            self.recycle_decoded(bufs);
         }
         Ok(())
+    }
+
+    /// Return decode buffers to the free pool, respecting the retention
+    /// cap (`decode_buffers`; 0 keeps everything — one per client).
+    fn recycle_decoded(&mut self, bufs: Vec<codec::DecodedUpdate>) {
+        self.dec_pool.extend(bufs);
+        if self.opts.decode_buffers > 0 {
+            self.dec_pool.truncate(self.opts.decode_buffers);
+        }
     }
 
     /// Streaming decode-aggregate (serial, no pool): fold each update's
@@ -548,8 +951,10 @@ pub fn hash_f32_bits(xs: &[f32]) -> u64 {
 struct PoolClient {
     id: u32,
     state: Option<ClientState>,
-    jobs: Sender<Task>,
+    jobs: TaskSender,
     pending: Option<Receiver<Result<(ClientState, Update)>>>,
+    /// Shard size, known at construction (fold-overlap weight plan).
+    samples: u32,
     up_bytes: u64,
     down_bytes: u64,
 }
@@ -562,16 +967,13 @@ impl PoolClient {
                 .take()
                 .context("client already has a round in flight")?;
             let (tx, rx) = channel();
-            self.jobs
-                .send(Task::Round(Job {
-                    state,
-                    round: *round,
-                    params: Arc::clone(params),
-                    losses: *losses,
-                    reply: tx,
-                }))
-                .ok()
-                .context("worker pool hung up")?;
+            self.jobs.send(Task::Round(Job {
+                state,
+                round: *round,
+                params: Arc::clone(params),
+                losses: *losses,
+                reply: tx,
+            }))?;
             self.pending = Some(rx);
         }
         Ok(())
@@ -600,11 +1002,15 @@ impl ClientHandle for PoolClient {
             .context("no update pending (send a Broadcast first)")?;
         let (state, update) = rx
             .recv()
-            .context("round worker died (panicked?)")?
+            .context("round worker died")?
             .with_context(|| format!("client {} round failed", self.id))?;
         self.state = Some(state);
         self.up_bytes += frame::framed_len(1 + messages::update_encoded_len(&update));
         Ok(update)
+    }
+
+    fn num_samples(&self) -> Option<u32> {
+        Some(self.samples)
     }
 
     fn uplink_bytes(&self) -> u64 {
@@ -693,6 +1099,8 @@ impl Session {
                 aggregate: self.cfg.aggregate,
                 agg_shards: self.cfg.resolved_agg_shards(threads),
                 eval_threads: self.cfg.resolved_eval_threads(threads),
+                fold_overlap: self.cfg.fold_overlap,
+                decode_buffers: self.cfg.decode_buffers,
                 tasks: Some(pool.sender()),
             },
         )?;
@@ -714,6 +1122,7 @@ impl Session {
                     )),
                     jobs: pool.sender(),
                     pending: None,
+                    samples: shard.len() as u32,
                     up_bytes: 0,
                     down_bytes: 0,
                 }) as Box<dyn ClientHandle + '_>

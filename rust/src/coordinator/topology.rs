@@ -111,6 +111,11 @@ pub fn serve(
             aggregate: cfg.aggregate,
             agg_shards: cfg.resolved_agg_shards(server_threads),
             eval_threads: cfg.resolved_eval_threads(server_threads),
+            // Remote handles don't know their shard size up front, so
+            // fold overlap kicks in from round 1 (the server learns the
+            // counts from round 0's updates).
+            fold_overlap: cfg.fold_overlap,
+            decode_buffers: cfg.decode_buffers,
             tasks: Some(pool.sender()),
         },
     )?;

@@ -25,37 +25,62 @@
 //! `Arc<[f32]>`, the `Broadcast` message is encoded once per round.
 //!
 //! The **server's** three hot stages scale on the same pool (both
-//! in-process and under `feddq serve`):
+//! in-process and under `feddq serve`), scheduled on a **two-lane
+//! queue** ([`coordinator::pool`]): server tasks (decode, shard folds,
+//! eval slices) go to a *priority lane* that workers drain before
+//! pulling client round jobs from the *round lane*, so an in-process
+//! decode overlaps the remaining receives instead of queueing FIFO
+//! behind not-yet-started rounds.  The lanes cannot starve or deadlock
+//! each other: running tasks are never preempted, priority tasks are
+//! self-contained compute that never blocks on round results, and the
+//! server only produces priority work in response to *completed* round
+//! work (at most one decode plus a bounded number of fold/eval tasks
+//! per client reply), so the priority lane drains between arrivals.
 //!
 //! * **recv/decode pipeline** — each arriving `ClientUpdate` is handed
-//!   to a worker the moment it lands, decoding into round-persistent
-//!   scratch buffers while the server blocks on the next reply;
+//!   to a worker the moment it lands, decoding into recycled scratch
+//!   buffers while the server blocks on the next reply.  With
+//!   `decode_buffers = k > 0` (and fold overlap active) the pipeline's
+//!   live memory is **O(workers + k)** buffers instead of one per
+//!   client; 0 keeps the historical one-per-client behavior;
 //! * **sharded accumulator** — the `d`-length streaming fold splits
 //!   into contiguous per-worker chunk ranges (`agg_shards`; 0 = follow
 //!   the pool), each shard folding clients in sorted order, so no
-//!   `n x d` matrix is needed and the fold scales with cores;
+//!   `n x d` matrix is needed and the fold scales with cores.  With
+//!   `fold_overlap` (on by default) each shard folds the next client
+//!   in sorted order *as its decode lands* — per-shard prefix folds
+//!   that overlap straggler arrivals — and a client's decode buffer is
+//!   recycled the moment every shard has folded it;
 //! * **parallel eval** — test batches split into per-worker slices
 //!   (`eval_threads`; 0 = follow the pool), reduced in fixed batch
 //!   order.
 //!
 //! Per-stage wall times land in every `RoundRecord`
-//! (`recv_decode_secs` / `agg_secs` / `eval_secs`).  The fused XLA
-//! aggregate executable remains available as
+//! (`recv_decode_secs` / `agg_secs` / `eval_secs`; under fold overlap
+//! the fold work shifts into the receive window by design).  The fused
+//! XLA aggregate executable remains available as
 //! [`config::AggregateMode::Fused`] — prefer it when a hardware
 //! backend makes the single fused dispatch cheaper than the streaming
 //! fold.
 //!
+//! Worker threads survive panicking tasks (`catch_unwind` around every
+//! task): the panic payload surfaces as a task-level `Err` at the
+//! submitter instead of silently shrinking the pool.
+//!
 //! ### Determinism contract
 //!
 //! A run is a pure function of its [`config::RunConfig`]: for any
-//! `threads`, `agg_shards` or `eval_threads` value the engine produces
-//! a bit-identical [`metrics::RunReport`] (per-round records, bit
-//! ledger, and the final parameter hash).  This holds because client
-//! states own independently derived RNG streams, jobs move client
-//! state to exactly one worker at a time, the server sorts updates by
-//! `client_id` before folding them in fixed order within every
-//! accumulator shard, and eval reduces per-batch partials in batch
-//! order.  `rust/tests/parallel_determinism.rs` enforces the contract.
+//! `threads`, `agg_shards`, `eval_threads`, `decode_buffers` or
+//! `fold_overlap` value the engine produces a bit-identical
+//! [`metrics::RunReport`] (per-round records, bit ledger, and the
+//! final parameter hash).  This holds because client states own
+//! independently derived RNG streams, jobs move client state to
+//! exactly one worker at a time, the server folds updates in sorted
+//! `client_id` order within every accumulator shard (the overlap path
+//! serializes each shard's prefix folds in that same order, with the
+//! same up-front weights), and eval reduces per-batch partials in
+//! batch order.  `rust/tests/parallel_determinism.rs` enforces the
+//! contract.
 //!
 //! ## Quick tour
 //!

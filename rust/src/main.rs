@@ -42,6 +42,8 @@ COMMON TRAIN FLAGS:
   --aggregate <streaming|fused>  server aggregation path       [streaming]
   --agg-shards <n>      accumulator shards (0 = pool, 1 = serial) [0]
   --eval-threads <n>    server eval slices (0 = pool, 1 = serial)  [0]
+  --decode-buffers <n>  decode-buffer bound (0 = one per client)   [0]
+  --fold-overlap <bool> overlap the shard fold with receives       [true]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)

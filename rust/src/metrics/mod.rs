@@ -30,7 +30,9 @@ pub struct RoundRecord {
     /// Wall-clock seconds spent in this round.
     pub wall_secs: f64,
     /// Seconds in the receive stage; with a pool attached, update
-    /// decoding is pipelined into the same window.
+    /// decoding is pipelined into the same window, and with fold
+    /// overlap the sharded fold itself also runs here (so `agg_secs`
+    /// shrinks to the chunk application — that shift is the overlap).
     pub recv_decode_secs: f64,
     /// Seconds folding the (sharded) accumulator and applying it.
     pub agg_secs: f64,
@@ -124,8 +126,12 @@ impl RunReport {
                                 ("train_loss", Json::from(r.train_loss as f64)),
                                 ("test_loss", Json::from(r.test_loss as f64)),
                                 ("test_acc", Json::from(r.test_accuracy as f64)),
-                                ("uplink_bits", Json::from(r.uplink_bits as f64)),
-                                ("cum_uplink_bits", Json::from(r.cum_uplink_bits as f64)),
+                                // decimal strings, not numbers: Json's
+                                // f64 backing loses exactness above 2^53
+                                // and long large-model runs get there —
+                                // same fix as params_hash's hex string
+                                ("uplink_bits", u64_json(r.uplink_bits)),
+                                ("cum_uplink_bits", u64_json(r.cum_uplink_bits)),
                                 ("mean_bits", Json::from(r.mean_bits as f64)),
                                 ("mean_range", Json::from(r.mean_range as f64)),
                                 (
@@ -159,6 +165,26 @@ impl RunReport {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_json().to_string_pretty().as_bytes())?;
         Ok(())
+    }
+}
+
+/// A u64 counter as JSON, exact at any magnitude: emitted as a decimal
+/// string because [`Json`] numbers are f64-backed and lose integer
+/// exactness above 2^53 (the same reason `params_hash` is a hex
+/// string).  Parse back with [`json_u64`].
+pub fn u64_json(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Read a counter written by [`u64_json`]; also accepts plain numbers
+/// (pre-exactness reports) when they are exactly representable.
+pub fn json_u64(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse().ok(),
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+            Some(*n as u64)
+        }
+        _ => None,
     }
 }
 
@@ -235,5 +261,29 @@ mod tests {
     #[test]
     fn gbits_scale() {
         assert!((gbits(2_070_000_000) - 2.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bit_counters_round_trip_exactly_above_2_53() {
+        // (1 << 60) + 1 is NOT representable in f64: the old
+        // `as f64` emission silently rounded it.  The decimal-string
+        // emission must survive a parse round-trip bit for bit.
+        let big: u64 = (1u64 << 60) + 1;
+        assert_ne!(big as f64 as u64, big, "test value must exceed f64 exactness");
+        let mut r = record(0, 0.5, big);
+        r.uplink_bits = big - 7;
+        let rep = RunReport {
+            label: "big".into(),
+            model: "mlp".into(),
+            rounds: vec![r],
+            params_hash: 1,
+        };
+        let parsed = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        let row = &parsed.get("rounds").unwrap().as_arr().unwrap()[0];
+        assert_eq!(json_u64(row.get("uplink_bits").unwrap()), Some(big - 7));
+        assert_eq!(json_u64(row.get("cum_uplink_bits").unwrap()), Some(big));
+        // Legacy numeric rows still parse when exact.
+        assert_eq!(json_u64(&Json::Num(1024.0)), Some(1024));
+        assert_eq!(json_u64(&Json::Num(0.5)), None);
     }
 }

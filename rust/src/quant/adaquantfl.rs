@@ -67,6 +67,7 @@ mod tests {
             round: 1,
             client_id: 0,
             ranges: &[0.1, 0.2],
+            mins: &[0.0, 0.0],
             initial_loss: f0,
             prev_loss: fm,
         }

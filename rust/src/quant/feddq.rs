@@ -71,10 +71,12 @@ impl QuantPolicy for FedDq {
                 })
                 .collect(),
             Granularity::Whole => {
-                // Range of the whole update = max over segments of the
-                // segment ranges' envelope; we approximate with the max
-                // segment range (exact when segments share the extremes).
-                let r = inputs.ranges.iter().copied().fold(0.0f32, f32::max);
+                // Range of the whole update: the exact global envelope
+                // over the per-segment (min, range) pairs.  The old
+                // max-segment-range approximation under-sized the range
+                // whenever segment extremes didn't coincide (e.g. one
+                // segment all-negative, another all-positive).
+                let r = math::whole_range(inputs.mins, inputs.ranges);
                 let bits = math::feddq_bits(r, self.resolution, self.max_bits);
                 let s = math::max_level_for_bits(bits);
                 vec![s; inputs.ranges.len()]
@@ -88,11 +90,12 @@ impl QuantPolicy for FedDq {
 mod tests {
     use super::*;
 
-    fn inputs(ranges: &[f32]) -> PolicyInputs {
+    fn inputs<'a>(mins: &'a [f32], ranges: &'a [f32]) -> PolicyInputs<'a> {
         PolicyInputs {
             round: 0,
             client_id: 0,
             ranges,
+            mins,
             initial_loss: None,
             prev_loss: None,
         }
@@ -101,7 +104,7 @@ mod tests {
     #[test]
     fn per_segment_levels_follow_ranges() {
         let mut p = FedDq::new(0.005);
-        let d = p.decide(&inputs(&[1.0, 0.01, 0.0]));
+        let d = p.decide(&inputs(&[0.0, 0.0, 0.0], &[1.0, 0.01, 0.0]));
         let levels = d.levels.unwrap();
         assert_eq!(levels.len(), 3);
         assert_eq!(math::bits_for_level(levels[0]), 8);
@@ -113,14 +116,14 @@ mod tests {
     fn descends_as_ranges_shrink() {
         let mut p = FedDq::new(0.005);
         let early: u32 = p
-            .decide(&inputs(&[0.8, 0.6]))
+            .decide(&inputs(&[0.0, 0.0], &[0.8, 0.6]))
             .levels
             .unwrap()
             .iter()
             .map(|&s| math::bits_for_level(s))
             .sum();
         let late: u32 = p
-            .decide(&inputs(&[0.05, 0.02]))
+            .decide(&inputs(&[0.0, 0.0], &[0.05, 0.02]))
             .levels
             .unwrap()
             .iter()
@@ -132,16 +135,71 @@ mod tests {
     #[test]
     fn whole_granularity_is_uniform() {
         let mut p = FedDq::new(0.005).with_granularity(Granularity::Whole);
-        let d = p.decide(&inputs(&[1.0, 0.01, 0.3]));
+        let d = p.decide(&inputs(&[0.0, 0.0, 0.0], &[1.0, 0.01, 0.3]));
         let levels = d.levels.unwrap();
         assert!(levels.windows(2).all(|w| w[0] == w[1]));
-        assert_eq!(math::bits_for_level(levels[0]), 8); // driven by max range
+        assert_eq!(math::bits_for_level(levels[0]), 8); // envelope = max range here
+    }
+
+    #[test]
+    fn whole_granularity_uses_the_true_envelope_across_segments() {
+        // Segment extremes straddle two segments: one spans [-1, -0.5],
+        // the other [0.5, 1.0].  The whole-update range is 2.0, but the
+        // old max-segment-range approximation saw only 0.5 — a 2-bit
+        // under-sizing of Eq. 10.
+        let mut p = FedDq::new(0.005).with_granularity(Granularity::Whole);
+        let d = p.decide(&inputs(&[-1.0, 0.5], &[0.5, 0.5]));
+        let bits = math::bits_for_level(d.levels.unwrap()[0]);
+        // ceil(log2(2.0 / 0.005)) = ceil(8.64) = 9, not ceil(log2(100)) = 7.
+        assert_eq!(bits, 9);
+        // Sanity: when one segment holds both extremes the envelope
+        // degenerates to the max segment range and nothing changes.
+        let d = p.decide(&inputs(&[-1.0, -0.1], &[2.0, 0.2]));
+        assert_eq!(math::bits_for_level(d.levels.unwrap()[0]), 9); // log2(400) = 8.6
     }
 
     #[test]
     fn max_bits_clamps() {
         let mut p = FedDq::new(1e-9).with_max_bits(4);
-        let d = p.decide(&inputs(&[10.0]));
+        let d = p.decide(&inputs(&[0.0], &[10.0]));
         assert_eq!(math::bits_for_level(d.levels.unwrap()[0]), 4);
+    }
+
+    #[test]
+    fn prop_degenerate_ranges_never_break_the_policy() {
+        use crate::util::prop::{check, Gen};
+        // FedDQ (both granularities) must emit valid levels for every
+        // degenerate (min, range) combination a frozen or blown-up
+        // layer can produce: zeros, subnormals, infinities, NaNs.
+        check("feddq-degenerate-ranges", 100, |g: &mut Gen| {
+            let l = g.size(1, 6);
+            let pick = |g: &mut Gen| match g.int(0, 5) {
+                0 => 0.0,
+                1 => 1.0e-40, // subnormal
+                2 => f32::INFINITY,
+                3 => f32::NAN,
+                4 => -g.f32(0.0, 2.0),
+                _ => g.f32_wide(),
+            };
+            let ranges: Vec<f32> = g.vec_of(l, pick);
+            let mins: Vec<f32> = g.vec_of(l, pick);
+            for granularity in [Granularity::PerSegment, Granularity::Whole] {
+                let mut p = FedDq::new(0.005).with_granularity(granularity);
+                let d = p.decide(&inputs(&mins, &ranges));
+                let levels = d.levels.ok_or("feddq must always quantize")?;
+                if levels.len() != l {
+                    return Err(format!("{} levels for {l} segments", levels.len()));
+                }
+                for &s in &levels {
+                    let bits = math::bits_for_level(s);
+                    if s < 1 || !(1..=16).contains(&bits) {
+                        return Err(format!(
+                            "{granularity:?}: level {s} / bits {bits} out of range for ranges {ranges:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

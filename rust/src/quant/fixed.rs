@@ -50,6 +50,7 @@ mod tests {
             round: 0,
             client_id: 0,
             ranges,
+            mins: &[],
             initial_loss: None,
             prev_loss: None,
         }
@@ -69,6 +70,41 @@ mod tests {
         let d = p.decide(&inputs(&[0.5]));
         assert_eq!(d, Decision::fp32());
         assert_eq!(d.bits(0), 32);
+    }
+
+    #[test]
+    fn prop_fixed_policy_ignores_degenerate_ranges() {
+        use crate::quant::math;
+        use crate::util::prop::{check, Gen};
+        // The fixed policy's level must be constant and valid whatever
+        // degenerate ranges a frozen layer reports — the quantizer plan
+        // (codec::QuantPlan) handles the per-segment collapse.
+        check("fixed-degenerate-ranges", 100, |g: &mut Gen| {
+            let bits = g.int(1, 16) as u32;
+            let l = g.size(1, 6);
+            let ranges: Vec<f32> = g.vec_of(l, |g| match g.int(0, 4) {
+                0 => 0.0,
+                1 => 1.0e-40, // subnormal
+                2 => f32::INFINITY,
+                3 => f32::NAN,
+                _ => g.f32_wide(),
+            });
+            let mut p = Fixed::new(bits);
+            let d = p.decide(&PolicyInputs {
+                round: 0,
+                client_id: 0,
+                ranges: &ranges,
+                mins: &ranges, // arbitrary; fixed ignores both
+                initial_loss: None,
+                prev_loss: None,
+            });
+            let levels = d.levels.ok_or("fixed must quantize")?;
+            let want = math::max_level_for_bits(bits);
+            if levels.len() != l || levels.iter().any(|&s| s != want) {
+                return Err(format!("bits {bits}: levels {levels:?} != {want}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -36,6 +36,34 @@ pub fn feddq_bits(range: f32, resolution: f32, max_bits: u32) -> u32 {
     bits.clamp(1, max_bits)
 }
 
+/// The exact whole-update range from per-segment (min, range) pairs:
+/// `max_l(min_l + range_l) - min_l(min_l)` — Eq. 10's range when one
+/// bit-width covers the entire update.  A positive-infinite segment
+/// range propagates (a blown-up update keeps max precision downstream);
+/// NaN segments are skipped; negative ranges count as width-0 at their
+/// min.  With no usable segment the range is 0 (degenerate → 1 bit).
+pub fn whole_range(mins: &[f32], ranges: &[f32]) -> f32 {
+    debug_assert_eq!(mins.len(), ranges.len());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for (&mn, &r) in mins.iter().zip(ranges) {
+        if r.is_infinite() && r > 0.0 {
+            return f32::INFINITY;
+        }
+        if !mn.is_finite() || r.is_nan() {
+            continue;
+        }
+        let r = r.max(0.0);
+        lo = lo.min(mn);
+        hi = hi.max(mn + r);
+    }
+    if lo.is_finite() && hi.is_finite() && hi > lo {
+        hi - lo
+    } else {
+        0.0
+    }
+}
+
 /// Uplink cost in bits of one client update under per-segment levels:
 /// `sum_l d_l * bits(s_l) + header_bits_per_segment * L` plus the fixed
 /// message envelope.  Matches what the wire encoder actually produces
@@ -89,5 +117,52 @@ mod tests {
     fn payload_bits_sums_segments() {
         assert_eq!(update_payload_bits(&[100, 50], &[8, 4]), 1000);
         assert_eq!(update_payload_bits(&[], &[]), 0);
+    }
+
+    #[test]
+    fn whole_range_is_the_global_envelope() {
+        // Extremes in different segments: [-1, -0.5] and [0.5, 1.0] span
+        // 2.0 even though no single segment range exceeds 0.5.
+        let r = whole_range(&[-1.0, 0.5], &[0.5, 0.5]);
+        assert!((r - 2.0).abs() < 1e-6, "{r}");
+        // When one segment holds both extremes, envelope == max range.
+        let r = whole_range(&[-1.0, -0.1], &[2.0, 0.2]);
+        assert!((r - 2.0).abs() < 1e-6, "{r}");
+        // Degenerate inputs collapse instead of going NaN/negative.
+        assert_eq!(whole_range(&[], &[]), 0.0);
+        assert_eq!(whole_range(&[0.3], &[0.0]), 0.0);
+        assert_eq!(whole_range(&[f32::NAN], &[1.0]), 0.0);
+        assert_eq!(whole_range(&[0.0, f32::NAN], &[1.0, f32::NAN]), 1.0);
+        assert_eq!(whole_range(&[0.0], &[f32::INFINITY]), f32::INFINITY);
+        // Negative range counts as a point at its min.
+        let r = whole_range(&[-2.0, 0.0], &[-1.0, 1.0]);
+        assert!((r - 3.0).abs() < 1e-6, "{r}");
+    }
+
+    #[test]
+    fn prop_feddq_bits_bounded_for_any_range() {
+        use crate::util::prop::{check, Gen};
+        check("feddq-bits-bounded", 200, |g: &mut Gen| {
+            let range = match g.int(0, 6) {
+                0 => 0.0,
+                1 => 1.0e-40,           // subnormal
+                2 => f32::MIN_POSITIVE, // smallest normal
+                3 => f32::INFINITY,
+                4 => f32::NAN,
+                5 => -g.f32(0.0, 10.0),
+                _ => g.f32_wide(),
+            };
+            let max_bits = g.int(1, 16) as u32;
+            let bits = feddq_bits(range, 0.005, max_bits);
+            if !(1..=max_bits).contains(&bits) {
+                return Err(format!("range {range}: bits {bits} outside [1, {max_bits}]"));
+            }
+            // Degenerate ranges must collapse to the 1-bit floor
+            // (positive infinity instead pins to max precision).
+            if (range.is_nan() || range <= 0.0) && bits != 1 {
+                return Err(format!("degenerate range {range} got {bits} bits"));
+            }
+            Ok(())
+        });
     }
 }

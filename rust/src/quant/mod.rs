@@ -25,6 +25,12 @@ pub struct PolicyInputs<'a> {
     pub client_id: u32,
     /// Per-segment update ranges observed *this* round (max - min).
     pub ranges: &'a [f32],
+    /// Per-segment update minima observed *this* round.  Together with
+    /// `ranges` this is the exact per-segment envelope, so whole-model
+    /// policies (FedDQ's Eq. 10 as written) can compute the true global
+    /// update range `max_l(min_l + range_l) - min_l(min_l)` instead of
+    /// approximating it with the largest segment range.
+    pub mins: &'a [f32],
     /// Global average training loss of round 0 (set after the first
     /// round's updates arrive; policies must handle `None` at m=0).
     pub initial_loss: Option<f32>,

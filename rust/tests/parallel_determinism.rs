@@ -1,9 +1,9 @@
 //! The parallel round engine's determinism contract: for any worker
-//! thread count, accumulator shard count and eval slice count the
-//! in-process `Session` must produce a bit-identical `RunReport` —
-//! same round records, same bit ledger, same final parameter hash.
-//! Also pins the streaming-vs-fused aggregation equivalence on the mlp
-//! config.
+//! thread count, accumulator shard count, eval slice count,
+//! decode-buffer bound and fold-overlap setting the in-process
+//! `Session` must produce a bit-identical `RunReport` — same round
+//! records, same bit ledger, same final parameter hash.  Also pins the
+//! streaming-vs-fused aggregation equivalence on the mlp config.
 
 use feddq::config::{AggregateMode, RunConfig};
 use feddq::coordinator::Session;
@@ -119,6 +119,81 @@ fn fully_parallel_server_matches_fully_serial_server() {
         &run(parallel),
         "serial server vs threads=4/agg_shards=3/eval_threads=2",
     );
+}
+
+#[test]
+fn fold_overlap_matches_after_barrier_fold() {
+    // The fold-overlap path folds each client into every shard as its
+    // decode lands instead of waiting for the barrier; the per-shard
+    // client order and arithmetic are unchanged, so on vs off must be
+    // bit-identical — including params_hash.
+    let mut off = mlp_cfg(3);
+    off.agg_shards = 4;
+    off.fold_overlap = false;
+    let mut on = mlp_cfg(3);
+    on.agg_shards = 4;
+    on.fold_overlap = true;
+    assert_reports_identical(&run(off), &run(on), "fold_overlap off vs on");
+}
+
+#[test]
+fn decode_buffer_bound_cannot_change_results() {
+    // decode_buffers only changes *when* a buffer is reused, never what
+    // lands in it: 0 (unbounded), a tight bound of 2, and one-per-client
+    // (n = 10 for the builtin mlp cohort) must all be bit-identical.
+    let mut unbounded = mlp_cfg(3);
+    unbounded.decode_buffers = 0;
+    let base = run(unbounded);
+    for k in [2usize, 10] {
+        let mut capped = mlp_cfg(3);
+        capped.decode_buffers = k;
+        assert_reports_identical(
+            &base,
+            &run(capped),
+            &format!("decode_buffers=0 vs {k}"),
+        );
+    }
+}
+
+#[test]
+fn scheduler_knob_matrix_matches_all_serial() {
+    // The PR 3 matrix: two-lane pool + bounded buffers + fold overlap
+    // crossed with the existing threads/shards/eval knobs, against the
+    // fully serial server.
+    let mut serial = mlp_cfg(1);
+    serial.test_size = 1500; // three eval batches
+    serial.agg_shards = 1;
+    serial.eval_threads = 1;
+    serial.fold_overlap = false;
+    let mut parallel = mlp_cfg(4);
+    parallel.test_size = 1500;
+    parallel.agg_shards = 5;
+    parallel.eval_threads = 3;
+    parallel.fold_overlap = true;
+    parallel.decode_buffers = 2; // hard bound, far below n_clients = 10
+    assert_reports_identical(
+        &run(serial),
+        &run(parallel),
+        "all-serial vs threads=4/shards=5/eval=3/overlap/buffers=2",
+    );
+}
+
+#[test]
+fn tight_decode_bound_under_error_feedback_stays_deterministic() {
+    // EF keeps residual state on every client while the bounded
+    // pipeline serializes decodes through a single buffer — the
+    // harshest recycling schedule must still be bit-identical.
+    let mut a = mlp_cfg(2);
+    a.policy = PolicyConfig::Fixed { bits: 2 };
+    a.error_feedback = true;
+    a.fold_overlap = false;
+    let mut b = mlp_cfg(4);
+    b.policy = PolicyConfig::Fixed { bits: 2 };
+    b.error_feedback = true;
+    b.fold_overlap = true;
+    b.decode_buffers = 1;
+    b.agg_shards = 3;
+    assert_reports_identical(&run(a), &run(b), "EF: overlap+buffers=1 vs plain");
 }
 
 #[test]

@@ -22,9 +22,15 @@ Gating policy, chosen to keep CI signal high on shared runners:
   with a baseline update, otherwise coverage would silently disappear.
   Missing informational rows only warn.
 * Keys present only in the fresh run are new rows — reported, passing.
+* ``--require-armed`` turns the unseeded-baseline warning into a hard
+  failure: if every gated row's baseline is still zero-seeded the gate
+  exits 1.  CI passes this flag so a repo whose committed baselines were
+  never calibrated fails loudly instead of green-lighting regressions
+  forever.  Arm it with ``scripts/calibrate_bench.sh`` on a
+  toolchain-equipped host and commit the regenerated ``BENCH_*.json``.
 
 Usage:
-    bench_gate.py --baseline path/to/committed.json --fresh path/to/new.json
+    bench_gate.py --baseline path/to/committed.json --fresh path/to/new.json [--require-armed]
 """
 
 import argparse
@@ -45,6 +51,11 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
     ap.add_argument("--fresh", required=True, help="freshly generated JSON")
+    ap.add_argument(
+        "--require-armed",
+        action="store_true",
+        help="fail (exit 1) when every gated baseline row is still zero-seeded",
+    )
     args = ap.parse_args()
 
     tolerance = float(os.environ.get("BENCH_GATE_TOLERANCE", "0.30"))
@@ -85,7 +96,11 @@ def main():
     gated = [k for k in baseline if k.endswith("_gbps")]
     if gated and all(baseline[k] <= 0 for k in gated):
         print("\nWARNING: every gated row is unseeded — the regression gate is UNARMED.")
-        print("Commit a calibrated bench run's JSON as the baseline to arm it.")
+        print("Run scripts/calibrate_bench.sh on a toolchain-equipped host and commit")
+        print("the regenerated BENCH_*.json as the baseline to arm it.")
+        if args.require_armed:
+            print("--require-armed: refusing to pass with an unarmed gate.")
+            sys.exit(1)
     print("\nbench gate passed")
 
 
