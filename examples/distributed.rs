@@ -13,10 +13,10 @@
 //! `FEDDQ_NATIVE_CLIENTS=2` and `--rounds 2`.
 //!
 //! All scheduler knobs flow through: `--agg-shards`, `--eval-threads`,
-//! `--decode-buffers` (bounded decode pool) and `--fold-overlap`
+//! `--decode-buffers` (bounded decode pool), `--fold-overlap`
 //! (per-shard prefix folds overlapping straggler arrivals — active
-//! over TCP from round 1, once the server has learned every worker's
-//! sample count).
+//! over TCP from round 0, since each worker's ready `Join` carries its
+//! shard size) and `--codec` (narrow SWAR path vs scalar reference).
 
 use feddq::cli::{run_config_from_args, Args};
 use feddq::coordinator::topology;

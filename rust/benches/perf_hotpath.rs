@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use feddq::bench_support as bs;
-use feddq::config::{AggregateMode, RunConfig};
+use feddq::config::{AggregateMode, CodecMode, RunConfig};
 use feddq::coordinator::codec::{self, QuantPlan};
 use feddq::coordinator::pool::{self, Task, TaskFn, WorkerPool};
 use feddq::coordinator::{Server, ServerOpts, Session};
@@ -29,6 +29,7 @@ use feddq::util::rng::Rng;
 use feddq::wire::bitpack::{BitReader, BitWriter};
 use feddq::wire::frame;
 use feddq::wire::messages::{Message, SegmentHeader, Update};
+use feddq::wire::swar;
 
 /// One e2e run at `threads` workers; returns s/round.
 fn e2e_round_secs(threads: usize, rounds: usize, fold_overlap: bool) -> anyhow::Result<f64> {
@@ -127,9 +128,11 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
     let mut json: Vec<(String, f64)> = Vec::new();
 
-    bench_header("bit packing / unpacking (1M codes)");
+    bench_header("bit packing / unpacking — generic get_slice/put_slice baseline (1M codes)");
     let n = 1_000_000usize;
-    for bits in [1u32, 4, 8, 12, 16] {
+    // Covers every SWAR-specialized width (1/2/4/8/16) so each has a
+    // generic baseline row, plus an odd width (12) for the fallback.
+    for bits in [1u32, 2, 4, 8, 12, 16] {
         let max = (1u64 << bits) - 1;
         let codes: Vec<u32> = (0..n).map(|_| (rng.next_u64() % (max + 1)) as u32).collect();
         let in_bytes = (n * 4) as u64; // source f32/u32 stream
@@ -150,6 +153,43 @@ fn main() -> anyhow::Result<()> {
         });
         json.push((format!("unpack_{bits}bit_gbps"), r.throughput_gbps().unwrap_or(0.0)));
     }
+
+    bench_header("SWAR width-specialized kernels (1M codes; same 4-byte/code basis)");
+    // Byte basis matches the generic rows above (4 bytes per code), so
+    // unpack_w4_gbps vs unpack_4bit_gbps is a direct speedup ratio —
+    // the acceptance gate for the narrow-codec rewrite.
+    for bits in [1u32, 2, 4, 8, 16] {
+        let max = (1u64 << bits) - 1;
+        let codes16: Vec<u16> =
+            (0..n).map(|_| (rng.next_u64() % (max + 1)) as u16).collect();
+        let in_bytes = (n * 4) as u64;
+        let r = b.bench_bytes(&format!("pack w{bits} (SWAR)"), Some(in_bytes), &mut || {
+            let mut w = BitWriter::with_capacity(n * bits as usize / 8 + 8);
+            swar::pack_u16(&mut w, &codes16, bits);
+            black_box(w.finish())
+        });
+        json.push((format!("pack_w{bits}_gbps"), r.throughput_gbps().unwrap_or(0.0)));
+        let mut w = BitWriter::new();
+        swar::pack_u16(&mut w, &codes16, bits);
+        let packed = w.finish();
+        let r = b.bench_bytes(&format!("unpack w{bits} (SWAR)"), Some(in_bytes), &mut || {
+            let mut r = BitReader::new(&packed);
+            let mut out: Vec<u16> = Vec::new();
+            swar::unpack_u16(&mut r, &mut out, n, bits).unwrap();
+            black_box(out)
+        });
+        json.push((format!("unpack_w{bits}_gbps"), r.throughput_gbps().unwrap_or(0.0)));
+    }
+    // Headline ratio: 4-bit SWAR unpack vs the generic loop (>= 2x is
+    // the PR's acceptance bar; both rows land in BENCH_hotpath.json).
+    let row = |k: &str| json.iter().find(|(n, _)| n == k).map(|&(_, v)| v).unwrap_or(0.0);
+    let w4_speedup = row("unpack_w4_gbps") / row("unpack_4bit_gbps").max(1e-12);
+    println!(
+        "4-bit unpack: SWAR {:.3} GB/s vs generic {:.3} GB/s = {w4_speedup:.2}x",
+        row("unpack_w4_gbps"),
+        row("unpack_4bit_gbps"),
+    );
+    json.push(("unpack_w4_speedup_vs_generic".into(), w4_speedup));
 
     bench_header("message encode/decode (100k-element update, 8-bit)");
     let d = 100_000usize;
@@ -181,13 +221,36 @@ fn main() -> anyhow::Result<()> {
     });
     json.push(("crc32_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
 
-    bench_header("server hot path: sharded aggregation (mlp layout)");
-    // Fixture: n decoded 8-bit updates produced through the real codec.
+    bench_header("client encode: fused quantize→pack vs split (mlp delta, 8-bit)");
     let rt = Runtime::new("artifacts")?;
     let model = Arc::new(rt.load_model("mlp")?);
     let mm = Arc::new(model.mm.clone());
+    let delta: Vec<f32> = (0..mm.d)
+        .map(|i| -1.0 + 2.0 * i as f32 / (mm.d - 1) as f32)
+        .collect();
+    let (mins_e, ranges_e) = model.ranges(&delta)?;
+    let levels_e = vec![255u32; mm.num_segments()];
+    let plan_e = QuantPlan::new(&levels_e, &ranges_e);
+    let dbytes = (mm.d * 4) as u64;
+    let r = b.bench_bytes("encode split (quantize + pack)", Some(dbytes), &mut || {
+        let codes = model
+            .quantize(&delta, &mins_e, &plan_e.sinv, &plan_e.maxcode, 7)
+            .unwrap();
+        black_box(codec::encode_quantized(&mm, &plan_e, &mins_e, &codes))
+    });
+    json.push(("encode_split_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    let r = b.bench_bytes("encode fused (clamp-round-pack)", Some(dbytes), &mut || {
+        black_box(codec::encode_quantized_fused(&mm, &plan_e, &mins_e, &delta, 7, None))
+    });
+    json.push(("encode_fused_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+
+    bench_header("server hot path: sharded aggregation (mlp layout)");
+    // Fixture: n decoded 8-bit updates produced through the real codec,
+    // decoded both ways (narrow u16 rows = production, f32 reference
+    // rows = the pre-SWAR representation) so the fold bandwidth win is
+    // a tracked row.
     let n_agg = 32usize;
-    let mut decs: Vec<codec::DecodedUpdate> = Vec::with_capacity(n_agg);
+    let mut updates: Vec<Update> = Vec::with_capacity(n_agg);
     for i in 0..n_agg {
         let levels = vec![255u32; mm.num_segments()];
         let ranges = vec![1.0f32; mm.num_segments()];
@@ -195,26 +258,45 @@ fn main() -> anyhow::Result<()> {
         let codes: Vec<f32> = (0..mm.d).map(|j| ((i + j) % 256) as f32).collect();
         let mins = vec![-0.5f32; mm.num_segments()];
         let (headers, payload) = codec::encode_quantized(&mm, &plan, &mins, &codes);
-        let u = Update {
+        updates.push(Update {
             round: 0,
             client_id: i as u32,
             num_samples: 100,
             train_loss: 0.0,
             segments: headers,
             payload,
-        };
-        decs.push(codec::decode_update(&mm, &u)?);
+        });
+    }
+    let mut decs: Vec<codec::DecodedUpdate> = Vec::with_capacity(n_agg);
+    let mut decs_ref: Vec<codec::DecodedUpdate> = Vec::with_capacity(n_agg);
+    for u in &updates {
+        decs.push(codec::decode_update(&mm, u)?);
+        let mut d = codec::DecodedUpdate::new();
+        codec::decode_update_into_mode(&mm, u, &mut d, CodecMode::Reference)?;
+        decs_ref.push(d);
     }
     let w = 1.0f32 / n_agg as f32;
     let fold_bytes = (n_agg * mm.d * 4) as u64;
-    let r = b.bench_bytes(&format!("agg fold serial (n={n_agg})"), Some(fold_bytes), &mut || {
+    let narrow_name = format!("fold narrow u16 rows (n={n_agg})");
+    let r = b.bench_bytes(&narrow_name, Some(fold_bytes), &mut || {
         let mut acc = vec![0.0f32; mm.d];
         for dec in &decs {
             codec::fold_range(&mm, dec, w, 0, mm.d, &mut acc);
         }
         black_box(acc)
     });
+    json.push(("fold_narrow_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
     json.push(("agg_fold_serial_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    let ref_name = format!("fold f32 reference rows (n={n_agg})");
+    let r = b.bench_bytes(&ref_name, Some(fold_bytes), &mut || {
+        let mut acc = vec![0.0f32; mm.d];
+        for dec in &decs_ref {
+            codec::fold_range(&mm, dec, w, 0, mm.d, &mut acc);
+        }
+        black_box(acc)
+    });
+    json.push(("fold_f32rows_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    drop(decs_ref);
     let pool = WorkerPool::new(4, Arc::clone(&model));
     let tasks = pool.sender();
     let shards = 4usize;
@@ -256,6 +338,7 @@ fn main() -> anyhow::Result<()> {
             eval_threads: 4,
             fold_overlap: false,
             decode_buffers: 0,
+            codec: CodecMode::Narrow,
             tasks: Some(pool.sender()),
         },
     )?;

@@ -156,6 +156,9 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(f) = args.get_parse::<bool>("fold-overlap")? {
         cfg.fold_overlap = f;
     }
+    if let Some(c) = args.get("codec") {
+        cfg.codec = crate::config::CodecMode::parse(c)?;
+    }
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -199,7 +202,7 @@ mod tests {
             "--model cnn4 --policy adaquantfl:4 --rounds 12 --lr 0.05 \
              --sharding dirichlet:0.5 --target-acc 0.8 --threads 4 \
              --aggregate fused --agg-shards 6 --eval-threads 2 \
-             --decode-buffers 3 --fold-overlap false",
+             --decode-buffers 3 --fold-overlap false --codec reference",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -213,6 +216,7 @@ mod tests {
         assert_eq!(cfg.eval_threads, 2);
         assert_eq!(cfg.decode_buffers, 3);
         assert!(!cfg.fold_overlap);
+        assert_eq!(cfg.codec, crate::config::CodecMode::Reference);
         a.finish().unwrap();
     }
 

@@ -36,6 +36,36 @@ impl AggregateMode {
     }
 }
 
+/// Which codec data path runs the per-byte hot loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecMode {
+    /// Narrow code rows (`u16`) + width-specialized SWAR kernels + the
+    /// client's fused quantize→pack pass (default).  Bit-identical to
+    /// [`CodecMode::Reference`] — enforced by the determinism suite.
+    Narrow,
+    /// The scalar reference path: f32 code rows, generic
+    /// `get_slice`/`put_slice` loops, unfused quantize-then-pack.
+    /// Kept as the cross-check oracle for the SWAR kernels.
+    Reference,
+}
+
+impl CodecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "narrow" => Ok(CodecMode::Narrow),
+            "reference" => Ok(CodecMode::Reference),
+            _ => anyhow::bail!("unknown codec mode {s:?} (want narrow|reference)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CodecMode::Narrow => "narrow",
+            CodecMode::Reference => "reference",
+        }
+    }
+}
+
 /// Full configuration of one federated run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -100,6 +130,11 @@ pub struct RunConfig {
     /// order are unchanged, so either setting yields a bit-identical
     /// `RunReport`.
     pub fold_overlap: bool,
+    /// Codec data path: narrow `u16` rows + SWAR kernels + fused client
+    /// encode (default), or the scalar f32 reference path.  Payloads,
+    /// codes and folds are bit-identical either way (determinism suite);
+    /// `reference` exists as the cross-check oracle and escape hatch.
+    pub codec: CodecMode,
 }
 
 impl RunConfig {
@@ -134,6 +169,7 @@ impl RunConfig {
             eval_threads: 0,
             decode_buffers: 0,
             fold_overlap: true,
+            codec: CodecMode::Narrow,
         }
     }
 
@@ -225,6 +261,7 @@ impl RunConfig {
             ("eval_threads", Json::from(self.eval_threads)),
             ("decode_buffers", Json::from(self.decode_buffers)),
             ("fold_overlap", Json::from(self.fold_overlap)),
+            ("codec", Json::from(self.codec.label())),
         ])
     }
 
@@ -273,6 +310,12 @@ impl RunConfig {
             // overlap on (bit-identical to the old after-barrier fold)
             decode_buffers: j.get("decode_buffers").and_then(Json::as_usize).unwrap_or(0),
             fold_overlap: j.get("fold_overlap").and_then(Json::as_bool).unwrap_or(true),
+            // absent in pre-SWAR configs: the narrow path is
+            // bit-identical to what those configs produced
+            codec: match j.get("codec").and_then(Json::as_str) {
+                Some(s) => CodecMode::parse(s)?,
+                None => CodecMode::Narrow,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -321,6 +364,7 @@ mod tests {
         c.eval_threads = 3;
         c.decode_buffers = 4;
         c.fold_overlap = false;
+        c.codec = CodecMode::Reference;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
@@ -354,6 +398,7 @@ mod tests {
             o.remove("eval_threads");
             o.remove("decode_buffers");
             o.remove("fold_overlap");
+            o.remove("codec");
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.threads, 0);
@@ -362,6 +407,7 @@ mod tests {
         assert_eq!(back.eval_threads, 0);
         assert_eq!(back.decode_buffers, 0);
         assert!(back.fold_overlap);
+        assert_eq!(back.codec, CodecMode::Narrow);
     }
 
     #[test]

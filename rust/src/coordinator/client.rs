@@ -2,16 +2,21 @@
 //!
 //! Per round: local `tau`-step SGD (AOT `round` executable) → per-segment
 //! range measurement (`ranges` executable) → policy decision (bit-widths)
-//! → stochastic quantization (`quantize` executable) → bit-packing →
-//! `Update` message.  The same [`ClientState`] drives the in-process
-//! simulator and the remote TCP worker, so both modes exercise identical
-//! code.
+//! → stochastic quantization → bit-packing → `Update` message.  On the
+//! native backend under [`CodecMode::Narrow`] the last two stages are
+//! **fused**: [`codec::encode_quantized_fused`] clamp-round-packs the
+//! delta in one pass (no `d`-length codes vector, no `u32` scratch),
+//! byte-identical to the split quantize-executable-then-pack path used
+//! by the PJRT backend and by [`CodecMode::Reference`].  The same
+//! [`ClientState`] drives the in-process simulator and the remote TCP
+//! worker, so both modes exercise identical code.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::codec::{self, QuantPlan};
+use crate::config::CodecMode;
 use crate::data::batch::BatchCursor;
 use crate::data::Dataset;
 use crate::quant::{PolicyInputs, QuantPolicy};
@@ -41,6 +46,9 @@ pub struct ClientState {
     /// round, folded into this round's update before quantizing.  Empty
     /// when EF is disabled.
     residual: Vec<f32>,
+    /// Codec path: fused quantize→pack (narrow, native backend) or the
+    /// split quantize-then-pack reference.
+    codec: CodecMode,
     /// Telemetry from the last round (read by the session's metrics).
     pub last_ranges: Vec<f32>,
     pub last_bits: Vec<u32>,
@@ -55,10 +63,11 @@ impl ClientState {
         model: &ModelRuntime,
         root_rng: &Rng,
     ) -> ClientState {
-        Self::with_options(id, shard, policy, lr, model, root_rng, false)
+        Self::with_options(id, shard, policy, lr, model, root_rng, false, CodecMode::Narrow)
     }
 
-    /// Like [`Self::new`] with explicit error-feedback control.
+    /// Like [`Self::new`] with explicit error-feedback and codec-path
+    /// control.
     #[allow(clippy::too_many_arguments)]
     pub fn with_options(
         id: u32,
@@ -68,6 +77,7 @@ impl ClientState {
         model: &ModelRuntime,
         root_rng: &Rng,
         error_feedback: bool,
+        codec: CodecMode,
     ) -> ClientState {
         let mm = &model.mm;
         let cursor = BatchCursor::new(shard.len(), root_rng.derive(&format!("client{id}.batch")));
@@ -83,6 +93,7 @@ impl ClientState {
             xs,
             ys,
             residual: if error_feedback { vec![0.0; mm.d] } else { Vec::new() },
+            codec,
             last_ranges: Vec::new(),
             last_bits: Vec::new(),
         }
@@ -142,23 +153,32 @@ impl ClientState {
             }
             Some(levels) => {
                 let plan = QuantPlan::new(levels, &ranges);
-                let codes = model.quantize(
-                    &delta,
-                    &mins,
-                    &plan.sinv,
-                    &plan.maxcode,
-                    self.quant_rng.next_u32(),
-                )?;
-                if !self.residual.is_empty() {
-                    // residual = delta - dequant(codes), segment-wise
-                    for (l, seg) in mm.segments.iter().enumerate() {
-                        let (mn, st) = (mins[l], plan.step[l]);
-                        for j in seg.offset..seg.offset + seg.size {
-                            self.residual[j] = delta[j] - (mn + codes[j] * st);
+                let seed = self.quant_rng.next_u32();
+                if self.codec == CodecMode::Narrow && model.is_native() {
+                    // Fused clamp-round-pack straight off the delta: the
+                    // native quantize contract is mirrored element for
+                    // element (same rng stream, same expressions), so the
+                    // payload — and the EF residual — are bit-identical
+                    // to the split path below.
+                    let residual = if self.residual.is_empty() {
+                        None
+                    } else {
+                        Some(&mut self.residual[..])
+                    };
+                    codec::encode_quantized_fused(mm, &plan, &mins, &delta, seed, residual)
+                } else {
+                    let codes = model.quantize(&delta, &mins, &plan.sinv, &plan.maxcode, seed)?;
+                    if !self.residual.is_empty() {
+                        // residual = delta - dequant(codes), segment-wise
+                        for (l, seg) in mm.segments.iter().enumerate() {
+                            let (mn, st) = (mins[l], plan.step[l]);
+                            for j in seg.offset..seg.offset + seg.size {
+                                self.residual[j] = delta[j] - (mn + codes[j] * st);
+                            }
                         }
                     }
+                    codec::encode_quantized(mm, &plan, &mins, &codes)
                 }
-                codec::encode_quantized(mm, &plan, &mins, &codes)
             }
         };
 

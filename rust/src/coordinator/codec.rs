@@ -1,18 +1,37 @@
 //! Update codec: turn a (quantized) model update into wire bytes and back.
 //!
-//! Encoding is the client's last hot-path step: per segment, pack each
-//! code into its `bits_l`-wide slot (or copy raw f32 for fp32 segments).
-//! Decoding on the server reconstructs the f32 code row plus per-segment
-//! (min, step) that the fused dequantize-aggregate executable consumes.
+//! Encoding is the client's last hot-path step.  On the narrow path
+//! ([`CodecMode::Narrow`], the default) quantize and pack are **fused**
+//! into one pass over the delta ([`encode_quantized_fused`] →
+//! [`swar::quantize_pack_segment`]): no `d`-length codes vector, no
+//! `u32` scratch.  The unfused [`encode_quantized`] remains for the
+//! PJRT backend (whose quantize executable produces the codes) and as
+//! the scalar reference.
+//!
+//! Decoding on the server reconstructs **narrow code rows**: quantized
+//! segments land as `u16` rows (codes are <= 16 wire bits, hence
+//! <= 65535 — exact in `u16` *and* in `f32`), fp32 segments keep an
+//! `f32` row.  Relative to the old all-f32 representation this halves
+//! decode-buffer memory (which directly multiplies the
+//! `--decode-buffers` bound) and halves the bytes the fold re-reads
+//! per shard.  The per-element fold expression
+//! `acc += w * (code as f32 * step + min)` is unchanged, so results
+//! stay bit-identical — [`CodecMode::Reference`] keeps the all-f32
+//! rows + generic-loop path alive as the cross-check oracle
+//! (`rust/tests/parallel_determinism.rs`).
+//!
 //! fp32 segments decode to `codes = value, min = 0, step = 1`, so the
 //! aggregation path is uniform across policies.
 
 use anyhow::{bail, ensure, Result};
 
+use crate::config::CodecMode;
 use crate::quant::{math, Decision};
 use crate::runtime::ModelManifest;
+use crate::util::rng::Rng;
 use crate::wire::bitpack::{BitReader, BitWriter};
 use crate::wire::messages::{SegmentHeader, Update};
+use crate::wire::swar;
 
 /// Client-side quantization parameters derived from a policy decision and
 /// the observed per-segment (min, range).
@@ -55,7 +74,34 @@ impl QuantPlan {
     }
 }
 
+/// Exact packed-payload size in bytes for `plan` over `mm`'s segments:
+/// `ceil(sum_l(size_l * bits_l) / 8)` — the capacity both encoders
+/// reserve up front (no reallocation, no 16-bit worst-case slack).
+fn packed_payload_bytes(mm: &ModelManifest, plan: &QuantPlan) -> usize {
+    let bits: usize = mm
+        .segments
+        .iter()
+        .zip(&plan.levels)
+        .map(|(seg, &s)| seg.size * math::bits_for_level(s) as usize)
+        .sum();
+    (bits + 7) / 8
+}
+
+fn quant_headers(mm: &ModelManifest, plan: &QuantPlan, mins: &[f32]) -> Vec<SegmentHeader> {
+    (0..mm.num_segments())
+        .map(|l| SegmentHeader {
+            bits: math::bits_for_level(plan.levels[l]) as u8,
+            level: plan.levels[l] as u16,
+            min: mins[l],
+            step: plan.step[l],
+        })
+        .collect()
+}
+
 /// Encode a quantized update (codes from the quantize executable).
+///
+/// This is the unfused path — PJRT backend and scalar reference.  The
+/// native hot path is [`encode_quantized_fused`].
 pub fn encode_quantized(
     mm: &ModelManifest,
     plan: &QuantPlan,
@@ -63,25 +109,59 @@ pub fn encode_quantized(
     codes: &[f32],
 ) -> (Vec<SegmentHeader>, Vec<u8>) {
     debug_assert_eq!(codes.len(), mm.d);
-    let mut headers = Vec::with_capacity(mm.num_segments());
-    // Worst case 16 bits/code.
-    let mut w = BitWriter::with_capacity(mm.d * 2 + 16);
+    let headers = quant_headers(mm, plan, mins);
+    let mut w = BitWriter::with_capacity(packed_payload_bytes(mm, plan));
     let mut scratch: Vec<u32> = Vec::with_capacity(1 << 14);
     for (l, seg) in mm.segments.iter().enumerate() {
-        let s = plan.levels[l];
-        let bits = math::bits_for_level(s);
-        headers.push(SegmentHeader {
-            bits: bits as u8,
-            level: s as u16,
-            min: mins[l],
-            step: plan.step[l],
-        });
+        let bits = math::bits_for_level(plan.levels[l]);
         let slice = &codes[seg.offset..seg.offset + seg.size];
         // codes are exact small integers in f32; convert once and use the
         // word-at-a-time slice packer (§Perf L3-3)
         scratch.clear();
         scratch.extend(slice.iter().map(|&c| c as u32));
         w.put_slice(&scratch, bits);
+    }
+    (headers, w.finish())
+}
+
+/// Fused quantize→pack over the whole update: one clamp-round-pack pass
+/// per segment straight off the delta ([`swar::quantize_pack_segment`]),
+/// drawing the stochastic-rounding stream from `seed` in flat element
+/// order — the exact contract of the quantize executable, so the packed
+/// payload is byte-identical to `quantize` + [`encode_quantized`]
+/// (property-tested in `wire::swar`).
+///
+/// `residual`, when present (error feedback), must be `d` long and
+/// receives `delta - dequant(codes)` with the same per-element
+/// expression the unfused client path uses.
+pub fn encode_quantized_fused(
+    mm: &ModelManifest,
+    plan: &QuantPlan,
+    mins: &[f32],
+    delta: &[f32],
+    seed: u32,
+    mut residual: Option<&mut [f32]>,
+) -> (Vec<SegmentHeader>, Vec<u8>) {
+    debug_assert_eq!(delta.len(), mm.d);
+    let headers = quant_headers(mm, plan, mins);
+    let mut w = BitWriter::with_capacity(packed_payload_bytes(mm, plan));
+    let mut rng = Rng::new(seed as u64);
+    for (l, seg) in mm.segments.iter().enumerate() {
+        let bits = math::bits_for_level(plan.levels[l]);
+        let res = residual
+            .as_mut()
+            .map(|r| &mut r[seg.offset..seg.offset + seg.size]);
+        swar::quantize_pack_segment(
+            &mut w,
+            &delta[seg.offset..seg.offset + seg.size],
+            mins[l],
+            plan.sinv[l],
+            plan.maxcode[l],
+            plan.step[l],
+            bits,
+            &mut rng,
+            res,
+        );
     }
     (headers, w.finish())
 }
@@ -112,17 +192,37 @@ pub fn encode_fp32(
     (headers, payload)
 }
 
+/// Where one decoded segment's code row lives: quantized segments are
+/// `u16` rows in [`DecodedUpdate::qcodes`], fp32 segments (and, in
+/// [`CodecMode::Reference`], every segment) are `f32` rows in
+/// [`DecodedUpdate::fcodes`].  The payload is the row's start offset in
+/// its backing vector; the row length is the segment's `size`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Row {
+    Quant(usize),
+    Fp32(usize),
+}
+
 /// Decoded update, shaped for the aggregate path.
 ///
 /// Owns its buffers so a caller can hold one instance across clients
 /// and rounds: [`decode_update_into`] clears and refills them without
-/// reallocating once they reach `d` capacity.  The round engine keeps a
-/// round-persistent `DecodedUpdate` in the server and streams every
-/// client through it (no `n x d` codes matrix).
+/// reallocating once they reach capacity.  The round engine keeps
+/// round-persistent `DecodedUpdate`s in the server and streams every
+/// client through them (no `n x d` codes matrix).
+///
+/// Quantized segments are stored as **`u16` code rows** — integer codes
+/// below 2^16 are exact in both `u16` and `f32`, so narrowing the
+/// at-rest representation cannot change any fold result while halving
+/// buffer memory and fold read bandwidth.
 #[derive(Default)]
 pub struct DecodedUpdate {
-    /// f32 code (or raw value) per element, length `d`.
-    pub codes: Vec<f32>,
+    /// `u16` code rows of the quantized segments, concatenated.
+    pub qcodes: Vec<u16>,
+    /// `f32` rows of the fp32 segments (raw values), concatenated.
+    pub fcodes: Vec<f32>,
+    /// Per-segment row descriptor, length `L`.
+    pub rows: Vec<Row>,
     /// Per-segment min (0 for fp32 segments), length `L`.
     pub mins: Vec<f32>,
     /// Per-segment step (1 for fp32 segments), length `L`.
@@ -135,11 +235,50 @@ impl DecodedUpdate {
     pub fn new() -> DecodedUpdate {
         DecodedUpdate::default()
     }
+
+    /// Append the full `d`-length f32 code row (the pre-narrow-row
+    /// representation) to `out` — the fused-aggregate shim, which
+    /// materializes the `n x d` codes matrix for the aggregate
+    /// executable, and the tests' comparison oracle.
+    pub fn extend_codes_f32(&self, mm: &ModelManifest, out: &mut Vec<f32>) {
+        out.reserve(mm.d);
+        for (l, seg) in mm.segments.iter().enumerate() {
+            match self.rows[l] {
+                Row::Quant(off) => {
+                    out.extend(self.qcodes[off..off + seg.size].iter().map(|&c| c as f32))
+                }
+                Row::Fp32(off) => out.extend_from_slice(&self.fcodes[off..off + seg.size]),
+            }
+        }
+    }
+
+    /// The full f32 code row as a fresh vector (convenience for tests).
+    pub fn codes_f32(&self, mm: &ModelManifest) -> Vec<f32> {
+        let mut out = Vec::with_capacity(mm.d);
+        self.extend_codes_f32(mm, &mut out);
+        out
+    }
 }
 
 /// Decode an update's payload against the model manifest into
-/// caller-owned buffers (allocation-free after warm-up).
+/// caller-owned buffers (allocation-free after warm-up), on the default
+/// narrow-row path.
 pub fn decode_update_into(mm: &ModelManifest, u: &Update, out: &mut DecodedUpdate) -> Result<()> {
+    decode_update_into_mode(mm, u, out, CodecMode::Narrow)
+}
+
+/// [`decode_update_into`] with an explicit codec path:
+/// [`CodecMode::Narrow`] unpacks quantized segments through the SWAR
+/// kernels into `u16` rows; [`CodecMode::Reference`] replays the scalar
+/// generic-loop path into f32 rows.  Both produce the same logical
+/// codes — the determinism suite holds entire runs bit-identical across
+/// the two.
+pub fn decode_update_into_mode(
+    mm: &ModelManifest,
+    u: &Update,
+    out: &mut DecodedUpdate,
+    mode: CodecMode,
+) -> Result<()> {
     ensure!(
         u.segments.len() == mm.num_segments(),
         "update has {} segments, model {} has {}",
@@ -147,15 +286,16 @@ pub fn decode_update_into(mm: &ModelManifest, u: &Update, out: &mut DecodedUpdat
         mm.name,
         mm.num_segments()
     );
-    out.codes.clear();
+    out.qcodes.clear();
+    out.fcodes.clear();
+    out.rows.clear();
     out.mins.clear();
     out.steps.clear();
-    out.codes.reserve(mm.d);
 
-    // fp32 segments are raw little-endian f32 at a byte offset computed
-    // from the preceding segments; quantized segments are bit-packed.
-    // Mixed layouts are legal: the reader tracks bit position, and fp32
-    // rows are read through the same BitReader at 32-bit width.
+    // fp32 segments are raw little-endian f32 at a bit offset determined
+    // by the preceding segments; quantized segments are bit-packed.
+    // Mixed layouts are legal: the reader tracks bit position across
+    // segment kinds, and fp32 rows are read at 32-bit width.
     let mut r = BitReader::new(&u.payload);
     for (l, seg) in mm.segments.iter().enumerate() {
         let h = &u.segments[l];
@@ -165,17 +305,30 @@ pub fn decode_update_into(mm: &ModelManifest, u: &Update, out: &mut DecodedUpdat
                 if r.get_slice(&mut out.scratch, seg.size, 32).is_none() {
                     bail!("payload truncated in fp32 segment {}", seg.name);
                 }
-                out.codes
+                out.rows.push(Row::Fp32(out.fcodes.len()));
+                out.fcodes
                     .extend(out.scratch.iter().map(|&raw| f32::from_le_bytes(raw.to_le_bytes())));
                 out.mins.push(0.0);
                 out.steps.push(1.0);
             }
             b if b as u32 <= 16 => {
-                out.scratch.clear();
-                if r.get_slice(&mut out.scratch, seg.size, b as u32).is_none() {
-                    bail!("payload truncated in segment {}", seg.name);
+                let width = b as u32;
+                match mode {
+                    CodecMode::Narrow => {
+                        out.rows.push(Row::Quant(out.qcodes.len()));
+                        if swar::unpack_u16(&mut r, &mut out.qcodes, seg.size, width).is_none() {
+                            bail!("payload truncated in segment {}", seg.name);
+                        }
+                    }
+                    CodecMode::Reference => {
+                        out.scratch.clear();
+                        if r.get_slice(&mut out.scratch, seg.size, width).is_none() {
+                            bail!("payload truncated in segment {}", seg.name);
+                        }
+                        out.rows.push(Row::Fp32(out.fcodes.len()));
+                        out.fcodes.extend(out.scratch.iter().map(|&c| c as f32));
+                    }
                 }
-                out.codes.extend(out.scratch.iter().map(|&c| c as f32));
                 out.mins.push(h.min);
                 out.steps.push(h.step);
             }
@@ -196,6 +349,13 @@ pub fn decode_update_into(mm: &ModelManifest, u: &Update, out: &mut DecodedUpdat
 /// bit-identical to one serial pass over the whole vector.  That is the
 /// sharded accumulator's determinism argument (see
 /// `coordinator::server`).
+///
+/// Quantized segments fold **straight off the `u16` row**
+/// (`acc += w * (c as f32 * step + min)`): the widening is exact for
+/// codes below 2^16, so this equals the old f32-row fold bit for bit
+/// while reading half the bytes.  fp32 rows use the same expression
+/// with `step = 1, min = 0` (also what [`CodecMode::Reference`] rows
+/// use for quantized segments).
 pub fn fold_range(
     mm: &ModelManifest,
     dec: &DecodedUpdate,
@@ -212,10 +372,20 @@ pub fn fold_range(
             continue;
         }
         let (mn, st) = (dec.mins[l], dec.steps[l]);
-        let codes = &dec.codes[a..b];
         let out = &mut acc[a - lo..b - lo];
-        for (o, &c) in out.iter_mut().zip(codes) {
-            *o += w * (c * st + mn);
+        match dec.rows[l] {
+            Row::Quant(off) => {
+                let row = &dec.qcodes[off + (a - seg.offset)..off + (b - seg.offset)];
+                for (o, &c) in out.iter_mut().zip(row) {
+                    *o += w * (c as f32 * st + mn);
+                }
+            }
+            Row::Fp32(off) => {
+                let row = &dec.fcodes[off + (a - seg.offset)..off + (b - seg.offset)];
+                for (o, &c) in out.iter_mut().zip(row) {
+                    *o += w * (c * st + mn);
+                }
+            }
         }
     }
 }
@@ -230,11 +400,23 @@ pub fn decode_update(mm: &ModelManifest, u: &Update) -> Result<DecodedUpdate> {
 
 /// The exact wire size (bits) the paper's volume metric counts for an
 /// update: packed codes + headers.  Used to cross-check the transport
-/// ledger in tests.
+/// ledger in tests.  The manifest pins the expected segment count —
+/// a mismatched update would make the byte ledger silently wrong, so
+/// this asserts in release builds too (two-usize compare, called once
+/// per update per round; decode has already rejected mismatches on
+/// every production path, this is the ledger's own guard).
 pub fn update_wire_bits(mm: &ModelManifest, u: &Update) -> u64 {
+    assert_eq!(
+        u.segments.len(),
+        mm.num_segments(),
+        "update from client {} has {} segments, model {} has {}",
+        u.client_id,
+        u.segments.len(),
+        mm.name,
+        mm.num_segments()
+    );
     let payload_bits = u.payload.len() as u64 * 8;
     let header_bits = u.segments.len() as u64 * math::SEGMENT_HEADER_BITS;
-    let _ = mm;
     payload_bits + header_bits
 }
 
@@ -267,6 +449,26 @@ mod tests {
         }
     }
 
+    /// Three-segment manifest for mixed fp32/quantized layout tests.
+    fn mm3() -> ModelManifest {
+        ModelManifest {
+            name: "test3".into(),
+            d: 12,
+            segments: vec![
+                Segment { name: "a".into(), offset: 0, size: 5, shape: vec![5] },
+                Segment { name: "b".into(), offset: 5, size: 4, shape: vec![4] },
+                Segment { name: "c".into(), offset: 9, size: 3, shape: vec![3] },
+            ],
+            input_shape: vec![1],
+            classes: 2,
+            tau: 1,
+            batch: 1,
+            eval_batch: 1,
+            n_clients: 2,
+            files: BTreeMap::new(),
+        }
+    }
+
     #[test]
     fn quantized_roundtrip() {
         let m = mm();
@@ -288,7 +490,11 @@ mod tests {
             payload,
         };
         let dec = decode_update(&m, &u).unwrap();
-        assert_eq!(dec.codes, codes);
+        // narrow representation: both segments land as u16 rows
+        assert_eq!(dec.rows, vec![Row::Quant(0), Row::Quant(4)]);
+        assert_eq!(dec.qcodes, vec![0u16, 15, 7, 3, 0, 1, 3]);
+        assert!(dec.fcodes.is_empty());
+        assert_eq!(dec.codes_f32(&m), codes);
         assert_eq!(dec.mins, mins);
         assert!((dec.steps[0] - 0.1).abs() < 1e-6);
         assert!((dec.steps[1] - 0.1).abs() < 1e-6);
@@ -309,11 +515,127 @@ mod tests {
             payload,
         };
         let dec = decode_update(&m, &u).unwrap();
-        assert_eq!(dec.codes, delta);
+        assert_eq!(dec.rows, vec![Row::Fp32(0), Row::Fp32(4)]);
+        assert_eq!(dec.codes_f32(&m), delta);
         assert_eq!(dec.mins, vec![0.0, 0.0]);
         assert_eq!(dec.steps, vec![1.0, 1.0]);
         // telemetry range comes back through the header
         assert!((headers[0].range() - 4.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixed_layout_decodes_through_narrow_rows() {
+        // quantized (4-bit) + fp32 + quantized (9-bit, odd width →
+        // generic fallback) in one payload: the narrow decoder must
+        // track the bit position across row kinds and keep each row in
+        // its own backing store.
+        let m = mm3();
+        let qcodes_a = vec![1u32, 15, 0, 9, 4];
+        let raw_b = vec![0.5f32, -2.25, f32::MIN_POSITIVE, 7.0];
+        let qcodes_c = vec![511u32, 0, 257];
+        let mut w = BitWriter::new();
+        w.put_slice(&qcodes_a, 4);
+        for &v in &raw_b {
+            w.put(u32::from_le_bytes(v.to_le_bytes()), 32);
+        }
+        w.put_slice(&qcodes_c, 9);
+        let payload = w.finish();
+        let segments = vec![
+            SegmentHeader { bits: 4, level: 15, min: -0.5, step: 0.1 },
+            SegmentHeader { bits: 32, level: 0, min: 0.0, step: 0.0 },
+            SegmentHeader { bits: 9, level: 511, min: 0.25, step: 0.01 },
+        ];
+        let u = Update {
+            round: 0, client_id: 0, num_samples: 1, train_loss: 0.0,
+            segments, payload,
+        };
+        for mode in [CodecMode::Narrow, CodecMode::Reference] {
+            let mut dec = DecodedUpdate::new();
+            decode_update_into_mode(&m, &u, &mut dec, mode).unwrap();
+            let want: Vec<f32> = qcodes_a
+                .iter()
+                .map(|&c| c as f32)
+                .chain(raw_b.iter().copied())
+                .chain(qcodes_c.iter().map(|&c| c as f32))
+                .collect();
+            assert_eq!(dec.codes_f32(&m), want, "{mode:?}");
+            assert_eq!(dec.mins, vec![-0.5, 0.0, 0.25], "{mode:?}");
+            assert_eq!(dec.steps, vec![0.1, 1.0, 0.01], "{mode:?}");
+            if mode == CodecMode::Narrow {
+                assert_eq!(dec.rows, vec![Row::Quant(0), Row::Fp32(0), Row::Quant(5)]);
+                assert_eq!(dec.qcodes.len(), 8);
+                assert_eq!(dec.fcodes.len(), 4);
+            } else {
+                // reference path: everything is an f32 row
+                assert!(dec.qcodes.is_empty());
+                assert_eq!(dec.fcodes.len(), 12);
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_and_reference_folds_are_bit_identical() {
+        let m = mm3();
+        let levels = vec![255u32, 1, 511];
+        let ranges = vec![1.0f32, 0.5, 2.0];
+        let mins = vec![-0.4f32, 0.0, -1.0];
+        let plan = QuantPlan::new(&levels, &ranges);
+        let codes = vec![3.0, 255.0, 17.0, 99.0, 0.0, 1.0, 0.0, 1.0, 1.0, 511.0, 0.0, 300.0];
+        let (headers, payload) = encode_quantized(&m, &plan, &mins, &codes);
+        let u = Update {
+            round: 0, client_id: 0, num_samples: 1, train_loss: 0.0,
+            segments: headers, payload,
+        };
+        let w = 0.173f32;
+        let mut narrow = DecodedUpdate::new();
+        decode_update_into_mode(&m, &u, &mut narrow, CodecMode::Narrow).unwrap();
+        let mut reference = DecodedUpdate::new();
+        decode_update_into_mode(&m, &u, &mut reference, CodecMode::Reference).unwrap();
+        for (lo, hi) in [(0usize, m.d), (0, 3), (3, 11), (11, 12), (2, 7)] {
+            let mut acc_n = vec![0.05f32; hi - lo];
+            let mut acc_r = vec![0.05f32; hi - lo];
+            fold_range(&m, &narrow, w, lo, hi, &mut acc_n);
+            fold_range(&m, &reference, w, lo, hi, &mut acc_r);
+            let bn: Vec<u32> = acc_n.iter().map(|x| x.to_bits()).collect();
+            let br: Vec<u32> = acc_r.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bn, br, "range [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn fused_encode_matches_split_encode_on_manifest() {
+        // Whole-update check over a multi-segment manifest (the per-
+        // segment kernel equivalence is property-tested in wire::swar):
+        // identical headers, payload and EF residual.
+        let m = mm3();
+        let levels = vec![15u32, 255, 7];
+        let ranges = vec![1.0f32, 0.0, 3.0]; // middle segment degenerate
+        let plan = QuantPlan::new(&levels, &ranges);
+        let delta: Vec<f32> = (0..m.d).map(|i| -0.6 + 0.13 * i as f32).collect();
+        let mins = vec![-0.6f32, 0.0, 0.57];
+        let seed = 1234u32;
+
+        let codes = crate::runtime::native::stochastic_quantize(
+            &m, &delta, &mins, &plan.sinv, &plan.maxcode, seed,
+        );
+        let mut res_split = vec![0.0f32; m.d];
+        for (l, seg) in m.segments.iter().enumerate() {
+            let (mn, st) = (mins[l], plan.step[l]);
+            for j in seg.offset..seg.offset + seg.size {
+                res_split[j] = delta[j] - (mn + codes[j] * st);
+            }
+        }
+        let (h_split, p_split) = encode_quantized(&m, &plan, &mins, &codes);
+
+        let mut res_fused = vec![0.0f32; m.d];
+        let (h_fused, p_fused) =
+            encode_quantized_fused(&m, &plan, &mins, &delta, seed, Some(&mut res_fused));
+
+        assert_eq!(h_split, h_fused);
+        assert_eq!(p_split, p_fused);
+        let ba: Vec<u32> = res_split.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = res_fused.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ba, bb);
     }
 
     #[test]
@@ -334,7 +656,7 @@ mod tests {
                 payload,
             };
             decode_update_into(&m, &u, &mut out).unwrap();
-            assert_eq!(out.codes, codes);
+            assert_eq!(out.codes_f32(&m), codes);
             assert_eq!(out.mins.len(), 2);
         }
     }
@@ -388,7 +710,7 @@ mod tests {
     }
 
     #[test]
-    fn truncated_payload_rejected() {
+    fn truncated_payload_rejected_in_both_modes() {
         let m = mm();
         let plan = QuantPlan::new(&[255, 255], &[1.0, 1.0]);
         let codes = vec![1.0; 7];
@@ -402,7 +724,10 @@ mod tests {
             segments: headers,
             payload,
         };
-        assert!(decode_update(&m, &u).is_err());
+        for mode in [CodecMode::Narrow, CodecMode::Reference] {
+            let mut out = DecodedUpdate::new();
+            assert!(decode_update_into_mode(&m, &u, &mut out, mode).is_err(), "{mode:?}");
+        }
     }
 
     #[test]
@@ -450,5 +775,18 @@ mod tests {
         let bits = update_wire_bits(&m, &u);
         // 7 codes * 4 bits = 28 -> 4 payload bytes = 32 bits, + 2 headers * 88
         assert_eq!(bits, 32 + 2 * 88);
+    }
+
+    #[test]
+    fn encode_capacity_hint_is_exact() {
+        // The encoder must reserve exactly ceil(sum(size_l * bits_l)/8):
+        // the payload vector never reallocates and never over-reserves
+        // to the 16-bit worst case.
+        let m = mm3();
+        let plan = QuantPlan::new(&[1, 255, 511], &[1.0, 1.0, 1.0]);
+        assert_eq!(packed_payload_bytes(&m, &plan), (5 + 4 * 8 + 3 * 9 + 7) / 8);
+        let codes = vec![0.0f32; m.d];
+        let (_, payload) = encode_quantized(&m, &plan, &[0.0; 3], &codes);
+        assert_eq!(payload.len(), packed_payload_bytes(&m, &plan));
     }
 }

@@ -16,7 +16,12 @@
 //!   a worker the moment it lands, on the pool's **priority lane**, so
 //!   in-process decodes jump ahead of not-yet-started round jobs and
 //!   overlap the receive window fully (matching TCP mode).  Updates are
-//!   then ordered by `client_id`.
+//!   then ordered by `client_id`.  Decodes land in **narrow rows**
+//!   (`u16` codes for quantized segments, [`codec::DecodedUpdate`]):
+//!   half the buffer memory — which directly multiplies what a given
+//!   `--decode-buffers` bound holds — and half the fold read traffic,
+//!   unpacked through the width-specialized SWAR kernels
+//!   ([`crate::wire::swar`]).
 //! * **Fold overlap** ([`ServerOpts::fold_overlap`], on by default):
 //!   when every client's sample count is known before the round (always
 //!   in-process; from round 1 over TCP), aggregation weights are fixed
@@ -72,7 +77,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 use super::client::ClientState;
 use super::codec;
 use super::pool::{self, Job, Task, TaskSender, WorkerPool};
-use crate::config::{AggregateMode, RunConfig};
+use crate::config::{AggregateMode, CodecMode, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::runtime::{ModelRuntime, Runtime};
@@ -129,6 +134,10 @@ pub struct ServerOpts {
     /// it only caps the buffers retained between rounds.  Bit-identical
     /// results for any value.
     pub decode_buffers: usize,
+    /// Codec data path for update decode: narrow `u16` rows through the
+    /// SWAR kernels (default) or the scalar f32 reference.  Decoded
+    /// codes are identical either way, so results are bit-identical.
+    pub codec: CodecMode,
     /// Pool handle for server-side stages (decode pipeline, shard fold,
     /// eval slices); `None` runs the server fully serial.
     pub tasks: Option<TaskSender>,
@@ -143,6 +152,7 @@ impl ServerOpts {
             eval_threads: 1,
             fold_overlap: false,
             decode_buffers: 0,
+            codec: CodecMode::Narrow,
             tasks: None,
         }
     }
@@ -169,10 +179,15 @@ type DecodeReply = std::result::Result<(Update, codec::DecodedUpdate), String>;
 
 /// Run one update's decode inside a pool task, containing panics: the
 /// body of every pipelined decode closure.
-fn decode_task(model: &ModelRuntime, u: Update, mut buf: codec::DecodedUpdate) -> DecodeReply {
+fn decode_task(
+    model: &ModelRuntime,
+    u: Update,
+    mut buf: codec::DecodedUpdate,
+    mode: CodecMode,
+) -> DecodeReply {
     let cid = u.client_id;
     let out = catch_unwind(AssertUnwindSafe(move || {
-        let res = codec::decode_update_into(&model.mm, &u, &mut buf)
+        let res = codec::decode_update_into_mode(&model.mm, &u, &mut buf, mode)
             .map_err(|e| format!("decoding update from client {cid}: {e:#}"));
         (u, buf, res)
     }));
@@ -582,6 +597,7 @@ impl Server {
             .expect("pipelined path requires a pool")
             .clone();
         let n = clients.len();
+        let mode = self.opts.codec;
         let (tx, rx) = channel::<DecodeReply>();
         for c in clients.iter_mut() {
             let u = c.recv_update()?;
@@ -590,7 +606,7 @@ impl Server {
             let model = Arc::clone(&self.model);
             let tx = tx.clone();
             tasks.send(Task::Exec(Box::new(move || {
-                let _ = tx.send(decode_task(&model, u, buf));
+                let _ = tx.send(decode_task(&model, u, buf, mode));
             })))?;
         }
         drop(tx);
@@ -713,10 +729,11 @@ impl Server {
             };
 
             // Dispatch the decode on the priority lane.
+            let mode = self.opts.codec;
             let model = Arc::clone(&self.model);
             let tx2 = tx.clone();
             tasks.send(Task::Exec(Box::new(move || {
-                let _ = tx2.send(OverlapEv::Decoded(pos, decode_task(&model, u, buf)));
+                let _ = tx2.send(OverlapEv::Decoded(pos, decode_task(&model, u, buf, mode)));
             })))?;
 
             // Opportunistically absorb completions between receives so
@@ -820,7 +837,7 @@ impl Server {
         self.acc.resize(d, 0.0);
         for u in updates {
             let mut dec = std::mem::take(&mut self.dec);
-            codec::decode_update_into(&self.model.mm, u, &mut dec)
+            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, self.opts.codec)
                 .with_context(|| format!("decoding update from client {}", u.client_id))?;
             let w = u.num_samples as f32 / total_samples as f32;
             codec::fold_range(&self.model.mm, &dec, w, 0, d, &mut self.acc);
@@ -836,7 +853,10 @@ impl Server {
     }
 
     /// Fused path: materialize the `n x d` inputs and run the aggregate
-    /// executable (XLA/Pallas kernel when built with `pjrt`).
+    /// executable (XLA/Pallas kernel when built with `pjrt`).  The
+    /// executable consumes f32 code rows, so the narrow `u16` rows are
+    /// widened here ([`codec::DecodedUpdate::extend_codes_f32`] — the
+    /// fused-mode shim; exact for codes below 2^16).
     fn aggregate_fused(&mut self, updates: &[Update], total_samples: u64) -> Result<()> {
         let n = updates.len();
         let l = self.model.mm.num_segments();
@@ -847,9 +867,9 @@ impl Server {
         let mut weights = Vec::with_capacity(n);
         for u in updates {
             let mut dec = std::mem::take(&mut self.dec);
-            codec::decode_update_into(&self.model.mm, u, &mut dec)
+            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, self.opts.codec)
                 .with_context(|| format!("decoding update from client {}", u.client_id))?;
-            codes.extend_from_slice(&dec.codes);
+            dec.extend_codes_f32(&self.model.mm, &mut codes);
             mins.extend_from_slice(&dec.mins);
             steps.extend_from_slice(&dec.steps);
             self.dec = dec;
@@ -1101,6 +1121,7 @@ impl Session {
                 eval_threads: self.cfg.resolved_eval_threads(threads),
                 fold_overlap: self.cfg.fold_overlap,
                 decode_buffers: self.cfg.decode_buffers,
+                codec: self.cfg.codec,
                 tasks: Some(pool.sender()),
             },
         )?;
@@ -1119,6 +1140,7 @@ impl Session {
                         &self.model,
                         &root,
                         self.cfg.error_feedback,
+                        self.cfg.codec,
                     )),
                     jobs: pool.sender(),
                     pending: None,

@@ -24,6 +24,10 @@ use crate::wire::transport::{TcpTransport, Transport};
 struct RemoteClient {
     id: u32,
     t: TcpTransport,
+    /// Shard size learned from the worker's ready `Join` during the
+    /// handshake (None for pre-`num_samples` workers) — lets the
+    /// fold-overlap weight plan exist at round 0 instead of round 1.
+    samples: Option<u32>,
 }
 
 impl ClientHandle for RemoteClient {
@@ -45,6 +49,10 @@ impl ClientHandle for RemoteClient {
             Message::Update(u) => Ok(u),
             other => anyhow::bail!("expected Update, got {other:?}"),
         }
+    }
+
+    fn num_samples(&self) -> Option<u32> {
+        self.samples
     }
 
     fn uplink_bytes(&self) -> u64 {
@@ -85,23 +93,59 @@ pub fn serve(
     )?;
 
     let config_json = cfg.to_json().to_string_compact();
-    let mut clients: Vec<Box<dyn ClientHandle + '_>> = Vec::with_capacity(n);
+    let mut remotes: Vec<RemoteClient> = Vec::with_capacity(n);
     for _ in 0..n {
         let (stream, peer) = listener.accept().context("accept")?;
         let mut t = TcpTransport::new(stream)?;
-        let id = match t.recv()? {
-            Message::Join { client_id } => client_id,
+        let (id, samples) = match t.recv()? {
+            Message::Join { client_id, num_samples } => (client_id, num_samples),
             other => anyhow::bail!("expected Join, got {other:?}"),
         };
         ensure!((id as usize) < n, "client id {id} out of range");
         t.send(&Message::Welcome { client_id: id, config_json: config_json.clone() })?;
         crate::info!("serve", "worker {id} joined from {peer}");
-        clients.push(Box::new(RemoteClient { id, t }));
+        remotes.push(RemoteClient { id, t, samples });
     }
-    clients.sort_by_key(|c| c.id());
-    for (i, c) in clients.iter().enumerate() {
-        ensure!(c.id() == i as u32, "duplicate or missing client ids");
+    remotes.sort_by_key(|c| c.id);
+    for (i, c) in remotes.iter().enumerate() {
+        ensure!(c.id == i as u32, "duplicate or missing client ids");
     }
+
+    // Ready phase: each worker re-sends `Join` once it has materialized
+    // its shard, now carrying `num_samples` — the aggregation weight
+    // plan the fold-overlap path needs *before* round 0's updates
+    // arrive (previously the server only learned the counts from the
+    // first round's updates, so TCP fold overlap started at round 1).
+    // Version tolerance is at the *frame* level (`num_samples` is
+    // optional on the wire, and a ready frame without it merely
+    // downgrades that worker to the learn-at-round-1 behavior); the
+    // handshake itself requires a same-revision worker that sends the
+    // ready message — server and workers have always had to ship from
+    // the same build (the run config crosses the wire in `Welcome`),
+    // so a pre-ready worker would block here rather than degrade.  The
+    // log line makes a stuck handshake diagnosable (workers load their
+    // datasets before acking, which can legitimately take a while).
+    crate::info!("serve", "waiting for {n} ready handshakes");
+    for c in remotes.iter_mut() {
+        match c.t.recv()? {
+            Message::Join { client_id, num_samples } => {
+                ensure!(
+                    client_id == c.id,
+                    "worker {} sent a ready Join for client {client_id}",
+                    c.id
+                );
+                if let Some(s) = num_samples {
+                    crate::info!("serve", "worker {} ready ({s} samples)", c.id);
+                }
+                c.samples = num_samples.or(c.samples);
+            }
+            other => anyhow::bail!("expected ready Join from worker {}, got {other:?}", c.id),
+        }
+    }
+    let mut clients: Vec<Box<dyn ClientHandle + '_>> = remotes
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn ClientHandle + '_>)
+        .collect();
 
     let mut server = Server::new(
         Arc::clone(&model),
@@ -111,11 +155,12 @@ pub fn serve(
             aggregate: cfg.aggregate,
             agg_shards: cfg.resolved_agg_shards(server_threads),
             eval_threads: cfg.resolved_eval_threads(server_threads),
-            // Remote handles don't know their shard size up front, so
-            // fold overlap kicks in from round 1 (the server learns the
-            // counts from round 0's updates).
+            // Remote handles carry their shard size from the ready
+            // handshake, so fold overlap is active from round 0 (legacy
+            // workers without `num_samples` degrade to round 1).
             fold_overlap: cfg.fold_overlap,
             decode_buffers: cfg.decode_buffers,
+            codec: cfg.codec,
             tasks: Some(pool.sender()),
         },
     )?;
@@ -149,7 +194,9 @@ pub fn serve(
 /// worker materializes exactly the same shard it would own in-process.
 pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     let mut t = TcpTransport::connect(addr)?;
-    t.send(&Message::Join { client_id: id })?;
+    // The initial Join can't carry the shard size yet — the run config
+    // (which determines the sharding) only arrives in the Welcome.
+    t.send(&Message::Join { client_id: id, num_samples: None })?;
     let cfg = match t.recv()? {
         Message::Welcome { client_id, config_json } => {
             ensure!(client_id == id, "server assigned a different id");
@@ -178,8 +225,11 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     let my_shard = Arc::new(train.subset(&shards[id as usize]));
     let root = Rng::new(cfg.seed);
     let mut state = ClientState::with_options(
-        id, my_shard, cfg.policy.build(), cfg.lr, &model, &root, cfg.error_feedback,
+        id, my_shard, cfg.policy.build(), cfg.lr, &model, &root, cfg.error_feedback, cfg.codec,
     );
+    // Ready handshake: re-send Join carrying the shard size so the
+    // server's fold-overlap weight plan exists before round 0.
+    t.send(&Message::Join { client_id: id, num_samples: Some(state.num_samples()) })?;
     crate::info!("worker", "client {id} ready ({} samples)", state.num_samples());
 
     loop {

@@ -67,6 +67,43 @@
 //! task): the panic payload surfaces as a task-level `Err` at the
 //! submitter instead of silently shrinking the pool.
 //!
+//! ## Codec kernel layer
+//!
+//! FedDQ's bit width *descends* as training converges (Eq. 10), so the
+//! hot path's steady state is narrow codes — 1/2/4/8 bits.  The codec
+//! is built around that ([`wire::swar`], [`coordinator::codec`]):
+//!
+//! * **Bytes moved per wire byte.**  A `b`-bit code occupies `b/8`
+//!   payload bytes on the wire, but the pre-rewrite server expanded
+//!   every code to an f32 (4 bytes) at decode and re-read that row per
+//!   accumulator shard: at 4-bit codes that is `4 / 0.5 = 8x` the wire
+//!   bytes through memory on decode, again on every fold pass.  Narrow
+//!   `u16` rows halve both (2 bytes/code), and the width-specialized
+//!   unpack/pack kernels remove the per-code refill logic that
+//!   dominated the generic loops.
+//! * **Why `u16` rows stay bit-exact.**  Wire widths are at most 16
+//!   bits, so codes are integers below 2^16 — exactly representable in
+//!   `u16` *and* in `f32`.  The fold widens each code back with
+//!   `c as f32` and applies the unchanged expression
+//!   `acc += w * (code * step + min)` in the unchanged client order,
+//!   so every aggregate — and hence every `RunReport`, including
+//!   `params_hash` — is bit-identical to the f32-row path.  The scalar
+//!   path survives as [`config::CodecMode::Reference`], and
+//!   `rust/tests/parallel_determinism.rs` crosses the two over the
+//!   full scheduler knob matrix.
+//! * **SWAR width table.**  The specialized kernels splat one `u64`
+//!   into 64 / 32 / 16 / 8 / 4 codes at widths 1 / 2 / 4 / 8 / 16 via
+//!   shift-mask; odd widths fall back to the generic `get_slice` loop
+//!   (they only appear transiently as FedDQ's bit curve descends).
+//!   The client's encode is **fused**: one clamp-round-pack pass over
+//!   the raw delta ([`coordinator::codec::encode_quantized_fused`]) —
+//!   no `d`-length codes vector, no `u32` scratch — drawing the same
+//!   stochastic-rounding stream as the quantize executable, so the
+//!   payload is byte-identical.  Per-width throughput lands in
+//!   `BENCH_hotpath.json` (`unpack_w{1,2,4,8,16}_gbps`,
+//!   `pack_w*_gbps`, `encode_fused_gbps`, `fold_narrow_gbps`) and is
+//!   gated by CI's `bench-smoke`.
+//!
 //! ### Determinism contract
 //!
 //! A run is a pure function of its [`config::RunConfig`]: for any

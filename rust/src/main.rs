@@ -44,6 +44,7 @@ COMMON TRAIN FLAGS:
   --eval-threads <n>    server eval slices (0 = pool, 1 = serial)  [0]
   --decode-buffers <n>  decode-buffer bound (0 = one per client)   [0]
   --fold-overlap <bool> overlap the shard fold with receives       [true]
+  --codec <narrow|reference>  SWAR u16 rows vs scalar f32 oracle   [narrow]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)

@@ -15,11 +15,16 @@ pub fn width_for_level(s: u32) -> u32 {
 }
 
 /// Writer that packs variable-width unsigned integers into bytes.
+///
+/// Invariant: outside of a `put*` call the accumulator holds fewer than
+/// 8 bits (`nbits < 8`) — every entry point flushes whole bytes before
+/// returning.  The width-specialized packers in [`super::swar`] rely on
+/// this to splat whole `u64` words without overflow.
 #[derive(Default)]
 pub struct BitWriter {
-    buf: Vec<u8>,
-    acc: u64,
-    nbits: u32,
+    pub(crate) buf: Vec<u8>,
+    pub(crate) acc: u64,
+    pub(crate) nbits: u32,
 }
 
 impl BitWriter {
@@ -94,11 +99,17 @@ impl BitWriter {
 }
 
 /// Reader over bit-packed bytes.
+///
+/// Invariant: the accumulator `acc` always holds the next `nbits` bits
+/// of the stream verbatim (low bits first), sourced from
+/// `buf[..byte]` — so the reader's absolute bit position is
+/// `byte * 8 - nbits` and [`super::swar`]'s width-specialized unpackers
+/// can recompute any suffix of the stream directly from `buf`.
 pub struct BitReader<'a> {
-    buf: &'a [u8],
-    byte: usize,
-    acc: u64,
-    nbits: u32,
+    pub(crate) buf: &'a [u8],
+    pub(crate) byte: usize,
+    pub(crate) acc: u64,
+    pub(crate) nbits: u32,
 }
 
 impl<'a> BitReader<'a> {
@@ -278,6 +289,52 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn get_slice_wide_widths_through_byte_tail_refill() {
+        // Widths 17..=32 near the end of the buffer: the u64 bulk refill
+        // needs 8 whole bytes, so the last values force the byte-at-a-time
+        // tail path.  Buffer lengths here are deliberately not multiples
+        // of 8 so every width crosses the bulk->tail boundary mid-value.
+        for width in 17..=32u32 {
+            let max = if width == 32 { u32::MAX as u64 } else { (1u64 << width) - 1 };
+            let mut rng = crate::util::rng::Rng::new(width as u64);
+            // Few enough values that most of the stream sits in the tail.
+            for n in [1usize, 2, 3, 5, 9] {
+                let vals: Vec<u32> = (0..n).map(|_| (rng.next_u64() % (max + 1)) as u32).collect();
+                let mut w = BitWriter::new();
+                w.put_slice(&vals, width);
+                let bytes = w.finish();
+                // bulk path where possible, tail path for the rest
+                let mut r = BitReader::new(&bytes);
+                let mut out = Vec::new();
+                r.get_slice(&mut out, n, width).unwrap();
+                assert_eq!(out, vals, "width {width} n {n}");
+                // scalar reader agrees
+                let mut r2 = BitReader::new(&bytes);
+                for (i, &v) in vals.iter().enumerate() {
+                    assert_eq!(r2.get(width), Some(v), "width {width} item {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn get_slice_wide_width_truncation_leaves_reader_unchanged() {
+        // A wide read that cannot be satisfied from the byte tail must
+        // return None and commit nothing — the next, smaller read still
+        // sees the stream from the same position.
+        for width in [17u32, 23, 31, 32] {
+            let mut w = BitWriter::new();
+            w.put(0b1011, 4);
+            let bytes = w.finish(); // 1 byte total: 4 bits of tail padding
+            let mut r = BitReader::new(&bytes);
+            let mut out = Vec::new();
+            assert_eq!(r.get_slice(&mut out, 1, width), None, "width {width}");
+            assert!(out.is_empty());
+            assert_eq!(r.get(4), Some(0b1011), "reader state must be untouched");
+        }
     }
 
     #[test]

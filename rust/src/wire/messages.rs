@@ -58,7 +58,18 @@ pub struct Update {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Client -> server: join the federation.
-    Join { client_id: u32 },
+    ///
+    /// `num_samples` (the client's shard size, the aggregation-weight
+    /// numerator) is optional on the wire: `None` encodes the legacy
+    /// 5-byte frame, `Some` appends one u32, and the decoder accepts
+    /// both — version-tolerant in each direction.  A worker sends
+    /// `None` on connect (the sharding config only arrives in the
+    /// `Welcome`) and re-sends `Some(n)` as its ready handshake, which
+    /// gives the server the fold-overlap weight plan at round 0.
+    Join {
+        client_id: u32,
+        num_samples: Option<u32>,
+    },
     /// Server -> client: accepted; carries the run-config JSON so remote
     /// workers configure themselves identically.
     Welcome { client_id: u32, config_json: String },
@@ -186,9 +197,13 @@ impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
-            Message::Join { client_id } => {
+            Message::Join { client_id, num_samples } => {
                 w.u8(TAG_JOIN);
                 w.u32(*client_id);
+                // present-by-length: None is exactly the legacy frame
+                if let Some(s) = num_samples {
+                    w.u32(*s);
+                }
             }
             Message::Welcome { client_id, config_json } => {
                 w.u8(TAG_WELCOME);
@@ -236,7 +251,7 @@ impl Message {
     /// property test asserts equality.
     pub fn encoded_len(&self) -> usize {
         match self {
-            Message::Join { .. } => 1 + 4,
+            Message::Join { num_samples, .. } => 1 + 4 + if num_samples.is_some() { 4 } else { 0 },
             Message::Welcome { config_json, .. } => 1 + 4 + 4 + config_json.len(),
             Message::Broadcast { params, losses, .. } => {
                 let losses_len = match losses {
@@ -254,7 +269,11 @@ impl Message {
     pub fn decode(buf: &[u8]) -> Result<Message> {
         let mut r = Reader::new(buf);
         let msg = match r.u8()? {
-            TAG_JOIN => Message::Join { client_id: r.u32()? },
+            TAG_JOIN => Message::Join {
+                client_id: r.u32()?,
+                // version-tolerant: old frames end after client_id
+                num_samples: if r.pos < r.buf.len() { Some(r.u32()?) } else { None },
+            },
             TAG_WELCOME => Message::Welcome {
                 client_id: r.u32()?,
                 config_json: r.str()?,
@@ -316,7 +335,8 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
-        roundtrip(&Message::Join { client_id: 7 });
+        roundtrip(&Message::Join { client_id: 7, num_samples: None });
+        roundtrip(&Message::Join { client_id: 7, num_samples: Some(4200) });
         roundtrip(&Message::Welcome {
             client_id: 7,
             config_json: r#"{"model":"mlp"}"#.into(),
@@ -346,6 +366,30 @@ mod tests {
     }
 
     #[test]
+    fn join_decodes_legacy_and_extended_frames() {
+        // A pre-`num_samples` sender emits exactly tag + u32: the new
+        // decoder must accept it as None (version tolerance), and a
+        // None Join must encode back to that same legacy layout.
+        let legacy = [1u8, 42, 0, 0, 0];
+        assert_eq!(
+            Message::decode(&legacy).unwrap(),
+            Message::Join { client_id: 42, num_samples: None }
+        );
+        assert_eq!(
+            Message::Join { client_id: 42, num_samples: None }.encode(),
+            legacy.to_vec()
+        );
+        // The extended frame appends one u32 and still round-trips.
+        let extended = [1u8, 42, 0, 0, 0, 88, 1, 0, 0];
+        assert_eq!(
+            Message::decode(&extended).unwrap(),
+            Message::Join { client_id: 42, num_samples: Some(344) }
+        );
+        // A half-written samples field is rejected, not misread.
+        assert!(Message::decode(&[1u8, 42, 0, 0, 0, 88]).is_err());
+    }
+
+    #[test]
     fn rejects_truncation_and_trailing() {
         let bytes = Message::Broadcast { round: 1, params: vec![1.0; 8].into(), losses: None }.encode();
         assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
@@ -358,7 +402,8 @@ mod tests {
     #[test]
     fn encoded_len_matches_encode() {
         let msgs = vec![
-            Message::Join { client_id: 7 },
+            Message::Join { client_id: 7, num_samples: None },
+            Message::Join { client_id: 7, num_samples: Some(600) },
             Message::Welcome { client_id: 7, config_json: r#"{"model":"mlp"}"#.into() },
             Message::Broadcast { round: 3, params: vec![1.0; 13].into(), losses: None },
             Message::Broadcast { round: 4, params: vec![0.5; 3].into(), losses: Some((2.3, 0.7)) },

@@ -8,9 +8,15 @@
 //! or a real TCP socket ([`transport`]).  The ledger counts the bytes that
 //! cross the transport — not an analytic estimate.
 
+//! The narrow-width hot loops (1–16-bit codes, FedDQ's steady state)
+//! run on width-specialized SWAR kernels ([`swar`]): whole-`u64`
+//! splats for widths 1/2/4/8/16 plus the fused quantize→pack pass,
+//! all byte-identical to the scalar [`bitpack`] reference.
+
 pub mod bitpack;
 pub mod frame;
 pub mod messages;
+pub mod swar;
 pub mod transport;
 
 /// Append `src` to `dst` as little-endian f32 bytes: one bulk memcpy on

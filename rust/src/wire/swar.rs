@@ -1,0 +1,490 @@
+//! Width-specialized codec kernels: SWAR unpack, SWAR pack, and the
+//! fused quantize→pack pass.
+//!
+//! FedDQ's code width *descends* as training converges (Eq. 10), so the
+//! narrow widths — 1/2/4/8 bits, occasionally 16 — are the steady-state
+//! common case on the wire.  The generic [`BitReader::get_slice`] loop
+//! pays a refill check plus a 128-bit shift *per code*; at 4 bits that
+//! is ~16 branchy operations per payload byte.  The kernels here splat
+//! whole 64-bit words instead (SWAR — SIMD within a register):
+//!
+//! | width | codes per `u64` splat |
+//! |-------|-----------------------|
+//! |   1   | 64                    |
+//! |   2   | 32                    |
+//! |   4   | 16                    |
+//! |   8   |  8                    |
+//! |  16   |  4                    |
+//!
+//! One unaligned load, then `codes-per-word` shift-mask extractions
+//! with no per-code refill logic.  Odd widths (3, 5, ..., 15) fall back
+//! to the generic loop — they only appear transiently while FedDQ's
+//! bit curve descends through them.
+//!
+//! All kernels produce/consume **exactly** the bit stream of the scalar
+//! reference ([`BitWriter::put_slice`] / [`BitReader::get_slice`]): the
+//! byte layout is fully determined by the logical bit stream, not by
+//! the flush schedule, and the property tests below cross-check every
+//! width against the scalar path over random lengths, bit phases and
+//! degenerate plans.  Codes are `u16` (wire widths are <= 16 bits), the
+//! narrow-row representation of
+//! [`DecodedUpdate`](crate::coordinator::codec::DecodedUpdate).
+
+use super::bitpack::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+/// Unpack `n` codes of `width` (0..=16) bits into `out`, appending.
+///
+/// Dispatches to a width-specialized SWAR kernel for 1/2/4/8/16 and a
+/// generic shift loop otherwise.  Returns `None` when fewer than
+/// `n * width` bits remain.  The failure contract is deliberately
+/// *stricter* than [`BitReader::get_slice`]'s: the reader state is
+/// unchanged (as there) **and** nothing is appended to `out`, whereas
+/// `get_slice` can leave the decodable prefix in its output vector.
+/// Callers that reuse scratch buffers across segments rely on this.
+pub fn unpack_u16(r: &mut BitReader, out: &mut Vec<u16>, n: usize, width: u32) -> Option<()> {
+    debug_assert!(width <= 16);
+    match width {
+        0 => {
+            out.extend(std::iter::repeat(0).take(n));
+            Some(())
+        }
+        1 => unpack_swar::<1>(r, out, n),
+        2 => unpack_swar::<2>(r, out, n),
+        4 => unpack_swar::<4>(r, out, n),
+        8 => unpack_swar::<8>(r, out, n),
+        16 => unpack_swar::<16>(r, out, n),
+        w => unpack_generic(r, out, n, w),
+    }
+}
+
+/// Pack `codes` at `width` (0..=16) bits, appending to the writer.
+///
+/// Mirrors [`unpack_u16`]: width-specialized SWAR for 1/2/4/8/16
+/// (`64/width` codes combined into one `u64` store), generic loop
+/// otherwise.  Byte output is identical to [`BitWriter::put_slice`].
+pub fn pack_u16(w: &mut BitWriter, codes: &[u16], width: u32) {
+    debug_assert!(width <= 16);
+    match width {
+        0 => {}
+        1 => pack_swar::<1>(w, codes),
+        2 => pack_swar::<2>(w, codes),
+        4 => pack_swar::<4>(w, codes),
+        8 => pack_swar::<8>(w, codes),
+        16 => pack_swar::<16>(w, codes),
+        _ => pack_generic(w, codes, width),
+    }
+}
+
+/// The reader's absolute bit position: bytes consumed minus the bits
+/// still buffered in the accumulator (see the invariant on
+/// [`BitReader`]).
+fn bit_position(r: &BitReader) -> u64 {
+    r.byte as u64 * 8 - r.nbits as u64
+}
+
+/// Re-point the reader at an absolute bit position, rebuilding the
+/// accumulator invariant from the underlying bytes.
+fn set_bit_position(r: &mut BitReader, bitpos: u64) {
+    let byte = (bitpos / 8) as usize;
+    let phase = (bitpos % 8) as u32;
+    if phase == 0 {
+        r.byte = byte;
+        r.acc = 0;
+        r.nbits = 0;
+    } else {
+        // Partial byte: buffer its remaining high bits.
+        r.acc = (r.buf[byte] as u64) >> phase;
+        r.nbits = 8 - phase;
+        r.byte = byte + 1;
+    }
+}
+
+/// SWAR unpack at a const width `W` in {1, 2, 4, 8, 16}.
+///
+/// Works in absolute bit positions: each iteration loads one unaligned
+/// `u64` at the current byte, shifts out the sub-byte phase, and
+/// extracts every whole code the word holds (`(64 - phase) / W`,
+/// i.e. the full `64 / W` splat once the stream is byte-phase 0).  The
+/// final sub-word tail is assembled from the remaining bytes.
+fn unpack_swar<const W: u32>(r: &mut BitReader, out: &mut Vec<u16>, n: usize) -> Option<()> {
+    let buf = r.buf;
+    let mut bitpos = bit_position(r);
+    // Fail atomically (nothing consumed, nothing appended) when the
+    // payload cannot hold n codes — get_slice's truncation contract.
+    if (buf.len() as u64 * 8).saturating_sub(bitpos) < n as u64 * W as u64 {
+        return None;
+    }
+    out.reserve(n);
+    let mask = (1u64 << W) - 1; // W <= 16
+    let mut rem = n;
+    while rem > 0 {
+        let byte = (bitpos / 8) as usize;
+        let phase = (bitpos % 8) as u32;
+        if byte + 8 <= buf.len() {
+            let mut word = u64::from_le_bytes(buf[byte..byte + 8].try_into().unwrap()) >> phase;
+            // >= 57 valid bits, so k >= 1 for every W <= 16.
+            let k = (((64 - phase) / W) as usize).min(rem);
+            for _ in 0..k {
+                out.push((word & mask) as u16);
+                word >>= W;
+            }
+            bitpos += k as u64 * W as u64;
+            rem -= k;
+        } else {
+            // Byte tail: assemble the final partial word.  The up-front
+            // size check guarantees it holds all `rem` remaining codes.
+            let mut word = 0u64;
+            for (i, &b) in buf[byte..].iter().enumerate() {
+                word |= (b as u64) << (8 * i as u32);
+            }
+            word >>= phase;
+            for _ in 0..rem {
+                out.push((word & mask) as u16);
+                word >>= W;
+            }
+            bitpos += rem as u64 * W as u64;
+            rem = 0;
+        }
+    }
+    set_bit_position(r, bitpos);
+    Some(())
+}
+
+/// Generic unpack for odd widths: the [`BitReader::get_slice`] loop,
+/// writing `u16` codes.
+fn unpack_generic(r: &mut BitReader, out: &mut Vec<u16>, n: usize, width: u32) -> Option<()> {
+    debug_assert!((1..=16).contains(&width));
+    out.reserve(n);
+    let mask = (1u64 << width) - 1;
+    // Same u128 widening as get_slice: a u64 refill always fits above
+    // the < 64-bit residue.
+    let mut acc = r.acc as u128;
+    let mut nbits = r.nbits;
+    let mut byte = r.byte;
+    let start = out.len();
+    for _ in 0..n {
+        while nbits < width {
+            if byte + 8 <= r.buf.len() {
+                let w = u64::from_le_bytes(r.buf[byte..byte + 8].try_into().unwrap());
+                acc |= (w as u128) << nbits;
+                nbits += 64;
+                byte += 8;
+            } else if byte < r.buf.len() {
+                acc |= (r.buf[byte] as u128) << nbits;
+                nbits += 8;
+                byte += 1;
+            } else {
+                out.truncate(start); // commit nothing on truncation
+                return None;
+            }
+        }
+        out.push((acc as u64 & mask) as u16);
+        acc >>= width;
+        nbits -= width;
+    }
+    debug_assert!(nbits < 64, "residue must fit the u64 accumulator");
+    r.acc = acc as u64;
+    r.nbits = nbits;
+    r.byte = byte;
+    Some(())
+}
+
+/// SWAR pack at a const width `W` in {1, 2, 4, 8, 16}: combine
+/// `64 / W` codes into one word, splice it over the sub-byte residue
+/// and store 8 bytes at once.  Because `(64 / W) * W == 64` exactly,
+/// the residue phase is invariant across groups.
+fn pack_swar<const W: u32>(bw: &mut BitWriter, codes: &[u16]) {
+    let k = (64 / W) as usize;
+    bw.buf.reserve(codes.len() * W as usize / 8 + 16);
+    let mut acc = bw.acc; // < 8 bits (the BitWriter invariant)
+    let nbits = bw.nbits;
+    debug_assert!(nbits < 8);
+    let groups = codes.chunks_exact(k);
+    let tail = groups.remainder();
+    for group in groups {
+        let mut word = 0u64;
+        for (i, &c) in group.iter().enumerate() {
+            debug_assert!(W == 16 || (c as u64) < (1u64 << W));
+            word |= (c as u64) << (i as u32 * W);
+        }
+        // nbits residue + exactly 64 new bits: flush the low 64,
+        // keep the (unchanged-width) high residue.
+        let wide = ((word as u128) << nbits) | acc as u128;
+        bw.buf.extend_from_slice(&(wide as u64).to_le_bytes());
+        acc = (wide >> 64) as u64;
+    }
+    bw.acc = acc;
+    // nbits is phase-invariant over whole groups; the tail goes through
+    // the generic byte-flush path.
+    pack_generic(bw, tail, W);
+}
+
+/// Generic pack for odd widths (and SWAR group tails): the
+/// [`BitWriter::put_slice`] loop over `u16` codes.
+fn pack_generic(bw: &mut BitWriter, codes: &[u16], width: u32) {
+    let mut acc = bw.acc;
+    let mut nbits = bw.nbits;
+    for &c in codes {
+        debug_assert!(width >= 16 || (c as u64) < (1u64 << width));
+        acc |= (c as u64) << nbits;
+        nbits += width;
+        if nbits >= 32 {
+            bw.buf.extend_from_slice(&(acc as u32).to_le_bytes());
+            acc >>= 32;
+            nbits -= 32;
+        }
+    }
+    while nbits >= 8 {
+        bw.buf.push(acc as u8);
+        acc >>= 8;
+        nbits -= 8;
+    }
+    bw.acc = acc;
+    bw.nbits = nbits;
+}
+
+/// Fused quantize→pack over one segment: the client's encode hot path
+/// collapsed into a single pass.
+///
+/// For every element of `delta` this computes the stochastic code
+/// exactly as the quantize executable does —
+/// `c = clamp(floor((x - min) * sinv + u), 0, maxcode)` with
+/// `u ~ U[0,1)` drawn from `rng` in flat element order (the
+/// `kernels/ref.py` contract, mirrored by
+/// [`stochastic_quantize`](crate::runtime::native::stochastic_quantize))
+/// — and packs it straight into the writer at `width` bits.  No
+/// `d`-length codes vector, no `u32` scratch: one read of the delta,
+/// one write of wire bytes.
+///
+/// When `residual` is given (error feedback), it receives
+/// `delta[j] - (min + c * step)` per element — the identical expression
+/// the unfused client path computes, so EF trajectories are
+/// bit-identical across paths.
+///
+/// The f32 arithmetic is kept expression-for-expression identical to
+/// the unfused path; codes are exact small integers in f32, so the
+/// packed payload is byte-identical too (property-tested below).
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_pack_segment(
+    bw: &mut BitWriter,
+    delta: &[f32],
+    min: f32,
+    sinv: f32,
+    maxcode: f32,
+    step: f32,
+    width: u32,
+    rng: &mut Rng,
+    residual: Option<&mut [f32]>,
+) {
+    debug_assert!((1..=16).contains(&width));
+    bw.buf.reserve(delta.len() * width as usize / 8 + 16);
+    let mut acc = bw.acc;
+    let mut nbits = bw.nbits;
+    let mut res = residual;
+    if let Some(r) = &res {
+        debug_assert_eq!(r.len(), delta.len());
+    }
+    for (j, &x) in delta.iter().enumerate() {
+        // Exactly stochastic_quantize's per-element expression (same
+        // ops, same order — bit-identical codes).
+        let u = rng.next_f32();
+        let y = ((x - min) * sinv + u).floor();
+        let c = y.clamp(0.0, maxcode);
+        if let Some(r) = &mut res {
+            r[j] = x - (min + c * step);
+        }
+        // `as u32` matches the unfused encoder's f32 -> u32 conversion
+        // (clamped codes are integral and <= 65535; NaN saturates to 0
+        // on both paths).
+        acc |= (c as u64) << nbits;
+        nbits += width;
+        if nbits >= 32 {
+            bw.buf.extend_from_slice(&(acc as u32).to_le_bytes());
+            acc >>= 32;
+            nbits -= 32;
+        }
+    }
+    while nbits >= 8 {
+        bw.buf.push(acc as u8);
+        acc >>= 8;
+        nbits -= 8;
+    }
+    bw.acc = acc;
+    bw.nbits = nbits;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn random_codes(g: &mut Gen, n: usize, width: u32) -> Vec<u16> {
+        let max = if width == 0 { 0u64 } else { (1u64 << width) - 1 };
+        g.vec_of(n, |g| (g.rng.next_u64() % (max + 1)) as u16)
+    }
+
+    #[test]
+    fn prop_pack_matches_scalar_reference_at_any_phase() {
+        // Every width (specialized and odd), random lengths, and a
+        // random-width prefix so the kernels start at all 8 bit phases.
+        check("swar-pack-equiv", 300, |g: &mut Gen| {
+            let width = g.int(0, 16) as u32;
+            let n = g.size(0, 400);
+            let pre_w = g.int(0, 7) as u32;
+            let pre_v = if pre_w == 0 { 0 } else { (g.rng.next_u64() % (1 << pre_w)) as u32 };
+            let codes = random_codes(g, n, width);
+            let mut ws = BitWriter::new();
+            ws.put(pre_v, pre_w);
+            let scalar: Vec<u32> = codes.iter().map(|&c| c as u32).collect();
+            ws.put_slice(&scalar, width);
+            let mut wk = BitWriter::new();
+            wk.put(pre_v, pre_w);
+            pack_u16(&mut wk, &codes, width);
+            if ws.bit_len() != wk.bit_len() {
+                return Err(format!("bit_len {} != {}", wk.bit_len(), ws.bit_len()));
+            }
+            if ws.finish() != wk.finish() {
+                return Err(format!("width {width} n {n} phase {pre_w}: bytes diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_unpack_matches_scalar_reference_at_any_phase() {
+        check("swar-unpack-equiv", 300, |g: &mut Gen| {
+            let width = g.int(0, 16) as u32;
+            let n = g.size(0, 400);
+            let pre_w = g.int(0, 7) as u32;
+            let pre_v = if pre_w == 0 { 0 } else { (g.rng.next_u64() % (1 << pre_w)) as u32 };
+            let codes = random_codes(g, n, width);
+            let mut w = BitWriter::new();
+            w.put(pre_v, pre_w);
+            let scalar: Vec<u32> = codes.iter().map(|&c| c as u32).collect();
+            w.put_slice(&scalar, width);
+            let bytes = w.finish();
+
+            // Scalar reference: get_slice after the same prefix.
+            let mut rr = BitReader::new(&bytes);
+            if pre_w > 0 && rr.get(pre_w) != Some(pre_v) {
+                return Err("prefix mismatch (reference)".into());
+            }
+            let mut want = Vec::new();
+            rr.get_slice(&mut want, n, width).ok_or("reference truncated")?;
+
+            // Kernel under test.
+            let mut rk = BitReader::new(&bytes);
+            if pre_w > 0 && rk.get(pre_w) != Some(pre_v) {
+                return Err("prefix mismatch (kernel)".into());
+            }
+            let mut got = Vec::new();
+            unpack_u16(&mut rk, &mut got, n, width).ok_or("kernel truncated")?;
+            let got32: Vec<u32> = got.iter().map(|&c| c as u32).collect();
+            if got32 != want {
+                return Err(format!("width {width} n {n} phase {pre_w}: codes diverged"));
+            }
+            // Reader state must agree too: both readers continue in
+            // lockstep on a trailing sentinel.
+            let mut wt = BitWriter::new();
+            wt.put(pre_v, pre_w);
+            wt.put_slice(&scalar, width);
+            wt.put(0x5a, 7);
+            let bytes2 = wt.finish();
+            let mut rr2 = BitReader::new(&bytes2);
+            let mut rk2 = BitReader::new(&bytes2);
+            if pre_w > 0 {
+                rr2.get(pre_w);
+                rk2.get(pre_w);
+            }
+            let mut sink = Vec::new();
+            rr2.get_slice(&mut sink, n, width).ok_or("ref re-read")?;
+            let mut sink16 = Vec::new();
+            unpack_u16(&mut rk2, &mut sink16, n, width).ok_or("kernel re-read")?;
+            if rr2.get(7) != Some(0x5a) || rk2.get(7) != Some(0x5a) {
+                return Err(format!("width {width}: reader positions diverged after unpack"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unpack_truncated_fails_atomically() {
+        for width in [1u32, 2, 3, 4, 8, 11, 16] {
+            let n = 50usize;
+            let codes = vec![0u16; n];
+            let mut w = BitWriter::new();
+            pack_u16(&mut w, &codes, width);
+            let mut bytes = w.finish();
+            bytes.truncate(bytes.len() - 1);
+            let mut r = BitReader::new(&bytes);
+            let mut out = vec![7u16; 3]; // pre-existing content survives
+            assert_eq!(unpack_u16(&mut r, &mut out, n, width), None, "width {width}");
+            assert_eq!(out, vec![7u16; 3]);
+            // reader still usable from the same position
+            assert_eq!(r.get(width), Some(0));
+        }
+    }
+
+    #[test]
+    fn prop_fused_quantize_pack_matches_split_path() {
+        use crate::coordinator::codec::QuantPlan;
+        // The fused kernel must produce byte-identical payload and
+        // bit-identical residuals vs quantize-then-pack, including on
+        // degenerate plans (zero/subnormal/inf ranges -> collapsed
+        // segments) and deltas containing extremes.
+        check("swar-fused-encode-equiv", 150, |g: &mut Gen| {
+            let n = g.size(0, 300);
+            let level = g.int(1, 65_535) as u32;
+            let range = match g.int(0, 4) {
+                0 => 0.0,
+                1 => 1.0e-40,
+                2 => f32::INFINITY,
+                _ => g.f32(1e-6, 4.0),
+            };
+            let min = g.f32(-2.0, 2.0);
+            let plan = QuantPlan::new(&[level], &[range]);
+            let width = crate::quant::math::bits_for_level(level);
+            let delta: Vec<f32> = g.vec_of(n, |g| match g.int(0, 8) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                _ => g.f32(-3.0, 3.0),
+            });
+            let seed = g.rng.next_u32();
+
+            // Split path: quantize (flat rng order) then u32 pack.
+            let mut rng_a = Rng::new(seed as u64);
+            let mut codes = Vec::with_capacity(n);
+            let mut res_a = vec![0.0f32; n];
+            for (j, &x) in delta.iter().enumerate() {
+                let u = rng_a.next_f32();
+                let y = ((x - min) * plan.sinv[0] + u).floor();
+                let c = y.clamp(0.0, plan.maxcode[0]);
+                res_a[j] = x - (min + c * plan.step[0]);
+                codes.push(c as u32);
+            }
+            let mut wa = BitWriter::new();
+            wa.put_slice(&codes, width);
+
+            // Fused path.
+            let mut rng_b = Rng::new(seed as u64);
+            let mut res_b = vec![0.0f32; n];
+            let mut wb = BitWriter::new();
+            quantize_pack_segment(
+                &mut wb, &delta, min, plan.sinv[0], plan.maxcode[0], plan.step[0],
+                width, &mut rng_b, Some(&mut res_b),
+            );
+
+            if wa.finish() != wb.finish() {
+                return Err(format!("level {level} range {range}: payload diverged"));
+            }
+            let bits_a: Vec<u32> = res_a.iter().map(|x| x.to_bits()).collect();
+            let bits_b: Vec<u32> = res_b.iter().map(|x| x.to_bits()).collect();
+            if bits_a != bits_b {
+                return Err("residuals diverged".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -179,7 +179,7 @@ mod tests {
             t.bytes_received()
         });
         let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
-        let msg = Message::Join { client_id: 42 };
+        let msg = Message::Join { client_id: 42, num_samples: Some(1234) };
         c.send(&msg).unwrap();
         let echoed = c.recv().unwrap();
         assert_eq!(echoed, msg);

@@ -154,7 +154,7 @@ fn codec_roundtrip_through_real_quantizer() {
         payload,
     };
     let dec = codec::decode_update(mm, &u).unwrap();
-    assert_eq!(dec.codes, codes);
+    assert_eq!(dec.codes_f32(mm), codes);
     for l in 0..mm.num_segments() {
         assert_eq!(dec.mins[l], mins[l]);
         assert!((dec.steps[l] - plan.step[l]).abs() < 1e-12);

@@ -1,11 +1,13 @@
 //! The parallel round engine's determinism contract: for any worker
 //! thread count, accumulator shard count, eval slice count,
-//! decode-buffer bound and fold-overlap setting the in-process
-//! `Session` must produce a bit-identical `RunReport` — same round
-//! records, same bit ledger, same final parameter hash.  Also pins the
-//! streaming-vs-fused aggregation equivalence on the mlp config.
+//! decode-buffer bound, fold-overlap setting **and codec path**
+//! (narrow u16 rows + SWAR kernels + fused encode vs the scalar f32
+//! reference) the in-process `Session` must produce a bit-identical
+//! `RunReport` — same round records, same bit ledger, same final
+//! parameter hash.  Also pins the streaming-vs-fused aggregation
+//! equivalence on the mlp config.
 
-use feddq::config::{AggregateMode, RunConfig};
+use feddq::config::{AggregateMode, CodecMode, RunConfig};
 use feddq::coordinator::Session;
 use feddq::metrics::RunReport;
 use feddq::quant::PolicyConfig;
@@ -194,6 +196,83 @@ fn tight_decode_bound_under_error_feedback_stays_deterministic() {
     b.decode_buffers = 1;
     b.agg_shards = 3;
     assert_reports_identical(&run(a), &run(b), "EF: overlap+buffers=1 vs plain");
+}
+
+#[test]
+fn narrow_swar_codec_matches_scalar_reference_path() {
+    // The tentpole contract of the narrow-codec rewrite: u16 rows,
+    // SWAR unpack and the client's fused quantize→pack must reproduce
+    // the scalar reference path bit for bit — across the existing
+    // threads/shards/overlap/buffers knob matrix, not just serially.
+    let mut reference = mlp_cfg(1);
+    reference.codec = CodecMode::Reference;
+    let base = run(reference);
+
+    // narrow, fully serial
+    let mut narrow_serial = mlp_cfg(1);
+    narrow_serial.codec = CodecMode::Narrow;
+    assert_reports_identical(&base, &run(narrow_serial), "reference vs narrow (serial)");
+
+    // narrow under the full parallel knob matrix
+    let mut narrow_par = mlp_cfg(4);
+    narrow_par.codec = CodecMode::Narrow;
+    narrow_par.agg_shards = 5;
+    narrow_par.eval_threads = 3;
+    narrow_par.fold_overlap = true;
+    narrow_par.decode_buffers = 2;
+    assert_reports_identical(
+        &base,
+        &run(narrow_par),
+        "reference serial vs narrow threads=4/shards=5/eval=3/overlap/buffers=2",
+    );
+
+    // and the mirror image: reference path on the parallel server
+    let mut reference_par = mlp_cfg(3);
+    reference_par.codec = CodecMode::Reference;
+    reference_par.agg_shards = 4;
+    reference_par.fold_overlap = true;
+    reference_par.decode_buffers = 1;
+    assert_reports_identical(
+        &base,
+        &run(reference_par),
+        "reference serial vs reference threads=3/shards=4/overlap/buffers=1",
+    );
+}
+
+#[test]
+fn narrow_codec_matches_reference_under_error_feedback() {
+    // The fused encoder also produces the EF residual; its banked
+    // state feeds the *next* round's update, so any deviation would
+    // compound — crossing codec paths with EF pins the residual
+    // expression bit for bit.
+    let mut reference = mlp_cfg(2);
+    reference.policy = PolicyConfig::Fixed { bits: 2 };
+    reference.error_feedback = true;
+    reference.codec = CodecMode::Reference;
+    let mut narrow = mlp_cfg(4);
+    narrow.policy = PolicyConfig::Fixed { bits: 2 };
+    narrow.error_feedback = true;
+    narrow.codec = CodecMode::Narrow;
+    narrow.agg_shards = 3;
+    narrow.decode_buffers = 1;
+    assert_reports_identical(
+        &run(reference),
+        &run(narrow),
+        "EF: reference vs narrow/fused encode",
+    );
+}
+
+#[test]
+fn narrow_codec_matches_reference_on_fp32_policy() {
+    // fp32 uplink exercises the mixed-row decoder (f32 rows through
+    // the same narrow DecodedUpdate) rather than the SWAR unpackers.
+    let mut reference = mlp_cfg(2);
+    reference.policy = PolicyConfig::Fp32;
+    reference.codec = CodecMode::Reference;
+    let mut narrow = mlp_cfg(3);
+    narrow.policy = PolicyConfig::Fp32;
+    narrow.codec = CodecMode::Narrow;
+    assert_reports_identical(&run(reference), &run(narrow), "fp32: reference vs narrow");
 }
 
 #[test]

@@ -1,0 +1,53 @@
+#!/usr/bin/env python3
+"""Render the codec width -> GB/s table from BENCH_hotpath.json as
+GitHub-flavored markdown (for the bench-smoke job summary).
+
+Shows, per wire width, the SWAR pack/unpack kernels next to the generic
+get_slice/put_slice baselines and the unpack speedup, plus the fused
+encode and narrow-fold rows.  Zero values mean the row was not produced
+by this run (or the bench is unarmed) and are rendered as "-".
+
+Usage:
+    bench_summary.py BENCH_hotpath.json >> "$GITHUB_STEP_SUMMARY"
+"""
+
+import json
+import sys
+
+WIDTHS = (1, 2, 4, 8, 16)
+
+
+def fmt(v):
+    return f"{v:.3f}" if isinstance(v, (int, float)) and v > 0 else "-"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hotpath.json"
+    with open(path) as f:
+        data = json.load(f)
+
+    print("### Codec kernels: width -> GB/s")
+    print()
+    print("| width (bits) | unpack SWAR | unpack generic | unpack speedup | pack SWAR | pack generic |")
+    print("|---:|---:|---:|---:|---:|---:|")
+    for w in WIDTHS:
+        us = data.get(f"unpack_w{w}_gbps", 0.0)
+        ug = data.get(f"unpack_{w}bit_gbps", 0.0)
+        ps = data.get(f"pack_w{w}_gbps", 0.0)
+        pg = data.get(f"pack_{w}bit_gbps", 0.0)
+        speed = f"{us / ug:.2f}x" if us and ug else "-"
+        print(f"| {w} | {fmt(us)} | {fmt(ug)} | {speed} | {fmt(ps)} | {fmt(pg)} |")
+    print()
+    print("| fused pipeline row | GB/s |")
+    print("|---|---:|")
+    for key, label in (
+        ("encode_fused_gbps", "client encode, fused quantize-pack"),
+        ("encode_split_gbps", "client encode, split quantize + pack"),
+        ("fold_narrow_gbps", "server fold, narrow u16 rows"),
+        ("fold_f32rows_gbps", "server fold, f32 reference rows"),
+    ):
+        print(f"| {label} | {fmt(data.get(key, 0.0))} |")
+
+
+if __name__ == "__main__":
+    main()
