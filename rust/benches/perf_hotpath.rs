@@ -31,8 +31,14 @@ use feddq::wire::frame;
 use feddq::wire::messages::{Message, SegmentHeader, Update};
 use feddq::wire::swar;
 
-/// One e2e run at `threads` workers; returns s/round.
-fn e2e_round_secs(threads: usize, rounds: usize, fold_overlap: bool) -> anyhow::Result<f64> {
+/// One e2e run at `threads` workers and `participation` sampling;
+/// returns s/round.
+fn e2e_round_secs(
+    threads: usize,
+    rounds: usize,
+    fold_overlap: bool,
+    participation: f32,
+) -> anyhow::Result<f64> {
     let setup = bs::setup_for("mlp");
     let mut cfg = RunConfig::default_for("mlp");
     cfg.policy = PolicyConfig::FedDq { resolution: 0.005 };
@@ -42,6 +48,7 @@ fn e2e_round_secs(threads: usize, rounds: usize, fold_overlap: bool) -> anyhow::
     cfg.eval_every = 1000; // isolate the round path from eval
     cfg.threads = threads;
     cfg.fold_overlap = fold_overlap;
+    cfg.participation = participation;
     let t0 = std::time::Instant::now();
     let mut session = Session::new(cfg)?;
     let setup_secs = t0.elapsed().as_secs_f64();
@@ -50,7 +57,7 @@ fn e2e_round_secs(threads: usize, rounds: usize, fold_overlap: bool) -> anyhow::
     let run_secs = t1.elapsed().as_secs_f64();
     let per_round = run_secs / report.rounds.len() as f64;
     println!(
-        "threads={threads} fold_overlap={fold_overlap}: setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
+        "threads={threads} fold_overlap={fold_overlap} participation={participation}: setup {:.2}s; {} rounds in {:.2}s = {:.3} s/round ({} clients x tau={} local steps + quantize + pack + aggregate)",
         setup_secs,
         report.rounds.len(),
         run_secs,
@@ -59,6 +66,43 @@ fn e2e_round_secs(threads: usize, rounds: usize, fold_overlap: bool) -> anyhow::
         session.manifest().tau,
     );
     Ok(per_round)
+}
+
+/// Makespan of dispatching `durs[id]`-long busy-wait jobs in `order`
+/// onto the pool's round lane (median over `reps`).  Measures what
+/// dispatch order alone buys when jobs outnumber workers — the
+/// straggler-aware scheduler's win.
+fn dispatch_makespan_secs(
+    tasks: &feddq::coordinator::pool::TaskSender,
+    order: &[u32],
+    durs: &[f64],
+    reps: usize,
+) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (tx, rx) = channel::<()>();
+        let t0 = Instant::now();
+        for &id in order {
+            let dur = durs[id as usize];
+            let tx = tx.clone();
+            tasks
+                .send(Task::RoundExec(Box::new(move || {
+                    let t = Instant::now();
+                    while t.elapsed().as_secs_f64() < dur {
+                        std::hint::spin_loop();
+                    }
+                    let _ = tx.send(());
+                })))
+                .unwrap();
+        }
+        drop(tx);
+        for _ in 0..order.len() {
+            rx.recv().unwrap();
+        }
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
 }
 
 /// In-process recv/decode overlap: median time until the last of
@@ -383,11 +427,50 @@ fn main() -> anyhow::Result<()> {
     json.push(("inproc_decode_priority_secs".into(), prio));
     json.push(("inproc_decode_overlap_speedup".into(), overlap_speedup));
 
+    bench_header("round scheduler: slowest-first dispatch vs id-order (synthetic stragglers)");
+    // 6 jobs on 2 workers, one 10x straggler with the highest id: in
+    // id-order dispatch the straggler starts last and runs alone at the
+    // tail; the production scheduler's slowest-first plan starts it
+    // first so the fast jobs pack around it.  Uses the real
+    // RoundScheduler (EWMA-fed) so the bench exercises the production
+    // ordering code, not a reimplementation.
+    {
+        use feddq::coordinator::sched::RoundScheduler;
+        use feddq::sim::latency::{LatencyModel, LatencyProfile};
+        let fast = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 0.004 } else { 0.01 };
+        let n_jobs = 6usize;
+        let mut durs = vec![fast; n_jobs];
+        durs[n_jobs - 1] = fast * 10.0; // the straggler
+        let mut sched =
+            RoundScheduler::new(n_jobs, 1.0, None, LatencyModel::new(LatencyProfile::Off, 7), 7)?;
+        for (id, &d) in durs.iter().enumerate() {
+            sched.observe(id as u32, d);
+        }
+        let plan = sched.plan_round(0);
+        assert_eq!(plan.dispatch[0] as usize, n_jobs - 1, "slowest must dispatch first");
+        let id_order: Vec<u32> = (0..n_jobs as u32).collect();
+        let pool2 = WorkerPool::new(2, Arc::clone(&model));
+        let tasks2 = pool2.sender();
+        let reps = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 5 } else { 11 };
+        let t_id = dispatch_makespan_secs(&tasks2, &id_order, &durs, reps);
+        let t_slow = dispatch_makespan_secs(&tasks2, &plan.dispatch, &durs, reps);
+        let slowfirst_speedup = t_id / t_slow.max(1e-12);
+        println!(
+            "makespan, 6 jobs (one 10x straggler) on 2 workers: id-order {:.2} ms vs slowest-first {:.2} ms = {slowfirst_speedup:.2}x",
+            t_id * 1e3,
+            t_slow * 1e3,
+        );
+        json.push(("straggler_idorder_secs".into(), t_id));
+        json.push(("straggler_slowfirst_secs".into(), t_slow));
+        json.push(("straggler_slowfirst_speedup".into(), slowfirst_speedup));
+        drop(tasks2);
+    }
+
     bench_header("end-to-end federated rounds (mlp, 10 clients, in-proc)");
     let rounds = if std::env::var("FEDDQ_BENCH_FAST").is_ok() { 3 } else { 6 };
-    let t1 = e2e_round_secs(1, rounds, true)?;
-    let t4 = e2e_round_secs(4, rounds, true)?;
-    let t4_no_overlap = e2e_round_secs(4, rounds, false)?;
+    let t1 = e2e_round_secs(1, rounds, true, 1.0)?;
+    let t4 = e2e_round_secs(4, rounds, true, 1.0)?;
+    let t4_no_overlap = e2e_round_secs(4, rounds, false, 1.0)?;
     let speedup = t1 / t4;
     println!(
         "round engine speedup threads=4 vs threads=1: {speedup:.2}x ({} cores available)",
@@ -398,6 +481,17 @@ fn main() -> anyhow::Result<()> {
     json.push(("e2e_round_speedup_t4_vs_t1".into(), speedup));
     json.push(("e2e_round_secs_threads4_no_fold_overlap".into(), t4_no_overlap));
     json.push(("fold_overlap_speedup".into(), t4_no_overlap / t4.max(1e-12)));
+
+    bench_header("round scheduler: full cohort vs sampled cohort (participation 0.5)");
+    // Same engine, half the cohort per round: the round cost should
+    // drop roughly with the sampled fraction once threads < clients.
+    let t4_sampled = e2e_round_secs(4, rounds, true, 0.5)?;
+    println!(
+        "s/round threads=4: full {t4:.3} vs participation=0.5 {t4_sampled:.3} ({:.3}s saved/round)",
+        t4 - t4_sampled
+    );
+    json.push(("sched_sampled_round_secs".into(), t4_sampled));
+    json.push(("sched_full_vs_sampled_secs".into(), t4 - t4_sampled));
 
     bs::write_bench_json("hotpath", &json);
     Ok(())

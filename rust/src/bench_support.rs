@@ -18,13 +18,20 @@ use crate::Result;
 /// Per-benchmark workload defaults, scaled for the CPU backend (the
 /// paper's round budgets: 100 / 82 / 25).
 pub struct FigureSetup {
+    /// Model name the figure benchmarks.
     pub model: &'static str,
+    /// Communication rounds to run.
     pub rounds: usize,
+    /// Train-set size (synthetic fallback).
     pub train_size: usize,
+    /// Test-set size (synthetic fallback).
     pub test_size: usize,
+    /// Evaluate every k rounds.
     pub eval_every: usize,
 }
 
+/// The shared workload defaults for `model`, honoring the env knobs in
+/// the module docs.
 pub fn setup_for(model: &'static str) -> FigureSetup {
     let fast = std::env::var("FEDDQ_BENCH_FAST").is_ok();
     // Round budgets tuned to the 1-core CPU testbed (~3s / ~7s / ~18s

@@ -1,15 +1,107 @@
-//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//! Hand-rolled CLI argument parser (clap is unavailable offline), plus
+//! the `feddq` binary's canonical usage text.
 //!
 //! Supports `--flag value`, `--flag=value` and boolean `--flag`; unknown
 //! flags are an error with the list of accepted ones, so typos fail fast.
+//!
+//! [`USAGE`] and [`KNOWN_FLAGS`] live here (not in `main.rs`) so tests
+//! can hold them honest: every accepted flag must appear in the usage
+//! text, every `--flag` token in the usage text must be accepted, and
+//! the fenced usage block in `docs/CLI.md` must match [`USAGE`]
+//! byte-for-byte (see the tests at the bottom of this file).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+/// The `feddq` binary's usage text (printed on `feddq` with no args).
+/// `docs/CLI.md` embeds this exact text; a test diffs the two.
+pub const USAGE: &str = "\
+feddq — communication-efficient federated learning with descending quantization
+
+USAGE: feddq <COMMAND> [FLAGS]
+
+COMMANDS:
+  train    run a federated training session in-process
+  serve    run the federated server (TCP), waiting for workers
+  worker   run one federated client process (TCP)
+  info     print the artifact manifest summary
+
+TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
+  --model <mlp|vanilla_cnn|cnn4|resnet18>   model/benchmark    [mlp]
+  --policy <feddq[:res]|feddq-whole[:res]|adaquantfl[:s0]|fixed:<bits>|fp32>
+                        uplink quantization policy             [feddq:0.005]
+  --rounds <n>          communication rounds                   [50]
+  --lr <f>              local SGD step size                    [0.1]
+  --seed <n>            root seed                              [17]
+  --sharding <iid|dirichlet:<alpha>>                           [iid]
+  --dataset <fashion_mnist|cifar10>  (must match the model)    [per model]
+  --eval-every <k>      evaluate every k rounds                [1]
+  --train-size <n>      synthetic train set size               [4000]
+  --test-size <n>       synthetic test set size                [1000]
+  --target-acc <f>      stop at this test accuracy             [off]
+  --error-feedback      bank quantization residuals (EF-SGD)   [off]
+  --threads <n>         client worker threads (0 = cores)      [0]
+  --aggregate <streaming|fused>  server aggregation path       [streaming]
+  --agg-shards <n>      accumulator shards (0 = pool, 1 = serial) [0]
+  --eval-threads <n>    server eval slices (0 = pool, 1 = serial)  [0]
+  --decode-buffers <n>  decode-buffer bound (0 = one per client)   [0]
+  --fold-overlap <bool> overlap the shard fold with receives       [true]
+  --codec <narrow|reference>  SWAR u16 rows vs scalar f32 oracle   [narrow]
+  --participation <f>   client fraction sampled per round, (0,1]   [1.0]
+  --round-deadline <s>  simulated round deadline (needs --sim-latency) [off]
+  --sim-latency <off|uniform:<lo>:<hi>|lognormal:<median>:<sigma>>
+                        simulated per-client latency model         [off]
+  --artifacts <dir>     AOT artifacts directory                [artifacts]
+  --data-dir <dir>      real dataset directory                 [data]
+  --out <path>          write the per-round report (.csv/.json)
+  --quiet               suppress per-round progress
+  --verbose             debug logging
+
+SERVE/WORKER FLAGS:
+  --addr <host:port>    server address          [127.0.0.1:7177]
+  --id <n>              worker client id (worker only)
+  --artifacts <dir>     AOT artifacts directory (worker too)
+";
+
+/// Every flag the `feddq` binary accepts across its subcommands; tests
+/// assert [`USAGE`] and `docs/CLI.md` mention each, and nothing else.
+pub const KNOWN_FLAGS: &[&str] = &[
+    "model",
+    "policy",
+    "rounds",
+    "lr",
+    "seed",
+    "sharding",
+    "dataset",
+    "eval-every",
+    "train-size",
+    "test-size",
+    "target-acc",
+    "error-feedback",
+    "threads",
+    "aggregate",
+    "agg-shards",
+    "eval-threads",
+    "decode-buffers",
+    "fold-overlap",
+    "codec",
+    "participation",
+    "round-deadline",
+    "sim-latency",
+    "artifacts",
+    "data-dir",
+    "out",
+    "quiet",
+    "verbose",
+    "addr",
+    "id",
+];
+
 /// Parsed arguments: positional words + `--key value` options.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Bare words in argv order (subcommand names and the like).
     pub positional: Vec<String>,
     opts: BTreeMap<String, String>,
     taken: std::cell::RefCell<Vec<String>>,
@@ -41,15 +133,20 @@ impl Args {
         Ok(args)
     }
 
+    /// Look up `--key`'s value, marking the flag as consumed (the
+    /// [`Self::finish`] typo guard only accepts consumed flags).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.taken.borrow_mut().push(key.to_string());
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// [`Self::get`] with a default for absent flags.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// [`Self::get`] parsed into `T`; `Ok(None)` when absent, an error
+    /// naming the flag when the value does not parse.
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -63,6 +160,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag: true for bare `--key` or `--key true|1|yes`.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -159,6 +257,15 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(c) = args.get("codec") {
         cfg.codec = crate::config::CodecMode::parse(c)?;
     }
+    if let Some(p) = args.get_parse::<f32>("participation")? {
+        cfg.participation = p;
+    }
+    if let Some(d) = args.get_parse::<f64>("round-deadline")? {
+        cfg.round_deadline = Some(d);
+    }
+    if let Some(l) = args.get("sim-latency") {
+        cfg.sim_latency = crate::sim::latency::LatencyProfile::parse(l)?;
+    }
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -202,7 +309,9 @@ mod tests {
             "--model cnn4 --policy adaquantfl:4 --rounds 12 --lr 0.05 \
              --sharding dirichlet:0.5 --target-acc 0.8 --threads 4 \
              --aggregate fused --agg-shards 6 --eval-threads 2 \
-             --decode-buffers 3 --fold-overlap false --codec reference",
+             --decode-buffers 3 --fold-overlap false --codec reference \
+             --participation 0.5 --round-deadline 2.5 \
+             --sim-latency lognormal:1:0.8",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -217,6 +326,12 @@ mod tests {
         assert_eq!(cfg.decode_buffers, 3);
         assert!(!cfg.fold_overlap);
         assert_eq!(cfg.codec, crate::config::CodecMode::Reference);
+        assert_eq!(cfg.participation, 0.5);
+        assert_eq!(cfg.round_deadline, Some(2.5));
+        assert_eq!(
+            cfg.sim_latency,
+            crate::sim::latency::LatencyProfile::LogNormal { median: 1.0, sigma: 0.8 }
+        );
         a.finish().unwrap();
     }
 
@@ -224,5 +339,108 @@ mod tests {
     fn bad_aggregate_mode_rejected() {
         let a = Args::parse(&argv("--aggregate turbo")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_err());
+    }
+
+    #[test]
+    fn bad_scheduler_flags_rejected() {
+        let a = Args::parse(&argv("--participation 1.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--round-deadline -2")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--sim-latency gaussian:1:1")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        // deadline without a latency model: rejected by validate
+        let a = Args::parse(&argv("--round-deadline 2")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--round-deadline 2 --sim-latency lognormal:1:0.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_ok());
+    }
+
+    /// Every `--flag` token appearing in [`USAGE`].
+    fn usage_flags() -> Vec<String> {
+        let mut out = Vec::new();
+        let bytes = USAGE.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b'-' && bytes[i + 1] == b'-' {
+                let start = i + 2;
+                let mut end = start;
+                while end < bytes.len()
+                    && (bytes[end].is_ascii_alphanumeric() || bytes[end] == b'-')
+                {
+                    end += 1;
+                }
+                if end > start {
+                    out.push(String::from_utf8_lossy(&bytes[start..end]).into_owned());
+                }
+                i = end;
+            } else {
+                i += 1;
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    #[test]
+    fn known_flags_match_what_the_commands_actually_consume() {
+        // KNOWN_FLAGS must not be a third hand-maintained list: derive
+        // the truly accepted set from the parser's own consumption
+        // ledger (`Args::taken` records every get, present or not) by
+        // exercising the config builder plus each command's extra gets
+        // (mirroring main.rs), and diff it against KNOWN_FLAGS.  Adding
+        // a flag to run_config_from_args without updating KNOWN_FLAGS —
+        // and hence USAGE and docs/CLI.md — now fails here.
+        let a = Args::parse(&[]).unwrap();
+        run_config_from_args(&a, "mlp").unwrap();
+        // train: --out/--quiet; dispatch: --verbose; serve/worker: --addr/--id
+        let _ = a.get("out");
+        let _ = a.get("quiet");
+        let _ = a.get("verbose");
+        let _ = a.get("addr");
+        let _ = a.get("id");
+        let consumed: std::collections::BTreeSet<String> =
+            a.taken.borrow().iter().cloned().collect();
+        let known: std::collections::BTreeSet<String> =
+            KNOWN_FLAGS.iter().map(|s| s.to_string()).collect();
+        assert_eq!(consumed, known, "KNOWN_FLAGS drifted from the flags the commands consume");
+    }
+
+    #[test]
+    fn usage_lists_exactly_the_accepted_flags() {
+        let in_usage = usage_flags();
+        for f in KNOWN_FLAGS {
+            assert!(
+                in_usage.iter().any(|u| u == f),
+                "--{f} is accepted but missing from USAGE"
+            );
+        }
+        for u in &in_usage {
+            assert!(
+                KNOWN_FLAGS.contains(&u.as_str()),
+                "--{u} appears in USAGE but no command accepts it"
+            );
+        }
+    }
+
+    #[test]
+    fn cli_doc_usage_block_matches_binary() {
+        // docs/CLI.md embeds USAGE in its first ```text fence; any
+        // drift between the doc and the binary fails here.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/docs/CLI.md");
+        let doc = std::fs::read_to_string(path).expect("docs/CLI.md must exist");
+        let fence = "```text\n";
+        let start = doc.find(fence).expect("docs/CLI.md needs a ```text usage fence") + fence.len();
+        let end = start + doc[start..].find("```").expect("unclosed usage fence");
+        assert_eq!(
+            &doc[start..end],
+            USAGE,
+            "docs/CLI.md usage block drifted from cli::USAGE — update the doc"
+        );
+        // and the prose must cover every flag at least once
+        for f in KNOWN_FLAGS {
+            assert!(doc.contains(&format!("--{f}")), "docs/CLI.md never mentions --{f}");
+        }
     }
 }

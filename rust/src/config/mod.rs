@@ -6,6 +6,7 @@ use anyhow::{Context, Result};
 
 use crate::data::{shard::Sharding, DatasetKind};
 use crate::quant::PolicyConfig;
+use crate::sim::latency::LatencyProfile;
 use crate::util::json::Json;
 
 /// How the server folds decoded client updates into the global delta.
@@ -20,6 +21,7 @@ pub enum AggregateMode {
 }
 
 impl AggregateMode {
+    /// Parse `streaming` or `fused`.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "streaming" => Ok(AggregateMode::Streaming),
@@ -28,6 +30,7 @@ impl AggregateMode {
         }
     }
 
+    /// Canonical string form (parseable by [`Self::parse`]).
     pub fn label(&self) -> &'static str {
         match self {
             AggregateMode::Streaming => "streaming",
@@ -50,6 +53,7 @@ pub enum CodecMode {
 }
 
 impl CodecMode {
+    /// Parse `narrow` or `reference`.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "narrow" => Ok(CodecMode::Narrow),
@@ -58,6 +62,7 @@ impl CodecMode {
         }
     }
 
+    /// Canonical string form (parseable by [`Self::parse`]).
     pub fn label(&self) -> &'static str {
         match self {
             CodecMode::Narrow => "narrow",
@@ -85,8 +90,9 @@ pub struct RunConfig {
     pub seed: u64,
     /// Evaluate every k rounds (1 = every round).
     pub eval_every: usize,
-    /// Train/test set sizes when synthesizing data.
+    /// Train set size when synthesizing data.
     pub train_size: usize,
+    /// Test set size when synthesizing data.
     pub test_size: usize,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
@@ -135,6 +141,23 @@ pub struct RunConfig {
     /// codes and folds are bit-identical either way (determinism suite);
     /// `reference` exists as the cross-check oracle and escape hatch.
     pub codec: CodecMode,
+    /// Fraction of clients sampled per round, in (0, 1]; each round's
+    /// cohort is `ceil(participation * n)` clients drawn by a seeded,
+    /// round-keyed RNG (`coordinator::sched`) — bit-reproducible for a
+    /// fixed seed regardless of any other knob.  1.0 = every client
+    /// every round (the historical behavior).
+    pub participation: f32,
+    /// Optional round deadline in *simulated* seconds: over-sample
+    /// `2 * ceil(participation * n)` candidates, price them with the
+    /// latency model and keep the deterministic fastest
+    /// `ceil(participation * n)` that finish by the deadline (ties by
+    /// client id).  Candidates cut land in the round's `dropped` count.
+    /// `None` = no deadline.
+    pub round_deadline: Option<f64>,
+    /// Simulated per-client latency distribution feeding cohort pricing
+    /// and the per-round `sim_makespan_secs` metric (`off` = all costs
+    /// zero).  Purely a model: it never delays real execution.
+    pub sim_latency: LatencyProfile,
 }
 
 impl RunConfig {
@@ -170,6 +193,9 @@ impl RunConfig {
             decode_buffers: 0,
             fold_overlap: true,
             codec: CodecMode::Narrow,
+            participation: 1.0,
+            round_deadline: None,
+            sim_latency: LatencyProfile::Off,
         }
     }
 
@@ -221,6 +247,7 @@ impl RunConfig {
         format!("{}-{}", self.model, self.policy.label())
     }
 
+    /// The full config as JSON (crosses the wire in `Welcome`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::from(self.model.clone())),
@@ -262,9 +289,20 @@ impl RunConfig {
             ("decode_buffers", Json::from(self.decode_buffers)),
             ("fold_overlap", Json::from(self.fold_overlap)),
             ("codec", Json::from(self.codec.label())),
+            ("participation", Json::from(self.participation as f64)),
+            (
+                "round_deadline",
+                match self.round_deadline {
+                    Some(d) => Json::from(d),
+                    None => Json::Null,
+                },
+            ),
+            ("sim_latency", Json::from(self.sim_latency.label())),
         ])
     }
 
+    /// Parse a config written by [`Self::to_json`]; fields introduced
+    /// after a serializer's build default compatibly.
     pub fn from_json(j: &Json) -> Result<RunConfig> {
         let str_at = |k: &str| -> Result<&str> {
             j.get(k).and_then(Json::as_str).with_context(|| format!("config: {k}"))
@@ -316,15 +354,31 @@ impl RunConfig {
                 Some(s) => CodecMode::parse(s)?,
                 None => CodecMode::Narrow,
             },
+            // absent in pre-scheduler configs: full participation, no
+            // deadline, no simulated latency — exactly the old behavior
+            participation: match j.get("participation") {
+                Some(Json::Null) | None => 1.0,
+                Some(v) => v.as_f64().context("config: participation")? as f32,
+            },
+            round_deadline: match j.get("round_deadline") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_f64().context("config: round_deadline")?),
+            },
+            sim_latency: match j.get("sim_latency").and_then(Json::as_str) {
+                Some(s) => LatencyProfile::parse(s)?,
+                None => LatencyProfile::Off,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
     }
 
+    /// [`Self::from_json`] over JSON text.
     pub fn from_json_str(s: &str) -> Result<RunConfig> {
         Self::from_json(&Json::parse(s)?)
     }
 
+    /// Reject configurations no run could execute.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.rounds > 0, "rounds must be positive");
         anyhow::ensure!(self.lr > 0.0 && self.lr.is_finite(), "lr must be positive");
@@ -332,6 +386,20 @@ impl RunConfig {
         anyhow::ensure!(self.train_size > 0 && self.test_size > 0, "dataset sizes");
         if let Some(a) = self.target_accuracy {
             anyhow::ensure!((0.0..=1.0).contains(&a), "target accuracy in [0,1]");
+        }
+        anyhow::ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "participation must be in (0, 1]"
+        );
+        if let Some(d) = self.round_deadline {
+            anyhow::ensure!(d.is_finite() && d > 0.0, "round deadline must be positive");
+            // Constant simulated costs would make the deadline policy's
+            // id tie-break permanently exclude high-id clients.
+            anyhow::ensure!(
+                !self.sim_latency.is_constant(),
+                "round_deadline requires a spreading sim_latency model \
+                 (uniform:..|lognormal:.. with non-zero spread)"
+            );
         }
         Ok(())
     }
@@ -365,6 +433,9 @@ mod tests {
         c.decode_buffers = 4;
         c.fold_overlap = false;
         c.codec = CodecMode::Reference;
+        c.participation = 0.25;
+        c.round_deadline = Some(3.5);
+        c.sim_latency = LatencyProfile::LogNormal { median: 1.5, sigma: 0.75 };
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
@@ -384,6 +455,24 @@ mod tests {
         let mut c = RunConfig::default_for("mlp");
         c.target_accuracy = Some(2.0);
         assert!(c.validate().is_err());
+        let mut c = RunConfig::default_for("mlp");
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default_for("mlp");
+        c.participation = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default_for("mlp");
+        c.round_deadline = Some(-1.0);
+        assert!(c.validate().is_err());
+        // a deadline without a latency model would bias cohorts to low
+        // ids (all candidates tie) — rejected
+        let mut c = RunConfig::default_for("mlp");
+        c.round_deadline = Some(2.0);
+        assert!(c.validate().is_err());
+        c.sim_latency = LatencyProfile::LogNormal { median: 1.0, sigma: 0.0 };
+        assert!(c.validate().is_err(), "sigma 0 is constant — same bias as off");
+        c.sim_latency = LatencyProfile::Uniform { lo: 0.5, hi: 1.5 };
+        assert!(c.validate().is_ok());
     }
 
     #[test]
@@ -399,6 +488,9 @@ mod tests {
             o.remove("decode_buffers");
             o.remove("fold_overlap");
             o.remove("codec");
+            o.remove("participation");
+            o.remove("round_deadline");
+            o.remove("sim_latency");
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.threads, 0);
@@ -408,6 +500,9 @@ mod tests {
         assert_eq!(back.decode_buffers, 0);
         assert!(back.fold_overlap);
         assert_eq!(back.codec, CodecMode::Narrow);
+        assert_eq!(back.participation, 1.0);
+        assert_eq!(back.round_deadline, None);
+        assert_eq!(back.sim_latency, LatencyProfile::Off);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::wire::messages::Update;
 /// all randomness comes from per-client streams derived at construction
 /// (bit-identical results whatever thread runs the round).
 pub struct ClientState {
+    /// This client's id (index into the cohort registry).
     pub id: u32,
     /// Shared (read-only) training shard — `Arc` so the session keeps
     /// one copy per client across runs instead of cloning per state.
@@ -49,12 +50,14 @@ pub struct ClientState {
     /// Codec path: fused quantize→pack (narrow, native backend) or the
     /// split quantize-then-pack reference.
     codec: CodecMode,
-    /// Telemetry from the last round (read by the session's metrics).
+    /// Per-segment ranges observed last round (telemetry).
     pub last_ranges: Vec<f32>,
+    /// Per-segment wire bits decided last round (telemetry).
     pub last_bits: Vec<u32>,
 }
 
 impl ClientState {
+    /// State with default options (no error feedback, narrow codec).
     pub fn new(
         id: u32,
         shard: Arc<Dataset>,
@@ -99,6 +102,7 @@ impl ClientState {
         }
     }
 
+    /// The client's shard size (aggregation weight numerator).
     pub fn num_samples(&self) -> u32 {
         self.shard.len() as u32
     }

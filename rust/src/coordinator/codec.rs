@@ -42,6 +42,7 @@ pub struct QuantPlan {
     pub maxcode: Vec<f32>,
     /// range/s per segment (the decoder's step).
     pub step: Vec<f32>,
+    /// Quantization level `s` per segment (clamped to >= 1).
     pub levels: Vec<u32>,
 }
 
@@ -50,6 +51,8 @@ pub struct QuantPlan {
 pub const RANGE_EPS: f32 = 1e-12;
 
 impl QuantPlan {
+    /// Derive the kernel parameters from per-segment levels and ranges
+    /// (degenerate ranges collapse to constant segments).
     pub fn new(levels: &[u32], ranges: &[f32]) -> QuantPlan {
         let mut sinv = Vec::with_capacity(levels.len());
         let mut maxcode = Vec::with_capacity(levels.len());
@@ -199,7 +202,9 @@ pub fn encode_fp32(
 /// its backing vector; the row length is the segment's `size`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Row {
+    /// `u16` code row starting at this offset in `qcodes`.
     Quant(usize),
+    /// `f32` row starting at this offset in `fcodes`.
     Fp32(usize),
 }
 
@@ -232,6 +237,7 @@ pub struct DecodedUpdate {
 }
 
 impl DecodedUpdate {
+    /// Empty buffers (first decode sizes them).
     pub fn new() -> DecodedUpdate {
         DecodedUpdate::default()
     }

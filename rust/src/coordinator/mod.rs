@@ -9,16 +9,23 @@
 //! is **pipelined with receive** (each `Update` is handed to a worker
 //! as it lands), the streaming accumulator is **sharded** into
 //! contiguous per-worker chunk ranges ([`codec::fold_range`]), and
-//! evaluation batches split into per-worker slices.  Every
-//! configuration (thread count, `agg_shards`, `eval_threads`) is
-//! bit-deterministic: folds visit clients in sorted order inside each
-//! shard, and reductions walk batches in a fixed order.
+//! evaluation batches split into per-worker slices.  On top sits the
+//! **round scheduler** ([`sched`]): per-round cohort sampling
+//! (`--participation`), a simulated-time deadline policy
+//! (`--round-deadline`) and straggler-aware slowest-first dispatch.
+//! Every configuration (thread count, `agg_shards`, `eval_threads`,
+//! participation knobs) is bit-deterministic: cohorts come from a
+//! seed-pure round-keyed RNG, folds visit clients in sorted order
+//! inside each shard, and reductions walk batches in a fixed order.
+//! `ARCHITECTURE.md` at the repo root walks the whole life of a round.
 
 pub mod client;
 pub mod codec;
 pub mod pool;
+pub mod sched;
 pub mod server;
 pub mod topology;
 
 pub use client::ClientState;
+pub use sched::{RoundPlan, RoundScheduler};
 pub use server::{Server, ServerOpts, Session};

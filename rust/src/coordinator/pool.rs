@@ -75,13 +75,22 @@ use super::codec::{self, DecodedUpdate};
 use crate::runtime::ModelRuntime;
 use crate::wire::messages::Update;
 
-/// One client-round job: state in, (state, update) out.
+/// One client-round job: state in, (state, update, compute seconds) out.
 pub struct Job {
+    /// The client's state, moved into the worker for the round.
     pub state: ClientState,
+    /// Round index being processed.
     pub round: u32,
+    /// Shared global parameters (zero-copy broadcast).
     pub params: Arc<[f32]>,
+    /// Global (initial, previous) loss pair for loss-driven policies.
     pub losses: Option<(f32, f32)>,
-    pub reply: Sender<Result<(ClientState, Update)>>,
+    /// Where the worker sends the state, the update and the round's
+    /// measured compute seconds back (or the error).  The timing is
+    /// taken *inside* the worker, so it reflects the client's actual
+    /// local-round cost — not its position in any receive queue — and
+    /// feeds the scheduler's slowest-first EWMA.
+    pub reply: Sender<Result<(ClientState, Update, f64)>>,
 }
 
 /// A boxed pool closure.
@@ -92,8 +101,11 @@ pub type TaskFn = Box<dyn FnOnce() + Send + 'static>;
 /// and `RoundExec` (an arbitrary closure standing in for client-side
 /// work — benches and tests) go to the round lane.
 pub enum Task {
+    /// A client local round (round lane).
     Round(Job),
+    /// Server-side work — decode, fold, eval slice (priority lane).
     Exec(TaskFn),
+    /// An arbitrary closure on the round lane (benches and tests).
     RoundExec(TaskFn),
 }
 
@@ -347,9 +359,10 @@ fn run_task(task: Task, model: &ModelRuntime) {
             let Job { state, round, params, losses, reply } = job;
             let result = catch_unwind(AssertUnwindSafe(move || {
                 let mut state = state;
+                let t0 = std::time::Instant::now();
                 state
                     .process_round(model, round, &params, losses)
-                    .map(|update| (state, update))
+                    .map(|update| (state, update, t0.elapsed().as_secs_f64()))
             }))
             .unwrap_or_else(|p| Err(anyhow!("client round panicked: {}", panic_message(&*p))));
             // A dropped receiver just means the session gave up on the

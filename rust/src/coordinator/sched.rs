@@ -1,0 +1,477 @@
+//! Round scheduler: partial participation and straggler-aware dispatch.
+//!
+//! FedDQ's analysis assumes every client reports every round; at any
+//! realistic scale a round runs over a *sampled cohort* and contends
+//! with stragglers.  [`RoundScheduler`] owns that layer, one instance
+//! per run, and produces one [`RoundPlan`] per round:
+//!
+//! * **Cohort selection** (`--participation f`): `ceil(f * n)` clients
+//!   drawn by a seeded, **round-keyed** RNG — the stream for round `m`
+//!   is derived as `Rng::new(seed).derive("sched").derive("round{m}")`,
+//!   so the selected set is a pure function of `(seed, m, n, f)` and
+//!   bit-reproducible regardless of thread count, knob settings or what
+//!   any earlier round observed.
+//! * **Deadline policy** (`--round-deadline T`, simulated seconds):
+//!   over-samples `2 * ceil(f * n)` candidates (capped at `n`), prices
+//!   each with the [`LatencyModel`], and keeps the deterministic
+//!   first-`ceil(f * n)` by simulated completion time — ties broken by
+//!   client id — dropping any of those that would finish after `T`.
+//!   The cut candidates are the round's `dropped` count; if no
+//!   candidate meets the deadline the single fastest one is kept so a
+//!   round always has a cohort.  **Bias is the point**: a deadline
+//!   policy deliberately prefers fast clients, so persistently slow
+//!   clients are persistently under-selected — the same trade real
+//!   deadline dropout makes (cf. DAdaQuant), visible per round in
+//!   `dropped` and a named fairness follow-up in ROADMAP.md.  What is
+//!   *not* acceptable is exclusion by identity rather than by cost:
+//!   with a constant latency model every candidate ties and the id
+//!   tie-break alone would decide who ever trains, so the constructor
+//!   rejects deadlines combined with constant profiles
+//!   ([`LatencyProfile::is_constant`](crate::sim::latency::LatencyProfile::is_constant)).
+//! * **Straggler-aware dispatch**: [`RoundPlan::dispatch`] orders the
+//!   cohort for minimum makespan (longest-processing-time-first).
+//!   Clients with no observed history dispatch first — an unknown cost
+//!   must be assumed long, and simulated latency orders them among
+//!   themselves — followed by observed clients, slowest first by the
+//!   EWMA of worker-measured round compute times
+//!   ([`RoundScheduler::observe`]; the in-process session feeds it
+//!   each round's actual `process_round` duration, free of
+//!   receive-queue skew — TCP handles cannot separate compute from
+//!   socket queueing and contribute nothing).  Observed and simulated
+//!   seconds are never compared against each other: they live on
+//!   different scales, and ranking them jointly would invert the
+//!   heuristic.  Dispatch order is a pure performance heuristic:
+//!   results fold in sorted client order regardless (see
+//!   `ARCHITECTURE.md`), so the nondeterministic EWMA can never change
+//!   a `RunReport`.
+//!
+//! **What the rest of the system owes absent clients:** a client that is
+//! not selected runs nothing — its batch cursor, quantizer stream and
+//! error-feedback residual stay exactly where they were, so its next
+//! selected round continues the same per-client streams (enforced by
+//! `rust/tests/parallel_determinism.rs`).  Server aggregation weights,
+//! the fold-overlap weight plan and the `uplink_bits` ledger are all
+//! computed over the cohort the server actually received, never over
+//! the full registry.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::server::{ClientHandle, Server};
+use crate::config::RunConfig;
+use crate::metrics::RoundRecord;
+use crate::sim::latency::LatencyModel;
+use crate::util::rng::Rng;
+
+/// EWMA smoothing for observed per-client round times (higher = react
+/// faster to the latest observation).
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Candidate over-sampling factor of the deadline policy: sample this
+/// many times the target cohort, then keep the fastest (see module
+/// docs).  Fixed rather than a knob until a workload needs otherwise.
+pub const DEADLINE_OVERSAMPLE: usize = 2;
+
+/// One round's scheduling decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundPlan {
+    /// Round index this plan is for.
+    pub round: u32,
+    /// Participating client ids, ascending (the server's fold order).
+    pub selected: Vec<u32>,
+    /// The same ids in dispatch order: never-observed clients first
+    /// (unknown cost = assume long; simulated latency ranks them),
+    /// then observed clients slowest-first by EWMA.  Broadcast in this
+    /// order so likely-long jobs start earliest.
+    pub dispatch: Vec<u32>,
+    /// Candidates sampled but cut by the deadline policy (0 without
+    /// `--round-deadline`).  Unsampled clients are not "dropped" — they
+    /// were never candidates.
+    pub dropped: u32,
+    /// Simulated completion time of the cohort's slowest member
+    /// (seconds; 0 with the `off` latency profile).
+    pub sim_makespan_secs: f64,
+}
+
+/// Per-run scheduler state: selection RNG root, the latency model and
+/// the observed-cost EWMA.
+pub struct RoundScheduler {
+    n_clients: usize,
+    /// Target cohort size: `ceil(participation * n_clients)`, in `1..=n`.
+    k_target: usize,
+    deadline: Option<f64>,
+    latency: LatencyModel,
+    /// Root of the per-round selection streams (see module docs).
+    select_root: Rng,
+    /// EWMA of observed per-client round seconds; 0.0 = never observed.
+    ewma: Vec<f64>,
+}
+
+impl RoundScheduler {
+    /// Build a scheduler from raw knobs.  `participation` must be in
+    /// `(0, 1]`; a deadline, when given, must be positive and finite.
+    pub fn new(
+        n_clients: usize,
+        participation: f32,
+        deadline: Option<f64>,
+        latency: LatencyModel,
+        seed: u64,
+    ) -> Result<RoundScheduler> {
+        ensure!(n_clients >= 1, "scheduler needs at least one client");
+        ensure!(
+            participation > 0.0 && participation <= 1.0,
+            "participation must be in (0, 1], got {participation}"
+        );
+        if let Some(d) = deadline {
+            ensure!(d.is_finite() && d > 0.0, "round deadline must be positive, got {d}");
+            // A deadline is *supposed* to favor fast clients (see the
+            // module docs on bias); what it must never do is exclude by
+            // identity: with every simulated cost identical (`off`, but
+            // also the degenerate `lognormal:<m>:0` / `uniform:0:0`)
+            // the (cost, id) tie-break alone would decide the cohort,
+            // keeping the lowest ids round after round.
+            ensure!(
+                !latency.profile().is_constant(),
+                "--round-deadline needs a spreading latency model (--sim-latency \
+                 uniform:..|lognormal:.. with non-zero spread): with constant costs all \
+                 candidates tie and the id tie-break alone would pick the cohort"
+            );
+        }
+        // f32 arithmetic on purpose: the knob is an f32, and widening
+        // first would turn e.g. 0.2 into 0.20000000298 and ceil a
+        // 10-client cohort to 3 instead of the 2 the user asked for.
+        let k_target = (participation * n_clients as f32).ceil() as usize;
+        let k_target = k_target.clamp(1, n_clients);
+        Ok(RoundScheduler {
+            n_clients,
+            k_target,
+            deadline,
+            latency,
+            select_root: Rng::new(seed).derive("sched"),
+            ewma: vec![0.0; n_clients],
+        })
+    }
+
+    /// Build from a run's config (the session and `feddq serve` path).
+    pub fn from_config(cfg: &RunConfig, n_clients: usize) -> Result<RoundScheduler> {
+        Self::new(
+            n_clients,
+            cfg.participation,
+            cfg.round_deadline,
+            LatencyModel::new(cfg.sim_latency, cfg.seed),
+            cfg.seed,
+        )
+    }
+
+    /// Target cohort size `ceil(participation * n)`.
+    pub fn cohort_target(&self) -> usize {
+        self.k_target
+    }
+
+    /// Draw `k` distinct client ids for `round` (partial Fisher–Yates
+    /// over `0..n` on the round-keyed stream).  Pure in `(seed, round)`.
+    fn sample(&self, round: u32, k: usize) -> Vec<u32> {
+        let mut rng = self.select_root.derive(&format!("round{round}"));
+        let n = self.n_clients;
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k.min(n) {
+            let j = i + rng.below((n - i) as u64) as usize;
+            ids.swap(i, j);
+        }
+        ids.truncate(k.min(n));
+        ids
+    }
+
+    /// Dispatch sort key for one cohort member: a `(tier, cost)` pair.
+    /// Tier 0 = never observed (assume potentially slow, dispatch
+    /// before all observed clients; simulated latency ranks them among
+    /// themselves), tier 1 = observed (ranked by EWMA).  Observed and
+    /// simulated seconds live on different scales, so they are ordered
+    /// by tier instead of compared directly — jointly ranking them
+    /// would put every unobserved client's ~1s *simulated* cost ahead
+    /// of a true straggler's ~10ms *measured* cost and invert the
+    /// longest-first heuristic.
+    fn dispatch_key(&self, client_id: u32, round: u32) -> (u8, f64) {
+        let e = self.ewma[client_id as usize];
+        if e > 0.0 {
+            (1, e)
+        } else {
+            (0, self.latency.round_secs(client_id, round))
+        }
+    }
+
+    /// Plan round `round`.  Selection (and `dropped` / the simulated
+    /// makespan) is a pure function of the seed and the scheduling
+    /// knobs; only [`RoundPlan::dispatch`]'s order also reads the
+    /// observed EWMA.
+    pub fn plan_round(&self, round: u32) -> RoundPlan {
+        // (sim_secs, id) pairs of the cohort.
+        let (cohort, dropped) = match self.deadline {
+            Some(deadline) => {
+                let k_cand = (self.k_target * DEADLINE_OVERSAMPLE).min(self.n_clients);
+                let mut timed: Vec<(f64, u32)> = self
+                    .sample(round, k_cand)
+                    .into_iter()
+                    .map(|id| (self.latency.round_secs(id, round), id))
+                    .collect();
+                timed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let mut keep: Vec<(f64, u32)> = timed
+                    .iter()
+                    .take(self.k_target)
+                    .filter(|&&(t, _)| t <= deadline)
+                    .copied()
+                    .collect();
+                if keep.is_empty() {
+                    // Nobody makes the deadline: keep the fastest
+                    // candidate so the round still has a cohort (its
+                    // makespan will exceed the deadline — visible in
+                    // the record).
+                    keep.push(timed[0]);
+                }
+                let dropped = (k_cand - keep.len()) as u32;
+                (keep, dropped)
+            }
+            None => {
+                let cohort: Vec<(f64, u32)> = self
+                    .sample(round, self.k_target)
+                    .into_iter()
+                    .map(|id| (self.latency.round_secs(id, round), id))
+                    .collect();
+                (cohort, 0)
+            }
+        };
+        let sim_makespan_secs = cohort.iter().map(|&(t, _)| t).fold(0.0f64, f64::max);
+        let mut selected: Vec<u32> = cohort.iter().map(|&(_, id)| id).collect();
+        selected.sort_unstable();
+        // Longest-first dispatch: unobserved clients (tier 0) first,
+        // ranked by simulated latency; then observed clients (tier 1)
+        // by EWMA — see [`Self::dispatch_key`].  Ties (e.g. the `off`
+        // profile with no observations yet) fall back to ascending id.
+        // Keys are computed once per cohort member, not inside the
+        // comparator.
+        let mut keyed: Vec<(u8, f64, u32)> = selected
+            .iter()
+            .map(|&id| {
+                let (tier, cost) = self.dispatch_key(id, round);
+                (tier, cost, id)
+            })
+            .collect();
+        keyed.sort_by(|a, b| {
+            a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2))
+        });
+        let dispatch: Vec<u32> = keyed.into_iter().map(|(_, _, id)| id).collect();
+        RoundPlan { round, selected, dispatch, dropped, sim_makespan_secs }
+    }
+
+    /// Feed one observed per-client round time (seconds) into the EWMA
+    /// that drives slowest-first dispatch.  Non-finite or non-positive
+    /// observations and unknown ids are ignored.
+    pub fn observe(&mut self, client_id: u32, secs: f64) {
+        let Some(e) = self.ewma.get_mut(client_id as usize) else {
+            return;
+        };
+        if !secs.is_finite() || secs <= 0.0 {
+            return;
+        }
+        *e = if *e == 0.0 { secs } else { EWMA_ALPHA * secs + (1.0 - EWMA_ALPHA) * *e };
+    }
+}
+
+/// Drive one scheduled round end to end: plan, reorder the registry so
+/// the cohort is the slice prefix, run that prefix through the server,
+/// patch the plan-side fields (`dropped`, `sim_makespan_secs`) into the
+/// record, and feed the cohort's observed compute times back into the
+/// dispatch EWMA.  The in-process session and the TCP server both call
+/// this, so the scheduling protocol cannot diverge between drivers.
+pub fn run_scheduled_round(
+    scheduler: &mut RoundScheduler,
+    server: &mut Server,
+    clients: &mut [Box<dyn ClientHandle + '_>],
+    round: u32,
+    evaluate: bool,
+) -> Result<RoundRecord> {
+    let plan = scheduler.plan_round(round);
+    order_clients(clients, &plan);
+    let k = plan.dispatch.len();
+    let mut rec = server.run_round(round, &mut clients[..k], evaluate)?;
+    rec.dropped = plan.dropped;
+    rec.sim_makespan_secs = plan.sim_makespan_secs;
+    for &(id, secs) in server.arrivals() {
+        scheduler.observe(id, secs);
+    }
+    Ok(rec)
+}
+
+/// Reorder `clients` so the plan's cohort forms the slice prefix
+/// `clients[..plan.dispatch.len()]`, in dispatch (slowest-first) order;
+/// unselected handles keep their relative order in the tail.  The
+/// session and the TCP server both call this before handing the prefix
+/// to `Server::run_round`.
+pub fn order_clients(clients: &mut [Box<dyn ClientHandle + '_>], plan: &RoundPlan) {
+    let rank: BTreeMap<u32, usize> =
+        plan.dispatch.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    clients.sort_by_key(|c| rank.get(&c.id()).copied().unwrap_or(usize::MAX));
+    debug_assert!(
+        clients
+            .iter()
+            .take(plan.dispatch.len())
+            .zip(&plan.dispatch)
+            .all(|(c, &id)| c.id() == id),
+        "cohort ids missing from the client registry"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::latency::LatencyProfile;
+
+    fn sched(n: usize, p: f32, deadline: Option<f64>, profile: LatencyProfile) -> RoundScheduler {
+        RoundScheduler::new(n, p, deadline, LatencyModel::new(profile, 17), 17).unwrap()
+    }
+
+    #[test]
+    fn cohort_size_is_ceil_of_fraction() {
+        assert_eq!(sched(10, 1.0, None, LatencyProfile::Off).cohort_target(), 10);
+        assert_eq!(sched(10, 0.5, None, LatencyProfile::Off).cohort_target(), 5);
+        assert_eq!(sched(10, 0.21, None, LatencyProfile::Off).cohort_target(), 3);
+        assert_eq!(sched(10, 0.01, None, LatencyProfile::Off).cohort_target(), 1);
+        let off = || LatencyModel::new(LatencyProfile::Off, 1);
+        assert!(RoundScheduler::new(10, 0.0, None, off(), 1).is_err());
+        assert!(RoundScheduler::new(10, 1.5, None, off(), 1).is_err());
+        assert!(RoundScheduler::new(10, 0.5, Some(0.0), off(), 1).is_err());
+    }
+
+    #[test]
+    fn selection_is_seed_pure_and_observation_blind() {
+        let a = sched(10, 0.5, None, LatencyProfile::Off);
+        let mut b = sched(10, 0.5, None, LatencyProfile::Off);
+        // feeding observations must not move selection (only dispatch)
+        b.observe(3, 100.0);
+        b.observe(7, 0.001);
+        for m in 0..20u32 {
+            let pa = a.plan_round(m);
+            let pb = b.plan_round(m);
+            assert_eq!(pa.selected, pb.selected, "round {m}");
+            assert_eq!(pa.selected.len(), 5);
+            // selected is sorted and duplicate-free
+            assert!(pa.selected.windows(2).all(|w| w[0] < w[1]));
+            // planning twice from the same state is identical
+            assert_eq!(a.plan_round(m), a.plan_round(m));
+        }
+        // different seeds pick different cohorts somewhere
+        let c = RoundScheduler::new(
+            10, 0.5, None, LatencyModel::new(LatencyProfile::Off, 18), 18,
+        )
+        .unwrap();
+        assert!((0..20u32).any(|m| c.plan_round(m).selected != a.plan_round(m).selected));
+        // and cohorts rotate across rounds
+        assert!((1..20u32).any(|m| a.plan_round(m).selected != a.plan_round(0).selected));
+    }
+
+    #[test]
+    fn full_participation_selects_everyone() {
+        let s = sched(7, 1.0, None, LatencyProfile::Off);
+        let p = s.plan_round(3);
+        assert_eq!(p.selected, (0..7u32).collect::<Vec<_>>());
+        assert_eq!(p.dropped, 0);
+        assert_eq!(p.sim_makespan_secs, 0.0);
+        // off-profile, no observations: dispatch falls back to id order
+        assert_eq!(p.dispatch, p.selected);
+    }
+
+    #[test]
+    fn observed_ewma_drives_slowest_first_dispatch() {
+        let mut s = sched(6, 1.0, None, LatencyProfile::Off);
+        s.observe(2, 9.0);
+        s.observe(4, 3.0);
+        s.observe(0, 1.0);
+        let p = s.plan_round(0);
+        assert_eq!(p.selected, vec![0, 1, 2, 3, 4, 5]);
+        // never-observed clients first (unknown = assume long; Off
+        // profile ties, so id order), then observed slowest-first —
+        // observed EWMA seconds are never ranked against simulated
+        // seconds.
+        assert_eq!(p.dispatch, vec![1, 3, 5, 2, 4, 0]);
+        // EWMA blends rather than replaces
+        s.observe(2, 1.0);
+        let e = 0.3 * 1.0 + 0.7 * 9.0;
+        let p2 = s.plan_round(0);
+        assert_eq!(p2.dispatch[3], 2, "still slowest observed at ewma {e}");
+        // once everyone is observed, dispatch is pure slowest-first:
+        // ewma = {0: 1.0, 1: 5.0, 2: 6.6, 3: 0.5, 4: 3.0, 5: 7.0}
+        s.observe(1, 5.0);
+        s.observe(3, 0.5);
+        s.observe(5, 7.0);
+        assert_eq!(s.plan_round(0).dispatch, vec![5, 2, 1, 4, 0, 3]);
+        // garbage observations are ignored
+        s.observe(99, 1.0);
+        s.observe(1, f64::NAN);
+        s.observe(1, -3.0);
+        assert_eq!(s.plan_round(0).selected, p.selected);
+    }
+
+    #[test]
+    fn deadline_keeps_fastest_candidates_and_counts_drops() {
+        // lognormal stragglers against a deadline barely above the
+        // median: roughly half of all candidates miss it, so across 30
+        // rounds some round must cut inside the first-k — and everyone
+        // kept simulates in under the deadline.
+        let deadline = 0.85;
+        let profile = LatencyProfile::LogNormal { median: 0.8, sigma: 0.7 };
+        let s = sched(20, 0.25, Some(deadline), profile);
+        let k = s.cohort_target(); // 5
+        let mut saw_drop_beyond_oversample_floor = false;
+        for m in 0..30u32 {
+            let p = s.plan_round(m);
+            assert!(!p.selected.is_empty() && p.selected.len() <= k, "round {m}");
+            // candidates = 2k; selected + dropped must account for all
+            assert_eq!(p.selected.len() + p.dropped as usize, 2 * k, "round {m}");
+            if p.selected.len() == 1 && p.sim_makespan_secs > deadline {
+                // the nobody-meets-it fallback: single fastest kept
+                continue;
+            }
+            assert!(
+                p.sim_makespan_secs <= deadline,
+                "round {m}: makespan {}",
+                p.sim_makespan_secs
+            );
+            if p.dropped as usize > k {
+                saw_drop_beyond_oversample_floor = true;
+            }
+        }
+        assert!(
+            saw_drop_beyond_oversample_floor,
+            "a {deadline}s deadline under lognormal(0.8, 0.7) should cut inside the first-k somewhere"
+        );
+        // deterministic: same seed, same plans
+        let s2 = sched(20, 0.25, Some(deadline), profile);
+        for m in 0..30u32 {
+            assert_eq!(s.plan_round(m), s2.plan_round(m));
+        }
+    }
+
+    #[test]
+    fn deadline_without_a_latency_model_is_rejected() {
+        // With the `off` profile every candidate ties at 0 simulated
+        // seconds and the id tie-break would keep the lowest ids every
+        // round — permanently starving high-id clients.  The
+        // combination must be rejected up front, not silently biased.
+        for profile in [
+            LatencyProfile::Off,
+            LatencyProfile::LogNormal { median: 1.0, sigma: 0.0 },
+            LatencyProfile::Uniform { lo: 0.0, hi: 0.0 },
+        ] {
+            let err =
+                RoundScheduler::new(10, 0.3, Some(5.0), LatencyModel::new(profile, 17), 17)
+                    .unwrap_err();
+            assert!(format!("{err:#}").contains("latency model"), "{profile:?}: {err:#}");
+        }
+        // ...while a real model makes the same knobs valid.
+        let s = sched(10, 0.3, Some(5.0), LatencyProfile::Uniform { lo: 0.5, hi: 1.5 });
+        let p = s.plan_round(4);
+        assert!(!p.selected.is_empty() && p.selected.len() <= 3);
+        assert_eq!(p.selected.len() + p.dropped as usize, 6);
+    }
+}

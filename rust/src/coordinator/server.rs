@@ -5,6 +5,13 @@
 //!
 //! ## Round data path
 //!
+//! * **Scheduling** happens above this module ([`super::sched`]): the
+//!   session / TCP server plan each round's cohort (partial
+//!   participation, deadline policy) and hand [`Server::run_round`]
+//!   only the selected handles, ordered slowest-first.  Every stage
+//!   below ranges over exactly that cohort — weights, loss averages,
+//!   telemetry means and the bit ledger — and clients outside it are
+//!   untouched.
 //! * **Broadcast** is zero-copy: the global parameters live in an
 //!   `Arc<[f32]>`, the `Broadcast` message is encoded **once** per round
 //!   and every client handle receives the shared buffer / pre-encoded
@@ -77,6 +84,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 use super::client::ClientState;
 use super::codec;
 use super::pool::{self, Job, Task, TaskSender, WorkerPool};
+use super::sched::{self, RoundScheduler};
 use crate::config::{AggregateMode, CodecMode, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
@@ -88,7 +96,9 @@ use crate::wire::messages::{self, Message, Update};
 
 /// A connected client as the server sees it.
 pub trait ClientHandle {
+    /// The client's id (stable across rounds).
     fn id(&self) -> u32;
+    /// Send one message to the client.
     fn send(&mut self, msg: &Message) -> Result<()>;
     /// Broadcast fast path: `encoded` is `msg.encode()`, produced once
     /// by the server for the whole round.  Implementations must not
@@ -97,6 +107,7 @@ pub trait ClientHandle {
         let _ = encoded;
         self.send(msg)
     }
+    /// Block for the client's update of the current round.
     fn recv_update(&mut self) -> Result<Update>;
     /// The client's dataset size, when known *before* its update
     /// arrives (the fold-overlap path needs aggregation weights up
@@ -104,6 +115,15 @@ pub trait ClientHandle {
     /// handles return `None` and the server learns it from the first
     /// round's updates.
     fn num_samples(&self) -> Option<u32> {
+        None
+    }
+    /// The client's measured compute seconds for its most recent round,
+    /// when observable.  In-process handles get it from the worker's
+    /// own timing (queue-position-free); remote handles return `None` —
+    /// the server cannot separate a remote client's compute time from
+    /// socket queueing, so the scheduler falls back to the simulated
+    /// latency model for its dispatch cost.
+    fn last_round_secs(&self) -> Option<f64> {
         None
     }
     /// Cumulative uplink bytes (client -> server), framed size.
@@ -320,6 +340,7 @@ impl OverlapState<'_> {
 
 /// The federated server: owns the global model and the round loop.
 pub struct Server {
+    /// The model runtime shared with workers and handles.
     pub model: Arc<ModelRuntime>,
     params: Arc<[f32]>,
     test: Arc<data::Dataset>,
@@ -330,7 +351,15 @@ pub struct Server {
     /// Per-client sample counts, learned from handles (in-process) or
     /// from received updates (TCP, available from round 1) — the
     /// fold-overlap path needs aggregation weights before updates land.
+    /// Keyed by id so it accumulates across sampled cohorts: a client
+    /// absent this round keeps its entry for the next round it joins.
     samples_by_id: BTreeMap<u32, u32>,
+    /// Observed per-client round compute times of the last round
+    /// (seconds, as measured by each client's own worker —
+    /// [`ClientHandle::last_round_secs`]).  Feeds the scheduler's EWMA
+    /// for slowest-first dispatch; handles that cannot observe compute
+    /// time (TCP) simply contribute nothing.
+    arrivals: Vec<(u32, f64)>,
     // round-persistent scratch (allocation-free steady state)
     dec: codec::DecodedUpdate,
     acc: Vec<f32>,
@@ -342,6 +371,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Server over `model` with seed-initialized global parameters.
     pub fn new(
         model: Arc<ModelRuntime>,
         test: Arc<data::Dataset>,
@@ -358,6 +388,7 @@ impl Server {
             prev_loss: None,
             cum_uplink_bits: 0,
             samples_by_id: BTreeMap::new(),
+            arrivals: Vec::new(),
             dec: codec::DecodedUpdate::new(),
             acc: Vec::new(),
             dec_pool: Vec::new(),
@@ -373,6 +404,13 @@ impl Server {
     /// FNV-1a hash over the exact parameter bits (determinism checks).
     pub fn params_hash(&self) -> u64 {
         hash_f32_bits(&self.params)
+    }
+
+    /// Observed per-client round compute times of the last round
+    /// (id, seconds) — the raw material for the scheduler's
+    /// slowest-first EWMA ([`super::sched::RoundScheduler::observe`]).
+    pub fn arrivals(&self) -> &[(u32, f64)] {
+        &self.arrivals
     }
 
     /// Mutable view of the parameters.  Zero-copy when the server holds
@@ -407,7 +445,15 @@ impl Server {
         Some(counts.iter().map(|&s| s as f32 / total as f32).collect())
     }
 
-    /// Drive one round across `clients`; returns the round record.
+    /// Drive one round across `clients` — the round's *cohort*, which
+    /// may be any non-empty subset of the manifest's registry when the
+    /// scheduler samples partial participation ([`super::sched`]).
+    /// Aggregation weights, loss averaging, telemetry means and the
+    /// `uplink_bits` ledger all range over exactly this cohort; clients
+    /// not in the slice are untouched (their states, residuals and
+    /// quantizer streams stay where they were).  Returns the round
+    /// record; the caller fills in the plan-side fields (`dropped`,
+    /// `sim_makespan_secs`).
     pub fn run_round(
         &mut self,
         round: u32,
@@ -417,10 +463,11 @@ impl Server {
         let t0 = Instant::now();
         let n = clients.len();
         ensure!(
-            n == self.model.mm.n_clients,
-            "manifest expects {} clients, got {n}",
+            n >= 1 && n <= self.model.mm.n_clients,
+            "cohort of {n} clients outside 1..={} (manifest registry)",
             self.model.mm.n_clients
         );
+        self.arrivals.clear();
 
         // Handles that know their dataset size up front seed the
         // fold-overlap weight plan before any update arrives.
@@ -479,6 +526,15 @@ impl Server {
             (updates, Vec::new())
         };
         let recv_decode_secs = t_recv.elapsed().as_secs_f64();
+
+        // Collect the cohort's observed round compute times (measured
+        // by each client's own worker, so free of receive-queue skew)
+        // for the scheduler's slowest-first EWMA.
+        for c in clients.iter() {
+            if let Some(s) = c.last_round_secs() {
+                self.arrivals.push((c.id(), s));
+            }
+        }
 
         let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
         ensure!(total_samples > 0, "no samples reported");
@@ -567,6 +623,12 @@ impl Server {
             recv_decode_secs,
             agg_secs,
             eval_secs,
+            selected: n as u32,
+            // Plan-side fields: the scheduler-owning caller overrides
+            // these from its RoundPlan (serial/test callers have no
+            // plan, so the zero defaults stand).
+            dropped: 0,
+            sim_makespan_secs: 0.0,
         })
     }
 
@@ -972,9 +1034,11 @@ struct PoolClient {
     id: u32,
     state: Option<ClientState>,
     jobs: TaskSender,
-    pending: Option<Receiver<Result<(ClientState, Update)>>>,
+    pending: Option<Receiver<Result<(ClientState, Update, f64)>>>,
     /// Shard size, known at construction (fold-overlap weight plan).
     samples: u32,
+    /// Worker-measured compute seconds of the most recent round.
+    last_secs: Option<f64>,
     up_bytes: u64,
     down_bytes: u64,
 }
@@ -1020,17 +1084,22 @@ impl ClientHandle for PoolClient {
             .pending
             .take()
             .context("no update pending (send a Broadcast first)")?;
-        let (state, update) = rx
+        let (state, update, secs) = rx
             .recv()
             .context("round worker died")?
             .with_context(|| format!("client {} round failed", self.id))?;
         self.state = Some(state);
+        self.last_secs = Some(secs);
         self.up_bytes += frame::framed_len(1 + messages::update_encoded_len(&update));
         Ok(update)
     }
 
     fn num_samples(&self) -> Option<u32> {
         Some(self.samples)
+    }
+
+    fn last_round_secs(&self) -> Option<f64> {
+        self.last_secs
     }
 
     fn uplink_bytes(&self) -> u64 {
@@ -1050,10 +1119,12 @@ pub struct Session {
     model: Arc<ModelRuntime>,
     train_shards: Vec<Arc<data::Dataset>>,
     test: Arc<data::Dataset>,
+    /// Where the data came from (`"real"` / `"synthetic"`), for prints.
     pub data_source: &'static str,
 }
 
 impl Session {
+    /// Materialize a session: runtime, model, datasets and shards.
     pub fn new(cfg: RunConfig) -> Result<Session> {
         cfg.validate()?;
         let runtime = Runtime::new(&cfg.artifacts_dir)?;
@@ -1088,10 +1159,12 @@ impl Session {
         })
     }
 
+    /// The loaded model's manifest.
     pub fn manifest(&self) -> &crate::runtime::ModelManifest {
         &self.model.mm
     }
 
+    /// The session's configuration.
     pub fn config(&self) -> &RunConfig {
         &self.cfg
     }
@@ -1145,16 +1218,28 @@ impl Session {
                     jobs: pool.sender(),
                     pending: None,
                     samples: shard.len() as u32,
+                    last_secs: None,
                     up_bytes: 0,
                     down_bytes: 0,
                 }) as Box<dyn ClientHandle + '_>
             })
             .collect();
 
+        // Round scheduler: samples each round's cohort (participation /
+        // deadline knobs) and orders its dispatch slowest-first.  The
+        // selection stream is seed-pure, so reports stay bit-identical
+        // across every threading knob.
+        let mut scheduler = RoundScheduler::from_config(&self.cfg, self.train_shards.len())?;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         for m in 0..self.cfg.rounds {
             let evaluate = m % self.cfg.eval_every == 0 || m + 1 == self.cfg.rounds;
-            let rec = server.run_round(m as u32, &mut clients, evaluate)?;
+            let rec = sched::run_scheduled_round(
+                &mut scheduler,
+                &mut server,
+                &mut clients,
+                m as u32,
+                evaluate,
+            )?;
             observer(m as u32, &rec);
             let done = self
                 .cfg

@@ -11,6 +11,7 @@ use anyhow::{ensure, Context, Result};
 
 use super::client::ClientState;
 use super::pool::WorkerPool;
+use super::sched::{self, RoundScheduler};
 use super::server::{ClientHandle, Server, ServerOpts};
 use crate::config::RunConfig;
 use crate::data::{self, shard};
@@ -164,10 +165,22 @@ pub fn serve(
             tasks: Some(pool.sender()),
         },
     )?;
+    // Same scheduler as the in-process session: sampled cohorts and
+    // slowest-first dispatch.  A worker outside the round's cohort
+    // simply receives no Broadcast and keeps blocking on its socket
+    // until a later round selects it (or Shutdown arrives) — no wire
+    // change needed, and its client-side state is untouched.
+    let mut scheduler = RoundScheduler::from_config(cfg, n)?;
     let mut rounds = Vec::with_capacity(cfg.rounds);
     for m in 0..cfg.rounds {
         let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
-        let rec = server.run_round(m as u32, &mut clients, evaluate)?;
+        let rec = sched::run_scheduled_round(
+            &mut scheduler,
+            &mut server,
+            &mut clients,
+            m as u32,
+            evaluate,
+        )?;
         observer(m as u32, &rec);
         let done = cfg
             .target_accuracy

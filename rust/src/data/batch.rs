@@ -15,6 +15,7 @@ pub struct BatchCursor {
 }
 
 impl BatchCursor {
+    /// Cursor over a shard of `len` samples, shuffled by `rng`.
     pub fn new(len: usize, rng: Rng) -> Self {
         assert!(len > 0, "empty shard");
         let mut c = BatchCursor {

@@ -17,7 +17,9 @@ use super::Dataset;
 
 /// A parsed IDX tensor of u8 payload.
 pub struct IdxU8 {
+    /// Tensor dimensions, outermost first.
     pub dims: Vec<usize>,
+    /// Row-major u8 payload.
     pub data: Vec<u8>,
 }
 

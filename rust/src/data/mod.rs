@@ -21,23 +21,29 @@ pub struct Dataset {
     pub features: Vec<f32>,
     /// `[num]` class labels.
     pub labels: Vec<i32>,
-    pub shape: (usize, usize, usize), // (h, w, c)
+    /// Image shape `(h, w, c)`.
+    pub shape: (usize, usize, usize),
+    /// Number of distinct classes (labels are `0..num_classes`).
     pub num_classes: usize,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Elements per flattened feature row (`h * w * c`).
     pub fn feature_len(&self) -> usize {
         self.shape.0 * self.shape.1 * self.shape.2
     }
 
+    /// Sample `i`'s flattened feature row.
     pub fn feature(&self, i: usize) -> &[f32] {
         let fl = self.feature_len();
         &self.features[i * fl..(i + 1) * fl]
@@ -84,6 +90,7 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// The benchmark's `(h, w, c)` image shape.
     pub fn shape(&self) -> (usize, usize, usize) {
         match self {
             DatasetKind::FashionMnist => (28, 28, 1),
@@ -91,6 +98,7 @@ impl DatasetKind {
         }
     }
 
+    /// Parse `fashion_mnist` / `cifar10` (and short aliases).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "fashion_mnist" | "fmnist" => Ok(DatasetKind::FashionMnist),

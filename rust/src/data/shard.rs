@@ -12,14 +12,20 @@
 use super::Dataset;
 use crate::util::rng::Rng;
 
+/// How a dataset is partitioned across clients.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Sharding {
+    /// Uniform random partition (the paper's setup).
     Iid,
     /// Label-distribution skew; smaller alpha = more heterogeneous.
-    Dirichlet { alpha: f64 },
+    Dirichlet {
+        /// Dirichlet concentration parameter (> 0).
+        alpha: f64,
+    },
 }
 
 impl Sharding {
+    /// Parse `iid` or `dirichlet:<alpha>`.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         if s == "iid" {
             return Ok(Sharding::Iid);

@@ -1,5 +1,12 @@
 //! # FedDQ — communication-efficient federated learning with descending quantization
 //!
+//! **Start with `ARCHITECTURE.md` at the repo root** — the single
+//! authoritative map of this codebase: module layout, the life of a
+//! round, the two-lane pool contract, the bytes-moved codec model, the
+//! round scheduler and the determinism contract.  `docs/CLI.md` is the
+//! complete `feddq` flag reference (held honest by a test).  This page
+//! keeps the API-facing summary.
+//!
 //! Full-system reproduction of *FedDQ* (Qu, Song, Tsui, 2021) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
@@ -104,20 +111,52 @@
 //!   `pack_w*_gbps`, `encode_fused_gbps`, `fold_narrow_gbps`) and is
 //!   gated by CI's `bench-smoke`.
 //!
+//! ## Round scheduler: partial participation & stragglers
+//!
+//! Above the pool sits the **round scheduler**
+//! ([`coordinator::sched`]): real deployments sample a cohort per
+//! round and contend with stragglers, so every round now runs over a
+//! scheduled subset:
+//!
+//! * **`--participation f`** draws `ceil(f * n)` clients per round
+//!   from a seeded, *round-keyed* RNG — the cohort is a pure function
+//!   of `(seed, round, n, f)`, independent of thread count or any
+//!   observation.  Unselected clients run nothing: batch cursors,
+//!   quantizer streams and error-feedback residuals stay banked until
+//!   their next selected round.  Weights, loss averages and the
+//!   `uplink_bits` ledger range over the cohort only.
+//! * **`--round-deadline T`** (simulated seconds) over-samples `2x`
+//!   candidates, prices them with the **latency model**
+//!   ([`sim::latency`], `--sim-latency`), and keeps the deterministic
+//!   fastest `ceil(f * n)` finishing by `T` (ties by id); cut
+//!   candidates land in the round's `dropped` metric and the cohort's
+//!   slowest simulated finisher in `sim_makespan_secs`.
+//! * **Straggler-aware dispatch**: the broadcast order is
+//!   longest-first — never-observed clients first (unknown cost =
+//!   assume long, ranked by simulated latency), then observed clients
+//!   slowest-first by an EWMA of worker-measured round times — so
+//!   likely-long jobs hit the round lane first and the round's
+//!   makespan shrinks when clients outnumber workers.  Dispatch order
+//!   is a pure performance heuristic — results fold in sorted client
+//!   order regardless.
+//!
 //! ### Determinism contract
 //!
 //! A run is a pure function of its [`config::RunConfig`]: for any
-//! `threads`, `agg_shards`, `eval_threads`, `decode_buffers` or
-//! `fold_overlap` value the engine produces a bit-identical
-//! [`metrics::RunReport`] (per-round records, bit ledger, and the
-//! final parameter hash).  This holds because client states own
-//! independently derived RNG streams, jobs move client state to
-//! exactly one worker at a time, the server folds updates in sorted
-//! `client_id` order within every accumulator shard (the overlap path
-//! serializes each shard's prefix folds in that same order, with the
-//! same up-front weights), and eval reduces per-batch partials in
-//! batch order.  `rust/tests/parallel_determinism.rs` enforces the
-//! contract.
+//! `threads`, `agg_shards`, `eval_threads`, `decode_buffers`,
+//! `fold_overlap` or `codec` value — crossed with any `participation`
+//! / `round_deadline` / `sim_latency` setting — the engine produces a
+//! bit-identical [`metrics::RunReport`] (per-round records, bit
+//! ledger, cohort fields, and the final parameter hash).  This holds
+//! because client states own independently derived RNG streams, jobs
+//! move client state to exactly one worker at a time, cohort selection
+//! is seed-pure and observation-blind, the server folds updates in
+//! sorted `client_id` order within every accumulator shard (the
+//! overlap path serializes each shard's prefix folds in that same
+//! order, with the same up-front weights), and eval reduces per-batch
+//! partials in batch order.  `rust/tests/parallel_determinism.rs`
+//! enforces the contract, including participation in {1.0, 0.5, 0.2}
+//! against the full knob matrix.
 //!
 //! ## Quick tour
 //!
@@ -132,6 +171,8 @@
 //! let report = session.run().unwrap();
 //! println!("final acc {:.3}", report.rounds.last().unwrap().test_accuracy);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod bench_support;
 pub mod cli;

@@ -10,50 +10,11 @@
 
 use anyhow::Result;
 
-use feddq::cli::{run_config_from_args, Args};
+use feddq::cli::{run_config_from_args, Args, USAGE};
 use feddq::coordinator::{topology, Session};
 use feddq::metrics::gbits;
 use feddq::runtime::Runtime;
 use feddq::util::log::{set_level, Level};
-
-const USAGE: &str = "\
-feddq — communication-efficient federated learning with descending quantization
-
-USAGE: feddq <COMMAND> [FLAGS]
-
-COMMANDS:
-  train    run a federated training session in-process
-  serve    run the federated server (TCP), waiting for workers
-  worker   run one federated client process (TCP)
-  info     print the artifact manifest summary
-
-COMMON TRAIN FLAGS:
-  --model <mlp|vanilla_cnn|cnn4|resnet18>   model/benchmark    [mlp]
-  --policy <feddq[:res]|adaquantfl[:s0]|fixed:<bits>|fp32>     [feddq:0.005]
-  --rounds <n>          communication rounds                   [50]
-  --lr <f>              local SGD step size                    [0.1]
-  --seed <n>            root seed                              [17]
-  --sharding <iid|dirichlet:<alpha>>                           [iid]
-  --eval-every <k>      evaluate every k rounds                [1]
-  --train-size <n>      synthetic train set size               [4000]
-  --test-size <n>       synthetic test set size                [1000]
-  --target-acc <f>      stop at this test accuracy             [off]
-  --threads <n>         client worker threads (0 = cores)      [0]
-  --aggregate <streaming|fused>  server aggregation path       [streaming]
-  --agg-shards <n>      accumulator shards (0 = pool, 1 = serial) [0]
-  --eval-threads <n>    server eval slices (0 = pool, 1 = serial)  [0]
-  --decode-buffers <n>  decode-buffer bound (0 = one per client)   [0]
-  --fold-overlap <bool> overlap the shard fold with receives       [true]
-  --codec <narrow|reference>  SWAR u16 rows vs scalar f32 oracle   [narrow]
-  --artifacts <dir>     AOT artifacts directory                [artifacts]
-  --data-dir <dir>      real dataset directory                 [data]
-  --out <path>          write the per-round report (.csv/.json)
-  --quiet               suppress per-round progress
-
-SERVE/WORKER FLAGS:
-  --addr <host:port>    server address          [127.0.0.1:7177]
-  --id <n>              worker client id (worker only)
-";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

@@ -1,7 +1,16 @@
 //! Metrics: per-round records, the communication ledger and CSV/JSON
 //! emitters used by the figure/table benches.
+//!
+//! The JSON schema round-trips: [`RunReport::to_json`] /
+//! [`RunReport::from_json`] are inverses (modulo the NaN-as-`null`
+//! convention for unevaluated rounds), and the `u64` bit counters
+//! travel as exact decimal strings ([`u64_json`] / [`json_u64`])
+//! because the in-tree [`Json`] number type is f64-backed and loses
+//! integer exactness above 2^53.
 
 use std::io::Write;
+
+use anyhow::Context;
 
 use crate::util::json::Json;
 use crate::Result;
@@ -9,6 +18,7 @@ use crate::Result;
 /// Everything measured in one federated round.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// Round index (0-based).
     pub round: u32,
     /// Global average training loss (weighted by client sample counts).
     pub train_loss: f32,
@@ -38,19 +48,132 @@ pub struct RoundRecord {
     pub agg_secs: f64,
     /// Seconds in server-side evaluation (0 when the round skipped it).
     pub eval_secs: f64,
+    /// Clients that participated in this round (the sampled cohort the
+    /// server actually folded; equals the full cohort when
+    /// `participation = 1.0`).  0 in legacy reports that predate the
+    /// scheduler.
+    pub selected: u32,
+    /// Candidates the deadline policy sampled but cut (0 without
+    /// `--round-deadline`; unsampled clients are not counted).
+    pub dropped: u32,
+    /// Simulated completion time of the cohort's slowest member under
+    /// the configured latency model (0 with the `off` profile).
+    pub sim_makespan_secs: f64,
 }
 
 impl RoundRecord {
+    /// True when this round ran server-side evaluation (accuracy is a
+    /// number, not the NaN skip marker).
     pub fn evaluated(&self) -> bool {
         !self.test_accuracy.is_nan()
+    }
+
+    /// One round as a JSON object (the element type of a report's
+    /// `rounds` array).  NaN metrics (unevaluated rounds) emit as
+    /// `null`; bit counters emit as exact decimal strings.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::from(self.round)),
+            ("train_loss", Json::from(self.train_loss as f64)),
+            ("test_loss", Json::from(self.test_loss as f64)),
+            ("test_acc", Json::from(self.test_accuracy as f64)),
+            // decimal strings, not numbers: Json's f64 backing loses
+            // exactness above 2^53 and long large-model runs get
+            // there — same fix as params_hash's hex string
+            ("uplink_bits", u64_json(self.uplink_bits)),
+            ("cum_uplink_bits", u64_json(self.cum_uplink_bits)),
+            ("mean_bits", Json::from(self.mean_bits as f64)),
+            ("mean_range", Json::from(self.mean_range as f64)),
+            (
+                "seg_ranges",
+                Json::Arr(self.seg_ranges.iter().map(|&x| Json::from(x as f64)).collect()),
+            ),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("recv_decode_secs", Json::from(self.recv_decode_secs)),
+            ("agg_secs", Json::from(self.agg_secs)),
+            ("eval_secs", Json::from(self.eval_secs)),
+            ("selected", Json::from(self.selected)),
+            ("dropped", Json::from(self.dropped)),
+            ("sim_makespan_secs", Json::from(self.sim_makespan_secs)),
+        ])
+    }
+
+    /// Parse one round object written by [`Self::to_json`].  `null`
+    /// metrics come back as NaN; fields introduced after the first
+    /// report revision (the per-stage timings, and the scheduler's
+    /// `selected` / `dropped` / `sim_makespan_secs`) default to 0 when
+    /// absent — but error when present with the wrong type.
+    pub fn from_json(j: &Json) -> Result<RoundRecord> {
+        let f32_at = |k: &str| -> Result<f32> {
+            match j.get(k) {
+                Some(Json::Null) | None => Ok(f32::NAN),
+                Some(v) => Ok(v.as_f64().with_context(|| format!("round: {k}"))? as f32),
+            }
+        };
+        // `wall_secs` exists in every report version, so missing or
+        // mistyped is corruption, not legacy — strict.  The per-stage
+        // timings and scheduler fields arrived in later revisions and
+        // default to 0 when *absent*; when present they must be
+        // numbers.
+        let f64_at = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).with_context(|| format!("round: {k}"))
+        };
+        let f64_opt = |k: &str| -> Result<f64> {
+            match j.get(k) {
+                None => Ok(0.0),
+                Some(v) => v.as_f64().with_context(|| format!("round: {k}")),
+            }
+        };
+        let u64_at = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(json_u64)
+                .with_context(|| format!("round: {k} missing or inexact"))
+        };
+        Ok(RoundRecord {
+            round: j
+                .get("round")
+                .and_then(Json::as_usize)
+                .context("round: round")? as u32,
+            train_loss: f32_at("train_loss")?,
+            test_loss: f32_at("test_loss")?,
+            test_accuracy: f32_at("test_acc")?,
+            uplink_bits: u64_at("uplink_bits")?,
+            cum_uplink_bits: u64_at("cum_uplink_bits")?,
+            mean_bits: f32_at("mean_bits")?,
+            mean_range: f32_at("mean_range")?,
+            seg_ranges: j
+                .get("seg_ranges")
+                .and_then(Json::as_arr)
+                .context("round: seg_ranges")?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as f32).context("round: seg_ranges entry"))
+                .collect::<Result<Vec<f32>>>()?,
+            wall_secs: f64_at("wall_secs")?,
+            recv_decode_secs: f64_opt("recv_decode_secs")?,
+            agg_secs: f64_opt("agg_secs")?,
+            eval_secs: f64_opt("eval_secs")?,
+            selected: match j.get("selected") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: selected")? as u32,
+            },
+            dropped: match j.get("dropped") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: dropped")? as u32,
+            },
+            sim_makespan_secs: f64_opt("sim_makespan_secs")?,
+        })
     }
 }
 
 /// A completed run: config label + per-round records.
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// Human-readable run label (`RunConfig::label`, `-tcp` suffixed in
+    /// serve mode).
     pub label: String,
+    /// Model name the run trained.
     pub model: String,
+    /// Per-round records in round order.
     pub rounds: Vec<RoundRecord>,
     /// FNV-1a hash over the final global parameters' exact f32 bits.
     /// Lets determinism tests compare whole runs (e.g. threads=1 vs
@@ -80,6 +203,7 @@ impl RunReport {
             .fold(f32::NAN, f32::max)
     }
 
+    /// Cumulative uplink bits over the whole run.
     pub fn total_uplink_bits(&self) -> u64 {
         self.rounds.last().map(|r| r.cum_uplink_bits).unwrap_or(0)
     }
@@ -87,11 +211,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -103,12 +227,16 @@ impl RunReport {
                 r.wall_secs,
                 r.recv_decode_secs,
                 r.agg_secs,
-                r.eval_secs
+                r.eval_secs,
+                r.selected,
+                r.dropped,
+                r.sim_makespan_secs
             ));
         }
         out
     }
 
+    /// The whole report as a JSON object ([`Self::from_json`] inverts).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("label", Json::from(self.label.clone())),
@@ -117,50 +245,49 @@ impl RunReport {
             ("params_hash", Json::from(format!("{:016x}", self.params_hash))),
             (
                 "rounds",
-                Json::Arr(
-                    self.rounds
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("round", Json::from(r.round)),
-                                ("train_loss", Json::from(r.train_loss as f64)),
-                                ("test_loss", Json::from(r.test_loss as f64)),
-                                ("test_acc", Json::from(r.test_accuracy as f64)),
-                                // decimal strings, not numbers: Json's
-                                // f64 backing loses exactness above 2^53
-                                // and long large-model runs get there —
-                                // same fix as params_hash's hex string
-                                ("uplink_bits", u64_json(r.uplink_bits)),
-                                ("cum_uplink_bits", u64_json(r.cum_uplink_bits)),
-                                ("mean_bits", Json::from(r.mean_bits as f64)),
-                                ("mean_range", Json::from(r.mean_range as f64)),
-                                (
-                                    "seg_ranges",
-                                    Json::Arr(
-                                        r.seg_ranges
-                                            .iter()
-                                            .map(|&x| Json::from(x as f64))
-                                            .collect(),
-                                    ),
-                                ),
-                                ("wall_secs", Json::from(r.wall_secs)),
-                                ("recv_decode_secs", Json::from(r.recv_decode_secs)),
-                                ("agg_secs", Json::from(r.agg_secs)),
-                                ("eval_secs", Json::from(r.eval_secs)),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::Arr(self.rounds.iter().map(RoundRecord::to_json).collect()),
             ),
         ])
     }
 
+    /// Parse a report written by [`Self::to_json`] (e.g. a saved
+    /// `--out run.json`), tolerating legacy reports that predate the
+    /// scheduler fields or the exact-decimal bit counters.
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        let str_at = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("report: {k}"))?
+                .to_string())
+        };
+        let params_hash = match j.get("params_hash").and_then(Json::as_str) {
+            Some(h) => u64::from_str_radix(h, 16).context("report: params_hash")?,
+            None => 0,
+        };
+        let rounds = j
+            .get("rounds")
+            .and_then(Json::as_arr)
+            .context("report: rounds")?
+            .iter()
+            .map(RoundRecord::from_json)
+            .collect::<Result<Vec<RoundRecord>>>()?;
+        Ok(RunReport { label: str_at("label")?, model: str_at("model")?, rounds, params_hash })
+    }
+
+    /// Parse a report from JSON text ([`Self::from_json`] over
+    /// [`Json::parse`]).
+    pub fn from_json_str(s: &str) -> Result<RunReport> {
+        Self::from_json(&Json::parse(s).map_err(anyhow::Error::from)?)
+    }
+
+    /// Write [`Self::to_csv`] to `path`.
     pub fn write_csv(&self, path: &str) -> Result<()> {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_csv().as_bytes())?;
         Ok(())
     }
 
+    /// Write [`Self::to_json`] (pretty-printed) to `path`.
     pub fn write_json(&self, path: &str) -> Result<()> {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_json().to_string_pretty().as_bytes())?;
@@ -212,6 +339,9 @@ mod tests {
             recv_decode_secs: 0.2,
             agg_secs: 0.1,
             eval_secs: 0.05,
+            selected: 10,
+            dropped: 2,
+            sim_makespan_secs: 1.25,
         }
     }
 
@@ -261,6 +391,133 @@ mod tests {
     #[test]
     fn gbits_scale() {
         assert!((gbits(2_070_000_000) - 2.07).abs() < 1e-9);
+    }
+
+    fn assert_records_equal(a: &RoundRecord, b: &RoundRecord) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        // NaN-tolerant: unevaluated rounds round-trip through null
+        assert_eq!(a.test_loss.is_nan(), b.test_loss.is_nan());
+        if !a.test_loss.is_nan() {
+            assert_eq!(a.test_loss, b.test_loss);
+        }
+        assert_eq!(a.test_accuracy.is_nan(), b.test_accuracy.is_nan());
+        if !a.test_accuracy.is_nan() {
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+        }
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.cum_uplink_bits, b.cum_uplink_bits);
+        assert_eq!(a.mean_bits, b.mean_bits);
+        assert_eq!(a.mean_range, b.mean_range);
+        assert_eq!(a.seg_ranges, b.seg_ranges);
+        assert_eq!(a.wall_secs, b.wall_secs);
+        assert_eq!(a.recv_decode_secs, b.recv_decode_secs);
+        assert_eq!(a.agg_secs, b.agg_secs);
+        assert_eq!(a.eval_secs, b.eval_secs);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.sim_makespan_secs, b.sim_makespan_secs);
+    }
+
+    #[test]
+    fn report_json_schema_round_trips_through_text() {
+        // An evaluated round, an unevaluated (NaN) round, and
+        // above-2^53 bit counters — the whole schema incl. the
+        // scheduler fields must survive emit -> text -> parse.
+        let big: u64 = (1u64 << 60) + 1;
+        let mut r0 = record(0, 0.5, big - 7);
+        r0.uplink_bits = big - 9;
+        r0.selected = 5;
+        r0.dropped = 3;
+        r0.sim_makespan_secs = 0.875; // exact in f64
+        let mut r1 = record(1, f32::NAN, big);
+        r1.test_loss = f32::NAN;
+        let rep = RunReport {
+            label: "sched".into(),
+            model: "mlp".into(),
+            rounds: vec![r0, r1],
+            params_hash: 0xdead_beef_0bad_cafe,
+        };
+        let text = rep.to_json().to_string_pretty();
+        let back = RunReport::from_json_str(&text).unwrap();
+        assert_eq!(back.label, rep.label);
+        assert_eq!(back.model, rep.model);
+        assert_eq!(back.params_hash, rep.params_hash);
+        assert_eq!(back.rounds.len(), rep.rounds.len());
+        for (a, b) in rep.rounds.iter().zip(&back.rounds) {
+            assert_records_equal(a, b);
+        }
+        // the bit counters specifically crossed the text layer as
+        // exact decimal strings
+        let parsed = Json::parse(&text).unwrap();
+        let row = &parsed.get("rounds").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("uplink_bits").unwrap(), &Json::Str((big - 9).to_string()));
+        assert_eq!(row.get("selected").and_then(Json::as_usize), Some(5));
+        assert_eq!(row.get("dropped").and_then(Json::as_usize), Some(3));
+        assert_eq!(row.get("sim_makespan_secs").and_then(Json::as_f64), Some(0.875));
+    }
+
+    #[test]
+    fn legacy_report_without_scheduler_fields_parses_with_zeros() {
+        let rep = RunReport {
+            label: "old".into(),
+            model: "mlp".into(),
+            rounds: vec![record(0, 0.5, 100)],
+            params_hash: 7,
+        };
+        let mut j = rep.to_json();
+        if let Json::Obj(o) = &mut j {
+            let rounds = o.get_mut("rounds").unwrap();
+            if let Json::Arr(rs) = rounds {
+                if let Json::Obj(r) = &mut rs[0] {
+                    // scheduler fields (this PR) and the per-stage
+                    // timings (absent in first-revision reports, which
+                    // carried only wall_secs) both default leniently
+                    r.remove("selected");
+                    r.remove("dropped");
+                    r.remove("sim_makespan_secs");
+                    r.remove("recv_decode_secs");
+                    r.remove("agg_secs");
+                    r.remove("eval_secs");
+                }
+            }
+        }
+        let back = RunReport::from_json(&j).unwrap();
+        assert_eq!(back.rounds[0].selected, 0);
+        assert_eq!(back.rounds[0].dropped, 0);
+        assert_eq!(back.rounds[0].sim_makespan_secs, 0.0);
+        assert_eq!(back.rounds[0].recv_decode_secs, 0.0);
+        assert_eq!(back.rounds[0].agg_secs, 0.0);
+        assert_eq!(back.rounds[0].eval_secs, 0.0);
+        assert_eq!(back.rounds[0].wall_secs, 0.5, "wall_secs survives");
+        // present-but-mistyped fields still error (corruption, not legacy)
+        let mut bad = rep.to_json();
+        if let Json::Obj(o) = &mut bad {
+            if let Json::Arr(rs) = o.get_mut("rounds").unwrap() {
+                if let Json::Obj(r) = &mut rs[0] {
+                    r.insert("agg_secs".into(), Json::Str("fast".into()));
+                }
+            }
+        }
+        assert!(RunReport::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn csv_schema_includes_scheduler_columns() {
+        let rep = RunReport {
+            label: "s".into(),
+            model: "mlp".into(),
+            rounds: vec![record(0, 0.5, 100)],
+            params_hash: 0,
+        };
+        let csv = rep.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("selected,dropped,sim_makespan_secs"), "{header}");
+        let row = csv.lines().nth(1).unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), header.split(',').count());
+        assert_eq!(cols[12], "10");
+        assert_eq!(cols[13], "2");
     }
 
     #[test]

@@ -15,16 +15,19 @@
 
 use super::{math, Decision, PolicyInputs, QuantPolicy};
 
+/// The ascending AdaQuantFL baseline (see module docs).
 pub struct AdaQuantFl {
     s0: u32,
     max_bits: u32,
 }
 
 impl AdaQuantFl {
+    /// Policy starting at level `s_0` (clamped to >= 1), 16-bit ceiling.
     pub fn new(s0: u32) -> Self {
         AdaQuantFl { s0: s0.max(1), max_bits: 16 }
     }
 
+    /// Builder: cap the bit-width at `b` (1..=16).
     pub fn with_max_bits(mut self, b: u32) -> Self {
         assert!((1..=16).contains(&b));
         self.max_bits = b;

@@ -20,6 +20,7 @@
 
 use super::{math, Decision, PolicyInputs, QuantPolicy};
 
+/// Range granularity FedDQ derives its bit-widths from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Granularity {
     /// One bit-width per parameter segment (layer).
@@ -28,6 +29,7 @@ pub enum Granularity {
     Whole,
 }
 
+/// The paper's descending-quantization policy (see module docs).
 pub struct FedDq {
     resolution: f32,
     max_bits: u32,
@@ -35,6 +37,8 @@ pub struct FedDq {
 }
 
 impl FedDq {
+    /// Policy at `resolution` (paper §IV: 0.005), per-segment
+    /// granularity, 16-bit ceiling.
     pub fn new(resolution: f32) -> Self {
         FedDq {
             resolution,
@@ -43,11 +47,13 @@ impl FedDq {
         }
     }
 
+    /// Builder: switch the range granularity.
     pub fn with_granularity(mut self, g: Granularity) -> Self {
         self.granularity = g;
         self
     }
 
+    /// Builder: cap the bit-width at `b` (1..=16).
     pub fn with_max_bits(mut self, b: u32) -> Self {
         assert!((1..=16).contains(&b));
         self.max_bits = b;

@@ -8,6 +8,7 @@ pub struct Fixed {
 }
 
 impl Fixed {
+    /// Policy transmitting every segment at `bits` wire bits (1..=16).
     pub fn new(bits: u32) -> Self {
         assert!((1..=16).contains(&bits), "fixed bits in 1..=16");
         Fixed {

@@ -21,7 +21,9 @@ use crate::Result;
 /// Everything a policy may condition on at round `m` for one client.
 #[derive(Clone, Debug)]
 pub struct PolicyInputs<'a> {
+    /// Round index (0-based).
     pub round: u32,
+    /// The deciding client's id.
     pub client_id: u32,
     /// Per-segment update ranges observed *this* round (max - min).
     pub ranges: &'a [f32],
@@ -47,6 +49,7 @@ pub struct Decision {
 }
 
 impl Decision {
+    /// The no-quantization decision: every segment ships raw f32.
     pub fn fp32() -> Self {
         Decision { levels: None }
     }
@@ -62,6 +65,7 @@ impl Decision {
 
 /// A quantization-level scheduling policy.
 pub trait QuantPolicy: Send {
+    /// Short policy identifier (reports and labels).
     fn name(&self) -> &'static str;
     /// Choose quantization levels for one client's update.
     fn decide(&mut self, inputs: &PolicyInputs) -> Decision;
@@ -70,13 +74,29 @@ pub trait QuantPolicy: Send {
 /// Config-level policy selection (parsed from CLI / config JSON).
 #[derive(Clone, Debug, PartialEq)]
 pub enum PolicyConfig {
-    FedDq { resolution: f32 },
+    /// The paper's descending policy (Eq. 10), per-segment ranges;
+    /// `resolution` is the accuracy/volume trade-off knob.
+    FedDq {
+        /// Target quantization resolution (paper §IV: 0.005).
+        resolution: f32,
+    },
     /// FedDQ with a single bit-width from the whole-model range
     /// (Eq. 10 as literally written; the per-segment default is finer).
-    FedDqWhole { resolution: f32 },
+    FedDqWhole {
+        /// Target quantization resolution (paper §IV: 0.005).
+        resolution: f32,
+    },
     /// `s0`: initial quantization level (paper [12] uses small s0, e.g. 2).
-    AdaQuantFl { s0: u32 },
-    Fixed { bits: u32 },
+    AdaQuantFl {
+        /// Initial quantization level `s_0`.
+        s0: u32,
+    },
+    /// Constant bit-width baseline.
+    Fixed {
+        /// Wire bits per code, 1..=16.
+        bits: u32,
+    },
+    /// No quantization: raw f32 uplink (FedAvg baseline).
     Fp32,
 }
 
@@ -115,6 +135,7 @@ impl PolicyConfig {
         }
     }
 
+    /// Instantiate the configured policy.
     pub fn build(&self) -> Box<dyn QuantPolicy> {
         match self {
             PolicyConfig::FedDq { resolution } => {
@@ -132,6 +153,7 @@ impl PolicyConfig {
         }
     }
 
+    /// Canonical string form, parseable by [`Self::parse`].
     pub fn label(&self) -> String {
         match self {
             PolicyConfig::FedDq { resolution } => format!("feddq:{resolution}"),

@@ -11,30 +11,43 @@ use crate::util::json::Json;
 /// One quantization segment (= one parameter tensor / layer).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Segment {
+    /// Tensor name (e.g. `dense/kernel`).
     pub name: String,
+    /// Start offset into the flat parameter vector.
     pub offset: usize,
+    /// Element count.
     pub size: usize,
+    /// Original tensor shape (telemetry; the flat view drives compute).
     pub shape: Vec<usize>,
 }
 
 /// Everything Rust needs to drive one model's executables.
 #[derive(Clone, Debug)]
 pub struct ModelManifest {
+    /// Model name (manifest key).
     pub name: String,
     /// Flat parameter dimension.
     pub d: usize,
+    /// Quantization segments in offset order, covering `[0, d)`.
     pub segments: Vec<Segment>,
+    /// Input image shape `(h, w, c)` as a list.
     pub input_shape: Vec<usize>,
+    /// Number of output classes.
     pub classes: usize,
+    /// Local SGD steps per round.
     pub tau: usize,
+    /// Local minibatch size.
     pub batch: usize,
+    /// Server-side evaluation batch size (AOT-static).
     pub eval_batch: usize,
+    /// Cohort registry size the benchmark trains with.
     pub n_clients: usize,
     /// executable name -> HLO file name.
     pub files: BTreeMap<String, String>,
 }
 
 impl ModelManifest {
+    /// Number of quantization segments `L`.
     pub fn num_segments(&self) -> usize {
         self.segments.len()
     }
@@ -148,7 +161,9 @@ impl ModelManifest {
 /// The parsed manifest.json.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: usize,
+    /// Per-model manifests, keyed by model name.
     pub models: BTreeMap<String, ModelManifest>,
 }
 
@@ -230,6 +245,7 @@ impl Manifest {
         Manifest { version: 2, models }
     }
 
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &str) -> Result<Manifest> {
         let path = format!("{dir}/manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -237,6 +253,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text (validates every model).
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).context("manifest json")?;
         let version = j

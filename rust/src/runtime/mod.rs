@@ -33,6 +33,7 @@ pub use model_exec::ModelRuntime;
 /// Backend-owning runtime.  One per process; models loaded from it can
 /// be executed from any thread.
 pub struct Runtime {
+    /// The loaded (or built-in) model manifest.
     pub manifest: Manifest,
     /// Only the PJRT backend reads artifacts after construction.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -79,6 +80,7 @@ impl Runtime {
         !self.from_artifacts
     }
 
+    /// Execution platform name (`native-cpu`, or PJRT's platform).
     pub fn platform(&self) -> String {
         #[cfg(feature = "pjrt")]
         if let Some(c) = &self.client {

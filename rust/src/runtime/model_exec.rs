@@ -12,6 +12,7 @@ use super::native;
 
 /// One model's executables plus its manifest.
 pub struct ModelRuntime {
+    /// The model's manifest (shapes, segments, cohort size).
     pub mm: ModelManifest,
     exec: Exec,
 }

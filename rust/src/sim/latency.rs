@@ -1,0 +1,249 @@
+//! Per-client simulated wall-clock cost model for the round scheduler.
+//!
+//! The round scheduler ([`crate::coordinator::sched`]) needs a notion of
+//! how long each client will take *before* the round runs — real
+//! deployments schedule around stragglers they have not yet measured.
+//! [`LatencyModel`] provides that: a deterministic draw of simulated
+//! round seconds per `(client, round)` pair, derived purely from the run
+//! seed, so cohort selection and the `--round-deadline` policy are
+//! bit-reproducible for any thread count (the determinism contract in
+//! `ARCHITECTURE.md`).
+//!
+//! The model separates **persistent heterogeneity** (a slow phone stays
+//! slow: one per-client factor drawn once from the seed) from
+//! **per-round jitter** (network weather: an independent factor per
+//! `(client, round)`).  Both streams come from labeled
+//! [`Rng::derive`](crate::util::rng::Rng::derive) children, so no draw
+//! order dependence exists — `round_secs(c, m)` is a pure function.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// Shape of the simulated per-client latency distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyProfile {
+    /// No simulation: every client costs 0 simulated seconds.  Cohort
+    /// selection still works (deadline ties break by client id) and the
+    /// per-round simulated makespan is 0.
+    Off,
+    /// Persistent per-client cost uniform in `[lo, hi]` seconds, with a
+    /// ±20% per-round jitter factor.
+    Uniform {
+        /// Fastest client's base round seconds.
+        lo: f64,
+        /// Slowest client's base round seconds.
+        hi: f64,
+    },
+    /// Log-normal cost around `median` seconds: the classic heavy-tailed
+    /// straggler shape (most clients fast, a few very slow).  The
+    /// persistent per-client factor is `exp(sigma * z)`; per-round
+    /// jitter uses a third of the same sigma.
+    LogNormal {
+        /// Median base round seconds across clients.
+        median: f64,
+        /// Log-scale spread; 0 collapses to a constant `median`.
+        sigma: f64,
+    },
+}
+
+impl LatencyProfile {
+    /// Parse `off`, `uniform:<lo>:<hi>` or `lognormal:<median>:<sigma>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut it = s.split(':');
+        let head = it.next().unwrap_or("");
+        let args: Vec<&str> = it.collect();
+        match head {
+            "off" => {
+                ensure!(args.is_empty(), "off takes no arguments");
+                Ok(LatencyProfile::Off)
+            }
+            "uniform" => {
+                ensure!(args.len() == 2, "want uniform:<lo>:<hi>");
+                let lo: f64 = args[0].parse()?;
+                let hi: f64 = args[1].parse()?;
+                ensure!(
+                    lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi,
+                    "uniform needs 0 <= lo <= hi"
+                );
+                Ok(LatencyProfile::Uniform { lo, hi })
+            }
+            "lognormal" => {
+                ensure!(args.len() == 2, "want lognormal:<median>:<sigma>");
+                let median: f64 = args[0].parse()?;
+                let sigma: f64 = args[1].parse()?;
+                ensure!(
+                    median.is_finite() && median > 0.0,
+                    "lognormal median must be positive"
+                );
+                ensure!(sigma.is_finite() && sigma >= 0.0, "lognormal sigma must be >= 0");
+                Ok(LatencyProfile::LogNormal { median, sigma })
+            }
+            _ => bail!("unknown latency profile {s:?} (want off|uniform:<lo>:<hi>|lognormal:<median>:<sigma>)"),
+        }
+    }
+
+    /// True when every draw is the same value — `off`, `uniform:0:0`
+    /// (zero base kills the jitter factor too) or `lognormal:<m>:0`.
+    /// The deadline policy rejects constant profiles: with all
+    /// candidates tied, its client-id tie-break would keep the lowest
+    /// ids round after round, permanently excluding high-id clients.
+    pub fn is_constant(&self) -> bool {
+        match self {
+            LatencyProfile::Off => true,
+            // lo == hi still spreads via the per-round jitter factor —
+            // unless the base itself is 0, which zeroes everything.
+            LatencyProfile::Uniform { hi, .. } => *hi == 0.0,
+            LatencyProfile::LogNormal { sigma, .. } => *sigma == 0.0,
+        }
+    }
+
+    /// The canonical string form, parseable by [`Self::parse`] (used by
+    /// the config JSON round-trip).
+    pub fn label(&self) -> String {
+        match self {
+            LatencyProfile::Off => "off".to_string(),
+            LatencyProfile::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            LatencyProfile::LogNormal { median, sigma } => format!("lognormal:{median}:{sigma}"),
+        }
+    }
+}
+
+/// Deterministic simulated per-client round cost, seeded from the run.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    profile: LatencyProfile,
+    root: Rng,
+}
+
+impl LatencyModel {
+    /// Build the model for one run; `seed` is the run's root seed (the
+    /// model derives its own independent stream from it).
+    pub fn new(profile: LatencyProfile, seed: u64) -> LatencyModel {
+        LatencyModel { profile, root: Rng::new(seed).derive("sim.latency") }
+    }
+
+    /// The configured profile.
+    pub fn profile(&self) -> LatencyProfile {
+        self.profile
+    }
+
+    /// Simulated wall-clock seconds for `client_id` to complete round
+    /// `round` (download, local steps, upload — the scheduler treats it
+    /// as one opaque cost).  A pure function of `(seed, profile,
+    /// client_id, round)`: always finite and `>= 0`.
+    pub fn round_secs(&self, client_id: u32, round: u32) -> f64 {
+        match self.profile {
+            LatencyProfile::Off => 0.0,
+            LatencyProfile::Uniform { lo, hi } => {
+                let mut base_rng = self.root.derive(&format!("c{client_id}.base"));
+                let mut round_rng = self.root.derive(&format!("c{client_id}.r{round}"));
+                let base = lo + (hi - lo) * base_rng.next_f64();
+                // ±20% round-to-round jitter, never negative.
+                let jitter = 0.8 + 0.4 * round_rng.next_f64();
+                base * jitter
+            }
+            LatencyProfile::LogNormal { median, sigma } => {
+                let mut base_rng = self.root.derive(&format!("c{client_id}.base"));
+                let mut round_rng = self.root.derive(&format!("c{client_id}.r{round}"));
+                let zc = base_rng.next_normal() as f64;
+                let zr = round_rng.next_normal() as f64;
+                // Persistent spread at full sigma, round jitter at a
+                // third — slow clients stay slow across rounds.
+                median * (sigma * zc + (sigma / 3.0) * zr).exp()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_profiles_are_detected() {
+        assert!(LatencyProfile::Off.is_constant());
+        assert!(LatencyProfile::LogNormal { median: 1.0, sigma: 0.0 }.is_constant());
+        assert!(LatencyProfile::Uniform { lo: 0.0, hi: 0.0 }.is_constant());
+        // lo == hi > 0 still spreads through the per-round jitter
+        assert!(!LatencyProfile::Uniform { lo: 1.0, hi: 1.0 }.is_constant());
+        assert!(!LatencyProfile::Uniform { lo: 0.5, hi: 1.5 }.is_constant());
+        assert!(!LatencyProfile::LogNormal { median: 1.0, sigma: 0.3 }.is_constant());
+        // and the detector is truthful: a "spreading" profile really
+        // produces distinct draws, a constant one does not
+        let spread = LatencyModel::new(LatencyProfile::Uniform { lo: 1.0, hi: 1.0 }, 9);
+        assert_ne!(spread.round_secs(0, 0), spread.round_secs(1, 0));
+        let flat = LatencyModel::new(LatencyProfile::LogNormal { median: 2.0, sigma: 0.0 }, 9);
+        assert_eq!(flat.round_secs(0, 0), flat.round_secs(1, 0));
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["off", "uniform:0.5:2", "lognormal:1:0.8"] {
+            let p = LatencyProfile::parse(s).unwrap();
+            assert_eq!(LatencyProfile::parse(&p.label()).unwrap(), p);
+        }
+        assert!(LatencyProfile::parse("uniform:2:1").is_err()); // lo > hi
+        assert!(LatencyProfile::parse("uniform:1").is_err());
+        assert!(LatencyProfile::parse("lognormal:0:1").is_err()); // median 0
+        assert!(LatencyProfile::parse("gaussian:1:1").is_err());
+        assert!(LatencyProfile::parse("off:1").is_err());
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_seed_client_round() {
+        let a = LatencyModel::new(LatencyProfile::LogNormal { median: 1.0, sigma: 0.8 }, 17);
+        let b = LatencyModel::new(LatencyProfile::LogNormal { median: 1.0, sigma: 0.8 }, 17);
+        for c in 0..10u32 {
+            for m in 0..5u32 {
+                // identical across instances, and across call order
+                assert_eq!(a.round_secs(c, m).to_bits(), b.round_secs(c, m).to_bits());
+                assert_eq!(a.round_secs(c, m).to_bits(), a.round_secs(c, m).to_bits());
+            }
+        }
+        let other = LatencyModel::new(LatencyProfile::LogNormal { median: 1.0, sigma: 0.8 }, 18);
+        let differs = (0..10u32).any(|c| other.round_secs(c, 0) != a.round_secs(c, 0));
+        assert!(differs, "different seeds must yield different draws");
+    }
+
+    #[test]
+    fn persistent_heterogeneity_dominates_round_jitter() {
+        // A client's costs across rounds must correlate: the slowest
+        // client at round 0 stays in the slow half at round 1, for
+        // (at least) most seeds — per-round jitter is a third of the
+        // persistent spread, so this holds overwhelmingly often.
+        let mut wins = 0;
+        for seed in 0..5u64 {
+            let m =
+                LatencyModel::new(LatencyProfile::LogNormal { median: 1.0, sigma: 1.0 }, seed);
+            let n = 32u32;
+            let at =
+                |round: u32| -> Vec<f64> { (0..n).map(|c| m.round_secs(c, round)).collect() };
+            let r0 = at(0);
+            let r1 = at(1);
+            let slowest =
+                (0..n as usize).max_by(|&a, &b| r0[a].total_cmp(&r0[b])).unwrap();
+            let median1 = {
+                let mut s = r1.clone();
+                s.sort_by(f64::total_cmp);
+                s[s.len() / 2]
+            };
+            if r1[slowest] > median1 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 3, "straggler persistence held for only {wins}/5 seeds");
+    }
+
+    #[test]
+    fn uniform_respects_bounds_and_off_is_free() {
+        let m = LatencyModel::new(LatencyProfile::Uniform { lo: 1.0, hi: 3.0 }, 3);
+        for c in 0..20u32 {
+            let s = m.round_secs(c, 0);
+            // base in [1, 3], jitter in [0.8, 1.2)
+            assert!(s >= 0.8 && s < 3.6, "{s}");
+        }
+        let off = LatencyModel::new(LatencyProfile::Off, 3);
+        assert_eq!(off.round_secs(0, 0), 0.0);
+    }
+}

@@ -1,12 +1,21 @@
-//! Network simulation: translate measured bit volumes into wall-clock
-//! time under a parametric uplink/downlink model.
+//! Simulation models: translate measured bit volumes into wall-clock
+//! time, and give the round scheduler a per-client cost model.
 //!
 //! The paper's metric is communicated *bits*; what a deployment feels is
-//! *time-to-accuracy* under constrained links.  [`NetworkModel`] replays a
-//! [`RunReport`](crate::metrics::RunReport) against per-client bandwidth
-//! and per-round latency and produces the time axis for the same curves —
-//! used by the ablation bench and available to downstream users.
+//! *time-to-accuracy* under constrained links.  Two models cover that:
+//!
+//! * [`NetworkModel`] (in [`network`]) replays a completed
+//!   [`RunReport`](crate::metrics::RunReport) against per-client
+//!   bandwidth and per-round latency, producing the time axis for the
+//!   same curves — used by the ablation bench and downstream users.
+//! * [`LatencyModel`] (in [`latency`]) is the *forward* model: a
+//!   deterministic draw of simulated round seconds per `(client,
+//!   round)`, consumed by the round scheduler
+//!   ([`crate::coordinator::sched`]) for cohort selection, the
+//!   `--round-deadline` policy and the per-round simulated makespan.
 
+pub mod latency;
 pub mod network;
 
+pub use latency::{LatencyModel, LatencyProfile};
 pub use network::{NetworkModel, TimedRound};

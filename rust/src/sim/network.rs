@@ -120,9 +120,13 @@ impl NetworkModel {
 /// One replayed round on the simulated network.
 #[derive(Clone, Debug)]
 pub struct TimedRound {
+    /// Round index.
     pub round: u32,
+    /// Cumulative simulated wall-clock at the end of this round.
     pub cum_secs: f64,
+    /// Test accuracy after this round (NaN when unevaluated).
     pub test_accuracy: f32,
+    /// Cumulative uplink bits through this round.
     pub cum_uplink_bits: u64,
 }
 
@@ -146,6 +150,9 @@ mod tests {
             recv_decode_secs: 0.5,
             agg_secs: 0.2,
             eval_secs: 0.1,
+            selected: 10,
+            dropped: 0,
+            sim_makespan_secs: 0.0,
         }
     }
 

@@ -12,23 +12,31 @@ use super::stats;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name as printed.
     pub name: String,
+    /// Iterations measured (after warmup).
     pub iters: usize,
+    /// Median iteration time.
     pub median: Duration,
+    /// 5th-percentile iteration time.
     pub p05: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Mean iteration time.
     pub mean: Duration,
     /// Optional bytes processed per iteration (enables GB/s reporting).
     pub bytes_per_iter: Option<u64>,
 }
 
 impl BenchResult {
+    /// Median throughput in GB/s, when `bytes_per_iter` is set.
     pub fn throughput_gbps(&self) -> Option<f64> {
         self.bytes_per_iter.map(|b| {
             b as f64 / self.median.as_secs_f64() / 1.0e9
         })
     }
 
+    /// The human-readable one-line summary benches print.
     pub fn report_line(&self) -> String {
         let thr = match self.throughput_gbps() {
             Some(gbps) => format!("  {gbps:8.3} GB/s"),
@@ -61,9 +69,13 @@ fn fmt_dur(d: Duration) -> String {
 
 /// Benchmark runner with a global time budget per case.
 pub struct Bencher {
+    /// Warmup time before measurement starts.
     pub warmup: Duration,
+    /// Measurement time budget per case.
     pub budget: Duration,
+    /// Lower bound on measured iterations.
     pub min_iters: usize,
+    /// Upper bound on measured iterations.
     pub max_iters: usize,
     results: Vec<BenchResult>,
 }
@@ -81,6 +93,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Short warmup/budget preset for smoke runs.
     pub fn quick() -> Self {
         Bencher {
             warmup: Duration::from_millis(50),
@@ -132,6 +145,7 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Every result measured so far, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

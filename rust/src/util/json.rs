@@ -14,15 +14,22 @@ use std::fmt;
 /// deterministic (useful for golden tests and config fingerprints).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64-backed; see module docs on exactness).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -30,6 +37,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -37,6 +45,7 @@ impl Json {
         }
     }
 
+    /// The value as a usize, if it is a non-negative whole number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64 {
@@ -47,6 +56,7 @@ impl Json {
         })
     }
 
+    /// The string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -54,6 +64,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -61,6 +72,7 @@ impl Json {
         }
     }
 
+    /// The key map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -101,6 +113,7 @@ impl Json {
         s
     }
 
+    /// Parse one complete JSON document (rejects trailing characters).
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -152,9 +165,12 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// A JSON parse failure with its byte position.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

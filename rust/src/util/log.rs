@@ -6,13 +6,20 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, most severe first; a message prints when its level is
+/// at or below the global switch ([`set_level`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// Human-facing progress (the default level).
     Info = 2,
+    /// Diagnostics enabled by `--verbose`.
     Debug = 3,
+    /// Firehose detail.
     Trace = 4,
 }
 
@@ -25,11 +32,13 @@ fn start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
+/// Set the process-wide log level.
 pub fn set_level(level: Level) {
     start(); // pin t=0 at first configuration
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// The current process-wide log level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -40,10 +49,13 @@ pub fn level() -> Level {
     }
 }
 
+/// Would a message at level `l` print right now?
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Print one line to stderr (relative timestamp, level tag, target),
+/// if `l` is enabled.  Prefer the `info!` / `warn_!` / `debug!` macros.
 pub fn log(l: Level, target: &str, msg: &str) {
     if !enabled(l) {
         return;
@@ -59,6 +71,7 @@ pub fn log(l: Level, target: &str, msg: &str) {
     eprintln!("[{t:9.3}s {tag} {target}] {msg}");
 }
 
+/// Log at [`Level::Info`]: `info!("target", "fmt {}", args)`.
 #[macro_export]
 macro_rules! info {
     ($target:expr, $($arg:tt)*) => {
@@ -66,6 +79,7 @@ macro_rules! info {
     };
 }
 
+/// Log at [`Level::Warn`] (trailing underscore dodges `core::warn`).
 #[macro_export]
 macro_rules! warn_ {
     ($target:expr, $($arg:tt)*) => {
@@ -73,6 +87,7 @@ macro_rules! warn_ {
     };
 }
 
+/// Log at [`Level::Debug`] (shown under `--verbose`).
 #[macro_export]
 macro_rules! debug {
     ($target:expr, $($arg:tt)*) => {

@@ -11,6 +11,7 @@ use super::rng::Rng;
 
 /// Seeded generator handed to each property case.
 pub struct Gen {
+    /// The case's seeded RNG (draw directly for raw bits).
     pub rng: Rng,
     /// Case index (0..cases); useful for size ramping.
     pub case: usize,
@@ -47,6 +48,7 @@ impl Gen {
         }
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

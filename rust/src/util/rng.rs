@@ -53,6 +53,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next 64 random bits (the core xoshiro256** step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -69,6 +70,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 random bits (the high half of [`Self::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -34,10 +34,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Minimum value; +inf for empty input.
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum value; -inf for empty input.
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }

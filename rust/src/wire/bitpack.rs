@@ -28,10 +28,12 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// Empty writer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty writer with `bytes` of output capacity pre-reserved.
     pub fn with_capacity(bytes: usize) -> Self {
         BitWriter {
             buf: Vec::with_capacity(bytes),
@@ -113,6 +115,7 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// Reader positioned at bit 0 of `buf`.
     pub fn new(buf: &'a [u8]) -> Self {
         BitReader {
             buf,

@@ -9,7 +9,9 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+/// Frame magic: protocol marker + version.
 pub const MAGIC: u32 = 0xFEDD_0001;
+/// Frame header size: magic + length + CRC32, 4 bytes each.
 pub const HEADER_BYTES: u64 = 12;
 
 /// Maximum accepted frame (guards against corrupted length fields).

@@ -25,7 +25,10 @@ pub struct SegmentHeader {
     pub bits: u8,
     /// Quantization level `s` (codes in 0..=s); 0 for fp32 segments.
     pub level: u16,
+    /// Segment minimum (dequantization offset).
     pub min: f32,
+    /// Dequantization step `range / s` (for fp32 segments this field
+    /// carries the raw range, telemetry only).
     pub step: f32,
 }
 
@@ -43,12 +46,15 @@ impl SegmentHeader {
 /// A client's quantized model update for one round.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Update {
+    /// Round the update answers.
     pub round: u32,
+    /// Sending client's id.
     pub client_id: u32,
     /// Client dataset size (aggregation weight numerator, paper `p_i`).
     pub num_samples: u32,
     /// Mean local training loss over the tau local steps (AdaQuantFL input).
     pub train_loss: f32,
+    /// Per-segment quantization headers, in manifest segment order.
     pub segments: Vec<SegmentHeader>,
     /// Bit-packed codes (or raw f32 LE bytes for 32-bit segments).
     pub payload: Vec<u8>,
@@ -67,12 +73,19 @@ pub enum Message {
     /// `Welcome`) and re-sends `Some(n)` as its ready handshake, which
     /// gives the server the fold-overlap weight plan at round 0.
     Join {
+        /// The joining client's id (`0..n_clients`).
         client_id: u32,
+        /// Shard size, when known (the ready handshake; see above).
         num_samples: Option<u32>,
     },
     /// Server -> client: accepted; carries the run-config JSON so remote
     /// workers configure themselves identically.
-    Welcome { client_id: u32, config_json: String },
+    Welcome {
+        /// The id the server accepted the client under.
+        client_id: u32,
+        /// The full [`RunConfig`](crate::config::RunConfig) as JSON.
+        config_json: String,
+    },
     /// Server -> client: global model for round `round` (fp32 downlink,
     /// as in the paper — only the uplink is quantized).  Carries the
     /// global loss trajectory (initial, previous-round) that loss-driven
@@ -83,8 +96,12 @@ pub enum Message {
     /// cloning the message is a refcount bump, and the round engine's
     /// worker pool reads the shared vector concurrently.
     Broadcast {
+        /// Round the recipients must answer.
         round: u32,
+        /// The shared global parameter vector (see above).
         params: Arc<[f32]>,
+        /// Global (initial, previous-round) training loss; `None`
+        /// before round 1.
         losses: Option<(f32, f32)>,
     },
     /// Client -> server: the quantized update.

@@ -23,12 +23,14 @@ use super::messages::Message;
 
 /// A bidirectional, byte-accounted message pipe.
 pub trait Transport: Send {
+    /// Serialize and transmit one message.
     fn send(&mut self, msg: &Message) -> Result<()>;
     /// Send a message the caller already encoded (`msg.encode()` done
     /// once, fanned out to many peers — the broadcast hot path).
     /// Implementations must transmit and account `encoded` without
     /// re-serializing.
     fn send_encoded(&mut self, encoded: &[u8]) -> Result<()>;
+    /// Block for the next message.
     fn recv(&mut self) -> Result<Message>;
     /// Bytes sent so far (framed size).
     fn bytes_sent(&self) -> u64;
@@ -99,11 +101,14 @@ pub struct TcpTransport {
 }
 
 impl TcpTransport {
+    /// Wrap an accepted stream (enables TCP_NODELAY — round messages
+    /// are latency-sensitive).
     pub fn new(stream: TcpStream) -> Result<Self> {
         stream.set_nodelay(true).context("set_nodelay")?;
         Ok(TcpTransport { stream, sent: 0, received: 0 })
     }
 
+    /// Connect to a listening server at `addr`.
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connect to {addr}"))?;

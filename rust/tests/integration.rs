@@ -302,6 +302,88 @@ fn tcp_topology_matches_nothing_burns() {
 }
 
 #[test]
+fn sampled_session_scales_ledger_to_cohort_and_roundtrips_json() {
+    // fp32 makes the ledger exactly predictable: each participating
+    // client costs d*32 + L*88 bits, so a 0.3-participation round must
+    // bill exactly 3 clients (builtin cohort = 10), not 10.
+    let mut cfg = tiny_cfg(PolicyConfig::Fp32);
+    cfg.rounds = 4;
+    cfg.participation = 0.3;
+    let mut session = Session::new(cfg).unwrap();
+    let d = session.manifest().d as u64;
+    let l = session.manifest().num_segments() as u64;
+    let report = session.run().unwrap();
+    let per_client = d * 32 + l * math::SEGMENT_HEADER_BITS;
+    for r in &report.rounds {
+        assert_eq!(r.selected, 3, "round {}", r.round);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.uplink_bits, 3 * per_client, "round {}", r.round);
+    }
+    // the report's JSON schema round-trips with the scheduler fields
+    let text = report.to_json().to_string_pretty();
+    let back = feddq::metrics::RunReport::from_json_str(&text).unwrap();
+    assert_eq!(back.params_hash, report.params_hash);
+    assert_eq!(back.rounds.len(), report.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&back.rounds) {
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.cum_uplink_bits, b.cum_uplink_bits);
+    }
+}
+
+#[test]
+fn sampled_tcp_topology_matches_sampled_local_run() {
+    // Partial participation over real sockets: unselected workers just
+    // block until a later cohort (or Shutdown) — and the whole run must
+    // agree with the in-process session bit for bit on losses and the
+    // ledger (same seed => same cohorts => same everything).
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 3;
+        cfg.participation = 0.5;
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17873";
+    let n = 10;
+    let workers: Vec<_> = (0..n)
+        .map(|id| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                for _ in 0..100 {
+                    match topology::worker(&addr, id, "artifacts") {
+                        Ok(()) => return,
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            if msg.contains("Connection refused") {
+                                std::thread::sleep(std::time::Duration::from_millis(100));
+                                continue;
+                            }
+                            panic!("worker {id}: {msg}");
+                        }
+                    }
+                }
+                panic!("worker {id}: server never came up");
+            })
+        })
+        .collect();
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, 5, "round {}", a.round);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.train_loss, b.train_loss, "tcp vs local train loss");
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tcp vs local bits");
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tcp vs local params");
+}
+
+#[test]
 fn error_feedback_session_runs_and_stays_finite() {
     let mut cfg = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
     cfg.error_feedback = true;

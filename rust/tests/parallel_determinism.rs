@@ -1,16 +1,19 @@
 //! The parallel round engine's determinism contract: for any worker
 //! thread count, accumulator shard count, eval slice count,
-//! decode-buffer bound, fold-overlap setting **and codec path**
-//! (narrow u16 rows + SWAR kernels + fused encode vs the scalar f32
-//! reference) the in-process `Session` must produce a bit-identical
-//! `RunReport` — same round records, same bit ledger, same final
-//! parameter hash.  Also pins the streaming-vs-fused aggregation
-//! equivalence on the mlp config.
+//! decode-buffer bound, fold-overlap setting, codec path (narrow u16
+//! rows + SWAR kernels + fused encode vs the scalar f32 reference)
+//! **and participation knobs** (sampled cohorts, deadline policy,
+//! simulated latency) the in-process `Session` must produce a
+//! bit-identical `RunReport` — same round records, same bit ledger,
+//! same cohorts, same final parameter hash.  Also pins the
+//! streaming-vs-fused aggregation equivalence on the mlp config.
 
 use feddq::config::{AggregateMode, CodecMode, RunConfig};
+use feddq::coordinator::sched::RoundScheduler;
 use feddq::coordinator::Session;
 use feddq::metrics::RunReport;
 use feddq::quant::PolicyConfig;
+use feddq::sim::latency::{LatencyModel, LatencyProfile};
 
 fn mlp_cfg(threads: usize) -> RunConfig {
     let mut cfg = RunConfig::default_for("mlp");
@@ -46,6 +49,16 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
         let sa: Vec<u32> = ra.seg_ranges.iter().map(|x| x.to_bits()).collect();
         let sb: Vec<u32> = rb.seg_ranges.iter().map(|x| x.to_bits()).collect();
         assert_eq!(sa, sb, "{what}: seg_ranges r{}", ra.round);
+        // scheduler outputs are part of the contract: cohort size,
+        // deadline drops and the simulated makespan are seed-pure
+        assert_eq!(ra.selected, rb.selected, "{what}: selected r{}", ra.round);
+        assert_eq!(ra.dropped, rb.dropped, "{what}: dropped r{}", ra.round);
+        assert_eq!(
+            ra.sim_makespan_secs.to_bits(),
+            rb.sim_makespan_secs.to_bits(),
+            "{what}: sim_makespan r{}",
+            ra.round
+        );
     }
     assert_ne!(a.params_hash, 0, "{what}: params hash must be tracked");
     assert_eq!(a.params_hash, b.params_hash, "{what}: final params diverged");
@@ -273,6 +286,140 @@ fn narrow_codec_matches_reference_on_fp32_policy() {
     narrow.policy = PolicyConfig::Fp32;
     narrow.codec = CodecMode::Narrow;
     assert_reports_identical(&run(reference), &run(narrow), "fp32: reference vs narrow");
+}
+
+#[test]
+fn partial_participation_is_deterministic_across_the_knob_matrix() {
+    // The acceptance matrix: participation in {1.0, 0.5, 0.2} crossed
+    // against threads / shards / eval slices / fold overlap / decode
+    // buffers / codec path.  The all-serial reference-codec run must be
+    // bit-identical to the maximally parallel narrow-codec run at every
+    // participation level — including params_hash and the per-round
+    // selected counts.
+    for &p in &[1.0f32, 0.5, 0.2] {
+        let mut serial = mlp_cfg(1);
+        serial.participation = p;
+        serial.agg_shards = 1;
+        serial.eval_threads = 1;
+        serial.fold_overlap = false;
+        serial.codec = CodecMode::Reference;
+        let base = run(serial);
+        let k = (10.0 * p).ceil() as u32; // builtin mlp cohort is 10
+        for r in &base.rounds {
+            assert_eq!(r.selected, k, "participation {p}: round {} cohort", r.round);
+            assert_eq!(r.dropped, 0, "no deadline policy, nothing dropped");
+        }
+        let mut par = mlp_cfg(4);
+        par.participation = p;
+        par.agg_shards = 5;
+        par.eval_threads = 3;
+        par.fold_overlap = true;
+        par.decode_buffers = 2;
+        par.codec = CodecMode::Narrow;
+        assert_reports_identical(
+            &base,
+            &run(par),
+            &format!("participation={p}: all-serial/reference vs threads=4/shards=5/eval=3/overlap/buffers=2/narrow"),
+        );
+    }
+}
+
+#[test]
+fn sampled_cohorts_are_reproducible_from_the_seed_alone() {
+    // Directly on the scheduler: the selected set is a pure function of
+    // (seed, round, n, participation) — observations cannot move it.
+    let fresh = || {
+        RoundScheduler::new(10, 0.5, None, LatencyModel::new(LatencyProfile::Off, 17), 17)
+            .unwrap()
+    };
+    let a = fresh();
+    let mut b = fresh();
+    b.observe(0, 50.0); // dispatch heuristic input, not selection input
+    for m in 0..10u32 {
+        assert_eq!(a.plan_round(m).selected, b.plan_round(m).selected, "round {m}");
+    }
+    // And end-to-end: two identical sampled runs agree bit for bit.
+    let mk = || {
+        let mut c = mlp_cfg(2);
+        c.participation = 0.5;
+        c
+    };
+    assert_reports_identical(&run(mk()), &run(mk()), "sampled run repeated");
+}
+
+#[test]
+fn deadline_policy_is_deterministic_and_respects_the_budget() {
+    // Straggler-aware deadline selection under a heavy-tailed simulated
+    // latency: candidates are over-sampled 2x, priced, and cut
+    // deterministically — the whole thing crossed against the parallel
+    // server must stay bit-identical.
+    let knobs = |threads: usize| {
+        let mut c = mlp_cfg(threads);
+        c.participation = 0.5;
+        c.round_deadline = Some(2.0);
+        c.sim_latency = LatencyProfile::LogNormal { median: 1.0, sigma: 0.6 };
+        c
+    };
+    let serial = {
+        let mut c = knobs(1);
+        c.agg_shards = 1;
+        c.eval_threads = 1;
+        c.fold_overlap = false;
+        c.codec = CodecMode::Reference;
+        c
+    };
+    let parallel = {
+        let mut c = knobs(4);
+        c.agg_shards = 3;
+        c.eval_threads = 2;
+        c.fold_overlap = true;
+        c.decode_buffers = 2;
+        c
+    };
+    let base = run(serial);
+    assert_reports_identical(&base, &run(parallel), "deadline: serial vs parallel");
+    for r in &base.rounds {
+        assert!(r.selected >= 1 && r.selected <= 5, "round {}: cohort {}", r.round, r.selected);
+        // candidates = min(2 * ceil(0.5 * 10), 10) = 10
+        assert_eq!(r.selected + r.dropped, 10, "round {}", r.round);
+        if r.selected > 1 {
+            assert!(
+                r.sim_makespan_secs <= 2.0,
+                "round {}: makespan {} breaches the deadline",
+                r.round,
+                r.sim_makespan_secs
+            );
+        }
+    }
+}
+
+#[test]
+fn error_feedback_residuals_survive_skipped_rounds() {
+    // With a sampled cohort a client can sit out rounds; its banked EF
+    // residual must stay untouched until it is next selected, and the
+    // whole trajectory must be thread-count independent.
+    let knobs = |threads: usize| {
+        let mut c = mlp_cfg(threads);
+        c.rounds = 6; // enough for cohorts to rotate
+        c.participation = 0.5;
+        c.policy = PolicyConfig::Fixed { bits: 2 };
+        c.error_feedback = true;
+        c
+    };
+    let a = run(knobs(1));
+    let mut bcfg = knobs(4);
+    bcfg.agg_shards = 3;
+    bcfg.decode_buffers = 1;
+    assert_reports_identical(&a, &run(bcfg), "EF + participation: threads=1 vs 4");
+    // Sanity: EF with skips still changes the trajectory vs EF-off.
+    let mut plain = knobs(1);
+    plain.error_feedback = false;
+    let b = run(plain);
+    assert_ne!(
+        a.rounds.last().unwrap().train_loss.to_bits(),
+        b.rounds.last().unwrap().train_loss.to_bits(),
+        "EF must alter the sampled trajectory"
+    );
 }
 
 #[test]

@@ -1,11 +1,13 @@
 #!/usr/bin/env python3
-"""Render the codec width -> GB/s table from BENCH_hotpath.json as
-GitHub-flavored markdown (for the bench-smoke job summary).
+"""Render the codec width -> GB/s table and the round-scheduler rows
+from BENCH_hotpath.json as GitHub-flavored markdown (for the
+bench-smoke job summary).
 
 Shows, per wire width, the SWAR pack/unpack kernels next to the generic
-get_slice/put_slice baselines and the unpack speedup, plus the fused
-encode and narrow-fold rows.  Zero values mean the row was not produced
-by this run (or the bench is unarmed) and are rendered as "-".
+get_slice/put_slice baselines and the unpack speedup, the fused encode
+and narrow-fold rows, and the scheduler's sampled-cohort /
+slowest-first-dispatch timings.  Zero values mean the row was not
+produced by this run (or the bench is unarmed) and are rendered as "-".
 
 Usage:
     bench_summary.py BENCH_hotpath.json >> "$GITHUB_STEP_SUMMARY"
@@ -47,6 +49,24 @@ def main():
         ("fold_f32rows_gbps", "server fold, f32 reference rows"),
     ):
         print(f"| {label} | {fmt(data.get(key, 0.0))} |")
+    print()
+    print("### Round scheduler")
+    print()
+    print("| scheduler row | value |")
+    print("|---|---:|")
+    for key, label, unit in (
+        ("e2e_round_secs_threads4", "s/round, full cohort (threads=4)", "s"),
+        ("sched_sampled_round_secs", "s/round, participation=0.5", "s"),
+        ("sched_full_vs_sampled_secs", "s/round saved by sampling half", "s"),
+        ("straggler_idorder_secs", "dispatch makespan, id-order", "s"),
+        ("straggler_slowfirst_secs", "dispatch makespan, slowest-first", "s"),
+        ("straggler_slowfirst_speedup", "slowest-first speedup", "x"),
+    ):
+        v = data.get(key, 0.0)
+        # 0 is the zero-seeded "not produced" sentinel; any other value
+        # (including a negative seconds-saved regression) is shown.
+        shown = f"{v:.3f} {unit}" if isinstance(v, (int, float)) and v != 0 else "-"
+        print(f"| {label} | {shown} |")
 
 
 if __name__ == "__main__":
