@@ -60,18 +60,9 @@ fn main() -> anyhow::Result<()> {
         .map(|id| {
             let addr = addr.clone();
             let artifacts = cfg.artifacts_dir.clone();
-            std::thread::spawn(move || {
-                for _ in 0..100 {
-                    match topology::worker(&addr, id, &artifacts) {
-                        Ok(()) => return Ok(()),
-                        Err(e) if format!("{e:#}").contains("Connection refused") => {
-                            std::thread::sleep(std::time::Duration::from_millis(100));
-                        }
-                        Err(e) => return Err(e),
-                    }
-                }
-                anyhow::bail!("server never came up")
-            })
+            // workers retry the connect internally (bounded backoff), so
+            // racing the server's bind() needs no loop here
+            std::thread::spawn(move || topology::worker(&addr, id, &artifacts))
         })
         .collect();
 

@@ -384,6 +384,8 @@ fn main() -> anyhow::Result<()> {
             decode_buffers: 0,
             codec: CodecMode::Narrow,
             tasks: Some(pool.sender()),
+            quorum: 1.0,
+            round_timeout: None,
         },
     )?;
     let r = b.bench("eval parallel x4 (4 batches)", || server_par.evaluate().unwrap());

@@ -52,6 +52,10 @@ TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
   --round-deadline <s>  simulated round deadline (needs --sim-latency) [off]
   --sim-latency <off|uniform:<lo>:<hi>|lognormal:<median>:<sigma>>
                         simulated per-client latency model         [off]
+  --sim-faults <off|crash:<p>|stall:<p>:<secs>|flaky:<p>>
+                        simulated per-client fault model           [off]
+  --round-timeout <s>   give up on missing updates after s seconds [off]
+  --quorum <f>          update fraction that completes a round, (0,1] [1.0]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)
@@ -89,6 +93,9 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "participation",
     "round-deadline",
     "sim-latency",
+    "sim-faults",
+    "round-timeout",
+    "quorum",
     "artifacts",
     "data-dir",
     "out",
@@ -266,6 +273,15 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(l) = args.get("sim-latency") {
         cfg.sim_latency = crate::sim::latency::LatencyProfile::parse(l)?;
     }
+    if let Some(f) = args.get("sim-faults") {
+        cfg.sim_faults = crate::sim::faults::FaultProfile::parse(f)?;
+    }
+    if let Some(t) = args.get_parse::<f64>("round-timeout")? {
+        cfg.round_timeout = Some(t);
+    }
+    if let Some(q) = args.get_parse::<f32>("quorum")? {
+        cfg.quorum = q;
+    }
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -311,7 +327,8 @@ mod tests {
              --aggregate fused --agg-shards 6 --eval-threads 2 \
              --decode-buffers 3 --fold-overlap false --codec reference \
              --participation 0.5 --round-deadline 2.5 \
-             --sim-latency lognormal:1:0.8",
+             --sim-latency lognormal:1:0.8 --sim-faults crash:0.1 \
+             --round-timeout 20 --quorum 0.6",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -332,6 +349,12 @@ mod tests {
             cfg.sim_latency,
             crate::sim::latency::LatencyProfile::LogNormal { median: 1.0, sigma: 0.8 }
         );
+        assert_eq!(
+            cfg.sim_faults,
+            crate::sim::faults::FaultProfile::Crash { p: 0.1 }
+        );
+        assert_eq!(cfg.round_timeout, Some(20.0));
+        assert_eq!(cfg.quorum, 0.6);
         a.finish().unwrap();
     }
 
@@ -353,6 +376,22 @@ mod tests {
         let a = Args::parse(&argv("--round-deadline 2")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_err());
         let a = Args::parse(&argv("--round-deadline 2 --sim-latency lognormal:1:0.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_ok());
+    }
+
+    #[test]
+    fn bad_robustness_flags_rejected() {
+        let a = Args::parse(&argv("--sim-faults meteor:0.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--sim-faults crash:1.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--round-timeout 0")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--quorum 0")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--quorum 1.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--sim-faults crash:0.2 --quorum 0.5 --round-timeout 30")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_ok());
     }
 

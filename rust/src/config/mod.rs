@@ -6,6 +6,7 @@ use anyhow::{Context, Result};
 
 use crate::data::{shard::Sharding, DatasetKind};
 use crate::quant::PolicyConfig;
+use crate::sim::faults::FaultProfile;
 use crate::sim::latency::LatencyProfile;
 use crate::util::json::Json;
 
@@ -158,6 +159,21 @@ pub struct RunConfig {
     /// and the per-round `sim_makespan_secs` metric (`off` = all costs
     /// zero).  Purely a model: it never delays real execution.
     pub sim_latency: LatencyProfile,
+    /// Simulated per-client fault distribution (`off` = no faults).
+    /// Faulted clients are decided by seeded per-`(client, round)` draws
+    /// *before* dispatch, so runs stay bit-reproducible; their updates
+    /// count into the round's `failed` metric and aggregation weights
+    /// renormalize over the survivors.
+    pub sim_faults: FaultProfile,
+    /// Give up waiting for a cohort member's update after this many
+    /// seconds (real seconds on the TCP path; simulated completion time
+    /// under `--sim-faults` in-process).  `None` = wait forever.
+    pub round_timeout: Option<f64>,
+    /// Fraction of the dispatched cohort whose updates must arrive for a
+    /// round to complete, in (0, 1]; the absolute floor is always at
+    /// least one update.  1.0 = every dispatched client must answer
+    /// (the historical behavior — any failure aborts the run).
+    pub quorum: f32,
 }
 
 impl RunConfig {
@@ -196,6 +212,9 @@ impl RunConfig {
             participation: 1.0,
             round_deadline: None,
             sim_latency: LatencyProfile::Off,
+            sim_faults: FaultProfile::Off,
+            round_timeout: None,
+            quorum: 1.0,
         }
     }
 
@@ -298,6 +317,15 @@ impl RunConfig {
                 },
             ),
             ("sim_latency", Json::from(self.sim_latency.label())),
+            ("sim_faults", Json::from(self.sim_faults.label())),
+            (
+                "round_timeout",
+                match self.round_timeout {
+                    Some(t) => Json::from(t),
+                    None => Json::Null,
+                },
+            ),
+            ("quorum", Json::from(self.quorum as f64)),
         ])
     }
 
@@ -368,6 +396,20 @@ impl RunConfig {
                 Some(s) => LatencyProfile::parse(s)?,
                 None => LatencyProfile::Off,
             },
+            // absent in pre-churn configs: no faults, no timeout, full
+            // quorum — exactly the old all-must-answer behavior
+            sim_faults: match j.get("sim_faults").and_then(Json::as_str) {
+                Some(s) => FaultProfile::parse(s)?,
+                None => FaultProfile::Off,
+            },
+            round_timeout: match j.get("round_timeout") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_f64().context("config: round_timeout")?),
+            },
+            quorum: match j.get("quorum") {
+                Some(Json::Null) | None => 1.0,
+                Some(v) => v.as_f64().context("config: quorum")? as f32,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -401,6 +443,13 @@ impl RunConfig {
                  (uniform:..|lognormal:.. with non-zero spread)"
             );
         }
+        if let Some(t) = self.round_timeout {
+            anyhow::ensure!(t.is_finite() && t > 0.0, "round timeout must be positive");
+        }
+        anyhow::ensure!(
+            self.quorum > 0.0 && self.quorum <= 1.0,
+            "quorum must be in (0, 1]"
+        );
         Ok(())
     }
 }
@@ -436,6 +485,9 @@ mod tests {
         c.participation = 0.25;
         c.round_deadline = Some(3.5);
         c.sim_latency = LatencyProfile::LogNormal { median: 1.5, sigma: 0.75 };
+        c.sim_faults = FaultProfile::Stall { p: 0.125, secs: 2.5 };
+        c.round_timeout = Some(7.5);
+        c.quorum = 0.5;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
@@ -473,6 +525,16 @@ mod tests {
         assert!(c.validate().is_err(), "sigma 0 is constant — same bias as off");
         c.sim_latency = LatencyProfile::Uniform { lo: 0.5, hi: 1.5 };
         assert!(c.validate().is_ok());
+        let mut c = RunConfig::default_for("mlp");
+        c.round_timeout = Some(0.0);
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default_for("mlp");
+        c.quorum = 0.0;
+        assert!(c.validate().is_err());
+        c.quorum = 1.5;
+        assert!(c.validate().is_err());
+        c.quorum = 0.5;
+        assert!(c.validate().is_ok());
     }
 
     #[test]
@@ -491,6 +553,9 @@ mod tests {
             o.remove("participation");
             o.remove("round_deadline");
             o.remove("sim_latency");
+            o.remove("sim_faults");
+            o.remove("round_timeout");
+            o.remove("quorum");
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.threads, 0);
@@ -503,6 +568,9 @@ mod tests {
         assert_eq!(back.participation, 1.0);
         assert_eq!(back.round_deadline, None);
         assert_eq!(back.sim_latency, LatencyProfile::Off);
+        assert_eq!(back.sim_faults, FaultProfile::Off);
+        assert_eq!(back.round_timeout, None);
+        assert_eq!(back.quorum, 1.0);
     }
 
     #[test]

@@ -61,6 +61,7 @@ use anyhow::{ensure, Result};
 use super::server::{ClientHandle, Server};
 use crate::config::RunConfig;
 use crate::metrics::RoundRecord;
+use crate::sim::faults::{FaultDraw, FaultModel, FaultProfile};
 use crate::sim::latency::LatencyModel;
 use crate::util::rng::Rng;
 
@@ -102,6 +103,12 @@ pub struct RoundScheduler {
     k_target: usize,
     deadline: Option<f64>,
     latency: LatencyModel,
+    /// Simulated churn (`--sim-faults`): per-`(client, round)` seeded
+    /// crash/stall/drop draws, off by default.
+    faults: FaultModel,
+    /// The timeout stalled clients are judged against in sim mode (the
+    /// server additionally enforces it in real time on the TCP path).
+    round_timeout: Option<f64>,
     /// Root of the per-round selection streams (see module docs).
     select_root: Rng,
     /// EWMA of observed per-client round seconds; 0.0 = never observed.
@@ -148,20 +155,36 @@ impl RoundScheduler {
             k_target,
             deadline,
             latency,
+            faults: FaultModel::new(FaultProfile::Off, seed),
+            round_timeout: None,
             select_root: Rng::new(seed).derive("sched"),
             ewma: vec![0.0; n_clients],
         })
     }
 
+    /// Attach a fault model, plus the round timeout its stall draws are
+    /// judged against in sim mode (`--sim-faults` / `--round-timeout`).
+    /// Off by default.
+    pub fn with_faults(
+        mut self,
+        faults: FaultModel,
+        round_timeout: Option<f64>,
+    ) -> RoundScheduler {
+        self.faults = faults;
+        self.round_timeout = round_timeout;
+        self
+    }
+
     /// Build from a run's config (the session and `feddq serve` path).
     pub fn from_config(cfg: &RunConfig, n_clients: usize) -> Result<RoundScheduler> {
-        Self::new(
+        Ok(Self::new(
             n_clients,
             cfg.participation,
             cfg.round_deadline,
             LatencyModel::new(cfg.sim_latency, cfg.seed),
             cfg.seed,
-        )
+        )?
+        .with_faults(FaultModel::new(cfg.sim_faults, cfg.seed), cfg.round_timeout))
     }
 
     /// Target cohort size `ceil(participation * n)`.
@@ -264,6 +287,65 @@ impl RoundScheduler {
         RoundPlan { round, selected, dispatch, dropped, sim_makespan_secs }
     }
 
+    /// Decide which cohort members fail round `plan.round` under the
+    /// simulated fault model, and the makespan of the survivors.
+    ///
+    /// Returns `(failed_ids, makespan_secs)`.  `failed_ids` is sorted
+    /// ascending and is a pure function of `(seed, profile, round,
+    /// client id)` — never of arrival order or thread count — which is
+    /// what keeps faulty runs bit-reproducible.  A failed client is
+    /// excluded *before* dispatch, so (like an unselected client) its
+    /// batch cursor, quantizer stream and error-feedback residual stay
+    /// banked for its next surviving round.
+    ///
+    /// Fault/timeout interaction: a `Drop` draw fails outright; a
+    /// `Stall(s)` draw adds `s` to the client's simulated completion
+    /// time, and with `--round-timeout T` any completion beyond `T`
+    /// fails too (contributing at most `T` to the makespan — the
+    /// coordinator stops waiting at the timeout).  If every member
+    /// fails, the lowest id is kept so the round still has a cohort
+    /// (mirroring the deadline policy's nobody-meets-it fallback).
+    pub fn sim_churn(&self, plan: &RoundPlan) -> (Vec<u32>, f64) {
+        if self.faults.is_off() {
+            return (Vec::new(), plan.sim_makespan_secs);
+        }
+        let stall_of = |id: u32| -> Option<f64> {
+            // None = dropped; Some(s) = survives the draw with extra
+            // stall s (0 for a clean FaultDraw::None).
+            match self.faults.draw(id, plan.round) {
+                FaultDraw::Drop => None,
+                FaultDraw::Stall(s) => Some(s),
+                FaultDraw::None => Some(0.0),
+            }
+        };
+        let mut failed: Vec<u32> = Vec::new();
+        let mut makespan = 0.0f64;
+        for &id in &plan.selected {
+            let Some(stall) = stall_of(id) else {
+                failed.push(id);
+                continue;
+            };
+            let t = self.latency.round_secs(id, plan.round) + stall;
+            match self.round_timeout {
+                Some(timeout) if t > timeout => {
+                    // Timed out: the coordinator gives up at `timeout`,
+                    // so that is all this client costs the round.
+                    failed.push(id);
+                    makespan = makespan.max(timeout);
+                }
+                _ => makespan = makespan.max(t),
+            }
+        }
+        if failed.len() == plan.selected.len() {
+            // Everyone failed: keep the lowest id so the round still
+            // has a cohort, even past a Drop draw or the timeout.
+            let id = failed.remove(0);
+            let stall = stall_of(id).unwrap_or(0.0);
+            makespan = makespan.max(self.latency.round_secs(id, plan.round) + stall);
+        }
+        (failed, makespan)
+    }
+
     /// Feed one observed per-client round time (seconds) into the EWMA
     /// that drives slowest-first dispatch.  Non-finite or non-positive
     /// observations and unknown ids are ignored.
@@ -278,12 +360,15 @@ impl RoundScheduler {
     }
 }
 
-/// Drive one scheduled round end to end: plan, reorder the registry so
-/// the cohort is the slice prefix, run that prefix through the server,
-/// patch the plan-side fields (`dropped`, `sim_makespan_secs`) into the
+/// Drive one scheduled round end to end: plan, decide simulated churn,
+/// reorder the registry so the *surviving* cohort is the slice prefix,
+/// run that prefix through the server, patch the plan-side fields
+/// (`selected`, `dropped`, `failed`, `sim_makespan_secs`) into the
 /// record, and feed the cohort's observed compute times back into the
 /// dispatch EWMA.  The in-process session and the TCP server both call
-/// this, so the scheduling protocol cannot diverge between drivers.
+/// this, so the scheduling (and fault) protocol cannot diverge between
+/// drivers — sim-failed clients never receive a broadcast on either
+/// path, which is what keeps local and TCP runs bit-identical.
 pub fn run_scheduled_round(
     scheduler: &mut RoundScheduler,
     server: &mut Server,
@@ -292,31 +377,44 @@ pub fn run_scheduled_round(
     evaluate: bool,
 ) -> Result<RoundRecord> {
     let plan = scheduler.plan_round(round);
-    order_clients(clients, &plan);
-    let k = plan.dispatch.len();
-    let mut rec = server.run_round(round, &mut clients[..k], evaluate)?;
+    let (sim_failed, sim_makespan_secs) = scheduler.sim_churn(&plan);
+    let dispatch: Vec<u32> = if sim_failed.is_empty() {
+        plan.dispatch.clone()
+    } else {
+        // Survivors keep their dispatch (slowest-first) order; failed
+        // members are simply never dispatched, exactly like unselected
+        // clients (their streams stay banked — see module docs).
+        plan.dispatch.iter().copied().filter(|id| !sim_failed.contains(id)).collect()
+    };
+    order_clients(clients, &dispatch);
+    let mut rec = server.run_round(round, &mut clients[..dispatch.len()], evaluate)?;
+    // Report over the *planned* cohort: `selected` counts everyone the
+    // scheduler picked, `failed` adds the sim-failed members on top of
+    // any real transport failures the server recorded.
+    rec.selected = plan.selected.len() as u32;
+    rec.failed += sim_failed.len() as u32;
     rec.dropped = plan.dropped;
-    rec.sim_makespan_secs = plan.sim_makespan_secs;
+    rec.sim_makespan_secs = sim_makespan_secs;
     for &(id, secs) in server.arrivals() {
         scheduler.observe(id, secs);
     }
     Ok(rec)
 }
 
-/// Reorder `clients` so the plan's cohort forms the slice prefix
-/// `clients[..plan.dispatch.len()]`, in dispatch (slowest-first) order;
-/// unselected handles keep their relative order in the tail.  The
-/// session and the TCP server both call this before handing the prefix
-/// to `Server::run_round`.
-pub fn order_clients(clients: &mut [Box<dyn ClientHandle + '_>], plan: &RoundPlan) {
+/// Reorder `clients` so `dispatch`'s ids form the slice prefix
+/// `clients[..dispatch.len()]`, in dispatch (slowest-first) order;
+/// other handles keep their relative order in the tail.  The session
+/// and the TCP server both call this (via [`run_scheduled_round`])
+/// before handing the prefix to `Server::run_round`.
+pub fn order_clients(clients: &mut [Box<dyn ClientHandle + '_>], dispatch: &[u32]) {
     let rank: BTreeMap<u32, usize> =
-        plan.dispatch.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        dispatch.iter().enumerate().map(|(i, &id)| (id, i)).collect();
     clients.sort_by_key(|c| rank.get(&c.id()).copied().unwrap_or(usize::MAX));
     debug_assert!(
         clients
             .iter()
-            .take(plan.dispatch.len())
-            .zip(&plan.dispatch)
+            .take(dispatch.len())
+            .zip(dispatch)
             .all(|(c, &id)| c.id() == id),
         "cohort ids missing from the client registry"
     );
@@ -473,5 +571,69 @@ mod tests {
         let p = s.plan_round(4);
         assert!(!p.selected.is_empty() && p.selected.len() <= 3);
         assert_eq!(p.selected.len() + p.dropped as usize, 6);
+    }
+
+    #[test]
+    fn churn_is_off_by_default_and_a_pure_function_of_seed() {
+        let s = sched(10, 1.0, None, LatencyProfile::Off);
+        let p = s.plan_round(2);
+        assert_eq!(s.sim_churn(&p), (Vec::new(), p.sim_makespan_secs));
+
+        let faulty = |seed| {
+            sched(10, 1.0, None, LatencyProfile::Off)
+                .with_faults(FaultModel::new(FaultProfile::Crash { p: 0.4 }, seed), None)
+        };
+        let a = faulty(17);
+        let b = faulty(17);
+        let mut saw_failure = false;
+        for m in 0..20u32 {
+            let plan = a.plan_round(m);
+            let (fa, ma) = a.sim_churn(&plan);
+            let (fb, mb) = b.sim_churn(&plan);
+            assert_eq!(fa, fb, "round {m}");
+            assert_eq!(ma, mb, "round {m}");
+            // failed set is sorted, duplicate-free, within the cohort
+            assert!(fa.windows(2).all(|w| w[0] < w[1]), "round {m}");
+            assert!(fa.iter().all(|id| plan.selected.contains(id)), "round {m}");
+            saw_failure |= !fa.is_empty();
+        }
+        assert!(saw_failure, "crash:0.4 over 20 rounds of 10 clients must fail someone");
+        // a different seed fails a different set somewhere
+        let c = faulty(18);
+        assert!((0..20u32).any(|m| {
+            let plan = a.plan_round(m);
+            c.sim_churn(&plan).0 != a.sim_churn(&plan).0
+        }));
+    }
+
+    #[test]
+    fn certain_crash_keeps_one_survivor() {
+        let s = sched(8, 1.0, None, LatencyProfile::Off)
+            .with_faults(FaultModel::new(FaultProfile::Crash { p: 1.0 }, 17), None);
+        let p = s.plan_round(0);
+        let (failed, _) = s.sim_churn(&p);
+        // everyone draws Drop, but the lowest id is kept so the round
+        // still has a cohort
+        assert_eq!(failed, (1..8u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stalls_extend_the_makespan_and_timeouts_cut_them() {
+        let profile = LatencyProfile::Uniform { lo: 0.5, hi: 1.0 };
+        let base = sched(10, 1.0, None, profile);
+        let stall = FaultModel::new(FaultProfile::Stall { p: 1.0, secs: 4.0 }, 17);
+        // No timeout: every client stalls 4s on top of its latency, so
+        // nobody fails and the makespan grows by exactly the stall.
+        let s = sched(10, 1.0, None, profile).with_faults(stall.clone(), None);
+        let p = base.plan_round(1);
+        let (failed, makespan) = s.sim_churn(&p);
+        assert!(failed.is_empty());
+        assert_eq!(makespan, p.sim_makespan_secs + 4.0);
+        // A 2s timeout: latency + 4s > 2s for everyone, so all time out;
+        // the lowest id is kept and the timeout caps what the rest cost.
+        let st = sched(10, 1.0, None, profile).with_faults(stall, Some(2.0));
+        let (failed_t, makespan_t) = st.sim_churn(&p);
+        assert_eq!(failed_t, (1..10u32).collect::<Vec<_>>());
+        assert!(makespan_t > 4.0, "survivor's real completion dominates: {makespan_t}");
     }
 }

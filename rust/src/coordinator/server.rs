@@ -77,7 +77,7 @@ use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
@@ -109,6 +109,15 @@ pub trait ClientHandle {
     }
     /// Block for the client's update of the current round.
     fn recv_update(&mut self) -> Result<Update>;
+    /// Bound how long [`Self::recv_update`] may block (`None` = wait
+    /// forever).  Transports without a timeout mechanism (in-process
+    /// handles, whose workers always answer) ignore the hint; the TCP
+    /// handle maps it onto the socket read timeout so the quorum path
+    /// can give up on a stalled worker.
+    fn set_recv_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        let _ = timeout;
+        Ok(())
+    }
     /// The client's dataset size, when known *before* its update
     /// arrives (the fold-overlap path needs aggregation weights up
     /// front).  In-process handles know it from construction; remote
@@ -161,6 +170,17 @@ pub struct ServerOpts {
     /// Pool handle for server-side stages (decode pipeline, shard fold,
     /// eval slices); `None` runs the server fully serial.
     pub tasks: Option<TaskSender>,
+    /// Fraction of the dispatched cohort whose updates must arrive for
+    /// a round to complete, in (0, 1]; the floor is always at least one
+    /// update.  Below 1.0 the receive path tolerates per-client
+    /// failures (dead sockets, timeouts) and renormalizes aggregation
+    /// weights over the survivors; at exactly 1.0 any failure aborts
+    /// the round (the historical behavior).
+    pub quorum: f32,
+    /// Give up on a cohort member's update after this many real seconds
+    /// counted from the start of the receive window (`None` = wait
+    /// forever).  Expired clients land in the round's `failed` count.
+    pub round_timeout: Option<f64>,
 }
 
 impl ServerOpts {
@@ -174,6 +194,8 @@ impl ServerOpts {
             decode_buffers: 0,
             codec: CodecMode::Narrow,
             tasks: None,
+            quorum: 1.0,
+            round_timeout: None,
         }
     }
 }
@@ -453,7 +475,16 @@ impl Server {
     /// not in the slice are untouched (their states, residuals and
     /// quantizer streams stay where they were).  Returns the round
     /// record; the caller fills in the plan-side fields (`dropped`,
-    /// `sim_makespan_secs`).
+    /// `sim_makespan_secs`, and the simulated share of `failed`).
+    ///
+    /// With [`ServerOpts::quorum`] below 1.0 or a
+    /// [`ServerOpts::round_timeout`] configured, per-client send/recv
+    /// failures no longer abort the round: the failing clients land in
+    /// the record's `failed` count, and the round completes once
+    /// `max(ceil(quorum * n), 1)` updates arrived — aggregation
+    /// weights, loss averaging and telemetry means renormalize over the
+    /// survivors.  At quorum 1.0 with no timeout, the strict historical
+    /// behavior (and its fast receive paths) is preserved exactly.
     pub fn run_round(
         &mut self,
         round: u32,
@@ -488,9 +519,22 @@ impl Server {
             params: Arc::clone(&self.params),
             losses,
         };
+        // Strict mode (full quorum, no timeout) keeps the historical
+        // any-failure-aborts semantics and the pipelined/overlap fast
+        // paths; tolerant mode trades them for per-client failure
+        // containment.
+        let tolerant = self.opts.quorum < 1.0 || self.opts.round_timeout.is_some();
+        let mut failed: Vec<u32> = Vec::new();
         let encoded = bcast.encode();
         for c in clients.iter_mut() {
-            c.send_broadcast(&bcast, &encoded)?;
+            match c.send_broadcast(&bcast, &encoded) {
+                Ok(()) => {}
+                Err(e) if tolerant => {
+                    crate::warn_!("server", "round {round}: broadcast to client {} failed: {e:#}", c.id());
+                    failed.push(c.id());
+                }
+                Err(e) => return Err(e),
+            }
         }
         drop(bcast);
         drop(encoded);
@@ -501,15 +545,18 @@ impl Server {
         // lands; with fold overlap additionally eligible, the sharded
         // fold itself runs inside this window (prefix folds).
         let t_recv = Instant::now();
-        let pipelined =
-            self.opts.tasks.is_some() && self.opts.aggregate == AggregateMode::Streaming;
+        let pipelined = !tolerant
+            && self.opts.tasks.is_some()
+            && self.opts.aggregate == AggregateMode::Streaming;
         let overlap_plan = if pipelined && self.opts.fold_overlap {
             self.fold_plan(clients)
         } else {
             None
         };
         let mut fold_ready: Option<(Vec<(usize, usize)>, Vec<Vec<f32>>)> = None;
-        let (updates, decoded) = if let Some(weights) = overlap_plan {
+        let (updates, decoded) = if tolerant {
+            (self.recv_tolerant(round, clients, &mut failed), Vec::new())
+        } else if let Some(weights) = overlap_plan {
             let (ups, ranges, chunks) = self.recv_fold_overlapped(round, clients, &weights)?;
             fold_ready = Some((ranges, chunks));
             (ups, Vec::new())
@@ -526,6 +573,18 @@ impl Server {
             (updates, Vec::new())
         };
         let recv_decode_secs = t_recv.elapsed().as_secs_f64();
+
+        // The quorum floor ranges over the dispatched slice: at 1.0 it
+        // equals n (strict mode already propagated any failure), below
+        // it the round completes on the survivors.
+        let n_recv = updates.len();
+        let quorum_need =
+            ((self.opts.quorum as f64 * n as f64).ceil() as usize).clamp(1, n);
+        ensure!(
+            n_recv >= quorum_need,
+            "round {round}: quorum not met — {n_recv} of {n} updates arrived \
+             (need {quorum_need}; failed clients: {failed:?})"
+        );
 
         // Collect the cohort's observed round compute times (measured
         // by each client's own worker, so free of receive-queue skew)
@@ -596,7 +655,7 @@ impl Server {
             let ranges: Vec<f32> = u.segments.iter().map(|h| h.range()).collect();
             mean_range_acc += stats::mean(&ranges.iter().map(|&x| x as f64).collect::<Vec<_>>());
             for (sr, r) in seg_ranges.iter_mut().zip(&ranges) {
-                *sr += r / n as f32;
+                *sr += r / n_recv as f32;
             }
         }
 
@@ -616,8 +675,8 @@ impl Server {
             test_accuracy,
             uplink_bits,
             cum_uplink_bits: self.cum_uplink_bits,
-            mean_bits: (mean_bits_acc / n as f64) as f32,
-            mean_range: (mean_range_acc / n as f64) as f32,
+            mean_bits: (mean_bits_acc / n_recv as f64) as f32,
+            mean_range: (mean_range_acc / n_recv as f64) as f32,
             seg_ranges,
             wall_secs: t0.elapsed().as_secs_f64(),
             recv_decode_secs,
@@ -629,6 +688,11 @@ impl Server {
             // plan, so the zero defaults stand).
             dropped: 0,
             sim_makespan_secs: 0.0,
+            // Real (socket-level) failures; the scheduler adds the
+            // simulated fault count on top.
+            failed: failed.len() as u32,
+            // Rejoins are observed by the TCP serve loop, not here.
+            rejoined: 0,
         })
     }
 
@@ -641,6 +705,72 @@ impl Server {
                 *p += *a;
             }
         }
+    }
+
+    /// Failure-tolerant receive, used when a quorum below 1.0 or a
+    /// round timeout is configured: a client whose update cannot be
+    /// obtained (dead socket, expired timeout, broadcast that already
+    /// failed) lands in `failed` instead of aborting the round.  The
+    /// shared timeout is one real-time budget for the whole receive
+    /// window, apportioned as "whatever remains" to each blocking
+    /// receive in turn.  Stale replies — a previously timed-out client
+    /// answering an older round — are drained and discarded so a
+    /// revived handle can resynchronize.  Updates return sorted by
+    /// `client_id`; decode happens downstream on the non-pipelined
+    /// aggregation path (containment is worth more than overlap once
+    /// clients are allowed to die mid-round).
+    fn recv_tolerant(
+        &mut self,
+        round: u32,
+        clients: &mut [Box<dyn ClientHandle + '_>],
+        failed: &mut Vec<u32>,
+    ) -> Vec<Update> {
+        let deadline = self
+            .opts
+            .round_timeout
+            .map(|t| Instant::now() + Duration::from_secs_f64(t));
+        let mut updates: Vec<Update> = Vec::with_capacity(clients.len());
+        for c in clients.iter_mut() {
+            let id = c.id();
+            if failed.contains(&id) {
+                continue; // broadcast never reached this client
+            }
+            if let Some(dl) = deadline {
+                let now = Instant::now();
+                let remaining = dl.saturating_duration_since(now);
+                if remaining.is_zero() || c.set_recv_timeout(Some(remaining)).is_err() {
+                    crate::warn_!("server", "round {round}: client {id} timed out");
+                    failed.push(id);
+                    continue;
+                }
+            }
+            let got = loop {
+                match c.recv_update() {
+                    Ok(u) if u.round == round => break Ok(u),
+                    // stale reply from an older, timed-out round
+                    Ok(u) if u.round < round => continue,
+                    Ok(u) => {
+                        break Err(anyhow!(
+                            "client {id} answered round {} for {round}",
+                            u.round
+                        ))
+                    }
+                    Err(e) => break Err(e),
+                }
+            };
+            match got {
+                Ok(u) => updates.push(u),
+                Err(e) => {
+                    crate::warn_!("server", "round {round}: client {id} failed: {e:#}");
+                    failed.push(id);
+                }
+            }
+        }
+        for c in clients.iter_mut() {
+            let _ = c.set_recv_timeout(None);
+        }
+        updates.sort_by_key(|u| u.client_id);
+        updates
     }
 
     /// Receive every client's update, dispatching each one's decode to
@@ -1196,6 +1326,8 @@ impl Session {
                 decode_buffers: self.cfg.decode_buffers,
                 codec: self.cfg.codec,
                 tasks: Some(pool.sender()),
+                quorum: self.cfg.quorum,
+                round_timeout: self.cfg.round_timeout,
             },
         )?;
         let mut clients: Vec<Box<dyn ClientHandle + '_>> = self

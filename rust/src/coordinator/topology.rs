@@ -3,9 +3,30 @@
 //! PJRT runtime.  The wire traffic is byte-identical to the in-process
 //! session (same `Message` encoding, same framing), so measured volumes
 //! agree across modes.
+//!
+//! # Churn
+//!
+//! Workers connect with bounded retry (so a worker racing the server's
+//! `bind()` does not die on the first refusal), and the server keeps
+//! accepting connections *after* the initial handshake: a `Join` from an
+//! already-registered id whose socket has since died re-attaches that
+//! worker mid-run.  The rejoin `Welcome` carries the next round index, so
+//! a restarted worker knows the run is in progress.  Together with quorum
+//! aggregation (`--quorum`, `--round-timeout` — see
+//! [`super::server::ServerOpts`]) this lets a run survive workers that
+//! crash and come back, at the cost the real world charges for it: a
+//! restarted worker's optimizer-adjacent state (error-feedback residual,
+//! batch cursor) restarts from scratch, exactly as a crashed process's
+//! memory would.  The *deterministic* churn story (`--sim-faults`) never
+//! uses this machinery — there the scheduler pre-excludes the failed set
+//! server-side (see [`super::sched::RoundScheduler::sim_churn`]) so local
+//! and TCP runs stay bit-identical.
 
-use std::net::TcpListener;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
@@ -17,9 +38,21 @@ use crate::config::RunConfig;
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::runtime::Runtime;
+use crate::sim::faults::{FaultModel, FaultProfile};
 use crate::util::rng::Rng;
 use crate::wire::messages::{Message, Update};
-use crate::wire::transport::{TcpTransport, Transport};
+use crate::wire::transport::{FaultTransport, TcpTransport, Transport};
+
+/// How many connect attempts a worker makes before giving up, and the
+/// initial backoff between them (doubling, capped — see
+/// [`TcpTransport::connect_retry`]).  40 attempts at 50ms initial
+/// backoff spans roughly a minute, enough for a coordinator restart.
+const WORKER_CONNECT_ATTEMPTS: u32 = 40;
+const WORKER_CONNECT_BACKOFF: Duration = Duration::from_millis(50);
+
+/// Sockets re-attached by the accept thread, keyed by client id; a dead
+/// [`RemoteClient`] picks its replacement up here at its next send.
+type RejoinMap = Arc<Mutex<HashMap<u32, (TcpTransport, Option<u32>)>>>;
 
 /// Server-side handle for one remote worker.
 struct RemoteClient {
@@ -29,6 +62,37 @@ struct RemoteClient {
     /// handshake (None for pre-`num_samples` workers) — lets the
     /// fold-overlap weight plan exist at round 0 instead of round 1.
     samples: Option<u32>,
+    /// Set when the socket errored; cleared when a rejoined socket is
+    /// picked up from the rejoin map.
+    dead: bool,
+    /// Shared with the accept thread (see [`RejoinMap`]).
+    rejoins: RejoinMap,
+    /// Byte counters carried over from previous (dead) sockets, so the
+    /// ledger's cumulative per-client volumes survive a re-attach.
+    base_up: u64,
+    base_down: u64,
+}
+
+impl RemoteClient {
+    /// If this handle is dead and the accept thread has re-attached the
+    /// worker, swap the fresh socket in (carrying the byte counters
+    /// over) and come back to life.
+    fn revive_if_rejoined(&mut self) {
+        if !self.dead {
+            return;
+        }
+        let Some((t, samples)) = self.rejoins.lock().unwrap().remove(&self.id) else {
+            return;
+        };
+        self.base_up += self.t.bytes_received();
+        self.base_down += self.t.bytes_sent();
+        self.t = t;
+        if samples.is_some() {
+            self.samples = samples;
+        }
+        self.dead = false;
+        crate::info!("serve", "worker {} re-attached", self.id);
+    }
 }
 
 impl ClientHandle for RemoteClient {
@@ -37,19 +101,59 @@ impl ClientHandle for RemoteClient {
     }
 
     fn send(&mut self, msg: &Message) -> Result<()> {
-        self.t.send(msg)
+        self.revive_if_rejoined();
+        ensure!(!self.dead, "worker {} socket is dead (no rejoin yet)", self.id);
+        let r = self.t.send(msg);
+        if r.is_err() {
+            self.dead = true;
+        }
+        r
     }
 
     fn send_broadcast(&mut self, _msg: &Message, encoded: &[u8]) -> Result<()> {
         // one encode per round (done by the server), n transmissions
-        self.t.send_encoded(encoded)
+        self.revive_if_rejoined();
+        ensure!(!self.dead, "worker {} socket is dead (no rejoin yet)", self.id);
+        let r = self.t.send_encoded(encoded);
+        if r.is_err() {
+            self.dead = true;
+        }
+        r
     }
 
     fn recv_update(&mut self) -> Result<Update> {
-        match self.t.recv()? {
-            Message::Update(u) => Ok(u),
-            other => anyhow::bail!("expected Update, got {other:?}"),
+        let r = match self.t.recv() {
+            Ok(Message::Update(u)) => Ok(u),
+            Ok(other) => Err(anyhow::anyhow!("expected Update, got {other:?}")),
+            Err(e) => Err(e),
+        };
+        if let Err(e) = &r {
+            // A read *timeout* is the quorum path giving up on a slow
+            // worker whose socket may be fine — its late update is
+            // drained as stale next round.  Anything else means the
+            // socket (or protocol) is broken: only a rejoin revives it.
+            let timed_out = e
+                .downcast_ref::<std::io::Error>()
+                .map(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                })
+                .unwrap_or(false);
+            if !timed_out {
+                self.dead = true;
+            }
         }
+        r
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        if self.dead {
+            // recv will fail fast anyway; nothing to configure.
+            return Ok(());
+        }
+        self.t.set_read_timeout(timeout)
     }
 
     fn num_samples(&self) -> Option<u32> {
@@ -57,16 +161,82 @@ impl ClientHandle for RemoteClient {
     }
 
     fn uplink_bytes(&self) -> u64 {
-        self.t.bytes_received()
+        self.base_up + self.t.bytes_received()
     }
 
     fn downlink_bytes(&self) -> u64 {
-        self.t.bytes_sent()
+        self.base_down + self.t.bytes_sent()
+    }
+}
+
+/// The post-handshake accept loop, run on its own thread so late joins
+/// and rejoins are absorbed *while rounds run*.  Every accepted
+/// connection performs the same two-step handshake as an initial join
+/// (`Join` -> `Welcome` -> ready `Join`), except the `Welcome` now
+/// carries the next round index; the finished socket is parked in the
+/// rejoin map for the round loop's [`RemoteClient`] to pick up.  Each
+/// handshake read runs under a short timeout so one wedged connection
+/// cannot block later rejoins.
+fn accept_rejoins(
+    listener: TcpListener,
+    n: usize,
+    config_json: String,
+    round_now: Arc<AtomicU32>,
+    rejoins: RejoinMap,
+    rejoined_total: Arc<AtomicU32>,
+    stop: Arc<AtomicBool>,
+) {
+    const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+    while !stop.load(Ordering::Acquire) {
+        let (stream, peer) = match listener.accept() {
+            Ok(s) => s,
+            Err(e) => {
+                crate::warn_!("serve", "accept failed: {e:#}");
+                continue;
+            }
+        };
+        if stop.load(Ordering::Acquire) {
+            break; // the shutdown wake-up connection
+        }
+        let handshake = || -> Result<(u32, TcpTransport, Option<u32>)> {
+            let mut t = TcpTransport::new(stream)?;
+            t.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+            let id = match t.recv()? {
+                Message::Join { client_id, .. } => client_id,
+                other => anyhow::bail!("expected Join, got {other:?}"),
+            };
+            ensure!((id as usize) < n, "rejoin id {id} out of range 0..{n}");
+            t.send(&Message::Welcome {
+                client_id: id,
+                config_json: config_json.clone(),
+                round: Some(round_now.load(Ordering::Acquire)),
+            })?;
+            let samples = match t.recv()? {
+                Message::Join { client_id, num_samples } => {
+                    ensure!(client_id == id, "ready Join for {client_id}, expected {id}");
+                    num_samples
+                }
+                other => anyhow::bail!("expected ready Join, got {other:?}"),
+            };
+            t.set_read_timeout(None)?;
+            Ok((id, t, samples))
+        };
+        match handshake() {
+            Ok((id, t, samples)) => {
+                crate::info!("serve", "worker {id} rejoined from {peer}");
+                rejoins.lock().unwrap().insert(id, (t, samples));
+                rejoined_total.fetch_add(1, Ordering::AcqRel);
+            }
+            Err(e) => crate::warn_!("serve", "rejoin handshake from {peer} failed: {e:#}"),
+        }
     }
 }
 
 /// Run the federated server: listen on `addr`, wait for `n_clients`
-/// workers to join, then drive the configured rounds.
+/// workers to join, then drive the configured rounds.  The listener
+/// stays open for the whole run (on a background thread) so crashed
+/// workers can rejoin; with `--quorum < 1` and/or `--round-timeout` the
+/// round loop survives the gap in between.
 pub fn serve(
     cfg: &RunConfig,
     addr: &str,
@@ -95,6 +265,8 @@ pub fn serve(
 
     let config_json = cfg.to_json().to_string_compact();
     let mut remotes: Vec<RemoteClient> = Vec::with_capacity(n);
+    let rejoins: RejoinMap = Arc::new(Mutex::new(HashMap::new()));
+    let mut seen = vec![false; n];
     for _ in 0..n {
         let (stream, peer) = listener.accept().context("accept")?;
         let mut t = TcpTransport::new(stream)?;
@@ -102,15 +274,30 @@ pub fn serve(
             Message::Join { client_id, num_samples } => (client_id, num_samples),
             other => anyhow::bail!("expected Join, got {other:?}"),
         };
-        ensure!((id as usize) < n, "client id {id} out of range");
-        t.send(&Message::Welcome { client_id: id, config_json: config_json.clone() })?;
+        ensure!((id as usize) < n, "client id {id} out of range 0..{n} (from {peer})");
+        ensure!(
+            !seen[id as usize],
+            "duplicate Join for client id {id} (second connection from {peer})"
+        );
+        seen[id as usize] = true;
+        t.send(&Message::Welcome {
+            client_id: id,
+            config_json: config_json.clone(),
+            round: None,
+        })?;
         crate::info!("serve", "worker {id} joined from {peer}");
-        remotes.push(RemoteClient { id, t, samples });
+        remotes.push(RemoteClient {
+            id,
+            t,
+            samples,
+            dead: false,
+            rejoins: Arc::clone(&rejoins),
+            base_up: 0,
+            base_down: 0,
+        });
     }
     remotes.sort_by_key(|c| c.id);
-    for (i, c) in remotes.iter().enumerate() {
-        ensure!(c.id == i as u32, "duplicate or missing client ids");
-    }
+    debug_assert!(remotes.iter().enumerate().all(|(i, c)| c.id == i as u32));
 
     // Ready phase: each worker re-sends `Join` once it has materialized
     // its shard, now carrying `num_samples` — the aggregation weight
@@ -148,6 +335,22 @@ pub fn serve(
         .map(|c| Box::new(c) as Box<dyn ClientHandle + '_>)
         .collect();
 
+    // Hand the listener to the rejoin accept thread for the rest of the
+    // run; `stop` + a self-connect wake it out of `accept()` at the end.
+    let round_now = Arc::new(AtomicU32::new(0));
+    let rejoined_total = Arc::new(AtomicU32::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_thread = std::thread::spawn({
+        let (config_json, round_now, rejoins, rejoined_total, stop) = (
+            config_json.clone(),
+            Arc::clone(&round_now),
+            Arc::clone(&rejoins),
+            Arc::clone(&rejoined_total),
+            Arc::clone(&stop),
+        );
+        move || accept_rejoins(listener, n, config_json, round_now, rejoins, rejoined_total, stop)
+    });
+
     let mut server = Server::new(
         Arc::clone(&model),
         Arc::new(test),
@@ -163,6 +366,8 @@ pub fn serve(
             decode_buffers: cfg.decode_buffers,
             codec: cfg.codec,
             tasks: Some(pool.sender()),
+            quorum: cfg.quorum,
+            round_timeout: cfg.round_timeout,
         },
     )?;
     // Same scheduler as the in-process session: sampled cohorts and
@@ -171,26 +376,38 @@ pub fn serve(
     // until a later round selects it (or Shutdown arrives) — no wire
     // change needed, and its client-side state is untouched.
     let mut scheduler = RoundScheduler::from_config(cfg, n)?;
-    let mut rounds = Vec::with_capacity(cfg.rounds);
-    for m in 0..cfg.rounds {
-        let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
-        let rec = sched::run_scheduled_round(
-            &mut scheduler,
-            &mut server,
-            &mut clients,
-            m as u32,
-            evaluate,
-        )?;
-        observer(m as u32, &rec);
-        let done = cfg
-            .target_accuracy
-            .map(|t| rec.evaluated() && rec.test_accuracy >= t)
-            .unwrap_or(false);
-        rounds.push(rec);
-        if done {
-            break;
+    let run = (|| -> Result<Vec<RoundRecord>> {
+        let mut rounds = Vec::with_capacity(cfg.rounds);
+        for m in 0..cfg.rounds {
+            round_now.store(m as u32, Ordering::Release);
+            let rejoined_before = rejoined_total.load(Ordering::Acquire);
+            let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
+            let mut rec = sched::run_scheduled_round(
+                &mut scheduler,
+                &mut server,
+                &mut clients,
+                m as u32,
+                evaluate,
+            )?;
+            rec.rejoined = rejoined_total.load(Ordering::Acquire) - rejoined_before;
+            observer(m as u32, &rec);
+            let done = cfg
+                .target_accuracy
+                .map(|t| rec.evaluated() && rec.test_accuracy >= t)
+                .unwrap_or(false);
+            rounds.push(rec);
+            if done {
+                break;
+            }
         }
-    }
+        Ok(rounds)
+    })();
+    // Stop the accept thread whether the run finished or aborted: set
+    // the flag, then self-connect to knock it out of `accept()`.
+    stop.store(true, Ordering::Release);
+    let _ = TcpStream::connect(addr);
+    let _ = accept_thread.join();
+    let rounds = run?;
     for c in clients.iter_mut() {
         let _ = c.send(&Message::Shutdown);
     }
@@ -205,14 +422,31 @@ pub fn serve(
 /// Run one worker process: join `addr` as client `id`, then serve rounds
 /// until Shutdown.  The run config arrives in the Welcome message so the
 /// worker materializes exactly the same shard it would own in-process.
+///
+/// The connect retries (bounded, backing off), so start order does not
+/// matter; a worker started *after* a crash rejoins the run in progress
+/// (the `Welcome` then carries the next round index) with fresh local
+/// state.  Setting `FEDDQ_WORKER_FAULTS` to a fault profile (e.g.
+/// `crash:0.1`, `flaky:0.2` — see
+/// [`FaultProfile::parse`](crate::sim::faults::FaultProfile::parse))
+/// wraps the wire in a [`FaultTransport`] that injects those faults into
+/// *real* sends — a chaos harness for the server's quorum/rejoin path,
+/// not part of the deterministic simulation.
 pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
-    let mut t = TcpTransport::connect(addr)?;
+    let mut t: Box<dyn Transport> = Box::new(TcpTransport::connect_retry(
+        addr,
+        WORKER_CONNECT_ATTEMPTS,
+        WORKER_CONNECT_BACKOFF,
+    )?);
     // The initial Join can't carry the shard size yet — the run config
     // (which determines the sharding) only arrives in the Welcome.
     t.send(&Message::Join { client_id: id, num_samples: None })?;
     let cfg = match t.recv()? {
-        Message::Welcome { client_id, config_json } => {
+        Message::Welcome { client_id, config_json, round } => {
             ensure!(client_id == id, "server assigned a different id");
+            if let Some(m) = round {
+                crate::info!("worker", "client {id} joining a run in progress (round {m})");
+            }
             let mut cfg = RunConfig::from_json_str(&config_json)?;
             cfg.artifacts_dir = artifacts_dir.to_string();
             cfg
@@ -240,6 +474,19 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     let mut state = ClientState::with_options(
         id, my_shard, cfg.policy.build(), cfg.lr, &model, &root, cfg.error_feedback, cfg.codec,
     );
+    // Chaos injection (tests/CI only): wrap the wire so this worker's
+    // updates crash/stall/drop per the profile in FEDDQ_WORKER_FAULTS.
+    match std::env::var("FEDDQ_WORKER_FAULTS") {
+        Ok(spec) if !spec.is_empty() => {
+            let profile = FaultProfile::parse(&spec)
+                .with_context(|| format!("FEDDQ_WORKER_FAULTS={spec:?}"))?;
+            if !profile.is_off() {
+                crate::warn_!("worker", "client {id} injecting faults: {}", profile.label());
+                t = Box::new(FaultTransport::new(t, FaultModel::new(profile, cfg.seed), id));
+            }
+        }
+        _ => {}
+    }
     // Ready handshake: re-send Join carrying the shard size so the
     // server's fold-overlap weight plan exists before round 0.
     t.send(&Message::Join { client_id: id, num_samples: Some(state.num_samples()) })?;

@@ -59,6 +59,14 @@ pub struct RoundRecord {
     /// Simulated completion time of the cohort's slowest member under
     /// the configured latency model (0 with the `off` profile).
     pub sim_makespan_secs: f64,
+    /// Cohort members whose update never reached the fold this round —
+    /// simulated faults (`--sim-faults`), dead sockets, or
+    /// `--round-timeout` expiries.  Aggregation weights renormalized
+    /// over the `selected - failed` survivors.
+    pub failed: u32,
+    /// Workers that re-attached mid-run this round via the TCP rejoin
+    /// handshake (always 0 in-process).
+    pub rejoined: u32,
 }
 
 impl RoundRecord {
@@ -95,6 +103,8 @@ impl RoundRecord {
             ("selected", Json::from(self.selected)),
             ("dropped", Json::from(self.dropped)),
             ("sim_makespan_secs", Json::from(self.sim_makespan_secs)),
+            ("failed", Json::from(self.failed)),
+            ("rejoined", Json::from(self.rejoined)),
         ])
     }
 
@@ -161,6 +171,14 @@ impl RoundRecord {
                 Some(v) => v.as_usize().context("round: dropped")? as u32,
             },
             sim_makespan_secs: f64_opt("sim_makespan_secs")?,
+            failed: match j.get("failed") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: failed")? as u32,
+            },
+            rejoined: match j.get("rejoined") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: rejoined")? as u32,
+            },
         })
     }
 }
@@ -211,11 +229,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -230,7 +248,9 @@ impl RunReport {
                 r.eval_secs,
                 r.selected,
                 r.dropped,
-                r.sim_makespan_secs
+                r.sim_makespan_secs,
+                r.failed,
+                r.rejoined
             ));
         }
         out
@@ -342,6 +362,8 @@ mod tests {
             selected: 10,
             dropped: 2,
             sim_makespan_secs: 1.25,
+            failed: 3,
+            rejoined: 1,
         }
     }
 
@@ -417,6 +439,8 @@ mod tests {
         assert_eq!(a.selected, b.selected);
         assert_eq!(a.dropped, b.dropped);
         assert_eq!(a.sim_makespan_secs, b.sim_makespan_secs);
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.rejoined, b.rejoined);
     }
 
     #[test]
@@ -455,6 +479,8 @@ mod tests {
         assert_eq!(row.get("selected").and_then(Json::as_usize), Some(5));
         assert_eq!(row.get("dropped").and_then(Json::as_usize), Some(3));
         assert_eq!(row.get("sim_makespan_secs").and_then(Json::as_f64), Some(0.875));
+        assert_eq!(row.get("failed").and_then(Json::as_usize), Some(3));
+        assert_eq!(row.get("rejoined").and_then(Json::as_usize), Some(1));
     }
 
     #[test]
@@ -479,6 +505,8 @@ mod tests {
                     r.remove("recv_decode_secs");
                     r.remove("agg_secs");
                     r.remove("eval_secs");
+                    r.remove("failed");
+                    r.remove("rejoined");
                 }
             }
         }
@@ -489,6 +517,8 @@ mod tests {
         assert_eq!(back.rounds[0].recv_decode_secs, 0.0);
         assert_eq!(back.rounds[0].agg_secs, 0.0);
         assert_eq!(back.rounds[0].eval_secs, 0.0);
+        assert_eq!(back.rounds[0].failed, 0);
+        assert_eq!(back.rounds[0].rejoined, 0);
         assert_eq!(back.rounds[0].wall_secs, 0.5, "wall_secs survives");
         // present-but-mistyped fields still error (corruption, not legacy)
         let mut bad = rep.to_json();
@@ -512,12 +542,17 @@ mod tests {
         };
         let csv = rep.to_csv();
         let header = csv.lines().next().unwrap();
-        assert!(header.ends_with("selected,dropped,sim_makespan_secs"), "{header}");
+        assert!(
+            header.ends_with("selected,dropped,sim_makespan_secs,failed,rejoined"),
+            "{header}"
+        );
         let row = csv.lines().nth(1).unwrap();
         let cols: Vec<&str> = row.split(',').collect();
         assert_eq!(cols.len(), header.split(',').count());
         assert_eq!(cols[12], "10");
         assert_eq!(cols[13], "2");
+        assert_eq!(cols[15], "3");
+        assert_eq!(cols[16], "1");
     }
 
     #[test]

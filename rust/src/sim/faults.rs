@@ -1,0 +1,248 @@
+//! Deterministic per-client fault model for churn simulation.
+//!
+//! The quorum/rejoin layer ([`crate::coordinator::sched`],
+//! [`crate::coordinator::server`]) needs clients that crash, stall and
+//! drop updates *reproducibly*: the determinism contract in
+//! `ARCHITECTURE.md` promises bit-identical `RunReport`s for a given
+//! seed regardless of thread count, so the failed set of a round must be
+//! a pure function of `(seed, round, client_id)` — never of arrival
+//! order.  [`FaultModel`] provides that, mirroring
+//! [`LatencyModel`](crate::sim::latency::LatencyModel): every draw comes
+//! from a labeled [`Rng::derive`](crate::util::rng::Rng::derive) child
+//! keyed by client and round, so `draw(c, m)` is a pure function with no
+//! draw-order dependence.
+//!
+//! Three failure shapes, selected by `--sim-faults`:
+//!
+//! * `crash:<p>` — with probability `p` per `(client, round)`, the
+//!   client dies for the round: it never receives the broadcast, so its
+//!   error-feedback residual and batch cursor stay banked exactly like
+//!   an unselected cohort member's.
+//! * `stall:<p>:<secs>` — with probability `p` the client completes but
+//!   `secs` simulated seconds late; under `--round-timeout` a stalled
+//!   client whose total completion time exceeds the timeout is dropped.
+//! * `flaky:<p>` — with probability `p` the client's *update* is lost in
+//!   transit.  In the simulated path this is indistinguishable from a
+//!   crash at the aggregation layer (same banked-state semantics); on
+//!   the TCP path the [`FaultTransport`](crate::wire::transport::FaultTransport)
+//!   decorator swallows the send so the server must time the client out.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// Shape of the simulated per-client fault distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultProfile {
+    /// No faults: every selected client delivers every round.
+    Off,
+    /// Per-round crash: with probability `p` the client drops out of the
+    /// round entirely (no broadcast received, no update sent).
+    Crash {
+        /// Per `(client, round)` crash probability in `[0, 1]`.
+        p: f64,
+    },
+    /// Mid-round stall: with probability `p` the client finishes `secs`
+    /// simulated seconds late.
+    Stall {
+        /// Per `(client, round)` stall probability in `[0, 1]`.
+        p: f64,
+        /// Extra simulated seconds added to the client's round time.
+        secs: f64,
+    },
+    /// Lost update: with probability `p` the client's update never
+    /// reaches the server.
+    Flaky {
+        /// Per `(client, round)` drop probability in `[0, 1]`.
+        p: f64,
+    },
+}
+
+impl FaultProfile {
+    /// Parse `off`, `crash:<p>`, `stall:<p>:<secs>` or `flaky:<p>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        fn prob(s: &str) -> Result<f64> {
+            let p: f64 = s.parse()?;
+            ensure!(p.is_finite() && (0.0..=1.0).contains(&p), "fault probability must be in [0, 1]");
+            Ok(p)
+        }
+        let mut it = s.split(':');
+        let head = it.next().unwrap_or("");
+        let args: Vec<&str> = it.collect();
+        match head {
+            "off" => {
+                ensure!(args.is_empty(), "off takes no arguments");
+                Ok(FaultProfile::Off)
+            }
+            "crash" => {
+                ensure!(args.len() == 1, "want crash:<p>");
+                Ok(FaultProfile::Crash { p: prob(args[0])? })
+            }
+            "stall" => {
+                ensure!(args.len() == 2, "want stall:<p>:<secs>");
+                let p = prob(args[0])?;
+                let secs: f64 = args[1].parse()?;
+                ensure!(secs.is_finite() && secs >= 0.0, "stall seconds must be >= 0");
+                Ok(FaultProfile::Stall { p, secs })
+            }
+            "flaky" => {
+                ensure!(args.len() == 1, "want flaky:<p>");
+                Ok(FaultProfile::Flaky { p: prob(args[0])? })
+            }
+            _ => bail!("unknown fault profile {s:?} (want off|crash:<p>|stall:<p>:<secs>|flaky:<p>)"),
+        }
+    }
+
+    /// True when the profile can never produce a fault.
+    pub fn is_off(&self) -> bool {
+        match self {
+            FaultProfile::Off => true,
+            FaultProfile::Crash { p } | FaultProfile::Flaky { p } => *p == 0.0,
+            FaultProfile::Stall { p, secs } => *p == 0.0 || *secs == 0.0,
+        }
+    }
+
+    /// The canonical string form, parseable by [`Self::parse`] (used by
+    /// the config JSON round-trip).
+    pub fn label(&self) -> String {
+        match self {
+            FaultProfile::Off => "off".to_string(),
+            FaultProfile::Crash { p } => format!("crash:{p}"),
+            FaultProfile::Stall { p, secs } => format!("stall:{p}:{secs}"),
+            FaultProfile::Flaky { p } => format!("flaky:{p}"),
+        }
+    }
+}
+
+/// What the fault model decided for one `(client, round)` pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultDraw {
+    /// No fault: the client behaves normally this round.
+    None,
+    /// The client's update never arrives — crash before/during the
+    /// round, or an update lost in transit.
+    Drop,
+    /// The client completes, but this many simulated seconds late.
+    Stall(f64),
+}
+
+/// Deterministic per-client fault draws, seeded from the run.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    profile: FaultProfile,
+    root: Rng,
+}
+
+impl FaultModel {
+    /// Build the model for one run; `seed` is the run's root seed (the
+    /// model derives its own independent stream from it).
+    pub fn new(profile: FaultProfile, seed: u64) -> FaultModel {
+        FaultModel { profile, root: Rng::new(seed).derive("sim.faults") }
+    }
+
+    /// The configured profile.
+    pub fn profile(&self) -> FaultProfile {
+        self.profile
+    }
+
+    /// True when the model can never produce a fault.
+    pub fn is_off(&self) -> bool {
+        self.profile.is_off()
+    }
+
+    /// The fault decision for `client_id` in `round` — a pure function
+    /// of `(seed, profile, client_id, round)`, independent of call order
+    /// and of every other client's draw.
+    pub fn draw(&self, client_id: u32, round: u32) -> FaultDraw {
+        let (p, on_hit) = match self.profile {
+            FaultProfile::Off => return FaultDraw::None,
+            FaultProfile::Crash { p } => (p, FaultDraw::Drop),
+            FaultProfile::Flaky { p } => (p, FaultDraw::Drop),
+            FaultProfile::Stall { p, secs } => (p, FaultDraw::Stall(secs)),
+        };
+        let mut rng = self.root.derive(&format!("c{client_id}.r{round}"));
+        if rng.next_f64() < p {
+            on_hit
+        } else {
+            FaultDraw::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["off", "crash:0.1", "stall:0.25:3.5", "flaky:1"] {
+            let p = FaultProfile::parse(s).unwrap();
+            assert_eq!(FaultProfile::parse(&p.label()).unwrap(), p);
+        }
+        assert!(FaultProfile::parse("crash:1.5").is_err()); // p > 1
+        assert!(FaultProfile::parse("crash:-0.1").is_err());
+        assert!(FaultProfile::parse("crash").is_err());
+        assert!(FaultProfile::parse("stall:0.5").is_err()); // missing secs
+        assert!(FaultProfile::parse("stall:0.5:-1").is_err());
+        assert!(FaultProfile::parse("flaky:0.5:2").is_err()); // extra arg
+        assert!(FaultProfile::parse("meteor:0.5").is_err());
+        assert!(FaultProfile::parse("off:1").is_err());
+    }
+
+    #[test]
+    fn off_detection_covers_degenerate_profiles() {
+        assert!(FaultProfile::Off.is_off());
+        assert!(FaultProfile::Crash { p: 0.0 }.is_off());
+        assert!(FaultProfile::Flaky { p: 0.0 }.is_off());
+        assert!(FaultProfile::Stall { p: 0.5, secs: 0.0 }.is_off());
+        assert!(!FaultProfile::Crash { p: 0.1 }.is_off());
+        assert!(!FaultProfile::Stall { p: 0.1, secs: 2.0 }.is_off());
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_seed_client_round() {
+        let a = FaultModel::new(FaultProfile::Crash { p: 0.5 }, 17);
+        let b = FaultModel::new(FaultProfile::Crash { p: 0.5 }, 17);
+        for c in 0..16u32 {
+            for m in 0..8u32 {
+                // identical across instances, and across call order
+                assert_eq!(a.draw(c, m), b.draw(c, m));
+                assert_eq!(a.draw(c, m), a.draw(c, m));
+            }
+        }
+        let other = FaultModel::new(FaultProfile::Crash { p: 0.5 }, 18);
+        let differs =
+            (0..16u32).flat_map(|c| (0..8u32).map(move |m| (c, m))).any(|(c, m)| other.draw(c, m) != a.draw(c, m));
+        assert!(differs, "different seeds must yield different fault sets");
+    }
+
+    #[test]
+    fn probability_extremes_are_exact() {
+        let never = FaultModel::new(FaultProfile::Crash { p: 0.0 }, 7);
+        let always = FaultModel::new(FaultProfile::Crash { p: 1.0 }, 7);
+        let off = FaultModel::new(FaultProfile::Off, 7);
+        for c in 0..32u32 {
+            assert_eq!(never.draw(c, 0), FaultDraw::None);
+            assert_eq!(always.draw(c, 0), FaultDraw::Drop);
+            assert_eq!(off.draw(c, 0), FaultDraw::None);
+        }
+    }
+
+    #[test]
+    fn stall_draws_carry_the_profile_seconds() {
+        let m = FaultModel::new(FaultProfile::Stall { p: 1.0, secs: 2.5 }, 11);
+        assert_eq!(m.draw(3, 4), FaultDraw::Stall(2.5));
+        let hit_rate = {
+            let half = FaultModel::new(FaultProfile::Stall { p: 0.5, secs: 1.0 }, 11);
+            let hits = (0..200u32).filter(|&c| half.draw(c, 0) != FaultDraw::None).count();
+            hits as f64 / 200.0
+        };
+        assert!((0.3..0.7).contains(&hit_rate), "p=0.5 hit rate was {hit_rate}");
+    }
+
+    #[test]
+    fn flaky_and_crash_share_drop_semantics() {
+        let f = FaultModel::new(FaultProfile::Flaky { p: 1.0 }, 3);
+        assert_eq!(f.draw(0, 0), FaultDraw::Drop);
+    }
+}

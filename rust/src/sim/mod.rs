@@ -13,9 +13,14 @@
 //!   round)`, consumed by the round scheduler
 //!   ([`crate::coordinator::sched`]) for cohort selection, the
 //!   `--round-deadline` policy and the per-round simulated makespan.
+//! * [`FaultModel`] (in [`faults`]) is the churn model: deterministic
+//!   per-`(client, round)` crash/stall/drop draws consumed by the
+//!   scheduler's quorum layer, so a faulty run stays bit-reproducible.
 
+pub mod faults;
 pub mod latency;
 pub mod network;
 
+pub use faults::{FaultDraw, FaultModel, FaultProfile};
 pub use latency::{LatencyModel, LatencyProfile};
 pub use network::{NetworkModel, TimedRound};

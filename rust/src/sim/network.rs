@@ -153,6 +153,8 @@ mod tests {
             selected: 10,
             dropped: 0,
             sim_makespan_secs: 0.0,
+            failed: 0,
+            rejoined: 0,
         }
     }
 

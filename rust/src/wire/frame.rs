@@ -97,8 +97,19 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
         bail!("frame length {len} exceeds cap");
     }
     let want_crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("frame payload read")?;
+    // Allocate proportionally to the bytes that actually arrive, not to
+    // the declared length: a corrupted (but under-cap) length field in
+    // a short stream must fail with a clean error after a bounded
+    // pre-allocation, not reserve up to MAX_FRAME up front.
+    let mut payload = Vec::with_capacity(len.min(1 << 20));
+    let got = r
+        .by_ref()
+        .take(len as u64)
+        .read_to_end(&mut payload)
+        .context("frame payload read")?;
+    if got != len {
+        bail!("frame truncated: {got} of {len} payload bytes");
+    }
     let got_crc = crc32(&payload);
     if got_crc != want_crc {
         bail!("frame crc mismatch: {got_crc:#010x} != {want_crc:#010x}");
@@ -153,5 +164,65 @@ mod tests {
         buf[0] ^= 0xFF;
         let mut cur = Cursor::new(buf);
         assert!(read_frame(&mut cur).err().unwrap().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn oversized_length_fields_fail_cleanly_without_allocating() {
+        // A header declaring a huge (but under-cap) payload over a
+        // short stream: must report truncation, never block or reserve
+        // gigabytes.  Lengths beyond MAX_FRAME are rejected outright.
+        for declared in [1_000u32, 1 << 24, MAX_FRAME as u32] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&MAGIC.to_le_bytes());
+            buf.extend_from_slice(&declared.to_le_bytes());
+            buf.extend_from_slice(&crc32(b"x").to_le_bytes());
+            buf.extend_from_slice(b"x"); // far fewer bytes than declared
+            let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+            assert!(format!("{err:#}").contains("truncated"), "{declared}: {err:#}");
+        }
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]);
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
+    }
+
+    #[test]
+    fn prop_truncated_frames_are_errors() {
+        use crate::util::prop::{check, Gen};
+        check("frame-truncation", 100, |g: &mut Gen| {
+            let n = g.size(0, 300);
+            let payload = g.vec_of(n, |g| g.rng.next_u32() as u8);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &payload).unwrap();
+            let cut = g.size(0, buf.len() - 1);
+            match read_frame(&mut Cursor::new(&buf[..cut])) {
+                Err(_) => Ok(()),
+                Ok(p) => Err(format!("{cut}-byte prefix decoded a {}-byte payload", p.len())),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_bit_flips_are_errors_never_panics() {
+        use crate::util::prop::{check, Gen};
+        // Any single flipped bit lands in the magic, the length, the
+        // CRC or the payload; all four must surface as Err (magic
+        // mismatch, truncation/trailing length, or CRC failure) — the
+        // 1-in-2^32 chance of a CRC collision does not exist for single
+        // bit flips, which CRC-32 detects by construction.
+        check("frame-bit-flip", 200, |g: &mut Gen| {
+            let n = g.size(1, 300);
+            let payload = g.vec_of(n, |g| g.rng.next_u32() as u8);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &payload).unwrap();
+            let bit = g.size(0, buf.len() * 8 - 1);
+            buf[bit / 8] ^= 1 << (bit % 8);
+            match read_frame(&mut Cursor::new(&buf)) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("flipped bit {bit} went undetected")),
+            }
+        });
     }
 }

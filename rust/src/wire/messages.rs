@@ -80,11 +80,20 @@ pub enum Message {
     },
     /// Server -> client: accepted; carries the run-config JSON so remote
     /// workers configure themselves identically.
+    ///
+    /// `round` is the round the server will broadcast next, present only
+    /// when a worker (re)joins a run already in progress — a rejoining
+    /// worker must know where training stands so it answers the right
+    /// broadcast.  Like `Join::num_samples` it is a trailing optional
+    /// field: `None` encodes the legacy frame, `Some` appends one u32,
+    /// and the decoder accepts both.
     Welcome {
         /// The id the server accepted the client under.
         client_id: u32,
         /// The full [`RunConfig`](crate::config::RunConfig) as JSON.
         config_json: String,
+        /// Next round index when joining mid-run; `None` at run start.
+        round: Option<u32>,
     },
     /// Server -> client: global model for round `round` (fp32 downlink,
     /// as in the paper — only the uplink is quantized).  Carries the
@@ -222,10 +231,14 @@ impl Message {
                     w.u32(*s);
                 }
             }
-            Message::Welcome { client_id, config_json } => {
+            Message::Welcome { client_id, config_json, round } => {
                 w.u8(TAG_WELCOME);
                 w.u32(*client_id);
                 w.str(config_json);
+                // present-by-length, like Join::num_samples
+                if let Some(m) = round {
+                    w.u32(*m);
+                }
             }
             Message::Broadcast { round, params, losses } => {
                 w.u8(TAG_BROADCAST);
@@ -269,7 +282,9 @@ impl Message {
     pub fn encoded_len(&self) -> usize {
         match self {
             Message::Join { num_samples, .. } => 1 + 4 + if num_samples.is_some() { 4 } else { 0 },
-            Message::Welcome { config_json, .. } => 1 + 4 + 4 + config_json.len(),
+            Message::Welcome { config_json, round, .. } => {
+                1 + 4 + 4 + config_json.len() + if round.is_some() { 4 } else { 0 }
+            }
             Message::Broadcast { params, losses, .. } => {
                 let losses_len = match losses {
                     None => 1,
@@ -294,6 +309,8 @@ impl Message {
             TAG_WELCOME => Message::Welcome {
                 client_id: r.u32()?,
                 config_json: r.str()?,
+                // version-tolerant: old frames end after the config
+                round: if r.pos < r.buf.len() { Some(r.u32()?) } else { None },
             },
             TAG_BROADCAST => {
                 let round = r.u32()?;
@@ -313,7 +330,12 @@ impl Message {
                 if nseg > 1_000_000 {
                     bail!("absurd segment count {nseg}");
                 }
-                let mut segments = Vec::with_capacity(nseg);
+                // Pre-allocate no more than the buffer can actually
+                // hold (11 encoded bytes per header): a corrupt count
+                // in a tiny frame must fail on the first read, not
+                // reserve megabytes first.
+                let mut segments =
+                    Vec::with_capacity(nseg.min((r.buf.len() - r.pos) / 11));
                 for _ in 0..nseg {
                     segments.push(SegmentHeader {
                         bits: r.u8()?,
@@ -357,6 +379,12 @@ mod tests {
         roundtrip(&Message::Welcome {
             client_id: 7,
             config_json: r#"{"model":"mlp"}"#.into(),
+            round: None,
+        });
+        roundtrip(&Message::Welcome {
+            client_id: 7,
+            config_json: r#"{"model":"mlp"}"#.into(),
+            round: Some(12),
         });
         roundtrip(&Message::Broadcast {
             round: 3,
@@ -407,6 +435,26 @@ mod tests {
     }
 
     #[test]
+    fn welcome_decodes_legacy_and_extended_frames() {
+        // A pre-`round` sender emits tag + id + length-prefixed JSON:
+        // the new decoder must accept it as None, and a None Welcome
+        // must encode back to the same legacy layout.
+        let legacy = [2u8, 9, 0, 0, 0, 2, 0, 0, 0, b'{', b'}'];
+        let none = Message::Welcome { client_id: 9, config_json: "{}".into(), round: None };
+        assert_eq!(Message::decode(&legacy).unwrap(), none);
+        assert_eq!(none.encode(), legacy.to_vec());
+        // The extended frame appends one u32 (the mid-run round).
+        let mut extended = legacy.to_vec();
+        extended.extend_from_slice(&7u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&extended).unwrap(),
+            Message::Welcome { client_id: 9, config_json: "{}".into(), round: Some(7) }
+        );
+        // A half-written round field is rejected, not misread.
+        assert!(Message::decode(&extended[..extended.len() - 2]).is_err());
+    }
+
+    #[test]
     fn rejects_truncation_and_trailing() {
         let bytes = Message::Broadcast { round: 1, params: vec![1.0; 8].into(), losses: None }.encode();
         assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
@@ -421,7 +469,8 @@ mod tests {
         let msgs = vec![
             Message::Join { client_id: 7, num_samples: None },
             Message::Join { client_id: 7, num_samples: Some(600) },
-            Message::Welcome { client_id: 7, config_json: r#"{"model":"mlp"}"#.into() },
+            Message::Welcome { client_id: 7, config_json: r#"{"model":"mlp"}"#.into(), round: None },
+            Message::Welcome { client_id: 7, config_json: "{}".into(), round: Some(3) },
             Message::Broadcast { round: 3, params: vec![1.0; 13].into(), losses: None },
             Message::Broadcast { round: 4, params: vec![0.5; 3].into(), losses: Some((2.3, 0.7)) },
             Message::Shutdown,
@@ -478,6 +527,64 @@ mod tests {
             if back != m {
                 return Err("roundtrip mismatch".into());
             }
+            Ok(())
+        });
+    }
+
+    fn gen_update(g: &mut Gen) -> Message {
+        let nseg = g.size(0, 20);
+        Message::Update(Update {
+            round: g.rng.next_u32(),
+            client_id: g.rng.next_u32(),
+            num_samples: g.rng.next_u32(),
+            train_loss: g.f32_wide(),
+            segments: g.vec_of(nseg, |g| SegmentHeader {
+                bits: g.int(0, 32) as u8,
+                level: g.int(0, 65535) as u16,
+                min: g.f32_wide(),
+                step: g.f32_wide(),
+            }),
+            payload: { let n = g.size(0, 500); g.vec_of(n, |g| g.rng.next_u32() as u8) },
+        })
+    }
+
+    #[test]
+    fn prop_truncated_update_is_an_error_never_a_panic() {
+        // Updates have no trailing-optional fields, so *every* strict
+        // prefix must decode to Err — and none may panic or allocate
+        // absurdly.  (Join/Welcome prefixes can legitimately decode as
+        // their legacy layouts; Update must not.)
+        check("message-truncated-update", 100, |g: &mut Gen| {
+            let bytes = gen_update(g).encode();
+            let cut = g.size(0, bytes.len() - 1);
+            match Message::decode(&bytes[..cut]) {
+                Err(_) => Ok(()),
+                Ok(m) => Err(format!("truncated update decoded as {m:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_bit_flips_never_panic() {
+        // A single flipped bit may still decode (payload/float bytes
+        // carry no structure), but it must never panic the decoder; a
+        // flip in the segment count must not cause a huge allocation
+        // (the decoder caps pre-allocation by the remaining bytes).
+        check("message-bit-flip", 200, |g: &mut Gen| {
+            let mut bytes = gen_update(g).encode();
+            let bit = g.size(0, bytes.len() * 8 - 1);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            let _ = Message::decode(&bytes);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_random_bytes_never_panic() {
+        check("message-byte-soup", 200, |g: &mut Gen| {
+            let n = g.size(0, 300);
+            let soup = g.vec_of(n, |g| g.rng.next_u32() as u8);
+            let _ = Message::decode(&soup);
             Ok(())
         });
     }

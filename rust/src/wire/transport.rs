@@ -15,11 +15,13 @@
 
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::frame;
 use super::messages::Message;
+use crate::sim::faults::{FaultDraw, FaultModel, FaultProfile};
 
 /// A bidirectional, byte-accounted message pipe.
 pub trait Transport: Send {
@@ -36,6 +38,24 @@ pub trait Transport: Send {
     fn bytes_sent(&self) -> u64;
     /// Bytes received so far (framed size).
     fn bytes_received(&self) -> u64;
+}
+
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        (**self).send(msg)
+    }
+    fn send_encoded(&mut self, encoded: &[u8]) -> Result<()> {
+        (**self).send_encoded(encoded)
+    }
+    fn recv(&mut self) -> Result<Message> {
+        (**self).recv()
+    }
+    fn bytes_sent(&self) -> u64 {
+        (**self).bytes_sent()
+    }
+    fn bytes_received(&self) -> u64 {
+        (**self).bytes_received()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -114,6 +134,42 @@ impl TcpTransport {
             .with_context(|| format!("connect to {addr}"))?;
         Self::new(stream)
     }
+
+    /// Connect with bounded retry: up to `attempts` tries, sleeping
+    /// `initial_backoff` after the first failure and doubling up to a
+    /// 2-second cap between tries.  A worker racing the coordinator's
+    /// `bind()`, or rejoining after a coordinator restart, should not
+    /// die on the first refused connection; a worker pointed at the
+    /// wrong address still fails fast once the attempts are spent.
+    pub fn connect_retry(
+        addr: &str,
+        attempts: u32,
+        initial_backoff: Duration,
+    ) -> Result<Self> {
+        const BACKOFF_CAP: Duration = Duration::from_secs(2);
+        let mut backoff = initial_backoff;
+        let mut last_err = None;
+        for attempt in 0..attempts.max(1) {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return Self::new(stream),
+                Err(e) => last_err = Some(e),
+            }
+            if attempt + 1 < attempts.max(1) {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!("connect to {addr} ({} attempts)", attempts.max(1))
+        })
+    }
+
+    /// Bound how long a blocking [`Transport::recv`] may wait for bytes
+    /// (`None` = wait forever).  The server's quorum path sets this per
+    /// client while a `--round-timeout` deadline is running.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout).context("set_read_timeout")
+    }
 }
 
 impl Transport for TcpTransport {
@@ -140,6 +196,83 @@ impl Transport for TcpTransport {
 
     fn bytes_received(&self) -> u64 {
         self.received
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// A [`Transport`] decorator that injects the seeded
+/// [`FaultModel`](crate::sim::faults::FaultModel) into a *real* wire:
+/// it intercepts outbound [`Message::Update`]s and, per the `(client,
+/// round)` draw, loses them (`flaky`), kills the connection (`crash`) or
+/// delays them (`stall`) — exercising the server's quorum/timeout/rejoin
+/// machinery with genuine dead sockets and missing updates rather than
+/// the scheduler's pre-excluded simulation.
+///
+/// This is a test/chaos harness, enabled on workers via the
+/// `FEDDQ_WORKER_FAULTS` environment variable (see
+/// [`crate::coordinator::topology::worker`]); the deterministic
+/// simulation path never uses it, because a fault decided worker-side
+/// would advance that worker's batch cursor before dropping the result,
+/// diverging from the local-mode run.  Control messages (`Join`,
+/// handshakes) and `recv` pass through untouched, as does
+/// `send_encoded` (workers never pre-encode updates).
+pub struct FaultTransport<T: Transport> {
+    inner: T,
+    faults: FaultModel,
+    client_id: u32,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    /// Wrap `inner`, drawing faults for `client_id` from `faults`.
+    pub fn new(inner: T, faults: FaultModel, client_id: u32) -> Self {
+        FaultTransport { inner, faults, client_id }
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let Message::Update(u) = msg else {
+            return self.inner.send(msg);
+        };
+        match self.faults.draw(self.client_id, u.round) {
+            FaultDraw::None => self.inner.send(msg),
+            FaultDraw::Stall(secs) => {
+                std::thread::sleep(Duration::from_secs_f64(secs));
+                self.inner.send(msg)
+            }
+            FaultDraw::Drop => match self.faults.profile() {
+                // Lost in transit: swallow the send; the server must
+                // time this client out to finish the round.
+                FaultProfile::Flaky { .. } => Ok(()),
+                // Crash: the worker dies mid-round, so the server sees
+                // a dead socket (and a later rejoin, if the worker is
+                // restarted).
+                _ => bail!(
+                    "simulated crash: client {} dropping out of round {}",
+                    self.client_id,
+                    u.round
+                ),
+            },
+        }
+    }
+
+    fn send_encoded(&mut self, encoded: &[u8]) -> Result<()> {
+        self.inner.send_encoded(encoded)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.inner.recv()
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent()
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.inner.bytes_received()
     }
 }
 
@@ -213,5 +346,84 @@ mod tests {
         c.recv().unwrap();
         let tcp_sent = handle.join().unwrap();
         assert_eq!(a.bytes_sent(), tcp_sent, "transports must account identically");
+    }
+
+    #[test]
+    fn connect_retry_survives_a_late_bind() {
+        // Reserve a port, release it, then bind it again *after* the
+        // client has already started retrying — the race every worker
+        // loses when it starts faster than the coordinator.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let server = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(60));
+            let listener = TcpListener::bind(addr).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            t.recv().unwrap()
+        });
+        let mut c =
+            TcpTransport::connect_retry(&addr.to_string(), 20, Duration::from_millis(20))
+                .unwrap();
+        let msg = Message::Join { client_id: 5, num_samples: None };
+        c.send(&msg).unwrap();
+        assert_eq!(server.join().unwrap(), msg);
+    }
+
+    #[test]
+    fn connect_retry_exhausts_and_reports_attempts() {
+        // Grab-and-drop a port so nothing listens on it.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let err = TcpTransport::connect_retry(&addr, 3, Duration::from_millis(1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("3 attempts"), "{err:#}");
+    }
+
+    fn tiny_update(round: u32, client_id: u32) -> Message {
+        Message::Update(crate::wire::messages::Update {
+            round,
+            client_id,
+            num_samples: 10,
+            train_loss: 0.5,
+            segments: vec![],
+            payload: vec![],
+        })
+    }
+
+    #[test]
+    fn flaky_transport_loses_updates_but_not_control_messages() {
+        let (server, client) = in_proc_pair();
+        let mut server = server;
+        let mut t = FaultTransport::new(
+            client,
+            FaultModel::new(FaultProfile::Flaky { p: 1.0 }, 7),
+            3,
+        );
+        // The update is swallowed silently...
+        t.send(&tiny_update(0, 3)).unwrap();
+        // ...but control traffic still flows, so the next real message
+        // is the Join, not the Update.
+        let join = Message::Join { client_id: 3, num_samples: Some(9) };
+        t.send(&join).unwrap();
+        assert_eq!(server.recv().unwrap(), join);
+    }
+
+    #[test]
+    fn crash_transport_fails_the_send_and_spares_clean_rounds() {
+        let (server, client) = in_proc_pair();
+        let mut server = server;
+        // p = 0.5 at seed 7: scan for one failing and one passing round
+        // (draws are pure, so this is stable for a fixed seed).
+        let model = FaultModel::new(FaultProfile::Crash { p: 0.5 }, 7);
+        let hit = (0..64).find(|&m| model.draw(3, m) == FaultDraw::Drop).unwrap();
+        let miss = (0..64).find(|&m| model.draw(3, m) == FaultDraw::None).unwrap();
+        let mut t = FaultTransport::new(client, model, 3);
+        let err = t.send(&tiny_update(hit, 3)).unwrap_err();
+        assert!(format!("{err:#}").contains("simulated crash"), "{err:#}");
+        t.send(&tiny_update(miss, 3)).unwrap();
+        assert_eq!(server.recv().unwrap(), tiny_update(miss, 3));
     }
 }

@@ -13,6 +13,7 @@ use feddq::coordinator::sched::RoundScheduler;
 use feddq::coordinator::Session;
 use feddq::metrics::RunReport;
 use feddq::quant::PolicyConfig;
+use feddq::sim::faults::FaultProfile;
 use feddq::sim::latency::{LatencyModel, LatencyProfile};
 
 fn mlp_cfg(threads: usize) -> RunConfig {
@@ -50,7 +51,8 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
         let sb: Vec<u32> = rb.seg_ranges.iter().map(|x| x.to_bits()).collect();
         assert_eq!(sa, sb, "{what}: seg_ranges r{}", ra.round);
         // scheduler outputs are part of the contract: cohort size,
-        // deadline drops and the simulated makespan are seed-pure
+        // deadline drops, simulated makespan and the fault-model failed
+        // set are seed-pure
         assert_eq!(ra.selected, rb.selected, "{what}: selected r{}", ra.round);
         assert_eq!(ra.dropped, rb.dropped, "{what}: dropped r{}", ra.round);
         assert_eq!(
@@ -59,6 +61,8 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
             "{what}: sim_makespan r{}",
             ra.round
         );
+        assert_eq!(ra.failed, rb.failed, "{what}: failed r{}", ra.round);
+        assert_eq!(ra.rejoined, rb.rejoined, "{what}: rejoined r{}", ra.round);
     }
     assert_ne!(a.params_hash, 0, "{what}: params hash must be tracked");
     assert_eq!(a.params_hash, b.params_hash, "{what}: final params diverged");
@@ -420,6 +424,97 @@ fn error_feedback_residuals_survive_skipped_rounds() {
         b.rounds.last().unwrap().train_loss.to_bits(),
         "EF must alter the sampled trajectory"
     );
+}
+
+#[test]
+fn crash_faults_are_deterministic_across_the_knob_matrix() {
+    // The PR 6 acceptance matrix: a crash fault profile crossed against
+    // threads / shards / eval slices / fold overlap / decode buffers /
+    // codec path.  The failed set of a round is a seeded pure function
+    // of (seed, round, client id) — never of arrival order — so the
+    // all-serial reference-codec run must be bit-identical to the
+    // maximally parallel narrow-codec run, including params_hash and
+    // the per-round failed counts; and a crash:0.3 profile over a
+    // 10-client cohort must actually fail someone.
+    let knobs = |threads: usize| {
+        let mut c = mlp_cfg(threads);
+        c.rounds = 6; // enough for fault draws to land and cohorts to rotate
+        c.sim_faults = FaultProfile::Crash { p: 0.3 };
+        c
+    };
+    let serial = {
+        let mut c = knobs(1);
+        c.agg_shards = 1;
+        c.eval_threads = 1;
+        c.fold_overlap = false;
+        c.codec = CodecMode::Reference;
+        c
+    };
+    let base = run(serial);
+    let total_failed: u32 = base.rounds.iter().map(|r| r.failed).sum();
+    assert!(total_failed > 0, "crash:0.3 over 6 rounds of 10 clients must fail someone");
+    assert_eq!(base.rounds.len(), 6, "faulty rounds must all complete");
+    for r in &base.rounds {
+        assert_eq!(r.selected, 10, "failed members still count as selected");
+        assert!(r.failed < 10, "the lowest-id survivor guarantee");
+    }
+    let parallel = {
+        let mut c = knobs(4);
+        c.agg_shards = 5;
+        c.eval_threads = 3;
+        c.fold_overlap = true;
+        c.decode_buffers = 2;
+        c.codec = CodecMode::Narrow;
+        c
+    };
+    assert_reports_identical(
+        &base,
+        &run(parallel),
+        "crash faults: all-serial/reference vs threads=4/shards=5/eval=3/overlap/buffers=2/narrow",
+    );
+}
+
+#[test]
+fn faults_compose_with_partial_participation_and_error_feedback() {
+    // A client can now miss a round two ways — unselected or crashed —
+    // and both must bank its EF residual and batch cursor identically
+    // across thread counts.
+    let knobs = |threads: usize| {
+        let mut c = mlp_cfg(threads);
+        c.rounds = 6;
+        c.participation = 0.5;
+        c.sim_faults = FaultProfile::Crash { p: 0.3 };
+        c.policy = PolicyConfig::Fixed { bits: 2 };
+        c.error_feedback = true;
+        c
+    };
+    let a = run(knobs(1));
+    let mut b = knobs(4);
+    b.agg_shards = 3;
+    b.decode_buffers = 1;
+    assert_reports_identical(&a, &run(b), "EF + participation + crash: threads=1 vs 4");
+}
+
+#[test]
+fn stall_faults_against_a_round_timeout_stay_deterministic() {
+    // Stalled clients (60 simulated seconds) against a 30-second
+    // `--round-timeout`: every stall draw times out in *simulated*
+    // time, while the real in-process round finishes in milliseconds —
+    // so the tolerant receive path (switched on by the timeout/quorum
+    // knobs) never trips its real-time budget and the failed set stays
+    // seed-pure.
+    let knobs = |threads: usize| {
+        let mut c = mlp_cfg(threads);
+        c.sim_faults = FaultProfile::Stall { p: 0.5, secs: 60.0 };
+        c.round_timeout = Some(30.0);
+        c.quorum = 0.1;
+        c
+    };
+    let base = run(knobs(1));
+    let total_failed: u32 = base.rounds.iter().map(|r| r.failed).sum();
+    assert!(total_failed > 0, "stall:0.5:60 against a 30s timeout must fail someone");
+    assert_eq!(base.rounds.len(), 4, "timed-out rounds must still complete");
+    assert_reports_identical(&base, &run(knobs(4)), "stall+timeout: threads=1 vs 4");
 }
 
 #[test]

@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Churn smoke: a real TCP run that survives a worker being killed.
+#
+# Runs `feddq serve` with quorum aggregation enabled, two workers on
+# the built-in native manifest (FEDDQ_NATIVE_CLIENTS=2), then
+# `kill -9`s one worker mid-run and restarts it.  The run must finish
+# every round (exit 0), and the written report must record at least one
+# `failed` client-round (the kill) and at least one `rejoined` worker
+# (the restart re-attaching through the server's rejoin accept loop).
+#
+# CI runs this in the churn-smoke job; it also works locally:
+#
+#     scripts/churn_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ADDR="${CHURN_ADDR:-127.0.0.1:17879}"
+ROUNDS="${CHURN_ROUNDS:-40}"
+REPORT="$(mktemp -t churn_report.XXXXXX.json)"
+SERVE_LOG="$(mktemp -t churn_serve.XXXXXX.log)"
+export FEDDQ_NATIVE_CLIENTS=2
+
+cargo build --release --locked
+
+cleanup() {
+    kill -9 "${SERVE_PID:-}" "${W0_PID:-}" "${W1_PID:-}" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+echo "== serve on $ADDR ($ROUNDS rounds, quorum 0.5, round-timeout 10s) =="
+target/release/feddq serve --addr "$ADDR" --rounds "$ROUNDS" \
+    --train-size 2000 --test-size 500 \
+    --quorum 0.5 --round-timeout 10 --out "$REPORT" >"$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+target/release/feddq worker --addr "$ADDR" --id 0 &
+W0_PID=$!
+target/release/feddq worker --addr "$ADDR" --id 1 &
+W1_PID=$!
+
+# Wait for the first round record before pulling the plug: killing a
+# worker during the initial handshake would (correctly) abort serve.
+for _ in $(seq 1 100); do
+    if grep -q "round " "$SERVE_LOG"; then break; fi
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "serve exited before round 0:"; cat "$SERVE_LOG"; exit 1
+    fi
+    sleep 0.2
+done
+grep -q "round " "$SERVE_LOG" || { echo "no round completed in 20s:"; cat "$SERVE_LOG"; exit 1; }
+
+echo "== kill -9 worker 1 mid-run =="
+kill -9 "$W1_PID"
+sleep 1
+
+echo "== restart worker 1 (rejoins the run in progress) =="
+target/release/feddq worker --addr "$ADDR" --id 1 &
+W1_PID=$!
+
+if ! wait "$SERVE_PID"; then
+    echo "serve failed:"; cat "$SERVE_LOG"; exit 1
+fi
+wait "$W0_PID"
+wait "$W1_PID"
+
+echo "== verifying the report recorded the churn =="
+python3 - "$REPORT" "$ROUNDS" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    report = json.load(f)
+rounds = report["rounds"]
+want = int(sys.argv[2])
+failed = sum(int(r["failed"]) for r in rounds)
+rejoined = sum(int(r["rejoined"]) for r in rounds)
+print(f"  rounds {len(rounds)}/{want}, failed {failed}, rejoined {rejoined}")
+ok = True
+if len(rounds) != want:
+    print("  FAIL: the quorum run must complete every round")
+    ok = False
+if failed < 1:
+    print("  FAIL: the killed worker must be recorded as failed")
+    ok = False
+if rejoined < 1:
+    print("  FAIL: the restarted worker must be recorded as rejoined")
+    ok = False
+sys.exit(0 if ok else 1)
+EOF
+echo "churn smoke passed"
