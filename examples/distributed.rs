@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "spawning {n} TCP workers + server on {addr} (fold_overlap={}, decode_buffers={})",
-        cfg.fold_overlap, cfg.decode_buffers
+        cfg.round.pipeline.fold_overlap, cfg.round.pipeline.decode_buffers
     );
     let workers: Vec<_> = (0..n)
         .map(|id| {

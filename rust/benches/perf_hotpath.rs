@@ -47,8 +47,8 @@ fn e2e_round_secs(
     cfg.test_size = 500;
     cfg.eval_every = 1000; // isolate the round path from eval
     cfg.threads = threads;
-    cfg.fold_overlap = fold_overlap;
-    cfg.participation = participation;
+    cfg.round.pipeline.fold_overlap = fold_overlap;
+    cfg.round.cohort.participation = participation;
     let t0 = std::time::Instant::now();
     let mut session = Session::new(cfg)?;
     let setup_secs = t0.elapsed().as_secs_f64();
@@ -380,12 +380,12 @@ fn main() -> anyhow::Result<()> {
             aggregate: AggregateMode::Streaming,
             agg_shards: 1,
             eval_threads: 4,
-            fold_overlap: false,
-            decode_buffers: 0,
-            codec: CodecMode::Narrow,
+            round: {
+                let mut r = feddq::config::RoundPolicy::strict_sync();
+                r.pipeline.fold_overlap = false;
+                r
+            },
             tasks: Some(pool.sender()),
-            quorum: 1.0,
-            round_timeout: None,
         },
     )?;
     let r = b.bench("eval parallel x4 (4 batches)", || server_par.evaluate().unwrap());

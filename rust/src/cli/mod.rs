@@ -56,6 +56,7 @@ TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
                         simulated per-client fault model           [off]
   --round-timeout <s>   give up on missing updates after s seconds [off]
   --quorum <f>          update fraction that completes a round, (0,1] [1.0]
+  --staleness <k>       accept up to k-round-late updates, discounted  [0]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)
@@ -96,6 +97,7 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "sim-faults",
     "round-timeout",
     "quorum",
+    "staleness",
     "artifacts",
     "data-dir",
     "out",
@@ -255,33 +257,47 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(t) = args.get_parse::<usize>("eval-threads")? {
         cfg.eval_threads = t;
     }
-    if let Some(b) = args.get_parse::<usize>("decode-buffers")? {
-        cfg.decode_buffers = b;
+    // The sim models parse through their FromStr impls (same syntax as
+    // before); latency goes first because the round-policy builder
+    // validates the deadline against it.
+    if let Some(l) = args.get_parse::<crate::sim::latency::LatencyProfile>("sim-latency")? {
+        cfg.sim_latency = l;
     }
-    if let Some(f) = args.get_parse::<bool>("fold-overlap")? {
-        cfg.fold_overlap = f;
+    if let Some(f) = args.get_parse::<crate::sim::faults::FaultProfile>("sim-faults")? {
+        cfg.sim_faults = f;
     }
-    if let Some(c) = args.get("codec") {
-        cfg.codec = crate::config::CodecMode::parse(c)?;
-    }
+    // Round behavior flags compose through the typed RoundPolicy
+    // builder — the single construction path, so the CLI gets the same
+    // cross-field validation as programmatic configs.
+    let mut rp = crate::config::RoundPolicy::builder();
     if let Some(p) = args.get_parse::<f32>("participation")? {
-        cfg.participation = p;
+        rp = rp.participation(p);
     }
     if let Some(d) = args.get_parse::<f64>("round-deadline")? {
-        cfg.round_deadline = Some(d);
-    }
-    if let Some(l) = args.get("sim-latency") {
-        cfg.sim_latency = crate::sim::latency::LatencyProfile::parse(l)?;
-    }
-    if let Some(f) = args.get("sim-faults") {
-        cfg.sim_faults = crate::sim::faults::FaultProfile::parse(f)?;
-    }
-    if let Some(t) = args.get_parse::<f64>("round-timeout")? {
-        cfg.round_timeout = Some(t);
+        rp = rp.deadline(d);
     }
     if let Some(q) = args.get_parse::<f32>("quorum")? {
-        cfg.quorum = q;
+        rp = rp.quorum(q);
     }
+    if let Some(t) = args.get_parse::<f64>("round-timeout")? {
+        rp = rp.round_timeout(t);
+    }
+    if let Some(k) = args.get_parse::<u32>("staleness")? {
+        rp = rp.staleness(k);
+    }
+    if let Some(f) = args.get_parse::<bool>("fold-overlap")? {
+        rp = rp.fold_overlap(f);
+    }
+    if let Some(b) = args.get_parse::<usize>("decode-buffers")? {
+        rp = rp.decode_buffers(b);
+    }
+    if let Some(c) = args.get_parse::<crate::config::CodecMode>("codec")? {
+        rp = rp.codec(c);
+    }
+    cfg.round = rp
+        .latency_context(cfg.sim_latency)
+        .build()
+        .context("invalid round policy")?;
     cfg.validate().context("invalid run config")?;
     Ok(cfg)
 }
@@ -328,7 +344,7 @@ mod tests {
              --decode-buffers 3 --fold-overlap false --codec reference \
              --participation 0.5 --round-deadline 2.5 \
              --sim-latency lognormal:1:0.8 --sim-faults crash:0.1 \
-             --round-timeout 20 --quorum 0.6",
+             --round-timeout 20 --quorum 0.6 --staleness 2",
         ))
         .unwrap();
         let cfg = run_config_from_args(&a, "mlp").unwrap();
@@ -340,11 +356,11 @@ mod tests {
         assert_eq!(cfg.aggregate, crate::config::AggregateMode::Fused);
         assert_eq!(cfg.agg_shards, 6);
         assert_eq!(cfg.eval_threads, 2);
-        assert_eq!(cfg.decode_buffers, 3);
-        assert!(!cfg.fold_overlap);
-        assert_eq!(cfg.codec, crate::config::CodecMode::Reference);
-        assert_eq!(cfg.participation, 0.5);
-        assert_eq!(cfg.round_deadline, Some(2.5));
+        assert_eq!(cfg.round.pipeline.decode_buffers, 3);
+        assert!(!cfg.round.pipeline.fold_overlap);
+        assert_eq!(cfg.round.pipeline.codec, crate::config::CodecMode::Reference);
+        assert_eq!(cfg.round.cohort.participation, 0.5);
+        assert_eq!(cfg.round.cohort.deadline, Some(2.5));
         assert_eq!(
             cfg.sim_latency,
             crate::sim::latency::LatencyProfile::LogNormal { median: 1.0, sigma: 0.8 }
@@ -353,8 +369,9 @@ mod tests {
             cfg.sim_faults,
             crate::sim::faults::FaultProfile::Crash { p: 0.1 }
         );
-        assert_eq!(cfg.round_timeout, Some(20.0));
-        assert_eq!(cfg.quorum, 0.6);
+        assert_eq!(cfg.round.tolerance.round_timeout, Some(20.0));
+        assert_eq!(cfg.round.tolerance.quorum, 0.6);
+        assert_eq!(cfg.round.tolerance.staleness, 2);
         a.finish().unwrap();
     }
 
@@ -392,6 +409,14 @@ mod tests {
         let a = Args::parse(&argv("--quorum 1.5")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_err());
         let a = Args::parse(&argv("--sim-faults crash:0.2 --quorum 0.5 --round-timeout 30")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_ok());
+        // staleness needs a quorum mode (quorum < 1 or a timeout) —
+        // bounded-staleness rounds must be able to close early
+        let a = Args::parse(&argv("--staleness 2")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--staleness 2 --quorum 0.5")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_ok());
+        let a = Args::parse(&argv("--staleness 2 --round-timeout 30")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_ok());
     }
 

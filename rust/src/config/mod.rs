@@ -1,6 +1,13 @@
 //! Run configuration: every knob of a federated training run, with JSON
 //! (de)serialization so runs are reproducible and remote workers can be
 //! configured over the wire (`Welcome` message).
+//!
+//! Round behavior — who is dispatched, when a round may complete
+//! without everyone, and how the server's hot path is shaped — is one
+//! typed value, [`RoundPolicy`], built through a validating builder
+//! ([`RoundPolicy::builder`]) instead of loose fields checked at
+//! scattered call sites.  [`RunConfig`] composes it; so does
+//! `coordinator::ServerOpts`.
 
 use anyhow::{Context, Result};
 
@@ -40,6 +47,19 @@ impl AggregateMode {
     }
 }
 
+impl std::str::FromStr for AggregateMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for AggregateMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
 /// Which codec data path runs the per-byte hot loops.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CodecMode {
@@ -69,6 +89,334 @@ impl CodecMode {
             CodecMode::Narrow => "narrow",
             CodecMode::Reference => "reference",
         }
+    }
+}
+
+impl std::str::FromStr for CodecMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for CodecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Cohort selection: who is dispatched each round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cohort {
+    /// Fraction of clients sampled per round, in (0, 1]; each round's
+    /// cohort is `ceil(participation * n)` clients drawn by a seeded,
+    /// round-keyed RNG (`coordinator::sched`) — bit-reproducible for a
+    /// fixed seed regardless of any other knob.  1.0 = every client
+    /// every round (the historical behavior).
+    pub participation: f32,
+    /// Optional round deadline in *simulated* seconds: over-sample
+    /// `2 * ceil(participation * n)` candidates, price them with the
+    /// latency model and keep the deterministic fastest
+    /// `ceil(participation * n)` that finish by the deadline (ties by
+    /// client id).  Candidates cut land in the round's `dropped` count.
+    /// `None` = no deadline.  Requires a non-constant latency profile.
+    pub deadline: Option<f64>,
+}
+
+/// Straggler tolerance: when a round may complete without everyone, and
+/// how far behind a late update may trail before it is discarded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tolerance {
+    /// Fraction of the dispatched cohort whose updates must arrive for a
+    /// round to complete, in (0, 1]; the absolute floor is always at
+    /// least one update.  1.0 = every dispatched client must answer
+    /// (the historical behavior — any failure aborts the run).
+    pub quorum: f32,
+    /// Give up waiting for a cohort member's update after this many
+    /// seconds (real seconds on the TCP path; simulated completion time
+    /// under `--sim-faults` in-process).  `None` = wait forever.
+    pub round_timeout: Option<f64>,
+    /// Bounded staleness `k` for semi-synchronous rounds: round `m+1`
+    /// may begin once round `m` reaches quorum, and an update answering
+    /// round `m` is still accepted up to `k` rounds later, folded with
+    /// a staleness-discounted weight `w / (1 + s)` renormalized over
+    /// the round's fold set (`s` = rounds late).  Updates older than
+    /// `k` are dropped and counted in `RoundRecord::stale_dropped`.
+    /// `0` = strict synchronous rounds (the historical behavior,
+    /// bit-for-bit).  `k > 0` requires quorum mode (`quorum < 1` or a
+    /// `round_timeout`), since a round that must wait for everyone can
+    /// never leave a straggler behind.
+    pub staleness: u32,
+}
+
+/// Server hot-path shape: never changes results, only speed and memory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pipeline {
+    /// Overlap the sharded accumulator fold with still-arriving updates
+    /// (per-shard prefix folds in sorted client order; on by default).
+    /// Requires the streaming aggregate and a pool; falls back to the
+    /// after-barrier fold otherwise.  Per-element arithmetic and fold
+    /// order are unchanged, so either setting yields a bit-identical
+    /// `RunReport`.
+    pub fold_overlap: bool,
+    /// Decode-buffer bound for the recv/decode pipeline; 0 = unbounded
+    /// (one buffer per client, the historical behavior).  With fold
+    /// overlap active this is a hard cap on live `DecodedUpdate`
+    /// buffers — the pipeline's memory becomes O(workers + k) instead
+    /// of O(n_clients) — otherwise it caps buffers retained between
+    /// rounds.  Any value yields a bit-identical `RunReport`.
+    pub decode_buffers: usize,
+    /// Codec data path: narrow `u16` rows + SWAR kernels + fused client
+    /// encode (default), or the scalar f32 reference path.  Payloads,
+    /// codes and folds are bit-identical either way (determinism suite);
+    /// `reference` exists as the cross-check oracle and escape hatch.
+    pub codec: CodecMode,
+}
+
+/// Everything that governs one round's behavior, as one typed value:
+/// [`Cohort`] (who is dispatched), [`Tolerance`] (when the round may
+/// complete without everyone) and [`Pipeline`] (how the server's hot
+/// path is shaped).  Construct through [`RoundPolicy::builder`], which
+/// cross-validates the fields at build time, or take
+/// [`RoundPolicy::strict_sync`] / `Default` for the historical strict
+/// synchronous behavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundPolicy {
+    /// Cohort selection knobs.
+    pub cohort: Cohort,
+    /// Straggler-tolerance knobs.
+    pub tolerance: Tolerance,
+    /// Server hot-path shape knobs.
+    pub pipeline: Pipeline,
+}
+
+impl Default for RoundPolicy {
+    fn default() -> Self {
+        Self::strict_sync()
+    }
+}
+
+impl RoundPolicy {
+    /// The historical strict synchronous policy: full participation, no
+    /// deadline, full quorum, no timeout, no staleness, default
+    /// pipeline shape.
+    pub fn strict_sync() -> RoundPolicy {
+        RoundPolicy {
+            cohort: Cohort { participation: 1.0, deadline: None },
+            tolerance: Tolerance { quorum: 1.0, round_timeout: None, staleness: 0 },
+            pipeline: Pipeline {
+                fold_overlap: true,
+                decode_buffers: 0,
+                codec: CodecMode::Narrow,
+            },
+        }
+    }
+
+    /// A builder starting from [`Self::strict_sync`]; call
+    /// [`RoundPolicyBuilder::build`] to validate and construct.
+    pub fn builder() -> RoundPolicyBuilder {
+        RoundPolicyBuilder { policy: Self::strict_sync(), latency: LatencyProfile::Off }
+    }
+
+    /// Does this policy put the server in tolerant (quorum) mode, where
+    /// a round may complete without every dispatched update?
+    pub fn is_tolerant(&self) -> bool {
+        self.tolerance.quorum < 1.0
+            || self.tolerance.round_timeout.is_some()
+            || self.tolerance.staleness > 0
+    }
+
+    /// Reject policies no run could execute.  `sim_latency` is the
+    /// cross-field context: the deadline policy prices candidates with
+    /// it, so a constant profile (where the id tie-break alone would
+    /// pick the cohort) is rejected.
+    pub fn validate(&self, sim_latency: &LatencyProfile) -> Result<()> {
+        anyhow::ensure!(
+            self.cohort.participation > 0.0 && self.cohort.participation <= 1.0,
+            "participation must be in (0, 1]"
+        );
+        if let Some(d) = self.cohort.deadline {
+            anyhow::ensure!(d.is_finite() && d > 0.0, "round deadline must be positive");
+            // Constant simulated costs would make the deadline policy's
+            // id tie-break permanently exclude high-id clients.
+            anyhow::ensure!(
+                !sim_latency.is_constant(),
+                "round_deadline requires a spreading sim_latency model \
+                 (uniform:..|lognormal:.. with non-zero spread)"
+            );
+        }
+        if let Some(t) = self.tolerance.round_timeout {
+            anyhow::ensure!(t.is_finite() && t > 0.0, "round timeout must be positive");
+        }
+        anyhow::ensure!(
+            self.tolerance.quorum > 0.0 && self.tolerance.quorum <= 1.0,
+            "quorum must be in (0, 1]"
+        );
+        if self.tolerance.staleness > 0 {
+            anyhow::ensure!(
+                self.tolerance.quorum < 1.0 || self.tolerance.round_timeout.is_some(),
+                "staleness requires quorum mode (quorum < 1 and/or round_timeout): \
+                 a round that must wait for every update never leaves a straggler behind"
+            );
+        }
+        Ok(())
+    }
+
+    /// This policy as a nested JSON object (cohort/tolerance/pipeline).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "cohort",
+                Json::obj(vec![
+                    ("participation", Json::from(self.cohort.participation as f64)),
+                    (
+                        "deadline",
+                        match self.cohort.deadline {
+                            Some(d) => Json::from(d),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "tolerance",
+                Json::obj(vec![
+                    ("quorum", Json::from(self.tolerance.quorum as f64)),
+                    (
+                        "round_timeout",
+                        match self.tolerance.round_timeout {
+                            Some(t) => Json::from(t),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("staleness", Json::from(self.tolerance.staleness as usize)),
+                ]),
+            ),
+            (
+                "pipeline",
+                Json::obj(vec![
+                    ("fold_overlap", Json::from(self.pipeline.fold_overlap)),
+                    ("decode_buffers", Json::from(self.pipeline.decode_buffers)),
+                    ("codec", Json::from(self.pipeline.codec.label())),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse the nested object written by [`Self::to_json`].  Absent
+    /// sub-fields default to [`Self::strict_sync`]'s values; mistyped
+    /// present fields are errors.
+    pub fn from_json(j: &Json) -> Result<RoundPolicy> {
+        let mut p = Self::strict_sync();
+        if let Some(c) = j.get("cohort") {
+            if let Some(v) = c.get("participation") {
+                p.cohort.participation = v.as_f64().context("round.cohort.participation")? as f32;
+            }
+            p.cohort.deadline = match c.get("deadline") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_f64().context("round.cohort.deadline")?),
+            };
+        }
+        if let Some(t) = j.get("tolerance") {
+            if let Some(v) = t.get("quorum") {
+                p.tolerance.quorum = v.as_f64().context("round.tolerance.quorum")? as f32;
+            }
+            p.tolerance.round_timeout = match t.get("round_timeout") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_f64().context("round.tolerance.round_timeout")?),
+            };
+            if let Some(v) = t.get("staleness") {
+                p.tolerance.staleness = v.as_usize().context("round.tolerance.staleness")? as u32;
+            }
+        }
+        if let Some(pl) = j.get("pipeline") {
+            if let Some(v) = pl.get("fold_overlap") {
+                p.pipeline.fold_overlap =
+                    v.as_bool().context("round.pipeline.fold_overlap")?;
+            }
+            if let Some(v) = pl.get("decode_buffers") {
+                p.pipeline.decode_buffers =
+                    v.as_usize().context("round.pipeline.decode_buffers")?;
+            }
+            if let Some(v) = pl.get("codec") {
+                p.pipeline.codec =
+                    CodecMode::parse(v.as_str().context("round.pipeline.codec")?)?;
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// Builder for [`RoundPolicy`] with cross-field validation at
+/// construction: invalid combinations (deadline without a spreading
+/// latency profile, staleness without quorum mode, out-of-range
+/// fractions) fail in [`Self::build`] instead of deep inside a run.
+#[derive(Clone, Debug)]
+pub struct RoundPolicyBuilder {
+    policy: RoundPolicy,
+    latency: LatencyProfile,
+}
+
+impl RoundPolicyBuilder {
+    /// Set the per-round participation fraction, in (0, 1].
+    pub fn participation(mut self, f: f32) -> Self {
+        self.policy.cohort.participation = f;
+        self
+    }
+
+    /// Set the simulated round deadline in seconds.
+    pub fn deadline(mut self, secs: f64) -> Self {
+        self.policy.cohort.deadline = Some(secs);
+        self
+    }
+
+    /// Set the quorum fraction, in (0, 1].
+    pub fn quorum(mut self, f: f32) -> Self {
+        self.policy.tolerance.quorum = f;
+        self
+    }
+
+    /// Set the per-round receive timeout in seconds.
+    pub fn round_timeout(mut self, secs: f64) -> Self {
+        self.policy.tolerance.round_timeout = Some(secs);
+        self
+    }
+
+    /// Set the bounded staleness `k` (0 = strict synchronous).
+    pub fn staleness(mut self, k: u32) -> Self {
+        self.policy.tolerance.staleness = k;
+        self
+    }
+
+    /// Enable/disable the overlapped shard fold.
+    pub fn fold_overlap(mut self, on: bool) -> Self {
+        self.policy.pipeline.fold_overlap = on;
+        self
+    }
+
+    /// Set the decode-buffer bound (0 = unbounded).
+    pub fn decode_buffers(mut self, k: usize) -> Self {
+        self.policy.pipeline.decode_buffers = k;
+        self
+    }
+
+    /// Select the codec data path.
+    pub fn codec(mut self, c: CodecMode) -> Self {
+        self.policy.pipeline.codec = c;
+        self
+    }
+
+    /// Provide the simulated-latency profile the policy will run
+    /// against; [`Self::build`]'s deadline validation needs it.
+    pub fn latency_context(mut self, l: LatencyProfile) -> Self {
+        self.latency = l;
+        self
+    }
+
+    /// Validate the assembled policy and return it.
+    pub fn build(self) -> Result<RoundPolicy> {
+        self.policy.validate(&self.latency)?;
+        Ok(self.policy)
     }
 }
 
@@ -123,38 +471,10 @@ pub struct RunConfig {
     /// batches in a fixed order, so any value yields a bit-identical
     /// `RunReport`.
     pub eval_threads: usize,
-    /// Decode-buffer bound for the recv/decode pipeline; 0 = unbounded
-    /// (one buffer per client, the historical behavior).  With fold
-    /// overlap active this is a hard cap on live `DecodedUpdate`
-    /// buffers — the pipeline's memory becomes O(workers + k) instead
-    /// of O(n_clients) — otherwise it caps buffers retained between
-    /// rounds.  Any value yields a bit-identical `RunReport`.
-    pub decode_buffers: usize,
-    /// Overlap the sharded accumulator fold with still-arriving updates
-    /// (per-shard prefix folds in sorted client order; on by default).
-    /// Requires the streaming aggregate and a pool; falls back to the
-    /// after-barrier fold otherwise.  Per-element arithmetic and fold
-    /// order are unchanged, so either setting yields a bit-identical
-    /// `RunReport`.
-    pub fold_overlap: bool,
-    /// Codec data path: narrow `u16` rows + SWAR kernels + fused client
-    /// encode (default), or the scalar f32 reference path.  Payloads,
-    /// codes and folds are bit-identical either way (determinism suite);
-    /// `reference` exists as the cross-check oracle and escape hatch.
-    pub codec: CodecMode,
-    /// Fraction of clients sampled per round, in (0, 1]; each round's
-    /// cohort is `ceil(participation * n)` clients drawn by a seeded,
-    /// round-keyed RNG (`coordinator::sched`) — bit-reproducible for a
-    /// fixed seed regardless of any other knob.  1.0 = every client
-    /// every round (the historical behavior).
-    pub participation: f32,
-    /// Optional round deadline in *simulated* seconds: over-sample
-    /// `2 * ceil(participation * n)` candidates, price them with the
-    /// latency model and keep the deterministic fastest
-    /// `ceil(participation * n)` that finish by the deadline (ties by
-    /// client id).  Candidates cut land in the round's `dropped` count.
-    /// `None` = no deadline.
-    pub round_deadline: Option<f64>,
+    /// The round behavior policy: cohort selection, straggler
+    /// tolerance (quorum / timeout / bounded staleness) and the server
+    /// pipeline shape, as one validated value.
+    pub round: RoundPolicy,
     /// Simulated per-client latency distribution feeding cohort pricing
     /// and the per-round `sim_makespan_secs` metric (`off` = all costs
     /// zero).  Purely a model: it never delays real execution.
@@ -165,15 +485,6 @@ pub struct RunConfig {
     /// count into the round's `failed` metric and aggregation weights
     /// renormalize over the survivors.
     pub sim_faults: FaultProfile,
-    /// Give up waiting for a cohort member's update after this many
-    /// seconds (real seconds on the TCP path; simulated completion time
-    /// under `--sim-faults` in-process).  `None` = wait forever.
-    pub round_timeout: Option<f64>,
-    /// Fraction of the dispatched cohort whose updates must arrive for a
-    /// round to complete, in (0, 1]; the absolute floor is always at
-    /// least one update.  1.0 = every dispatched client must answer
-    /// (the historical behavior — any failure aborts the run).
-    pub quorum: f32,
 }
 
 impl RunConfig {
@@ -206,15 +517,9 @@ impl RunConfig {
             aggregate: AggregateMode::Streaming,
             agg_shards: 0,
             eval_threads: 0,
-            decode_buffers: 0,
-            fold_overlap: true,
-            codec: CodecMode::Narrow,
-            participation: 1.0,
-            round_deadline: None,
+            round: RoundPolicy::strict_sync(),
             sim_latency: LatencyProfile::Off,
             sim_faults: FaultProfile::Off,
-            round_timeout: None,
-            quorum: 1.0,
         }
     }
 
@@ -266,7 +571,9 @@ impl RunConfig {
         format!("{}-{}", self.model, self.policy.label())
     }
 
-    /// The full config as JSON (crosses the wire in `Welcome`).
+    /// The full config as JSON (crosses the wire in `Welcome`).  The
+    /// round policy is the nested `"round"` object; see
+    /// [`Self::from_json`] for the legacy flat-key fallback.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::from(self.model.clone())),
@@ -305,32 +612,19 @@ impl RunConfig {
             ("aggregate", Json::from(self.aggregate.label())),
             ("agg_shards", Json::from(self.agg_shards)),
             ("eval_threads", Json::from(self.eval_threads)),
-            ("decode_buffers", Json::from(self.decode_buffers)),
-            ("fold_overlap", Json::from(self.fold_overlap)),
-            ("codec", Json::from(self.codec.label())),
-            ("participation", Json::from(self.participation as f64)),
-            (
-                "round_deadline",
-                match self.round_deadline {
-                    Some(d) => Json::from(d),
-                    None => Json::Null,
-                },
-            ),
+            ("round", self.round.to_json()),
             ("sim_latency", Json::from(self.sim_latency.label())),
             ("sim_faults", Json::from(self.sim_faults.label())),
-            (
-                "round_timeout",
-                match self.round_timeout {
-                    Some(t) => Json::from(t),
-                    None => Json::Null,
-                },
-            ),
-            ("quorum", Json::from(self.quorum as f64)),
         ])
     }
 
     /// Parse a config written by [`Self::to_json`]; fields introduced
-    /// after a serializer's build default compatibly.
+    /// after a serializer's build default compatibly.  Round behavior
+    /// is read from the nested `"round"` object when present; configs
+    /// serialized by older builds (flat `participation` /
+    /// `round_deadline` / `quorum` / `round_timeout` / `fold_overlap` /
+    /// `decode_buffers` / `codec` keys) still deserialize, absent keys
+    /// defaulting to the strict synchronous policy.
     pub fn from_json(j: &Json) -> Result<RunConfig> {
         let str_at = |k: &str| -> Result<&str> {
             j.get(k).and_then(Json::as_str).with_context(|| format!("config: {k}"))
@@ -340,6 +634,43 @@ impl RunConfig {
         };
         let f64_at = |k: &str| -> Result<f64> {
             j.get(k).and_then(Json::as_f64).with_context(|| format!("config: {k}"))
+        };
+        let round = match j.get("round") {
+            Some(r) => RoundPolicy::from_json(r)?,
+            // legacy flat layout (and pre-scheduler configs, where the
+            // absent keys mean exactly the strict synchronous policy)
+            None => {
+                let mut p = RoundPolicy::strict_sync();
+                p.cohort.participation = match j.get("participation") {
+                    Some(Json::Null) | None => 1.0,
+                    Some(v) => v.as_f64().context("config: participation")? as f32,
+                };
+                p.cohort.deadline = match j.get("round_deadline") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_f64().context("config: round_deadline")?),
+                };
+                p.tolerance.quorum = match j.get("quorum") {
+                    Some(Json::Null) | None => 1.0,
+                    Some(v) => v.as_f64().context("config: quorum")? as f32,
+                };
+                p.tolerance.round_timeout = match j.get("round_timeout") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_f64().context("config: round_timeout")?),
+                };
+                p.tolerance.staleness = match j.get("staleness") {
+                    Some(Json::Null) | None => 0,
+                    Some(v) => v.as_usize().context("config: staleness")? as u32,
+                };
+                p.pipeline.fold_overlap =
+                    j.get("fold_overlap").and_then(Json::as_bool).unwrap_or(true);
+                p.pipeline.decode_buffers =
+                    j.get("decode_buffers").and_then(Json::as_usize).unwrap_or(0);
+                p.pipeline.codec = match j.get("codec").and_then(Json::as_str) {
+                    Some(s) => CodecMode::parse(s)?,
+                    None => CodecMode::Narrow,
+                };
+                p
+            }
         };
         let cfg = RunConfig {
             model: str_at("model")?.to_string(),
@@ -372,43 +703,14 @@ impl RunConfig {
             // absent in pre-sharding configs: auto everywhere
             agg_shards: j.get("agg_shards").and_then(Json::as_usize).unwrap_or(0),
             eval_threads: j.get("eval_threads").and_then(Json::as_usize).unwrap_or(0),
-            // absent in pre-scheduler configs: unbounded buffers,
-            // overlap on (bit-identical to the old after-barrier fold)
-            decode_buffers: j.get("decode_buffers").and_then(Json::as_usize).unwrap_or(0),
-            fold_overlap: j.get("fold_overlap").and_then(Json::as_bool).unwrap_or(true),
-            // absent in pre-SWAR configs: the narrow path is
-            // bit-identical to what those configs produced
-            codec: match j.get("codec").and_then(Json::as_str) {
-                Some(s) => CodecMode::parse(s)?,
-                None => CodecMode::Narrow,
-            },
-            // absent in pre-scheduler configs: full participation, no
-            // deadline, no simulated latency — exactly the old behavior
-            participation: match j.get("participation") {
-                Some(Json::Null) | None => 1.0,
-                Some(v) => v.as_f64().context("config: participation")? as f32,
-            },
-            round_deadline: match j.get("round_deadline") {
-                Some(Json::Null) | None => None,
-                Some(v) => Some(v.as_f64().context("config: round_deadline")?),
-            },
+            round,
             sim_latency: match j.get("sim_latency").and_then(Json::as_str) {
                 Some(s) => LatencyProfile::parse(s)?,
                 None => LatencyProfile::Off,
             },
-            // absent in pre-churn configs: no faults, no timeout, full
-            // quorum — exactly the old all-must-answer behavior
             sim_faults: match j.get("sim_faults").and_then(Json::as_str) {
                 Some(s) => FaultProfile::parse(s)?,
                 None => FaultProfile::Off,
-            },
-            round_timeout: match j.get("round_timeout") {
-                Some(Json::Null) | None => None,
-                Some(v) => Some(v.as_f64().context("config: round_timeout")?),
-            },
-            quorum: match j.get("quorum") {
-                Some(Json::Null) | None => 1.0,
-                Some(v) => v.as_f64().context("config: quorum")? as f32,
             },
         };
         cfg.validate()?;
@@ -420,7 +722,9 @@ impl RunConfig {
         Self::from_json(&Json::parse(s)?)
     }
 
-    /// Reject configurations no run could execute.
+    /// Reject configurations no run could execute.  Round-behavior
+    /// checks live in [`RoundPolicy::validate`] (one place, whether the
+    /// policy arrived via the builder, JSON, or direct construction).
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.rounds > 0, "rounds must be positive");
         anyhow::ensure!(self.lr > 0.0 && self.lr.is_finite(), "lr must be positive");
@@ -429,28 +733,7 @@ impl RunConfig {
         if let Some(a) = self.target_accuracy {
             anyhow::ensure!((0.0..=1.0).contains(&a), "target accuracy in [0,1]");
         }
-        anyhow::ensure!(
-            self.participation > 0.0 && self.participation <= 1.0,
-            "participation must be in (0, 1]"
-        );
-        if let Some(d) = self.round_deadline {
-            anyhow::ensure!(d.is_finite() && d > 0.0, "round deadline must be positive");
-            // Constant simulated costs would make the deadline policy's
-            // id tie-break permanently exclude high-id clients.
-            anyhow::ensure!(
-                !self.sim_latency.is_constant(),
-                "round_deadline requires a spreading sim_latency model \
-                 (uniform:..|lognormal:.. with non-zero spread)"
-            );
-        }
-        if let Some(t) = self.round_timeout {
-            anyhow::ensure!(t.is_finite() && t > 0.0, "round timeout must be positive");
-        }
-        anyhow::ensure!(
-            self.quorum > 0.0 && self.quorum <= 1.0,
-            "quorum must be in (0, 1]"
-        );
-        Ok(())
+        self.round.validate(&self.sim_latency)
     }
 }
 
@@ -479,21 +762,57 @@ mod tests {
         c.aggregate = AggregateMode::Fused;
         c.agg_shards = 8;
         c.eval_threads = 3;
-        c.decode_buffers = 4;
-        c.fold_overlap = false;
-        c.codec = CodecMode::Reference;
-        c.participation = 0.25;
-        c.round_deadline = Some(3.5);
+        c.round = RoundPolicy::builder()
+            .participation(0.25)
+            .deadline(3.5)
+            .quorum(0.5)
+            .round_timeout(7.5)
+            .staleness(2)
+            .fold_overlap(false)
+            .decode_buffers(4)
+            .codec(CodecMode::Reference)
+            .latency_context(LatencyProfile::LogNormal { median: 1.5, sigma: 0.75 })
+            .build()
+            .unwrap();
         c.sim_latency = LatencyProfile::LogNormal { median: 1.5, sigma: 0.75 };
         c.sim_faults = FaultProfile::Stall { p: 0.125, secs: 2.5 };
-        c.round_timeout = Some(7.5);
-        c.quorum = 0.5;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(c, back);
         // and through text
         let back2 = RunConfig::from_json_str(&j.to_string_pretty()).unwrap();
         assert_eq!(c, back2);
+    }
+
+    #[test]
+    fn builder_cross_validates_at_construction() {
+        // staleness without quorum mode: the semi-sync window cannot
+        // open if every round must wait for everyone
+        let e = RoundPolicy::builder().staleness(2).build();
+        assert!(e.is_err(), "staleness requires quorum mode");
+        assert!(e.unwrap_err().to_string().contains("quorum mode"));
+        // either quorum < 1 or a timeout turns quorum mode on
+        assert!(RoundPolicy::builder().staleness(2).quorum(0.5).build().is_ok());
+        assert!(RoundPolicy::builder().staleness(2).round_timeout(10.0).build().is_ok());
+        // deadline needs a spreading latency profile as build context
+        assert!(RoundPolicy::builder().deadline(2.0).build().is_err());
+        assert!(RoundPolicy::builder()
+            .deadline(2.0)
+            .latency_context(LatencyProfile::LogNormal { median: 1.0, sigma: 0.0 })
+            .build()
+            .is_err());
+        assert!(RoundPolicy::builder()
+            .deadline(2.0)
+            .latency_context(LatencyProfile::Uniform { lo: 0.5, hi: 1.5 })
+            .build()
+            .is_ok());
+        // range checks moved out of scattered call sites
+        assert!(RoundPolicy::builder().participation(0.0).build().is_err());
+        assert!(RoundPolicy::builder().participation(1.5).build().is_err());
+        assert!(RoundPolicy::builder().quorum(0.0).build().is_err());
+        assert!(RoundPolicy::builder().quorum(1.5).build().is_err());
+        assert!(RoundPolicy::builder().round_timeout(0.0).build().is_err());
+        assert!(RoundPolicy::builder().deadline(-1.0).build().is_err());
     }
 
     #[test]
@@ -508,32 +827,38 @@ mod tests {
         c.target_accuracy = Some(2.0);
         assert!(c.validate().is_err());
         let mut c = RunConfig::default_for("mlp");
-        c.participation = 0.0;
+        c.round.cohort.participation = 0.0;
         assert!(c.validate().is_err());
         let mut c = RunConfig::default_for("mlp");
-        c.participation = 1.5;
+        c.round.cohort.participation = 1.5;
         assert!(c.validate().is_err());
         let mut c = RunConfig::default_for("mlp");
-        c.round_deadline = Some(-1.0);
+        c.round.cohort.deadline = Some(-1.0);
         assert!(c.validate().is_err());
         // a deadline without a latency model would bias cohorts to low
         // ids (all candidates tie) — rejected
         let mut c = RunConfig::default_for("mlp");
-        c.round_deadline = Some(2.0);
+        c.round.cohort.deadline = Some(2.0);
         assert!(c.validate().is_err());
         c.sim_latency = LatencyProfile::LogNormal { median: 1.0, sigma: 0.0 };
         assert!(c.validate().is_err(), "sigma 0 is constant — same bias as off");
         c.sim_latency = LatencyProfile::Uniform { lo: 0.5, hi: 1.5 };
         assert!(c.validate().is_ok());
         let mut c = RunConfig::default_for("mlp");
-        c.round_timeout = Some(0.0);
+        c.round.tolerance.round_timeout = Some(0.0);
         assert!(c.validate().is_err());
         let mut c = RunConfig::default_for("mlp");
-        c.quorum = 0.0;
+        c.round.tolerance.quorum = 0.0;
         assert!(c.validate().is_err());
-        c.quorum = 1.5;
+        c.round.tolerance.quorum = 1.5;
         assert!(c.validate().is_err());
-        c.quorum = 0.5;
+        c.round.tolerance.quorum = 0.5;
+        assert!(c.validate().is_ok());
+        // a directly-mutated policy (no builder) is still caught
+        let mut c = RunConfig::default_for("mlp");
+        c.round.tolerance.staleness = 3;
+        assert!(c.validate().is_err(), "staleness without quorum mode");
+        c.round.tolerance.quorum = 0.5;
         assert!(c.validate().is_ok());
     }
 
@@ -547,30 +872,48 @@ mod tests {
             o.remove("aggregate");
             o.remove("agg_shards");
             o.remove("eval_threads");
-            o.remove("decode_buffers");
-            o.remove("fold_overlap");
-            o.remove("codec");
-            o.remove("participation");
-            o.remove("round_deadline");
+            o.remove("round");
             o.remove("sim_latency");
             o.remove("sim_faults");
-            o.remove("round_timeout");
-            o.remove("quorum");
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.threads, 0);
         assert_eq!(back.aggregate, AggregateMode::Streaming);
         assert_eq!(back.agg_shards, 0);
         assert_eq!(back.eval_threads, 0);
-        assert_eq!(back.decode_buffers, 0);
-        assert!(back.fold_overlap);
-        assert_eq!(back.codec, CodecMode::Narrow);
-        assert_eq!(back.participation, 1.0);
-        assert_eq!(back.round_deadline, None);
+        assert_eq!(back.round, RoundPolicy::strict_sync());
         assert_eq!(back.sim_latency, LatencyProfile::Off);
         assert_eq!(back.sim_faults, FaultProfile::Off);
-        assert_eq!(back.round_timeout, None);
-        assert_eq!(back.quorum, 1.0);
+    }
+
+    #[test]
+    fn legacy_flat_round_fields_still_deserialize() {
+        // A config serialized before RoundPolicy existed spelled the
+        // round knobs as flat top-level keys; the parser must map them
+        // into the nested policy unchanged.
+        let legacy = r#"{
+            "model": "mlp", "dataset": "fashion_mnist", "policy": "feddq:0.005",
+            "rounds": 8, "lr": 0.1, "sharding": "iid", "seed": 17,
+            "eval_every": 1, "train_size": 600, "test_size": 500,
+            "artifacts_dir": "artifacts", "data_dir": "data",
+            "target_accuracy": null, "error_feedback": false,
+            "threads": 0, "aggregate": "streaming", "agg_shards": 0,
+            "eval_threads": 0,
+            "decode_buffers": 3, "fold_overlap": false, "codec": "reference",
+            "participation": 0.5, "round_deadline": null,
+            "sim_latency": "off", "sim_faults": "stall:0.25:2.5",
+            "round_timeout": 12.5, "quorum": 0.5
+        }"#;
+        let cfg = RunConfig::from_json_str(legacy).unwrap();
+        assert_eq!(cfg.round.cohort.participation, 0.5);
+        assert_eq!(cfg.round.cohort.deadline, None);
+        assert_eq!(cfg.round.tolerance.quorum, 0.5);
+        assert_eq!(cfg.round.tolerance.round_timeout, Some(12.5));
+        assert_eq!(cfg.round.tolerance.staleness, 0, "legacy configs are strict-sync");
+        assert!(!cfg.round.pipeline.fold_overlap);
+        assert_eq!(cfg.round.pipeline.decode_buffers, 3);
+        assert_eq!(cfg.round.pipeline.codec, CodecMode::Reference);
+        assert_eq!(cfg.sim_faults, FaultProfile::Stall { p: 0.25, secs: 2.5 });
     }
 
     #[test]

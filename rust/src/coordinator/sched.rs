@@ -95,6 +95,28 @@ pub struct RoundPlan {
     pub sim_makespan_secs: f64,
 }
 
+/// What the simulated fault model decided for one round's cohort
+/// (returned by [`RoundScheduler::sim_churn`]; every field is seed-pure).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnOutcome {
+    /// Members that fail the round outright (crash/flaky draws, and
+    /// timeouts too stale to ever fold), ascending ids.  Excluded
+    /// before dispatch.
+    pub failed: Vec<u32>,
+    /// Semi-sync late members as `(client id, due round)`: dispatched
+    /// normally, but their update is banked by the server and folds at
+    /// `due` with a staleness discount.  Empty unless `staleness > 0`.
+    pub late: Vec<(u32, u32)>,
+    /// Timed-out members whose overshoot exceeded the staleness bound
+    /// `k` — they land in `failed` *and* in the round's
+    /// `stale_dropped` column.  Always 0 in strict mode.
+    pub stale_dropped: u32,
+    /// Simulated completion time of the on-time survivors (late members
+    /// cost the round nothing — the round closes at quorum without
+    /// them).
+    pub sim_makespan_secs: f64,
+}
+
 /// Per-run scheduler state: selection RNG root, the latency model and
 /// the observed-cost EWMA.
 pub struct RoundScheduler {
@@ -109,6 +131,16 @@ pub struct RoundScheduler {
     /// The timeout stalled clients are judged against in sim mode (the
     /// server additionally enforces it in real time on the TCP path).
     round_timeout: Option<f64>,
+    /// Bounded staleness `k` (semi-sync): a simulated straggler that
+    /// overshoots the round timeout by up to `k` round-lengths is
+    /// dispatched anyway and *banked* for a later fold instead of
+    /// failed.  0 = strict (today's behavior).
+    staleness: u32,
+    /// Clients still mid-flight from an earlier round: id -> the round
+    /// their banked update is due to fold.  A busy client is not
+    /// eligible for selection while `round <= due` (it cannot compute
+    /// two rounds at once).  Maintained by [`Self::note_late`].
+    busy: BTreeMap<u32, u32>,
     /// Root of the per-round selection streams (see module docs).
     select_root: Rng,
     /// EWMA of observed per-client round seconds; 0.0 = never observed.
@@ -157,6 +189,8 @@ impl RoundScheduler {
             latency,
             faults: FaultModel::new(FaultProfile::Off, seed),
             round_timeout: None,
+            staleness: 0,
+            busy: BTreeMap::new(),
             select_root: Rng::new(seed).derive("sched"),
             ewma: vec![0.0; n_clients],
         })
@@ -175,16 +209,28 @@ impl RoundScheduler {
         self
     }
 
+    /// Set the bounded staleness `k` for semi-synchronous rounds
+    /// (`RoundPolicy::tolerance.staleness`).  0 (the default) keeps
+    /// strict synchronous churn semantics.
+    pub fn with_staleness(mut self, k: u32) -> RoundScheduler {
+        self.staleness = k;
+        self
+    }
+
     /// Build from a run's config (the session and `feddq serve` path).
     pub fn from_config(cfg: &RunConfig, n_clients: usize) -> Result<RoundScheduler> {
         Ok(Self::new(
             n_clients,
-            cfg.participation,
-            cfg.round_deadline,
+            cfg.round.cohort.participation,
+            cfg.round.cohort.deadline,
             LatencyModel::new(cfg.sim_latency, cfg.seed),
             cfg.seed,
         )?
-        .with_faults(FaultModel::new(cfg.sim_faults, cfg.seed), cfg.round_timeout))
+        .with_faults(
+            FaultModel::new(cfg.sim_faults, cfg.seed),
+            cfg.round.tolerance.round_timeout,
+        )
+        .with_staleness(cfg.round.tolerance.staleness))
     }
 
     /// Target cohort size `ceil(participation * n)`.
@@ -230,7 +276,7 @@ impl RoundScheduler {
     /// observed EWMA.
     pub fn plan_round(&self, round: u32) -> RoundPlan {
         // (sim_secs, id) pairs of the cohort.
-        let (cohort, dropped) = match self.deadline {
+        let (mut cohort, dropped) = match self.deadline {
             Some(deadline) => {
                 let k_cand = (self.k_target * DEADLINE_OVERSAMPLE).min(self.n_clients);
                 let mut timed: Vec<(f64, u32)> = self
@@ -264,6 +310,23 @@ impl RoundScheduler {
                 (cohort, 0)
             }
         };
+        // Semi-sync: a client still mid-flight from an earlier round (its
+        // banked update folds at `due`) cannot compute two rounds at
+        // once — deterministically ineligible while `round <= due`.
+        if !self.busy.is_empty() {
+            let full = cohort.clone();
+            cohort.retain(|&(_, id)| {
+                self.busy.get(&id).map_or(true, |&due| round > due)
+            });
+            if cohort.is_empty() {
+                // Every sampled member is mid-flight: keep the lowest id
+                // so the round still has a cohort (degenerate guard,
+                // mirroring the deadline/churn fallbacks).
+                let lowest =
+                    full.into_iter().min_by_key(|&(_, id)| id).expect("non-empty sample");
+                cohort.push(lowest);
+            }
+        }
         let sim_makespan_secs = cohort.iter().map(|&(t, _)| t).fold(0.0f64, f64::max);
         let mut selected: Vec<u32> = cohort.iter().map(|&(_, id)| id).collect();
         selected.sort_unstable();
@@ -287,27 +350,46 @@ impl RoundScheduler {
         RoundPlan { round, selected, dispatch, dropped, sim_makespan_secs }
     }
 
-    /// Decide which cohort members fail round `plan.round` under the
-    /// simulated fault model, and the makespan of the survivors.
+    /// Decide what the simulated fault model does to round `plan.round`:
+    /// which cohort members fail, which are merely *late* (semi-sync
+    /// staleness), and what the on-time survivors' makespan is.
     ///
-    /// Returns `(failed_ids, makespan_secs)`.  `failed_ids` is sorted
-    /// ascending and is a pure function of `(seed, profile, round,
-    /// client id)` — never of arrival order or thread count — which is
-    /// what keeps faulty runs bit-reproducible.  A failed client is
-    /// excluded *before* dispatch, so (like an unselected client) its
-    /// batch cursor, quantizer stream and error-feedback residual stay
-    /// banked for its next surviving round.
+    /// Every field of the returned [`ChurnOutcome`] is a pure function
+    /// of `(seed, profile, round, client id)` — never of arrival order
+    /// or thread count — which is what keeps faulty runs
+    /// bit-reproducible.  A failed client is excluded *before*
+    /// dispatch, so (like an unselected client) its batch cursor,
+    /// quantizer stream and error-feedback residual stay banked for its
+    /// next surviving round.
     ///
-    /// Fault/timeout interaction: a `Drop` draw fails outright; a
-    /// `Stall(s)` draw adds `s` to the client's simulated completion
-    /// time, and with `--round-timeout T` any completion beyond `T`
-    /// fails too (contributing at most `T` to the makespan — the
-    /// coordinator stops waiting at the timeout).  If every member
-    /// fails, the lowest id is kept so the round still has a cohort
-    /// (mirroring the deadline policy's nobody-meets-it fallback).
-    pub fn sim_churn(&self, plan: &RoundPlan) -> (Vec<u32>, f64) {
+    /// Fault/timeout/staleness interaction: a `Drop` draw fails
+    /// outright; a `Stall(s)` draw adds `s` to the client's simulated
+    /// completion time `t`.  With `--round-timeout T` and `t > T`, the
+    /// member overshoots by `s = ceil((t - T) / T)` round-lengths:
+    ///
+    /// * strict mode (`staleness == 0`): the member fails, contributing
+    ///   at most `T` to the makespan (the coordinator stops waiting) —
+    ///   exactly the pre-semi-sync behavior;
+    /// * semi-sync, `s <= k`: the member is **late** — still
+    ///   dispatched, but its update is banked and folds at round
+    ///   `plan.round + s` with a `1/(1+s)` discount.  It costs this
+    ///   round *nothing* (the round closes at quorum without it — the
+    ///   makespan win semi-sync exists for);
+    /// * semi-sync, `s > k`: too stale to ever fold — failed, and
+    ///   counted in [`ChurnOutcome::stale_dropped`].
+    ///
+    /// If no member would be on time, the lowest selected id is
+    /// promoted back to on-time so the round can still meet its quorum
+    /// floor of one update (mirroring the deadline policy's
+    /// nobody-meets-it fallback).
+    pub fn sim_churn(&self, plan: &RoundPlan) -> ChurnOutcome {
         if self.faults.is_off() {
-            return (Vec::new(), plan.sim_makespan_secs);
+            return ChurnOutcome {
+                failed: Vec::new(),
+                late: Vec::new(),
+                stale_dropped: 0,
+                sim_makespan_secs: plan.sim_makespan_secs,
+            };
         }
         let stall_of = |id: u32| -> Option<f64> {
             // None = dropped; Some(s) = survives the draw with extra
@@ -319,6 +401,8 @@ impl RoundScheduler {
             }
         };
         let mut failed: Vec<u32> = Vec::new();
+        let mut late: Vec<(u32, u32)> = Vec::new();
+        let mut over_k: Vec<u32> = Vec::new();
         let mut makespan = 0.0f64;
         for &id in &plan.selected {
             let Some(stall) = stall_of(id) else {
@@ -328,22 +412,57 @@ impl RoundScheduler {
             let t = self.latency.round_secs(id, plan.round) + stall;
             match self.round_timeout {
                 Some(timeout) if t > timeout => {
-                    // Timed out: the coordinator gives up at `timeout`,
-                    // so that is all this client costs the round.
-                    failed.push(id);
-                    makespan = makespan.max(timeout);
+                    // Overshoot in round-lengths (>= 1 by construction).
+                    let s = (((t - timeout) / timeout).ceil() as u32).max(1);
+                    if self.staleness > 0 && s <= self.staleness {
+                        // Late, not lost: banked to fold at `round + s`.
+                        late.push((id, plan.round + s));
+                    } else {
+                        // Timed out for good: the coordinator gives up
+                        // at `timeout`, so that is all it costs.
+                        failed.push(id);
+                        if self.staleness > 0 {
+                            over_k.push(id);
+                        }
+                        makespan = makespan.max(timeout);
+                    }
                 }
                 _ => makespan = makespan.max(t),
             }
         }
-        if failed.len() == plan.selected.len() {
-            // Everyone failed: keep the lowest id so the round still
-            // has a cohort, even past a Drop draw or the timeout.
-            let id = failed.remove(0);
+        if failed.len() + late.len() == plan.selected.len() {
+            // No on-time member: promote the lowest selected id so the
+            // round can still meet its quorum floor of one update.
+            let id = plan.selected[0];
+            if let Some(pos) = failed.iter().position(|&f| f == id) {
+                failed.remove(pos);
+            }
+            if let Some(pos) = late.iter().position(|&(l, _)| l == id) {
+                late.remove(pos);
+            }
+            if let Some(pos) = over_k.iter().position(|&f| f == id) {
+                over_k.remove(pos);
+            }
             let stall = stall_of(id).unwrap_or(0.0);
             makespan = makespan.max(self.latency.round_secs(id, plan.round) + stall);
         }
-        (failed, makespan)
+        ChurnOutcome {
+            failed,
+            late,
+            stale_dropped: over_k.len() as u32,
+            sim_makespan_secs: makespan,
+        }
+    }
+
+    /// Record the round's late members as mid-flight: each is ineligible
+    /// for selection until after its `due` round (see
+    /// [`Self::plan_round`]), when its banked update folds.  Entries
+    /// already past their due round are pruned.
+    pub fn note_late(&mut self, round: u32, late: &[(u32, u32)]) {
+        self.busy.retain(|_, &mut due| due > round);
+        for &(id, due) in late {
+            self.busy.insert(id, due);
+        }
     }
 
     /// Feed one observed per-client round time (seconds) into the EWMA
@@ -377,24 +496,30 @@ pub fn run_scheduled_round(
     evaluate: bool,
 ) -> Result<RoundRecord> {
     let plan = scheduler.plan_round(round);
-    let (sim_failed, sim_makespan_secs) = scheduler.sim_churn(&plan);
-    let dispatch: Vec<u32> = if sim_failed.is_empty() {
+    let churn = scheduler.sim_churn(&plan);
+    let dispatch: Vec<u32> = if churn.failed.is_empty() {
         plan.dispatch.clone()
     } else {
-        // Survivors keep their dispatch (slowest-first) order; failed
-        // members are simply never dispatched, exactly like unselected
-        // clients (their streams stay banked — see module docs).
-        plan.dispatch.iter().copied().filter(|id| !sim_failed.contains(id)).collect()
+        // On-time survivors and *late* members keep their dispatch
+        // (slowest-first) order — late members still compute, their
+        // fold is just deferred.  Failed members are simply never
+        // dispatched, exactly like unselected clients (their streams
+        // stay banked — see module docs).
+        plan.dispatch.iter().copied().filter(|id| !churn.failed.contains(id)).collect()
     };
+    scheduler.note_late(round, &churn.late);
     order_clients(clients, &dispatch);
-    let mut rec = server.run_round(round, &mut clients[..dispatch.len()], evaluate)?;
+    let mut rec =
+        server.run_round(round, &mut clients[..dispatch.len()], &churn.late, evaluate)?;
     // Report over the *planned* cohort: `selected` counts everyone the
     // scheduler picked, `failed` adds the sim-failed members on top of
-    // any real transport failures the server recorded.
+    // any real transport failures the server recorded, `stale_dropped`
+    // adds sim members too stale to ever fold on top of real drains.
     rec.selected = plan.selected.len() as u32;
-    rec.failed += sim_failed.len() as u32;
+    rec.failed += churn.failed.len() as u32;
+    rec.stale_dropped += churn.stale_dropped;
     rec.dropped = plan.dropped;
-    rec.sim_makespan_secs = sim_makespan_secs;
+    rec.sim_makespan_secs = churn.sim_makespan_secs;
     for &(id, secs) in server.arrivals() {
         scheduler.observe(id, secs);
     }
@@ -577,7 +702,10 @@ mod tests {
     fn churn_is_off_by_default_and_a_pure_function_of_seed() {
         let s = sched(10, 1.0, None, LatencyProfile::Off);
         let p = s.plan_round(2);
-        assert_eq!(s.sim_churn(&p), (Vec::new(), p.sim_makespan_secs));
+        let quiet = s.sim_churn(&p);
+        assert!(quiet.failed.is_empty() && quiet.late.is_empty());
+        assert_eq!(quiet.stale_dropped, 0);
+        assert_eq!(quiet.sim_makespan_secs, p.sim_makespan_secs);
 
         let faulty = |seed| {
             sched(10, 1.0, None, LatencyProfile::Off)
@@ -588,21 +716,20 @@ mod tests {
         let mut saw_failure = false;
         for m in 0..20u32 {
             let plan = a.plan_round(m);
-            let (fa, ma) = a.sim_churn(&plan);
-            let (fb, mb) = b.sim_churn(&plan);
-            assert_eq!(fa, fb, "round {m}");
-            assert_eq!(ma, mb, "round {m}");
+            let ca = a.sim_churn(&plan);
+            let cb = b.sim_churn(&plan);
+            assert_eq!(ca, cb, "round {m}");
             // failed set is sorted, duplicate-free, within the cohort
-            assert!(fa.windows(2).all(|w| w[0] < w[1]), "round {m}");
-            assert!(fa.iter().all(|id| plan.selected.contains(id)), "round {m}");
-            saw_failure |= !fa.is_empty();
+            assert!(ca.failed.windows(2).all(|w| w[0] < w[1]), "round {m}");
+            assert!(ca.failed.iter().all(|id| plan.selected.contains(id)), "round {m}");
+            saw_failure |= !ca.failed.is_empty();
         }
         assert!(saw_failure, "crash:0.4 over 20 rounds of 10 clients must fail someone");
         // a different seed fails a different set somewhere
         let c = faulty(18);
         assert!((0..20u32).any(|m| {
             let plan = a.plan_round(m);
-            c.sim_churn(&plan).0 != a.sim_churn(&plan).0
+            c.sim_churn(&plan).failed != a.sim_churn(&plan).failed
         }));
     }
 
@@ -611,7 +738,7 @@ mod tests {
         let s = sched(8, 1.0, None, LatencyProfile::Off)
             .with_faults(FaultModel::new(FaultProfile::Crash { p: 1.0 }, 17), None);
         let p = s.plan_round(0);
-        let (failed, _) = s.sim_churn(&p);
+        let failed = s.sim_churn(&p).failed;
         // everyone draws Drop, but the lowest id is kept so the round
         // still has a cohort
         assert_eq!(failed, (1..8u32).collect::<Vec<_>>());
@@ -626,14 +753,81 @@ mod tests {
         // nobody fails and the makespan grows by exactly the stall.
         let s = sched(10, 1.0, None, profile).with_faults(stall.clone(), None);
         let p = base.plan_round(1);
-        let (failed, makespan) = s.sim_churn(&p);
-        assert!(failed.is_empty());
-        assert_eq!(makespan, p.sim_makespan_secs + 4.0);
+        let c = s.sim_churn(&p);
+        assert!(c.failed.is_empty() && c.late.is_empty());
+        assert_eq!(c.sim_makespan_secs, p.sim_makespan_secs + 4.0);
         // A 2s timeout: latency + 4s > 2s for everyone, so all time out;
         // the lowest id is kept and the timeout caps what the rest cost.
         let st = sched(10, 1.0, None, profile).with_faults(stall, Some(2.0));
-        let (failed_t, makespan_t) = st.sim_churn(&p);
-        assert_eq!(failed_t, (1..10u32).collect::<Vec<_>>());
-        assert!(makespan_t > 4.0, "survivor's real completion dominates: {makespan_t}");
+        let ct = st.sim_churn(&p);
+        assert_eq!(ct.failed, (1..10u32).collect::<Vec<_>>());
+        assert_eq!(ct.stale_dropped, 0, "strict mode never counts stale drops");
+        assert!(
+            ct.sim_makespan_secs > 4.0,
+            "survivor's real completion dominates: {}",
+            ct.sim_makespan_secs
+        );
+    }
+
+    #[test]
+    fn staleness_turns_timeouts_into_late_members() {
+        // latency in [0.5, 1.2), stall 4s, timeout 2s: every member
+        // overshoots by t - 2 in (2.5, 3.2) seconds = ceil(...) / 2 ->
+        // s = 2 round-lengths for everyone, deterministically.
+        let profile = LatencyProfile::Uniform { lo: 0.5, hi: 1.0 };
+        let stall = FaultModel::new(FaultProfile::Stall { p: 1.0, secs: 4.0 }, 17);
+        let plan = sched(10, 1.0, None, profile).plan_round(1);
+
+        // k = 2: the overshoot fits the bound — everyone is late (except
+        // the promoted quorum-floor member), nobody fails.
+        let k2 = sched(10, 1.0, None, profile)
+            .with_faults(stall.clone(), Some(2.0))
+            .with_staleness(2);
+        let c = k2.sim_churn(&plan);
+        assert!(c.failed.is_empty(), "late members are not failures: {:?}", c.failed);
+        assert_eq!(c.stale_dropped, 0);
+        // the lowest id was promoted on-time (quorum floor); the other
+        // nine are late with due = round + 2
+        assert_eq!(c.late.len(), 9);
+        assert!(c.late.iter().all(|&(id, due)| id != 0 && due == 3), "{:?}", c.late);
+        // late members cost the round nothing; the promoted survivor's
+        // full completion (latency + 4s stall) is the makespan
+        assert!(c.sim_makespan_secs > 4.0 && c.sim_makespan_secs < 6.0);
+
+        // k = 1: the same overshoot exceeds the bound — strict failure
+        // semantics return, but now visibly counted as stale drops.
+        let k1 = sched(10, 1.0, None, profile)
+            .with_faults(stall.clone(), Some(2.0))
+            .with_staleness(1);
+        let c1 = k1.sim_churn(&plan);
+        assert_eq!(c1.failed, (1..10u32).collect::<Vec<_>>());
+        assert!(c1.late.is_empty());
+        assert_eq!(c1.stale_dropped, 9);
+
+        // k = 0 must be bit-identical to the pre-semi-sync outcome.
+        let k0 = sched(10, 1.0, None, profile).with_faults(stall, Some(2.0));
+        let c0 = k0.sim_churn(&plan);
+        assert_eq!(c0.failed, (1..10u32).collect::<Vec<_>>());
+        assert!(c0.late.is_empty());
+        assert_eq!(c0.stale_dropped, 0);
+    }
+
+    #[test]
+    fn late_members_are_ineligible_until_their_due_round() {
+        let mut s = sched(6, 1.0, None, LatencyProfile::Off);
+        // client 2 is mid-flight until round 3 (due = 3), client 4
+        // until round 2
+        s.note_late(1, &[(2, 3), (4, 2)]);
+        assert_eq!(s.plan_round(2).selected, vec![0, 1, 3, 5]);
+        assert_eq!(s.plan_round(3).selected, vec![0, 1, 3, 4, 5]);
+        assert_eq!(s.plan_round(4).selected, vec![0, 1, 2, 3, 4, 5]);
+        // pruning: noting later rounds drops expired entries
+        s.note_late(4, &[]);
+        assert_eq!(s.plan_round(2).selected, (0..6).collect::<Vec<u32>>());
+        // degenerate guard: if every sampled member is mid-flight the
+        // lowest id is kept so the round still has a cohort
+        let mut all = sched(3, 1.0, None, LatencyProfile::Off);
+        all.note_late(0, &[(0, 9), (1, 9), (2, 9)]);
+        assert_eq!(all.plan_round(1).selected, vec![0]);
     }
 }

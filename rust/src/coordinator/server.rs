@@ -85,7 +85,7 @@ use super::client::ClientState;
 use super::codec;
 use super::pool::{self, Job, Task, TaskSender, WorkerPool};
 use super::sched::{self, RoundScheduler};
-use crate::config::{AggregateMode, CodecMode, RunConfig};
+use crate::config::{AggregateMode, CodecMode, RoundPolicy, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::runtime::{ModelRuntime, Runtime};
@@ -152,57 +152,42 @@ pub struct ServerOpts {
     /// Worker slices for server-side eval batches (>= 1); 1 = serial.
     /// Bit-identical results for any value.
     pub eval_threads: usize,
-    /// Overlap the sharded fold with still-arriving updates (per-shard
-    /// prefix folds in sorted client order).  Requires a pool, the
-    /// streaming aggregate and known sample counts; silently falls back
-    /// to the after-barrier fold otherwise.  Bit-identical either way.
-    pub fold_overlap: bool,
-    /// Decode-buffer bound for the recv/decode pipeline: with fold
-    /// overlap active at most this many `DecodedUpdate` buffers are
-    /// ever live (0 = unbounded, one per client).  Without fold overlap
-    /// it only caps the buffers retained between rounds.  Bit-identical
-    /// results for any value.
-    pub decode_buffers: usize,
-    /// Codec data path for update decode: narrow `u16` rows through the
-    /// SWAR kernels (default) or the scalar f32 reference.  Decoded
-    /// codes are identical either way, so results are bit-identical.
-    pub codec: CodecMode,
+    /// The round behavior policy — the **single** construction path for
+    /// tolerance (quorum / timeout / bounded staleness) and pipeline
+    /// shape (fold overlap, decode-buffer bound, codec).  Quorum below
+    /// 1.0 or a timeout puts the receive path in tolerant mode
+    /// (per-client failures land in `failed` instead of aborting);
+    /// staleness `k > 0` additionally banks late updates for a
+    /// discounted fold within `k` rounds ([`Server::run_round`]).
+    pub round: RoundPolicy,
     /// Pool handle for server-side stages (decode pipeline, shard fold,
     /// eval slices); `None` runs the server fully serial.
     pub tasks: Option<TaskSender>,
-    /// Fraction of the dispatched cohort whose updates must arrive for
-    /// a round to complete, in (0, 1]; the floor is always at least one
-    /// update.  Below 1.0 the receive path tolerates per-client
-    /// failures (dead sockets, timeouts) and renormalizes aggregation
-    /// weights over the survivors; at exactly 1.0 any failure aborts
-    /// the round (the historical behavior).
-    pub quorum: f32,
-    /// Give up on a cohort member's update after this many real seconds
-    /// counted from the start of the receive window (`None` = wait
-    /// forever).  Expired clients land in the round's `failed` count.
-    pub round_timeout: Option<f64>,
 }
 
 impl ServerOpts {
     /// Fully serial server (no pool): the pre-parallel behavior.
     pub fn serial(aggregate: AggregateMode) -> ServerOpts {
-        ServerOpts {
-            aggregate,
-            agg_shards: 1,
-            eval_threads: 1,
-            fold_overlap: false,
-            decode_buffers: 0,
-            codec: CodecMode::Narrow,
-            tasks: None,
-            quorum: 1.0,
-            round_timeout: None,
-        }
+        let mut round = RoundPolicy::strict_sync();
+        // No pool, so there is nothing to overlap with.
+        round.pipeline.fold_overlap = false;
+        ServerOpts { aggregate, agg_shards: 1, eval_threads: 1, round, tasks: None }
     }
 }
 
 /// What the fold-overlap receive returns: updates in sorted-id order
 /// plus the fully folded accumulator as `(ranges, chunks)`.
 type OverlappedRound = (Vec<Update>, Vec<(usize, usize)>, Vec<Vec<f32>>);
+
+/// One banked late update (semi-sync staleness): the update itself plus
+/// the round its discounted fold is due.
+struct BankedUpdate {
+    /// Round the fold happens in (`answered round + staleness`).
+    due: u32,
+    /// The late client's update, still encoded (decode is pure, so
+    /// deferring it to the fold round changes nothing).
+    update: Update,
+}
 
 /// Events of the fold-overlap receive loop: a finished decode or a
 /// shard's finished per-client prefix fold.  Errors (including panic
@@ -382,6 +367,12 @@ pub struct Server {
     /// for slowest-first dispatch; handles that cannot observe compute
     /// time (TCP) simply contribute nothing.
     arrivals: Vec<(u32, f64)>,
+    /// Semi-sync staleness bank: late updates keyed by `(round, client
+    /// id)` — the round they *answer* — each carrying the round its
+    /// fold is due.  A BTreeMap so harvesting iterates in exactly the
+    /// `(round, client id)` fold order the determinism contract
+    /// requires.  Empty in strict mode.
+    banked: BTreeMap<(u32, u32), BankedUpdate>,
     // round-persistent scratch (allocation-free steady state)
     dec: codec::DecodedUpdate,
     acc: Vec<f32>,
@@ -411,6 +402,7 @@ impl Server {
             cum_uplink_bits: 0,
             samples_by_id: BTreeMap::new(),
             arrivals: Vec::new(),
+            banked: BTreeMap::new(),
             dec: codec::DecodedUpdate::new(),
             acc: Vec::new(),
             dec_pool: Vec::new(),
@@ -477,18 +469,33 @@ impl Server {
     /// record; the caller fills in the plan-side fields (`dropped`,
     /// `sim_makespan_secs`, and the simulated share of `failed`).
     ///
-    /// With [`ServerOpts::quorum`] below 1.0 or a
-    /// [`ServerOpts::round_timeout`] configured, per-client send/recv
-    /// failures no longer abort the round: the failing clients land in
-    /// the record's `failed` count, and the round completes once
-    /// `max(ceil(quorum * n), 1)` updates arrived — aggregation
-    /// weights, loss averaging and telemetry means renormalize over the
-    /// survivors.  At quorum 1.0 with no timeout, the strict historical
-    /// behavior (and its fast receive paths) is preserved exactly.
+    /// With the policy's quorum below 1.0 or a round timeout configured
+    /// ([`RoundPolicy::is_tolerant`]), per-client send/recv failures no
+    /// longer abort the round: the failing clients land in the record's
+    /// `failed` count, and the round completes once `max(ceil(quorum *
+    /// n), 1)` **on-time** updates arrived — aggregation weights, loss
+    /// averaging and telemetry means renormalize over the fold set.  At
+    /// quorum 1.0 with no timeout and no staleness, the strict
+    /// historical behavior (and its fast receive paths) is preserved
+    /// exactly.
+    ///
+    /// `late` is the scheduler's semi-sync plan for this round: members
+    /// whose update answers `round` but is *banked* to fold at a later
+    /// `due` round with a staleness discount (empty in strict mode and
+    /// for plain callers).  Independently, banked updates whose due
+    /// round is this one are harvested into this round's fold: each
+    /// contributes discounted sample mass `n_samples / (1 + s)` (s =
+    /// rounds late), renormalized over the whole fold set, applied in
+    /// `(round, client id)` order — never arrival order — which keeps
+    /// semi-sync runs bit-identical across thread counts and
+    /// topologies.  Harvested folds are the record's `stale_folded`;
+    /// updates staler than the policy bound are dropped and counted in
+    /// `stale_dropped`.
     pub fn run_round(
         &mut self,
         round: u32,
         clients: &mut [Box<dyn ClientHandle + '_>],
+        late: &[(u32, u32)],
         evaluate: bool,
     ) -> Result<RoundRecord> {
         let t0 = Instant::now();
@@ -519,11 +526,11 @@ impl Server {
             params: Arc::clone(&self.params),
             losses,
         };
-        // Strict mode (full quorum, no timeout) keeps the historical
-        // any-failure-aborts semantics and the pipelined/overlap fast
-        // paths; tolerant mode trades them for per-client failure
-        // containment.
-        let tolerant = self.opts.quorum < 1.0 || self.opts.round_timeout.is_some();
+        // Strict mode (full quorum, no timeout, no staleness) keeps the
+        // historical any-failure-aborts semantics and the
+        // pipelined/overlap fast paths; tolerant mode trades them for
+        // per-client failure containment.
+        let tolerant = self.opts.round.is_tolerant();
         let mut failed: Vec<u32> = Vec::new();
         let encoded = bcast.encode();
         for c in clients.iter_mut() {
@@ -548,14 +555,16 @@ impl Server {
         let pipelined = !tolerant
             && self.opts.tasks.is_some()
             && self.opts.aggregate == AggregateMode::Streaming;
-        let overlap_plan = if pipelined && self.opts.fold_overlap {
+        let overlap_plan = if pipelined && self.opts.round.pipeline.fold_overlap {
             self.fold_plan(clients)
         } else {
             None
         };
+        let mut stale_dropped: u32 = 0;
         let mut fold_ready: Option<(Vec<(usize, usize)>, Vec<Vec<f32>>)> = None;
         let (updates, decoded) = if tolerant {
-            (self.recv_tolerant(round, clients, &mut failed), Vec::new())
+            let ups = self.recv_tolerant(round, clients, &mut failed, late, &mut stale_dropped);
+            (ups, Vec::new())
         } else if let Some(weights) = overlap_plan {
             let (ups, ranges, chunks) = self.recv_fold_overlapped(round, clients, &weights)?;
             fold_ready = Some((ranges, chunks));
@@ -574,12 +583,40 @@ impl Server {
         };
         let recv_decode_secs = t_recv.elapsed().as_secs_f64();
 
+        // Harvest banked late updates whose fold is due this round:
+        // `(staleness, update)` pairs in `(round, client id)` order
+        // (the BTreeMap key order — the fold-determinism requirement).
+        let mut stale: Vec<(u32, Update)> = Vec::new();
+        if !self.banked.is_empty() {
+            let due: Vec<(u32, u32)> = self
+                .banked
+                .iter()
+                .filter(|(_, b)| b.due <= round)
+                .map(|(&k, _)| k)
+                .collect();
+            let k_bound = self.opts.round.tolerance.staleness;
+            for key in due {
+                let b = self.banked.remove(&key).expect("key just listed");
+                let s = round - b.update.round;
+                if s >= 1 && s <= k_bound {
+                    stale.push((s, b.update));
+                } else {
+                    // Defensive: a bank entry that slipped past the
+                    // bound (cannot happen through the normal banking
+                    // paths) is dropped, visibly.
+                    stale_dropped += 1;
+                }
+            }
+        }
+
         // The quorum floor ranges over the dispatched slice: at 1.0 it
         // equals n (strict mode already propagated any failure), below
-        // it the round completes on the survivors.
+        // it the round completes on the survivors.  Only *on-time*
+        // updates count toward quorum — harvested stale folds are a
+        // bonus on top, never a substitute for a live round.
         let n_recv = updates.len();
         let quorum_need =
-            ((self.opts.quorum as f64 * n as f64).ceil() as usize).clamp(1, n);
+            ((self.opts.round.tolerance.quorum as f64 * n as f64).ceil() as usize).clamp(1, n);
         ensure!(
             n_recv >= quorum_need,
             "round {round}: quorum not met — {n_recv} of {n} updates arrived \
@@ -599,15 +636,20 @@ impl Server {
         ensure!(total_samples > 0, "no samples reported");
         // Remember the counts so TCP cohorts become fold-overlap
         // eligible from the next round on.
-        for u in &updates {
+        for u in updates.iter().chain(stale.iter().map(|(_, u)| u)) {
             self.samples_by_id.insert(u.client_id, u.num_samples);
         }
 
         // Decode + aggregate, then apply (Eq. 4).  Under fold overlap
         // the folds already happened inside the receive window; only
-        // the chunk application remains here.
+        // the chunk application remains here.  A round with harvested
+        // stale folds takes the dedicated discounted-weight path; a
+        // stale-free round keeps the exact historical arithmetic, so
+        // staleness-0 runs stay bit-for-bit identical.
         let t_agg = Instant::now();
-        if let Some((ranges, chunks)) = fold_ready {
+        if !stale.is_empty() {
+            self.aggregate_with_stale(&updates, &stale)?;
+        } else if let Some((ranges, chunks)) = fold_ready {
             self.apply_chunks(&ranges, &chunks);
             self.chunks = chunks;
         } else if pipelined {
@@ -620,31 +662,52 @@ impl Server {
         }
         let agg_secs = t_agg.elapsed().as_secs_f64();
 
-        // Loss bookkeeping for loss-driven policies.
-        let train_loss = updates
-            .iter()
-            .map(|u| u.train_loss as f64 * u.num_samples as f64 / total_samples as f64)
-            .sum::<f64>() as f32;
+        // Loss bookkeeping for loss-driven policies: sample-mass
+        // weighted, with stale folds contributing their discounted mass
+        // (the same renormalized weights the aggregate used).
+        let train_loss = if stale.is_empty() {
+            updates
+                .iter()
+                .map(|u| u.train_loss as f64 * u.num_samples as f64 / total_samples as f64)
+                .sum::<f64>()
+        } else {
+            let denom = discounted_denom(&updates, &stale);
+            (stale
+                .iter()
+                .map(|(s, u)| u.train_loss as f64 * discounted_mass(u, *s))
+                .sum::<f64>()
+                + updates
+                    .iter()
+                    .map(|u| u.train_loss as f64 * u.num_samples as f64)
+                    .sum::<f64>())
+                / denom
+        } as f32;
         if self.initial_loss.is_none() {
             self.initial_loss = Some(train_loss);
         }
         self.prev_loss = Some(train_loss);
 
         // Communication accounting: the paper counts uplink payloads.
+        // A banked update's bits are charged to the round it *folds*
+        // in (its simulated arrival), so strict and semi-sync runs
+        // agree on the cumulative ledger once every bank drains.
         let mm = &self.model.mm;
         let uplink_bits: u64 = updates
             .iter()
+            .chain(stale.iter().map(|(_, u)| u))
             .map(|u| codec::update_wire_bits(mm, u))
             .sum();
         self.cum_uplink_bits += uplink_bits;
 
-        // Telemetry: mean bits/element and ranges (Figs. 1b, 5).
+        // Telemetry: mean bits/element and ranges (Figs. 1b, 5),
+        // unweighted means over the whole fold set (on-time + stale).
+        let n_fold = n_recv + stale.len();
         let l = mm.num_segments();
         let seg_sizes = mm.segment_sizes();
         let mut mean_bits_acc = 0.0f64;
         let mut mean_range_acc = 0.0f64;
         let mut seg_ranges = vec![0.0f32; l];
-        for u in &updates {
+        for u in updates.iter().chain(stale.iter().map(|(_, u)| u)) {
             let bits_elem: u64 = u
                 .segments
                 .iter()
@@ -655,7 +718,7 @@ impl Server {
             let ranges: Vec<f32> = u.segments.iter().map(|h| h.range()).collect();
             mean_range_acc += stats::mean(&ranges.iter().map(|&x| x as f64).collect::<Vec<_>>());
             for (sr, r) in seg_ranges.iter_mut().zip(&ranges) {
-                *sr += r / n_recv as f32;
+                *sr += r / n_fold as f32;
             }
         }
 
@@ -675,8 +738,8 @@ impl Server {
             test_accuracy,
             uplink_bits,
             cum_uplink_bits: self.cum_uplink_bits,
-            mean_bits: (mean_bits_acc / n_recv as f64) as f32,
-            mean_range: (mean_range_acc / n_recv as f64) as f32,
+            mean_bits: (mean_bits_acc / n_fold as f64) as f32,
+            mean_range: (mean_range_acc / n_fold as f64) as f32,
             seg_ranges,
             wall_secs: t0.elapsed().as_secs_f64(),
             recv_decode_secs,
@@ -693,6 +756,11 @@ impl Server {
             failed: failed.len() as u32,
             // Rejoins are observed by the TCP serve loop, not here.
             rejoined: 0,
+            // Semi-sync staleness: banked folds harvested this round,
+            // and updates too stale to ever fold (the scheduler adds
+            // its simulated share of drops on top).
+            stale_folded: stale.len() as u32,
+            stale_dropped,
         })
     }
 
@@ -707,28 +775,46 @@ impl Server {
         }
     }
 
-    /// Failure-tolerant receive, used when a quorum below 1.0 or a
-    /// round timeout is configured: a client whose update cannot be
-    /// obtained (dead socket, expired timeout, broadcast that already
-    /// failed) lands in `failed` instead of aborting the round.  The
-    /// shared timeout is one real-time budget for the whole receive
-    /// window, apportioned as "whatever remains" to each blocking
-    /// receive in turn.  Stale replies — a previously timed-out client
-    /// answering an older round — are drained and discarded so a
-    /// revived handle can resynchronize.  Updates return sorted by
-    /// `client_id`; decode happens downstream on the non-pipelined
-    /// aggregation path (containment is worth more than overlap once
-    /// clients are allowed to die mid-round).
+    /// Failure-tolerant receive, used when a quorum below 1.0, a round
+    /// timeout or a staleness bound is configured: a client whose
+    /// update cannot be obtained (dead socket, expired timeout,
+    /// broadcast that already failed) lands in `failed` instead of
+    /// aborting the round.  The shared timeout is one real-time budget
+    /// for the whole receive window, apportioned as "whatever remains"
+    /// to each blocking receive in turn.
+    ///
+    /// Two staleness hooks live here (the accept hook the semi-sync
+    /// engine is built on):
+    ///
+    /// * a member of the scheduler's `late` plan answers *this* round,
+    ///   but its update is banked for its due round instead of folding
+    ///   now (the simulated-straggler path, identical on both
+    ///   topologies);
+    /// * a stale reply — a previously timed-out client answering an
+    ///   older round over a real socket — is banked to fold this round
+    ///   if it is within the staleness bound, counted in
+    ///   `stale_dropped` if beyond it, and silently drained in strict
+    ///   mode (the historical behavior) so a revived handle can
+    ///   resynchronize.
+    ///
+    /// Updates return sorted by `client_id`; decode happens downstream
+    /// on the non-pipelined aggregation path (containment is worth more
+    /// than overlap once clients are allowed to die mid-round).
     fn recv_tolerant(
         &mut self,
         round: u32,
         clients: &mut [Box<dyn ClientHandle + '_>],
         failed: &mut Vec<u32>,
+        late: &[(u32, u32)],
+        stale_dropped: &mut u32,
     ) -> Vec<Update> {
         let deadline = self
             .opts
+            .round
+            .tolerance
             .round_timeout
             .map(|t| Instant::now() + Duration::from_secs_f64(t));
+        let k_bound = self.opts.round.tolerance.staleness;
         let mut updates: Vec<Update> = Vec::with_capacity(clients.len());
         for c in clients.iter_mut() {
             let id = c.id();
@@ -747,8 +833,24 @@ impl Server {
             let got = loop {
                 match c.recv_update() {
                     Ok(u) if u.round == round => break Ok(u),
-                    // stale reply from an older, timed-out round
-                    Ok(u) if u.round < round => continue,
+                    // stale reply from an older, timed-out round: the
+                    // accept hook — bank it for this round's fold when
+                    // the staleness bound allows, drop it visibly when
+                    // not, drain it silently in strict mode
+                    Ok(u) if u.round < round => {
+                        let s = round - u.round;
+                        if k_bound > 0 {
+                            if s <= k_bound {
+                                self.banked.insert(
+                                    (u.round, u.client_id),
+                                    BankedUpdate { due: round, update: u },
+                                );
+                            } else {
+                                *stale_dropped += 1;
+                            }
+                        }
+                        continue;
+                    }
                     Ok(u) => {
                         break Err(anyhow!(
                             "client {id} answered round {} for {round}",
@@ -759,7 +861,17 @@ impl Server {
                 }
             };
             match got {
-                Ok(u) => updates.push(u),
+                Ok(u) => {
+                    if let Some(&(_, due)) = late.iter().find(|&&(l, _)| l == id) {
+                        // Scheduler-planned late member: its update
+                        // answers this round but folds (discounted) at
+                        // `due`.
+                        self.banked
+                            .insert((round, u.client_id), BankedUpdate { due, update: u });
+                    } else {
+                        updates.push(u);
+                    }
+                }
                 Err(e) => {
                     crate::warn_!("server", "round {round}: client {id} failed: {e:#}");
                     failed.push(id);
@@ -771,6 +883,44 @@ impl Server {
         }
         updates.sort_by_key(|u| u.client_id);
         updates
+    }
+
+    /// Semi-sync aggregation for a round whose fold set includes
+    /// harvested stale updates: every member contributes discounted
+    /// sample mass `num_samples / (1 + s)` (`s = 0` for on-time
+    /// members), renormalized over the whole set.  Folds walk the set
+    /// in `(round, client id)` order — stale entries (strictly older
+    /// rounds) first, then the on-time cohort — with the same serial
+    /// streaming arithmetic on every topology and thread count, so
+    /// semi-sync rounds are bit-identical everywhere.
+    fn aggregate_with_stale(
+        &mut self,
+        updates: &[Update],
+        stale: &[(u32, Update)],
+    ) -> Result<()> {
+        let d = self.model.mm.d;
+        let denom = discounted_denom(updates, stale);
+        ensure!(denom > 0.0, "no sample mass in the fold set");
+        self.acc.clear();
+        self.acc.resize(d, 0.0);
+        let mode = self.opts.round.pipeline.codec;
+        let stale_refs = stale.iter().map(|(s, u)| (*s, u));
+        let ontime_refs = updates.iter().map(|u| (0u32, u));
+        for (s, u) in stale_refs.chain(ontime_refs) {
+            let mut dec = std::mem::take(&mut self.dec);
+            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, mode)
+                .with_context(|| format!("decoding update from client {}", u.client_id))?;
+            let w = (discounted_mass(u, s) / denom) as f32;
+            codec::fold_range(&self.model.mm, &dec, w, 0, d, &mut self.acc);
+            self.dec = dec;
+        }
+        // Borrow dance: take the accumulator, apply, put it back.
+        let acc = std::mem::take(&mut self.acc);
+        for (p, a) in self.params_mut().iter_mut().zip(&acc) {
+            *p += a;
+        }
+        self.acc = acc;
+        Ok(())
     }
 
     /// Receive every client's update, dispatching each one's decode to
@@ -789,7 +939,7 @@ impl Server {
             .expect("pipelined path requires a pool")
             .clone();
         let n = clients.len();
-        let mode = self.opts.codec;
+        let mode = self.opts.round.pipeline.codec;
         let (tx, rx) = channel::<DecodeReply>();
         for c in clients.iter_mut() {
             let u = c.recv_update()?;
@@ -848,7 +998,7 @@ impl Server {
         let d = self.model.mm.d;
         let shards = self.opts.agg_shards.clamp(1, d.max(1));
         let ranges = pool::chunk_ranges(d, shards);
-        let cap = self.opts.decode_buffers;
+        let cap = self.opts.round.pipeline.decode_buffers;
 
         // Receive in sorted-id order (not raw handle order): decode
         // dispatch then matches the fold order, so every buffer held
@@ -921,7 +1071,7 @@ impl Server {
             };
 
             // Dispatch the decode on the priority lane.
-            let mode = self.opts.codec;
+            let mode = self.opts.round.pipeline.codec;
             let model = Arc::clone(&self.model);
             let tx2 = tx.clone();
             tasks.send(Task::Exec(Box::new(move || {
@@ -1013,8 +1163,8 @@ impl Server {
     /// cap (`decode_buffers`; 0 keeps everything — one per client).
     fn recycle_decoded(&mut self, bufs: Vec<codec::DecodedUpdate>) {
         self.dec_pool.extend(bufs);
-        if self.opts.decode_buffers > 0 {
-            self.dec_pool.truncate(self.opts.decode_buffers);
+        if self.opts.round.pipeline.decode_buffers > 0 {
+            self.dec_pool.truncate(self.opts.round.pipeline.decode_buffers);
         }
     }
 
@@ -1029,7 +1179,7 @@ impl Server {
         self.acc.resize(d, 0.0);
         for u in updates {
             let mut dec = std::mem::take(&mut self.dec);
-            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, self.opts.codec)
+            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, self.opts.round.pipeline.codec)
                 .with_context(|| format!("decoding update from client {}", u.client_id))?;
             let w = u.num_samples as f32 / total_samples as f32;
             codec::fold_range(&self.model.mm, &dec, w, 0, d, &mut self.acc);
@@ -1059,7 +1209,7 @@ impl Server {
         let mut weights = Vec::with_capacity(n);
         for u in updates {
             let mut dec = std::mem::take(&mut self.dec);
-            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, self.opts.codec)
+            codec::decode_update_into_mode(&self.model.mm, u, &mut dec, self.opts.round.pipeline.codec)
                 .with_context(|| format!("decoding update from client {}", u.client_id))?;
             dec.extend_codes_f32(&self.model.mm, &mut codes);
             mins.extend_from_slice(&dec.mins);
@@ -1137,6 +1287,20 @@ impl Server {
         let seen = (batches * e) as f64;
         Ok(((loss_sum / seen) as f32, (correct as f64 / seen) as f32))
     }
+}
+
+/// One fold-set member's staleness-discounted sample mass:
+/// `num_samples / (1 + s)` where `s` is how many rounds late the update
+/// folds (`0` for on-time members).
+fn discounted_mass(u: &Update, s: u32) -> f64 {
+    u.num_samples as f64 / (1.0 + s as f64)
+}
+
+/// Total discounted sample mass of a semi-sync fold set: stale members
+/// at their discounted mass, on-time members at full mass.
+fn discounted_denom(updates: &[Update], stale: &[(u32, Update)]) -> f64 {
+    stale.iter().map(|(s, u)| discounted_mass(u, *s)).sum::<f64>()
+        + updates.iter().map(|u| u.num_samples as f64).sum::<f64>()
 }
 
 /// FNV-1a over the bit patterns of an f32 slice.
@@ -1322,12 +1486,8 @@ impl Session {
                 aggregate: self.cfg.aggregate,
                 agg_shards: self.cfg.resolved_agg_shards(threads),
                 eval_threads: self.cfg.resolved_eval_threads(threads),
-                fold_overlap: self.cfg.fold_overlap,
-                decode_buffers: self.cfg.decode_buffers,
-                codec: self.cfg.codec,
+                round: self.cfg.round,
                 tasks: Some(pool.sender()),
-                quorum: self.cfg.quorum,
-                round_timeout: self.cfg.round_timeout,
             },
         )?;
         let mut clients: Vec<Box<dyn ClientHandle + '_>> = self
@@ -1345,7 +1505,7 @@ impl Session {
                         &self.model,
                         &root,
                         self.cfg.error_feedback,
-                        self.cfg.codec,
+                        self.cfg.round.pipeline.codec,
                     )),
                     jobs: pool.sender(),
                     pending: None,

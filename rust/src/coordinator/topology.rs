@@ -87,8 +87,21 @@ impl RemoteClient {
         self.base_up += self.t.bytes_received();
         self.base_down += self.t.bytes_sent();
         self.t = t;
-        if samples.is_some() {
-            self.samples = samples;
+        // A rejoining worker re-materializes the same deterministic
+        // shard, so a differing `num_samples` is a misconfigured or
+        // confused worker — trusting it would silently skew the
+        // aggregation weights.  Keep the original count and log;
+        // only adopt the rejoiner's count when we never had one.
+        match (self.samples, samples) {
+            (Some(orig), Some(new)) if orig != new => {
+                crate::warn_!(
+                    "serve",
+                    "worker {} rejoined claiming {new} samples but registered {orig}; keeping {orig}",
+                    self.id
+                );
+            }
+            (None, Some(_)) => self.samples = samples,
+            _ => {}
         }
         self.dead = false;
         crate::info!("serve", "worker {} re-attached", self.id);
@@ -130,7 +143,8 @@ impl ClientHandle for RemoteClient {
         if let Err(e) = &r {
             // A read *timeout* is the quorum path giving up on a slow
             // worker whose socket may be fine — its late update is
-            // drained as stale next round.  Anything else means the
+            // drained next round (and, with `--staleness k > 0`, banked
+            // for a discounted fold).  Anything else means the
             // socket (or protocol) is broken: only a rejoin revives it.
             let timed_out = e
                 .downcast_ref::<std::io::Error>()
@@ -359,15 +373,13 @@ pub fn serve(
             aggregate: cfg.aggregate,
             agg_shards: cfg.resolved_agg_shards(server_threads),
             eval_threads: cfg.resolved_eval_threads(server_threads),
-            // Remote handles carry their shard size from the ready
-            // handshake, so fold overlap is active from round 0 (legacy
-            // workers without `num_samples` degrade to round 1).
-            fold_overlap: cfg.fold_overlap,
-            decode_buffers: cfg.decode_buffers,
-            codec: cfg.codec,
+            // The round policy travels whole: tolerance (quorum /
+            // timeout / staleness) and pipeline shape.  Remote handles
+            // carry their shard size from the ready handshake, so fold
+            // overlap is active from round 0 (legacy workers without
+            // `num_samples` degrade to round 1).
+            round: cfg.round,
             tasks: Some(pool.sender()),
-            quorum: cfg.quorum,
-            round_timeout: cfg.round_timeout,
         },
     )?;
     // Same scheduler as the in-process session: sampled cohorts and
@@ -472,7 +484,14 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     let my_shard = Arc::new(train.subset(&shards[id as usize]));
     let root = Rng::new(cfg.seed);
     let mut state = ClientState::with_options(
-        id, my_shard, cfg.policy.build(), cfg.lr, &model, &root, cfg.error_feedback, cfg.codec,
+        id,
+        my_shard,
+        cfg.policy.build(),
+        cfg.lr,
+        &model,
+        &root,
+        cfg.error_feedback,
+        cfg.round.pipeline.codec,
     );
     // Chaos injection (tests/CI only): wrap the wire so this worker's
     // updates crash/stall/drop per the profile in FEDDQ_WORKER_FAULTS.
@@ -504,4 +523,55 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     }
     crate::info!("worker", "client {id} done");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback() -> TcpTransport {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        drop(client); // revive never touches the socket
+        TcpTransport::new(server).unwrap()
+    }
+
+    fn dead_handle(id: u32, samples: Option<u32>, rejoins: &RejoinMap) -> RemoteClient {
+        RemoteClient {
+            id,
+            t: loopback(),
+            samples,
+            dead: true,
+            rejoins: Arc::clone(rejoins),
+            base_up: 0,
+            base_down: 0,
+        }
+    }
+
+    #[test]
+    fn rejoin_with_mismatched_num_samples_keeps_the_registered_count() {
+        // A rejoining worker re-materializes the same deterministic
+        // shard, so a differing claim is a confused worker — adopting it
+        // would silently skew the aggregation weights mid-run.
+        let rejoins: RejoinMap = Arc::new(Mutex::new(HashMap::new()));
+        let mut c = dead_handle(7, Some(60), &rejoins);
+        rejoins.lock().unwrap().insert(7, (loopback(), Some(9999)));
+        c.revive_if_rejoined();
+        assert!(!c.dead, "rejoin must revive the handle");
+        assert_eq!(c.num_samples(), Some(60), "registered sample count must win");
+    }
+
+    #[test]
+    fn rejoin_supplies_num_samples_when_none_was_registered() {
+        // Pre-`num_samples` handshakes leave the server without a
+        // count: the rejoiner's claim is the only one there is.
+        let rejoins: RejoinMap = Arc::new(Mutex::new(HashMap::new()));
+        let mut c = dead_handle(8, None, &rejoins);
+        rejoins.lock().unwrap().insert(8, (loopback(), Some(42)));
+        c.revive_if_rejoined();
+        assert!(!c.dead);
+        assert_eq!(c.num_samples(), Some(42), "absent count adopts the rejoiner's");
+    }
 }

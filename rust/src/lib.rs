@@ -139,13 +139,25 @@
 //!   makespan shrinks when clients outnumber workers.  Dispatch order
 //!   is a pure performance heuristic — results fold in sorted client
 //!   order regardless.
+//! * **`--staleness k`** (semi-synchronous rounds): an update that
+//!   answers an already-closed round is banked keyed by
+//!   `(round, client id)` and folded into a later round's aggregation
+//!   with weight `num_samples / (1 + s)` (`s` rounds late,
+//!   renormalized over the fold set) instead of being discarded;
+//!   updates more than `k` rounds late drop into the report's
+//!   `stale_dropped` column, folded ones into `stale_folded`.
+//!   `k = 0` (default) is strict synchronous operation, bit-for-bit.
+//!   The whole round-behavior surface is one typed value,
+//!   [`config::RoundPolicy`] (cohort / tolerance / pipeline groups
+//!   with a validating builder), composed into `RunConfig`.
 //!
 //! ### Determinism contract
 //!
 //! A run is a pure function of its [`config::RunConfig`]: for any
 //! `threads`, `agg_shards`, `eval_threads`, `decode_buffers`,
 //! `fold_overlap` or `codec` value — crossed with any `participation`
-//! / `round_deadline` / `sim_latency` setting — the engine produces a
+//! / `round_deadline` / `sim_latency` / `sim_faults` / `staleness`
+//! setting — the engine produces a
 //! bit-identical [`metrics::RunReport`] (per-round records, bit
 //! ledger, cohort fields, and the final parameter hash).  This holds
 //! because client states own independently derived RNG streams, jobs

@@ -67,6 +67,14 @@ pub struct RoundRecord {
     /// Workers that re-attached mid-run this round via the TCP rejoin
     /// handshake (always 0 in-process).
     pub rejoined: u32,
+    /// Banked late updates folded into this round with a staleness
+    /// discount (semi-sync mode, `--staleness k > 0`; always 0 in
+    /// strict mode).
+    pub stale_folded: u32,
+    /// Late updates dropped this round for exceeding the staleness
+    /// bound (simulated overshoots plus real too-stale socket replies;
+    /// always 0 in strict mode).
+    pub stale_dropped: u32,
 }
 
 impl RoundRecord {
@@ -105,6 +113,8 @@ impl RoundRecord {
             ("sim_makespan_secs", Json::from(self.sim_makespan_secs)),
             ("failed", Json::from(self.failed)),
             ("rejoined", Json::from(self.rejoined)),
+            ("stale_folded", Json::from(self.stale_folded)),
+            ("stale_dropped", Json::from(self.stale_dropped)),
         ])
     }
 
@@ -179,6 +189,14 @@ impl RoundRecord {
                 None => 0,
                 Some(v) => v.as_usize().context("round: rejoined")? as u32,
             },
+            stale_folded: match j.get("stale_folded") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: stale_folded")? as u32,
+            },
+            stale_dropped: match j.get("stale_dropped") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: stale_dropped")? as u32,
+            },
         })
     }
 }
@@ -229,11 +247,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -250,7 +268,9 @@ impl RunReport {
                 r.dropped,
                 r.sim_makespan_secs,
                 r.failed,
-                r.rejoined
+                r.rejoined,
+                r.stale_folded,
+                r.stale_dropped
             ));
         }
         out
@@ -364,6 +384,8 @@ mod tests {
             sim_makespan_secs: 1.25,
             failed: 3,
             rejoined: 1,
+            stale_folded: 2,
+            stale_dropped: 1,
         }
     }
 
@@ -441,6 +463,8 @@ mod tests {
         assert_eq!(a.sim_makespan_secs, b.sim_makespan_secs);
         assert_eq!(a.failed, b.failed);
         assert_eq!(a.rejoined, b.rejoined);
+        assert_eq!(a.stale_folded, b.stale_folded);
+        assert_eq!(a.stale_dropped, b.stale_dropped);
     }
 
     #[test]
@@ -481,6 +505,8 @@ mod tests {
         assert_eq!(row.get("sim_makespan_secs").and_then(Json::as_f64), Some(0.875));
         assert_eq!(row.get("failed").and_then(Json::as_usize), Some(3));
         assert_eq!(row.get("rejoined").and_then(Json::as_usize), Some(1));
+        assert_eq!(row.get("stale_folded").and_then(Json::as_usize), Some(2));
+        assert_eq!(row.get("stale_dropped").and_then(Json::as_usize), Some(1));
     }
 
     #[test]
@@ -507,6 +533,8 @@ mod tests {
                     r.remove("eval_secs");
                     r.remove("failed");
                     r.remove("rejoined");
+                    r.remove("stale_folded");
+                    r.remove("stale_dropped");
                 }
             }
         }
@@ -519,6 +547,8 @@ mod tests {
         assert_eq!(back.rounds[0].eval_secs, 0.0);
         assert_eq!(back.rounds[0].failed, 0);
         assert_eq!(back.rounds[0].rejoined, 0);
+        assert_eq!(back.rounds[0].stale_folded, 0);
+        assert_eq!(back.rounds[0].stale_dropped, 0);
         assert_eq!(back.rounds[0].wall_secs, 0.5, "wall_secs survives");
         // present-but-mistyped fields still error (corruption, not legacy)
         let mut bad = rep.to_json();
@@ -543,7 +573,9 @@ mod tests {
         let csv = rep.to_csv();
         let header = csv.lines().next().unwrap();
         assert!(
-            header.ends_with("selected,dropped,sim_makespan_secs,failed,rejoined"),
+            header.ends_with(
+                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped"
+            ),
             "{header}"
         );
         let row = csv.lines().nth(1).unwrap();
@@ -553,6 +585,8 @@ mod tests {
         assert_eq!(cols[13], "2");
         assert_eq!(cols[15], "3");
         assert_eq!(cols[16], "1");
+        assert_eq!(cols[17], "2");
+        assert_eq!(cols[18], "1");
     }
 
     #[test]

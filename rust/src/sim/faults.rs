@@ -114,6 +114,19 @@ impl FaultProfile {
     }
 }
 
+impl std::str::FromStr for FaultProfile {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for FaultProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 /// What the fault model decided for one `(client, round)` pair.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultDraw {
@@ -187,6 +200,30 @@ mod tests {
         assert!(FaultProfile::parse("flaky:0.5:2").is_err()); // extra arg
         assert!(FaultProfile::parse("meteor:0.5").is_err());
         assert!(FaultProfile::parse("off:1").is_err());
+    }
+
+    #[test]
+    fn fromstr_display_roundtrip_property() {
+        // parse -> Display -> parse is the identity for arbitrary valid
+        // profiles (seeded generator; FromStr/Display are what the CLI
+        // uses, so this is the CLI syntax contract)
+        let mut rng = Rng::new(43).derive("faults.prop");
+        for i in 0..200u32 {
+            let prob = (rng.next_f64() * 1000.0).round() / 1000.0;
+            let p = match i % 4 {
+                0 => FaultProfile::Off,
+                1 => FaultProfile::Crash { p: prob },
+                2 => FaultProfile::Stall {
+                    p: prob,
+                    secs: (rng.next_f64() * 30.0 * 1000.0).round() / 1000.0,
+                },
+                _ => FaultProfile::Flaky { p: prob },
+            };
+            let shown = p.to_string();
+            let back: FaultProfile = shown.parse().unwrap();
+            assert_eq!(back, p, "{shown}");
+            assert_eq!(back.to_string(), shown, "display must be canonical");
+        }
     }
 
     #[test]

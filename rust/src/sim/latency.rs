@@ -109,6 +109,19 @@ impl LatencyProfile {
     }
 }
 
+impl std::str::FromStr for LatencyProfile {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for LatencyProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 /// Deterministic simulated per-client round cost, seeded from the run.
 #[derive(Clone, Debug)]
 pub struct LatencyModel {
@@ -188,6 +201,32 @@ mod tests {
         assert!(LatencyProfile::parse("lognormal:0:1").is_err()); // median 0
         assert!(LatencyProfile::parse("gaussian:1:1").is_err());
         assert!(LatencyProfile::parse("off:1").is_err());
+    }
+
+    #[test]
+    fn fromstr_display_roundtrip_property() {
+        // parse -> Display -> parse is the identity for arbitrary valid
+        // profiles (seeded generator; FromStr/Display are what the CLI
+        // uses, so this is the CLI syntax contract)
+        let mut rng = Rng::new(41).derive("latency.prop");
+        for i in 0..200u32 {
+            let p = match i % 3 {
+                0 => LatencyProfile::Off,
+                1 => {
+                    let lo = (rng.next_f64() * 10.0 * 1000.0).round() / 1000.0;
+                    let hi = lo + (rng.next_f64() * 10.0 * 1000.0).round() / 1000.0;
+                    LatencyProfile::Uniform { lo, hi }
+                }
+                _ => LatencyProfile::LogNormal {
+                    median: ((rng.next_f64() * 10.0 * 1000.0).round() / 1000.0).max(0.001),
+                    sigma: (rng.next_f64() * 3.0 * 1000.0).round() / 1000.0,
+                },
+            };
+            let shown = p.to_string();
+            let back: LatencyProfile = shown.parse().unwrap();
+            assert_eq!(back, p, "{shown}");
+            assert_eq!(back.to_string(), shown, "display must be canonical");
+        }
     }
 
     #[test]

@@ -296,7 +296,7 @@ fn sampled_session_scales_ledger_to_cohort_and_roundtrips_json() {
     // bill exactly 3 clients (builtin cohort = 10), not 10.
     let mut cfg = tiny_cfg(PolicyConfig::Fp32);
     cfg.rounds = 4;
-    cfg.participation = 0.3;
+    cfg.round.cohort.participation = 0.3;
     let mut session = Session::new(cfg).unwrap();
     let d = session.manifest().d as u64;
     let l = session.manifest().num_segments() as u64;
@@ -327,7 +327,7 @@ fn sampled_tcp_topology_matches_sampled_local_run() {
     // ledger (same seed => same cohorts => same everything).
     let knobs = |cfg: &mut RunConfig| {
         cfg.rounds = 3;
-        cfg.participation = 0.5;
+        cfg.round.cohort.participation = 0.5;
     };
     let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
     knobs(&mut cfg);
@@ -370,8 +370,8 @@ fn tcp_run_survives_a_worker_crash_and_rejoin() {
     // restarted worker re-attaches mid-run via the rejoin accept loop.
     let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
     cfg.rounds = 8;
-    cfg.quorum = 0.5;
-    cfg.round_timeout = Some(30.0);
+    cfg.round.tolerance.quorum = 0.5;
+    cfg.round.tolerance.round_timeout = Some(30.0);
     let addr = "127.0.0.1:17875";
     let n = 10;
 
@@ -485,4 +485,58 @@ fn network_model_orders_policies_by_bits() {
         t_fed < t_fp,
         "quantized run must be faster on a constrained uplink: {t_fed} vs {t_fp}"
     );
+}
+
+#[test]
+fn semisync_tcp_run_banks_and_folds_stragglers_like_local() {
+    use feddq::sim::faults::FaultProfile;
+    // Bounded staleness over real sockets: the scheduler's seed-pure
+    // churn marks stalled workers two rounds late (t = 75s against a
+    // T = 30s budget gives s = 2), their on-wire updates are banked at
+    // dispatch and folded with discounted weight two rounds later — and
+    // the whole run must agree with the in-process session bit for bit,
+    // bank and all, because folds are keyed by (round, client id) and
+    // never by arrival order.
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 4;
+        cfg.sim_faults = FaultProfile::Stall { p: 0.5, secs: 75.0 };
+        cfg.round.tolerance.round_timeout = Some(30.0);
+        // 0.05, not 0.1: late members inflate n without delivering
+        // on-time, and f32 0.1 widens past 0.1 (ceil(q·10) = 2) — the
+        // floor must stay at 1 for a 9-late round to pass quorum.
+        cfg.round.tolerance.quorum = 0.05;
+        cfg.round.tolerance.staleness = 2;
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17877";
+    let n = 10;
+    let workers: Vec<_> = (0..n)
+        .map(|id| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                topology::worker(&addr, id, "artifacts").unwrap_or_else(|e| panic!("worker {id}: {e:#}"))
+            })
+        })
+        .collect();
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let folded: u32 = report.rounds.iter().map(|r| r.stale_folded).sum();
+    assert!(folded >= 1, "stall:0.5:75 under --staleness 2 must fold a straggler");
+
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, b.selected, "round {}", a.round);
+        assert_eq!(a.failed, b.failed, "round {}", a.round);
+        assert_eq!(a.stale_folded, b.stale_folded, "round {}", a.round);
+        assert_eq!(a.stale_dropped, b.stale_dropped, "round {}", a.round);
+        assert_eq!(a.train_loss, b.train_loss, "tcp vs local train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tcp vs local bits r{}", a.round);
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tcp vs local params");
 }

@@ -63,6 +63,8 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
         );
         assert_eq!(ra.failed, rb.failed, "{what}: failed r{}", ra.round);
         assert_eq!(ra.rejoined, rb.rejoined, "{what}: rejoined r{}", ra.round);
+        assert_eq!(ra.stale_folded, rb.stale_folded, "{what}: stale_folded r{}", ra.round);
+        assert_eq!(ra.stale_dropped, rb.stale_dropped, "{what}: stale_dropped r{}", ra.round);
     }
     assert_ne!(a.params_hash, 0, "{what}: params hash must be tracked");
     assert_eq!(a.params_hash, b.params_hash, "{what}: final params diverged");
@@ -148,10 +150,10 @@ fn fold_overlap_matches_after_barrier_fold() {
     // bit-identical — including params_hash.
     let mut off = mlp_cfg(3);
     off.agg_shards = 4;
-    off.fold_overlap = false;
+    off.round.pipeline.fold_overlap = false;
     let mut on = mlp_cfg(3);
     on.agg_shards = 4;
-    on.fold_overlap = true;
+    on.round.pipeline.fold_overlap = true;
     assert_reports_identical(&run(off), &run(on), "fold_overlap off vs on");
 }
 
@@ -161,11 +163,11 @@ fn decode_buffer_bound_cannot_change_results() {
     // lands in it: 0 (unbounded), a tight bound of 2, and one-per-client
     // (n = 10 for the builtin mlp cohort) must all be bit-identical.
     let mut unbounded = mlp_cfg(3);
-    unbounded.decode_buffers = 0;
+    unbounded.round.pipeline.decode_buffers = 0;
     let base = run(unbounded);
     for k in [2usize, 10] {
         let mut capped = mlp_cfg(3);
-        capped.decode_buffers = k;
+        capped.round.pipeline.decode_buffers = k;
         assert_reports_identical(
             &base,
             &run(capped),
@@ -183,13 +185,13 @@ fn scheduler_knob_matrix_matches_all_serial() {
     serial.test_size = 1500; // three eval batches
     serial.agg_shards = 1;
     serial.eval_threads = 1;
-    serial.fold_overlap = false;
+    serial.round.pipeline.fold_overlap = false;
     let mut parallel = mlp_cfg(4);
     parallel.test_size = 1500;
     parallel.agg_shards = 5;
     parallel.eval_threads = 3;
-    parallel.fold_overlap = true;
-    parallel.decode_buffers = 2; // hard bound, far below n_clients = 10
+    parallel.round.pipeline.fold_overlap = true;
+    parallel.round.pipeline.decode_buffers = 2; // hard bound, far below n_clients = 10
     assert_reports_identical(
         &run(serial),
         &run(parallel),
@@ -205,12 +207,12 @@ fn tight_decode_bound_under_error_feedback_stays_deterministic() {
     let mut a = mlp_cfg(2);
     a.policy = PolicyConfig::Fixed { bits: 2 };
     a.error_feedback = true;
-    a.fold_overlap = false;
+    a.round.pipeline.fold_overlap = false;
     let mut b = mlp_cfg(4);
     b.policy = PolicyConfig::Fixed { bits: 2 };
     b.error_feedback = true;
-    b.fold_overlap = true;
-    b.decode_buffers = 1;
+    b.round.pipeline.fold_overlap = true;
+    b.round.pipeline.decode_buffers = 1;
     b.agg_shards = 3;
     assert_reports_identical(&run(a), &run(b), "EF: overlap+buffers=1 vs plain");
 }
@@ -222,21 +224,21 @@ fn narrow_swar_codec_matches_scalar_reference_path() {
     // the scalar reference path bit for bit — across the existing
     // threads/shards/overlap/buffers knob matrix, not just serially.
     let mut reference = mlp_cfg(1);
-    reference.codec = CodecMode::Reference;
+    reference.round.pipeline.codec = CodecMode::Reference;
     let base = run(reference);
 
     // narrow, fully serial
     let mut narrow_serial = mlp_cfg(1);
-    narrow_serial.codec = CodecMode::Narrow;
+    narrow_serial.round.pipeline.codec = CodecMode::Narrow;
     assert_reports_identical(&base, &run(narrow_serial), "reference vs narrow (serial)");
 
     // narrow under the full parallel knob matrix
     let mut narrow_par = mlp_cfg(4);
-    narrow_par.codec = CodecMode::Narrow;
+    narrow_par.round.pipeline.codec = CodecMode::Narrow;
     narrow_par.agg_shards = 5;
     narrow_par.eval_threads = 3;
-    narrow_par.fold_overlap = true;
-    narrow_par.decode_buffers = 2;
+    narrow_par.round.pipeline.fold_overlap = true;
+    narrow_par.round.pipeline.decode_buffers = 2;
     assert_reports_identical(
         &base,
         &run(narrow_par),
@@ -245,10 +247,10 @@ fn narrow_swar_codec_matches_scalar_reference_path() {
 
     // and the mirror image: reference path on the parallel server
     let mut reference_par = mlp_cfg(3);
-    reference_par.codec = CodecMode::Reference;
+    reference_par.round.pipeline.codec = CodecMode::Reference;
     reference_par.agg_shards = 4;
-    reference_par.fold_overlap = true;
-    reference_par.decode_buffers = 1;
+    reference_par.round.pipeline.fold_overlap = true;
+    reference_par.round.pipeline.decode_buffers = 1;
     assert_reports_identical(
         &base,
         &run(reference_par),
@@ -265,13 +267,13 @@ fn narrow_codec_matches_reference_under_error_feedback() {
     let mut reference = mlp_cfg(2);
     reference.policy = PolicyConfig::Fixed { bits: 2 };
     reference.error_feedback = true;
-    reference.codec = CodecMode::Reference;
+    reference.round.pipeline.codec = CodecMode::Reference;
     let mut narrow = mlp_cfg(4);
     narrow.policy = PolicyConfig::Fixed { bits: 2 };
     narrow.error_feedback = true;
-    narrow.codec = CodecMode::Narrow;
+    narrow.round.pipeline.codec = CodecMode::Narrow;
     narrow.agg_shards = 3;
-    narrow.decode_buffers = 1;
+    narrow.round.pipeline.decode_buffers = 1;
     assert_reports_identical(
         &run(reference),
         &run(narrow),
@@ -285,10 +287,10 @@ fn narrow_codec_matches_reference_on_fp32_policy() {
     // the same narrow DecodedUpdate) rather than the SWAR unpackers.
     let mut reference = mlp_cfg(2);
     reference.policy = PolicyConfig::Fp32;
-    reference.codec = CodecMode::Reference;
+    reference.round.pipeline.codec = CodecMode::Reference;
     let mut narrow = mlp_cfg(3);
     narrow.policy = PolicyConfig::Fp32;
-    narrow.codec = CodecMode::Narrow;
+    narrow.round.pipeline.codec = CodecMode::Narrow;
     assert_reports_identical(&run(reference), &run(narrow), "fp32: reference vs narrow");
 }
 
@@ -302,11 +304,11 @@ fn partial_participation_is_deterministic_across_the_knob_matrix() {
     // selected counts.
     for &p in &[1.0f32, 0.5, 0.2] {
         let mut serial = mlp_cfg(1);
-        serial.participation = p;
+        serial.round.cohort.participation = p;
         serial.agg_shards = 1;
         serial.eval_threads = 1;
-        serial.fold_overlap = false;
-        serial.codec = CodecMode::Reference;
+        serial.round.pipeline.fold_overlap = false;
+        serial.round.pipeline.codec = CodecMode::Reference;
         let base = run(serial);
         let k = (10.0 * p).ceil() as u32; // builtin mlp cohort is 10
         for r in &base.rounds {
@@ -314,12 +316,12 @@ fn partial_participation_is_deterministic_across_the_knob_matrix() {
             assert_eq!(r.dropped, 0, "no deadline policy, nothing dropped");
         }
         let mut par = mlp_cfg(4);
-        par.participation = p;
+        par.round.cohort.participation = p;
         par.agg_shards = 5;
         par.eval_threads = 3;
-        par.fold_overlap = true;
-        par.decode_buffers = 2;
-        par.codec = CodecMode::Narrow;
+        par.round.pipeline.fold_overlap = true;
+        par.round.pipeline.decode_buffers = 2;
+        par.round.pipeline.codec = CodecMode::Narrow;
         assert_reports_identical(
             &base,
             &run(par),
@@ -345,7 +347,7 @@ fn sampled_cohorts_are_reproducible_from_the_seed_alone() {
     // And end-to-end: two identical sampled runs agree bit for bit.
     let mk = || {
         let mut c = mlp_cfg(2);
-        c.participation = 0.5;
+        c.round.cohort.participation = 0.5;
         c
     };
     assert_reports_identical(&run(mk()), &run(mk()), "sampled run repeated");
@@ -359,8 +361,8 @@ fn deadline_policy_is_deterministic_and_respects_the_budget() {
     // server must stay bit-identical.
     let knobs = |threads: usize| {
         let mut c = mlp_cfg(threads);
-        c.participation = 0.5;
-        c.round_deadline = Some(2.0);
+        c.round.cohort.participation = 0.5;
+        c.round.cohort.deadline = Some(2.0);
         c.sim_latency = LatencyProfile::LogNormal { median: 1.0, sigma: 0.6 };
         c
     };
@@ -368,16 +370,16 @@ fn deadline_policy_is_deterministic_and_respects_the_budget() {
         let mut c = knobs(1);
         c.agg_shards = 1;
         c.eval_threads = 1;
-        c.fold_overlap = false;
-        c.codec = CodecMode::Reference;
+        c.round.pipeline.fold_overlap = false;
+        c.round.pipeline.codec = CodecMode::Reference;
         c
     };
     let parallel = {
         let mut c = knobs(4);
         c.agg_shards = 3;
         c.eval_threads = 2;
-        c.fold_overlap = true;
-        c.decode_buffers = 2;
+        c.round.pipeline.fold_overlap = true;
+        c.round.pipeline.decode_buffers = 2;
         c
     };
     let base = run(serial);
@@ -405,7 +407,7 @@ fn error_feedback_residuals_survive_skipped_rounds() {
     let knobs = |threads: usize| {
         let mut c = mlp_cfg(threads);
         c.rounds = 6; // enough for cohorts to rotate
-        c.participation = 0.5;
+        c.round.cohort.participation = 0.5;
         c.policy = PolicyConfig::Fixed { bits: 2 };
         c.error_feedback = true;
         c
@@ -413,7 +415,7 @@ fn error_feedback_residuals_survive_skipped_rounds() {
     let a = run(knobs(1));
     let mut bcfg = knobs(4);
     bcfg.agg_shards = 3;
-    bcfg.decode_buffers = 1;
+    bcfg.round.pipeline.decode_buffers = 1;
     assert_reports_identical(&a, &run(bcfg), "EF + participation: threads=1 vs 4");
     // Sanity: EF with skips still changes the trajectory vs EF-off.
     let mut plain = knobs(1);
@@ -446,8 +448,8 @@ fn crash_faults_are_deterministic_across_the_knob_matrix() {
         let mut c = knobs(1);
         c.agg_shards = 1;
         c.eval_threads = 1;
-        c.fold_overlap = false;
-        c.codec = CodecMode::Reference;
+        c.round.pipeline.fold_overlap = false;
+        c.round.pipeline.codec = CodecMode::Reference;
         c
     };
     let base = run(serial);
@@ -462,9 +464,9 @@ fn crash_faults_are_deterministic_across_the_knob_matrix() {
         let mut c = knobs(4);
         c.agg_shards = 5;
         c.eval_threads = 3;
-        c.fold_overlap = true;
-        c.decode_buffers = 2;
-        c.codec = CodecMode::Narrow;
+        c.round.pipeline.fold_overlap = true;
+        c.round.pipeline.decode_buffers = 2;
+        c.round.pipeline.codec = CodecMode::Narrow;
         c
     };
     assert_reports_identical(
@@ -482,7 +484,7 @@ fn faults_compose_with_partial_participation_and_error_feedback() {
     let knobs = |threads: usize| {
         let mut c = mlp_cfg(threads);
         c.rounds = 6;
-        c.participation = 0.5;
+        c.round.cohort.participation = 0.5;
         c.sim_faults = FaultProfile::Crash { p: 0.3 };
         c.policy = PolicyConfig::Fixed { bits: 2 };
         c.error_feedback = true;
@@ -491,7 +493,7 @@ fn faults_compose_with_partial_participation_and_error_feedback() {
     let a = run(knobs(1));
     let mut b = knobs(4);
     b.agg_shards = 3;
-    b.decode_buffers = 1;
+    b.round.pipeline.decode_buffers = 1;
     assert_reports_identical(&a, &run(b), "EF + participation + crash: threads=1 vs 4");
 }
 
@@ -506,8 +508,8 @@ fn stall_faults_against_a_round_timeout_stay_deterministic() {
     let knobs = |threads: usize| {
         let mut c = mlp_cfg(threads);
         c.sim_faults = FaultProfile::Stall { p: 0.5, secs: 60.0 };
-        c.round_timeout = Some(30.0);
-        c.quorum = 0.1;
+        c.round.tolerance.round_timeout = Some(30.0);
+        c.round.tolerance.quorum = 0.1;
         c
     };
     let base = run(knobs(1));
@@ -537,4 +539,103 @@ fn streaming_and_fused_aggregation_agree() {
             b.train_loss
         );
     }
+}
+
+/// Semi-sync fixture: stall half the cohort hard enough to overshoot a
+/// 30s budget by exactly two round-lengths (`t = 75s` against `T = 30s`
+/// gives `s = ceil(45/30) = 2`), so `--staleness 2` banks the stragglers
+/// while `--staleness 1` drops them as over-budget.
+fn semisync_cfg(threads: usize, stall_p: f64, k: u32) -> RunConfig {
+    let mut c = mlp_cfg(threads);
+    c.sim_faults = FaultProfile::Stall { p: stall_p, secs: 75.0 };
+    c.round.tolerance.round_timeout = Some(30.0);
+    // Late members stay in the dispatched set but deliver no on-time
+    // update, so the quorum floor must stay at 1 even for a round
+    // where 9 of 10 members run late (f32 0.1 widens past 0.1, making
+    // ceil(q·10) = 2 — 0.05 keeps the floor at ceil(0.5…) = 1).
+    c.round.tolerance.quorum = 0.05;
+    c.round.tolerance.staleness = k;
+    c
+}
+
+#[test]
+fn staleness_matrix_is_engine_invariant() {
+    // The bounded-staleness fold must be bit-identical between the
+    // fully serial reference engine and the maximally parallel narrow
+    // path, for every k — the banked-update fold is keyed by
+    // (round, client id), never by arrival order.
+    for k in [0u32, 1, 2] {
+        let mut serial = semisync_cfg(1, 0.5, k);
+        serial.agg_shards = 1;
+        serial.eval_threads = 1;
+        serial.round.pipeline.fold_overlap = false;
+        serial.round.pipeline.codec = CodecMode::Reference;
+        let mut parallel = semisync_cfg(4, 0.5, k);
+        parallel.agg_shards = 3;
+        parallel.eval_threads = 2;
+        parallel.round.pipeline.fold_overlap = true;
+        parallel.round.pipeline.decode_buffers = 2;
+        parallel.round.pipeline.codec = CodecMode::Narrow;
+        let (rs, rp) = (run(serial), run(parallel));
+        assert_reports_identical(&rs, &rp, &format!("staleness={k}: serial-ref vs parallel-narrow"));
+        let folded: u32 = rs.rounds.iter().map(|r| r.stale_folded).sum();
+        let dropped: u32 = rs.rounds.iter().map(|r| r.stale_dropped).sum();
+        let failed: u32 = rs.rounds.iter().map(|r| r.failed).sum();
+        match k {
+            0 => {
+                // Strict synchronous: the tolerant drain discards late
+                // replies without banking or counting them.
+                assert_eq!(folded, 0, "k=0 must not fold stale updates");
+                assert_eq!(dropped, 0, "k=0 must not count stale drops");
+                assert!(failed > 0, "stall:0.5:75 against 30s must time someone out");
+            }
+            1 => {
+                // Every overshoot is s=2 > k: counted as dropped, never folded.
+                assert_eq!(folded, 0, "k=1 must not fold s=2 stragglers");
+                assert!(dropped > 0, "k=1 must count s=2 stragglers as dropped");
+            }
+            _ => {
+                // s=2 <= k: stragglers bank and fold two rounds later.
+                assert!(folded > 0, "k=2 must fold banked stragglers");
+                assert_eq!(dropped, 0, "k=2 admits every s=2 straggler");
+            }
+        }
+    }
+}
+
+#[test]
+fn staleness_is_inert_without_late_updates() {
+    // A nonzero staleness bound with a fault-free cohort must change
+    // nothing: no banked updates means every round takes the exact
+    // strict-synchronous arithmetic path.
+    let knobs = |k: u32| {
+        let mut c = mlp_cfg(2);
+        c.round.tolerance.quorum = 0.5; // quorum mode: staleness is legal
+        c.round.tolerance.staleness = k;
+        c
+    };
+    let strict = run(knobs(0));
+    let semisync = run(knobs(2));
+    assert_reports_identical(&strict, &semisync, "k=0 vs inert k=2");
+    assert!(semisync.rounds.iter().all(|r| r.stale_folded == 0 && r.stale_dropped == 0));
+}
+
+#[test]
+fn semisync_beats_strict_sync_on_simulated_makespan() {
+    // With zero base latency an on-time member costs ~0s, a timed-out
+    // member charges the full 30s budget, and a banked late member
+    // charges nothing in the round it missed — so accepting stragglers
+    // must strictly shrink the summed simulated makespan.
+    let strict = run(semisync_cfg(2, 0.3, 0));
+    let semisync = run(semisync_cfg(2, 0.3, 2));
+    assert_eq!(strict.rounds.len(), semisync.rounds.len());
+    let span = |r: &RunReport| r.rounds.iter().map(|x| x.sim_makespan_secs).sum::<f64>();
+    assert!(
+        span(&semisync) < span(&strict),
+        "semi-sync makespan {} must beat strict-sync {}",
+        span(&semisync),
+        span(&strict)
+    );
+    let folded: u32 = semisync.rounds.iter().map(|r| r.stale_folded).sum();
+    assert!(folded > 0, "the makespan win must come from folded stragglers");
 }

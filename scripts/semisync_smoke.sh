@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# Semi-sync smoke: bounded staleness on a real TCP run, contrasted
+# against strict synchronous rounds.
+#
+# Runs `feddq serve` twice with the same seed, two workers each on the
+# built-in native manifest (FEDDQ_NATIVE_CLIENTS=2), under a simulated
+# stall model whose overshoot is one round-length (stall 35s against a
+# 30s budget): once with `--staleness 2` (stalled updates are banked
+# and folded, discounted, a round late) and once with `--staleness 0`
+# (stalled updates are dropped at the timeout).  The semi-sync run must
+# record at least one `stale_folded` update and finish with a strictly
+# smaller summed simulated makespan — a straggler that is banked costs
+# its round nothing, while strict sync charges the full timeout.
+#
+# CI runs this in the churn-smoke job; it also works locally:
+#
+#     scripts/semisync_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+STRICT_ADDR="${SEMISYNC_STRICT_ADDR:-127.0.0.1:17881}"
+SEMI_ADDR="${SEMISYNC_ADDR:-127.0.0.1:17883}"
+ROUNDS="${SEMISYNC_ROUNDS:-40}"
+FAULTS="stall:0.25:35"
+STRICT_REPORT="$(mktemp -t semisync_strict.XXXXXX.json)"
+SEMI_REPORT="$(mktemp -t semisync_semi.XXXXXX.json)"
+export FEDDQ_NATIVE_CLIENTS=2
+
+cargo build --release --locked
+
+cleanup() {
+    kill -9 "${SERVE_PID:-}" "${W0_PID:-}" "${W1_PID:-}" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+# one_run <addr> <staleness> <report>: serve + 2 workers to completion
+one_run() {
+    local addr="$1" k="$2" report="$3"
+    echo "== serve on $addr ($ROUNDS rounds, $FAULTS, timeout 30s, staleness $k) =="
+    target/release/feddq serve --addr "$addr" --rounds "$ROUNDS" \
+        --train-size 2000 --test-size 500 \
+        --sim-faults "$FAULTS" --round-timeout 30 --quorum 0.5 \
+        --staleness "$k" --out "$report" &
+    SERVE_PID=$!
+    target/release/feddq worker --addr "$addr" --id 0 &
+    W0_PID=$!
+    target/release/feddq worker --addr "$addr" --id 1 &
+    W1_PID=$!
+    wait "$SERVE_PID"
+    wait "$W0_PID"
+    wait "$W1_PID"
+}
+
+one_run "$STRICT_ADDR" 0 "$STRICT_REPORT"
+one_run "$SEMI_ADDR" 2 "$SEMI_REPORT"
+
+echo "== verifying the semi-sync run folded stragglers and won on makespan =="
+python3 - "$STRICT_REPORT" "$SEMI_REPORT" "$ROUNDS" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    strict = json.load(f)["rounds"]
+with open(sys.argv[2]) as f:
+    semi = json.load(f)["rounds"]
+want = int(sys.argv[3])
+folded = sum(int(r["stale_folded"]) for r in semi)
+strict_folded = sum(int(r["stale_folded"]) for r in strict)
+strict_span = sum(float(r["sim_makespan_secs"]) for r in strict)
+semi_span = sum(float(r["sim_makespan_secs"]) for r in semi)
+print(f"  rounds {len(semi)}/{want}, stale_folded {folded}, "
+      f"makespan strict {strict_span:.1f}s vs semi-sync {semi_span:.1f}s")
+ok = True
+if len(strict) != want or len(semi) != want:
+    print("  FAIL: both runs must complete every round")
+    ok = False
+if strict_folded != 0:
+    print("  FAIL: strict sync must never fold a stale update")
+    ok = False
+if folded < 1:
+    print("  FAIL: the semi-sync run must fold at least one banked straggler")
+    ok = False
+if not semi_span < strict_span:
+    print("  FAIL: bounded staleness must beat strict sync on simulated makespan")
+    ok = False
+sys.exit(0 if ok else 1)
+EOF
+echo "semisync smoke passed"
