@@ -495,6 +495,47 @@ fn main() -> anyhow::Result<()> {
     json.push(("sched_sampled_round_secs".into(), t4_sampled));
     json.push(("sched_full_vs_sampled_secs".into(), t4 - t4_sampled));
 
+    bench_header("million-client control plane: sparse sampling + compact resident state");
+    // The scale-out rows: planning a cohort of ~1000 out of a million
+    // registered clients must cost O(k), and the per-client resident
+    // state (arena row + banked EF residual) must undercut the fp32
+    // baselines it replaced.  Companion assertions live in
+    // rust/tests/scale_smoke.rs; these rows track the trajectory.
+    {
+        use feddq::coordinator::sched::RoundScheduler;
+        use feddq::coordinator::{ClientArena, ResidualBank};
+        use feddq::sim::latency::{LatencyModel, LatencyProfile};
+        let n_reg = 1_000_000usize;
+        let sched =
+            RoundScheduler::new(n_reg, 0.001, None, LatencyModel::new(LatencyProfile::Off, 7), 7)?;
+        let k = sched.cohort_target();
+        let r = b.bench(&format!("plan_round n=1M k={k} (sparse draw)"), || {
+            black_box(sched.plan_round(3))
+        });
+        let plan_secs = r.median.as_secs_f64();
+        println!("1M-client round plan: {:.3} ms for k={k}", plan_secs * 1e3);
+        json.push(("sched_sample_1m_k1000_secs".into(), plan_secs));
+
+        let mut arena = ClientArena::new();
+        for id in 0..n_reg as u32 {
+            arena.set_samples(id, 60);
+        }
+        let arena_bpc = arena.resident_bytes() as f64 / n_reg as f64;
+        println!("arena resident state: {arena_bpc:.1} B/client across {n_reg} clients");
+        json.push(("client_arena_bytes_per_client".into(), arena_bpc));
+
+        let d_res = 100_000usize;
+        let spans = [(0usize, 60_000usize), (60_000, 40_000)];
+        let vals: Vec<f32> = (0..d_res).map(|i| (i as f32 * 0.37).sin()).collect();
+        let bank = ResidualBank::bank(&spans, &vals, 8);
+        println!(
+            "banked EF residual (d={d_res}, 8-bit): {} B vs {} B fp32",
+            bank.resident_bytes(),
+            d_res * 4
+        );
+        json.push(("ef_bank_bytes_per_client".into(), bank.resident_bytes() as f64));
+    }
+
     bs::write_bench_json("hotpath", &json);
     Ok(())
 }

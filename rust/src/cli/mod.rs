@@ -22,10 +22,11 @@ feddq — communication-efficient federated learning with descending quantizatio
 USAGE: feddq <COMMAND> [FLAGS]
 
 COMMANDS:
-  train    run a federated training session in-process
-  serve    run the federated server (TCP), waiting for workers
-  worker   run one federated client process (TCP)
-  info     print the artifact manifest summary
+  train      run a federated training session in-process
+  serve      run the federated server (TCP), waiting for workers
+  worker     run one federated client process (TCP)
+  aggregate  run one intermediate aggregator process (TCP tree)
+  info       print the artifact manifest summary
 
 TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
   --model <mlp|vanilla_cnn|cnn4|resnet18>   model/benchmark    [mlp]
@@ -41,6 +42,8 @@ TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
   --test-size <n>       synthetic test set size                [1000]
   --target-acc <f>      stop at this test accuracy             [off]
   --error-feedback      bank quantization residuals (EF-SGD)   [off]
+  --ef-bits <b>         store banked residuals at b<=8 bits    [0 = fp32]
+  --fanout <n>          aggregation-tree fanout, 0 = flat      [0]
   --threads <n>         client worker threads (0 = cores)      [0]
   --aggregate <streaming|fused>  server aggregation path       [streaming]
   --agg-shards <n>      accumulator shards (0 = pool, 1 = serial) [0]
@@ -63,10 +66,12 @@ TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
   --quiet               suppress per-round progress
   --verbose             debug logging
 
-SERVE/WORKER FLAGS:
-  --addr <host:port>    server address          [127.0.0.1:7177]
-  --id <n>              worker client id (worker only)
-  --artifacts <dir>     AOT artifacts directory (worker too)
+SERVE/WORKER/AGGREGATE FLAGS:
+  --addr <host:port>    address to serve on / connect to       [127.0.0.1:7177]
+  --id <n>              worker client id, or the aggregator's
+                        lowest leaf id (worker/aggregate)
+  --upstream <host:port> parent server address (aggregate only) [127.0.0.1:7177]
+  --artifacts <dir>     AOT artifacts directory (worker/aggregate too)
 ";
 
 /// Every flag the `feddq` binary accepts across its subcommands; tests
@@ -84,6 +89,8 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "test-size",
     "target-acc",
     "error-feedback",
+    "ef-bits",
+    "fanout",
     "threads",
     "aggregate",
     "agg-shards",
@@ -105,6 +112,7 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "verbose",
     "addr",
     "id",
+    "upstream",
 ];
 
 /// Parsed arguments: positional words + `--key value` options.
@@ -245,6 +253,9 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if args.flag("error-feedback") {
         cfg.error_feedback = true;
     }
+    if let Some(b) = args.get_parse::<u32>("ef-bits")? {
+        cfg.ef_bits = b;
+    }
     if let Some(t) = args.get_parse::<usize>("threads")? {
         cfg.threads = t;
     }
@@ -293,6 +304,9 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     }
     if let Some(c) = args.get_parse::<crate::config::CodecMode>("codec")? {
         rp = rp.codec(c);
+    }
+    if let Some(f) = args.get_parse::<u32>("fanout")? {
+        rp = rp.fanout(f);
     }
     cfg.round = rp
         .latency_context(cfg.sim_latency)
@@ -373,6 +387,25 @@ mod tests {
         assert_eq!(cfg.round.tolerance.quorum, 0.6);
         assert_eq!(cfg.round.tolerance.staleness, 2);
         a.finish().unwrap();
+    }
+
+    #[test]
+    fn topology_and_banking_flags() {
+        let a = Args::parse(&argv("--fanout 2 --error-feedback --ef-bits 4")).unwrap();
+        let cfg = run_config_from_args(&a, "mlp").unwrap();
+        assert_eq!(cfg.round.topology.fanout, 2);
+        assert_eq!(cfg.ef_bits, 4);
+        assert!(cfg.error_feedback);
+        a.finish().unwrap();
+        // fanout=1 is a degenerate tree: rejected by the builder
+        let a = Args::parse(&argv("--fanout 1")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        // banked residuals require error feedback to exist at all
+        let a = Args::parse(&argv("--ef-bits 4")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        // tree runs delegate fault simulation to real processes
+        let a = Args::parse(&argv("--fanout 2 --sim-faults crash:0.1")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
     }
 
     #[test]
@@ -458,12 +491,14 @@ mod tests {
         // and hence USAGE and docs/CLI.md — now fails here.
         let a = Args::parse(&[]).unwrap();
         run_config_from_args(&a, "mlp").unwrap();
-        // train: --out/--quiet; dispatch: --verbose; serve/worker: --addr/--id
+        // train: --out/--quiet; dispatch: --verbose; serve/worker: --addr/--id;
+        // aggregate: --upstream (its --addr/--id/--fanout/--artifacts overlap)
         let _ = a.get("out");
         let _ = a.get("quiet");
         let _ = a.get("verbose");
         let _ = a.get("addr");
         let _ = a.get("id");
+        let _ = a.get("upstream");
         let consumed: std::collections::BTreeSet<String> =
             a.taken.borrow().iter().cloned().collect();
         let known: std::collections::BTreeSet<String> =

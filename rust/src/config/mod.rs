@@ -149,6 +149,20 @@ pub struct Tolerance {
     pub staleness: u32,
 }
 
+/// Aggregation topology: how updates travel from leaves to the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Aggregation-tree fanout.  `0` = flat topology (every client sends
+    /// straight to the server — the historical behavior, bit-for-bit).
+    /// `f >= 2` groups clients into subtrees of `f` consecutive ids
+    /// rooted at `id / f * f`; each subtree folds locally and forwards
+    /// one `PartialAggregate` upstream.  The grouping *defines* the
+    /// canonical fold order, so the in-process engine applies the same
+    /// virtual grouping and a TCP tree run is bit-identical to it
+    /// (including `params_hash`) for the same seed and cohort.
+    pub fanout: u32,
+}
+
 /// Server hot-path shape: never changes results, only speed and memory.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Pipeline {
@@ -188,6 +202,8 @@ pub struct RoundPolicy {
     pub tolerance: Tolerance,
     /// Server hot-path shape knobs.
     pub pipeline: Pipeline,
+    /// Aggregation-topology knobs.
+    pub topology: Topology,
 }
 
 impl Default for RoundPolicy {
@@ -209,6 +225,7 @@ impl RoundPolicy {
                 decode_buffers: 0,
                 codec: CodecMode::Narrow,
             },
+            topology: Topology { fanout: 0 },
         }
     }
 
@@ -259,6 +276,10 @@ impl RoundPolicy {
                  a round that must wait for every update never leaves a straggler behind"
             );
         }
+        anyhow::ensure!(
+            self.topology.fanout == 0 || self.topology.fanout >= 2,
+            "fanout must be 0 (flat topology) or >= 2 (aggregation tree)"
+        );
         Ok(())
     }
 
@@ -299,6 +320,13 @@ impl RoundPolicy {
                     ("decode_buffers", Json::from(self.pipeline.decode_buffers)),
                     ("codec", Json::from(self.pipeline.codec.label())),
                 ]),
+            ),
+            (
+                "topology",
+                Json::obj(vec![(
+                    "fanout",
+                    Json::from(self.topology.fanout as usize),
+                )]),
             ),
         ])
     }
@@ -341,6 +369,12 @@ impl RoundPolicy {
             if let Some(v) = pl.get("codec") {
                 p.pipeline.codec =
                     CodecMode::parse(v.as_str().context("round.pipeline.codec")?)?;
+            }
+        }
+        // absent in pre-tree configs: flat topology
+        if let Some(t) = j.get("topology") {
+            if let Some(v) = t.get("fanout") {
+                p.topology.fanout = v.as_usize().context("round.topology.fanout")? as u32;
             }
         }
         Ok(p)
@@ -406,6 +440,12 @@ impl RoundPolicyBuilder {
         self
     }
 
+    /// Set the aggregation-tree fanout (0 = flat topology).
+    pub fn fanout(mut self, f: u32) -> Self {
+        self.policy.topology.fanout = f;
+        self
+    }
+
     /// Provide the simulated-latency profile the policy will run
     /// against; [`Self::build`]'s deadline validation needs it.
     pub fn latency_context(mut self, l: LatencyProfile) -> Self {
@@ -453,6 +493,15 @@ pub struct RunConfig {
     /// residual and fold it into the next round's update (EF-SGD family;
     /// an extension beyond the paper, off by default).
     pub error_feedback: bool,
+    /// Bit width for the client's *banked* error-feedback residual:
+    /// between rounds the residual is stored re-quantized to this many
+    /// bits per element (per-segment affine grid) instead of fp32,
+    /// shrinking resident client state by `32 / ef_bits`x.  `0` = bank
+    /// in fp32 (the historical behavior, bit-for-bit).  Requires
+    /// `error_feedback`; the added banking error is bounded by half a
+    /// grid step per element and is itself compensated by EF on the
+    /// next round.
+    pub ef_bits: u32,
     /// Worker threads for in-process client rounds; 0 = auto
     /// (min(n_clients, available cores)).  Any value yields the same
     /// `RunReport` bit-for-bit — see the determinism contract in lib.rs.
@@ -513,6 +562,7 @@ impl RunConfig {
             data_dir: "data".to_string(),
             target_accuracy: None,
             error_feedback: false,
+            ef_bits: 0,
             threads: 0,
             aggregate: AggregateMode::Streaming,
             agg_shards: 0,
@@ -608,6 +658,7 @@ impl RunConfig {
                 },
             ),
             ("error_feedback", Json::from(self.error_feedback)),
+            ("ef_bits", Json::from(self.ef_bits as usize)),
             ("threads", Json::from(self.threads)),
             ("aggregate", Json::from(self.aggregate.label())),
             ("agg_shards", Json::from(self.agg_shards)),
@@ -693,6 +744,8 @@ impl RunConfig {
                 .get("error_feedback")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            // absent in pre-banking configs: fp32 residuals
+            ef_bits: j.get("ef_bits").and_then(Json::as_usize).unwrap_or(0) as u32,
             // both absent in pre-threading configs: default sequentially
             // compatible values (auto threads, streaming aggregation)
             threads: j.get("threads").and_then(Json::as_usize).unwrap_or(0),
@@ -733,6 +786,22 @@ impl RunConfig {
         if let Some(a) = self.target_accuracy {
             anyhow::ensure!((0.0..=1.0).contains(&a), "target accuracy in [0,1]");
         }
+        anyhow::ensure!(self.ef_bits <= 8, "ef_bits must be in 0..=8");
+        if self.ef_bits > 0 {
+            anyhow::ensure!(
+                self.error_feedback,
+                "ef_bits > 0 banks the error-feedback residual and so \
+                 requires --error-feedback"
+            );
+        }
+        if self.round.topology.fanout > 0 {
+            anyhow::ensure!(
+                self.sim_faults == FaultProfile::Off,
+                "tree topology (fanout > 0) does not compose with --sim-faults: \
+                 simulated faults are drawn per leaf client, but the tree path \
+                 receives pre-folded subtree partials"
+            );
+        }
         self.round.validate(&self.sim_latency)
     }
 }
@@ -758,6 +827,7 @@ mod tests {
         c.sharding = Sharding::Dirichlet { alpha: 0.5 };
         c.target_accuracy = Some(0.8);
         c.error_feedback = true;
+        c.ef_bits = 6;
         c.threads = 6;
         c.aggregate = AggregateMode::Fused;
         c.agg_shards = 8;
@@ -782,6 +852,12 @@ mod tests {
         // and through text
         let back2 = RunConfig::from_json_str(&j.to_string_pretty()).unwrap();
         assert_eq!(c, back2);
+        // and a tree-topology config (which excludes sim_faults)
+        let mut c = RunConfig::default_for("mlp");
+        c.round = RoundPolicy::builder().fanout(4).build().unwrap();
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        assert_eq!(back.round.topology.fanout, 4);
     }
 
     #[test]
@@ -860,6 +936,27 @@ mod tests {
         assert!(c.validate().is_err(), "staleness without quorum mode");
         c.round.tolerance.quorum = 0.5;
         assert!(c.validate().is_ok());
+        // fanout: 0 or >= 2 (a 1-ary tree is just the flat topology with
+        // extra hops)
+        assert!(RoundPolicy::builder().fanout(1).build().is_err());
+        assert!(RoundPolicy::builder().fanout(2).build().is_ok());
+        let mut c = RunConfig::default_for("mlp");
+        c.round.topology.fanout = 1;
+        assert!(c.validate().is_err());
+        // tree topology excludes simulated leaf faults
+        let mut c = RunConfig::default_for("mlp");
+        c.round.topology.fanout = 2;
+        assert!(c.validate().is_ok());
+        c.sim_faults = FaultProfile::Stall { p: 0.1, secs: 1.0 };
+        assert!(c.validate().is_err(), "fanout > 0 with sim_faults");
+        // ef_bits: bounded and gated on error feedback
+        let mut c = RunConfig::default_for("mlp");
+        c.ef_bits = 4;
+        assert!(c.validate().is_err(), "ef_bits without error_feedback");
+        c.error_feedback = true;
+        assert!(c.validate().is_ok());
+        c.ef_bits = 9;
+        assert!(c.validate().is_err(), "ef_bits out of range");
     }
 
     #[test]
@@ -884,6 +981,19 @@ mod tests {
         assert_eq!(back.round, RoundPolicy::strict_sync());
         assert_eq!(back.sim_latency, LatencyProfile::Off);
         assert_eq!(back.sim_faults, FaultProfile::Off);
+        assert_eq!(back.ef_bits, 0, "pre-banking configs bank in fp32");
+        // a nested round object without the topology group (pre-tree
+        // serializers) defaults to the flat topology
+        let c = RunConfig::default_for("mlp");
+        let mut j = c.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("ef_bits");
+            if let Some(Json::Obj(r)) = o.get_mut("round") {
+                r.remove("topology");
+            }
+        }
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.round.topology.fanout, 0);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Compact per-client server state: one flat arena keyed by client id.
+//!
+//! Before this module the server scattered per-client metadata across
+//! several growable maps (`samples_by_id: BTreeMap`, the scheduler's
+//! dense `ewma: Vec<f64>`, ad-hoc arrival lists).  At the ROADMAP's
+//! million-client scale those structures dominate resident memory and
+//! cache behavior, so everything the server must remember about a
+//! client between rounds now lives in one dense [`ClientRow`] — 16
+//! bytes per client, lazily grown, shared between the [`Server`] fold
+//! path and the [`RoundScheduler`] dispatch path behind an
+//! `Arc<Mutex<..>>`.
+//!
+//! The arena stores *metadata only* (sample counts, latency EWMAs);
+//! model-sized state (EF residuals) lives client-side and is banked
+//! quantized — see `client::ResidualBank`.
+//!
+//! [`Server`]: super::server::Server
+//! [`RoundScheduler`]: super::sched::RoundScheduler
+
+/// One client's resident server-side state.  Kept to 16 bytes so a
+/// million clients cost 16 MB — vs. ~48+ bytes per entry for the old
+/// `BTreeMap<u32, u32>` + `Vec<f64>` + allocator overhead spread.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClientRow {
+    /// Local dataset size, once reported (see `FLAG_SAMPLES`).
+    pub samples: u32,
+    /// Bit flags; see the `FLAG_*` constants.
+    pub flags: u32,
+    /// EWMA of observed round latency in seconds (scheduler dispatch
+    /// tiering).  f64 so the blend arithmetic is bit-identical to the
+    /// scheduler's historical `Vec<f64>` field.
+    pub ewma_secs: f64,
+}
+
+/// `flags` bit: the client has reported its sample count.
+pub const FLAG_SAMPLES: u32 = 1 << 0;
+
+/// Dense, lazily-grown arena of [`ClientRow`]s indexed by client id.
+///
+/// Rows materialize on first write (`set_samples` / `set_ewma`); reads
+/// of never-written ids return defaults (0 samples unknown, 0.0 EWMA)
+/// without growing the arena, so sampling a 1000-client cohort out of a
+/// million-client id space touches only the cohort's rows.
+#[derive(Clone, Debug, Default)]
+pub struct ClientArena {
+    rows: Vec<ClientRow>,
+}
+
+impl ClientArena {
+    /// An empty arena.
+    pub fn new() -> ClientArena {
+        ClientArena { rows: Vec::new() }
+    }
+
+    /// Number of materialized rows (ids `0..len` are resident).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no row has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn row_mut(&mut self, id: u32) -> &mut ClientRow {
+        let i = id as usize;
+        if i >= self.rows.len() {
+            self.rows.resize(i + 1, ClientRow::default());
+        }
+        &mut self.rows[i]
+    }
+
+    /// The row for `id`, default-valued if never written.
+    pub fn row(&self, id: u32) -> ClientRow {
+        self.rows.get(id as usize).copied().unwrap_or_default()
+    }
+
+    /// Record the client's reported sample count.
+    pub fn set_samples(&mut self, id: u32, samples: u32) {
+        let r = self.row_mut(id);
+        r.samples = samples;
+        r.flags |= FLAG_SAMPLES;
+    }
+
+    /// The client's sample count, if it has reported one.
+    pub fn samples(&self, id: u32) -> Option<u32> {
+        let r = self.row(id);
+        if r.flags & FLAG_SAMPLES != 0 {
+            Some(r.samples)
+        } else {
+            None
+        }
+    }
+
+    /// Iterate `(id, samples)` over every client with a known count, in
+    /// ascending id order (the fold path's canonical order).
+    pub fn known_samples(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.flags & FLAG_SAMPLES != 0)
+            .map(|(i, r)| (i as u32, r.samples))
+    }
+
+    /// The client's latency EWMA (0.0 until first observation).
+    pub fn ewma(&self, id: u32) -> f64 {
+        self.row(id).ewma_secs
+    }
+
+    /// Overwrite the client's latency EWMA.
+    pub fn set_ewma(&mut self, id: u32, secs: f64) {
+        self.row_mut(id).ewma_secs = secs;
+    }
+
+    /// Resident bytes of per-client state: materialized rows times the
+    /// row size.  Reported per round as `RoundRecord::client_state_bytes`
+    /// and asserted sub-fp32-baseline by the scale-smoke test.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.rows.len() * std::mem::size_of::<ClientRow>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_16_bytes() {
+        // The million-client budget is 16 MB; a silent row growth would
+        // change the scale-smoke math.
+        assert_eq!(std::mem::size_of::<ClientRow>(), 16);
+    }
+
+    #[test]
+    fn reads_of_unwritten_ids_do_not_grow() {
+        let a = ClientArena::new();
+        assert_eq!(a.samples(1_000_000), None);
+        assert_eq!(a.ewma(1_000_000), 0.0);
+        assert_eq!(a.len(), 0);
+        assert_eq!(a.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn samples_round_trip_and_flag() {
+        let mut a = ClientArena::new();
+        assert_eq!(a.samples(3), None);
+        a.set_samples(3, 120);
+        assert_eq!(a.samples(3), Some(120));
+        // id 0..=2 materialized as padding but report unknown
+        assert_eq!(a.samples(0), None);
+        assert_eq!(a.len(), 4);
+        // a zero count is still "known" (the flag, not the value, decides)
+        a.set_samples(5, 0);
+        assert_eq!(a.samples(5), Some(0));
+    }
+
+    #[test]
+    fn known_samples_walks_ascending_ids() {
+        let mut a = ClientArena::new();
+        a.set_samples(7, 70);
+        a.set_samples(2, 20);
+        a.set_samples(4, 40);
+        let got: Vec<(u32, u32)> = a.known_samples().collect();
+        assert_eq!(got, vec![(2, 20), (4, 40), (7, 70)]);
+    }
+
+    #[test]
+    fn ewma_read_write() {
+        let mut a = ClientArena::new();
+        a.set_ewma(9, 1.5);
+        assert_eq!(a.ewma(9), 1.5);
+        a.set_ewma(9, 0.25);
+        assert_eq!(a.ewma(9), 0.25);
+        assert_eq!(a.resident_bytes(), 10 * 16);
+    }
+}

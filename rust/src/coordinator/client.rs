@@ -24,6 +24,84 @@ use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 use crate::wire::messages::Update;
 
+/// An error-feedback residual stored quantized between rounds.
+///
+/// EF keeps one model-sized fp32 vector per client — at million-client
+/// scale that buffer, not the model, dominates resident memory.  The
+/// bank re-quantizes the residual onto a per-segment affine grid of
+/// `2^bits` points right after the uplink encode (u8 codes, so `d`
+/// bytes instead of `4d`) and re-materializes it at the next
+/// EF-apply.  Banking is itself lossy, but the loss is *re-captured*:
+/// the reconstruction error of round `m`'s bank lands in round `m+1`'s
+/// residual like any other quantization error, so nothing leaves the
+/// EF loop.  Per-span absolute error is bounded by `step / 2` with
+/// `step = (max - min) / (2^bits - 1)`.
+pub struct ResidualBank {
+    /// Per-span grid origin (the span's exact minimum).
+    mins: Vec<f32>,
+    /// Per-span grid step; 0.0 for constant spans (all codes decode to
+    /// the origin exactly).
+    steps: Vec<f32>,
+    /// One code per element, `0..2^bits` (bits <= 8 by config
+    /// validation, so a byte each).
+    codes: Vec<u8>,
+}
+
+impl ResidualBank {
+    /// Quantize `values` onto per-span grids of `2^bits` points.
+    /// `spans` are `(offset, size)` pairs covering `values` (the model's
+    /// segment layout).
+    pub fn bank(spans: &[(usize, usize)], values: &[f32], bits: u32) -> ResidualBank {
+        debug_assert!((1..=8).contains(&bits), "bank bits must be in 1..=8, got {bits}");
+        let maxcode = ((1u32 << bits) - 1) as f32;
+        let mut mins = Vec::with_capacity(spans.len());
+        let mut steps = Vec::with_capacity(spans.len());
+        let mut codes = vec![0u8; values.len()];
+        for &(off, size) in spans {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in &values[off..off + size] {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            if !(mn.is_finite() && mx.is_finite()) {
+                // empty span: nothing to code
+                (mn, mx) = (0.0, 0.0);
+            }
+            let step = (mx - mn) / maxcode;
+            if step > 0.0 {
+                for j in off..off + size {
+                    let c = ((values[j] - mn) / step + 0.5).floor();
+                    codes[j] = c.clamp(0.0, maxcode) as u8;
+                }
+            }
+            // step == 0 (constant span): codes stay 0 and decode to the
+            // span's value exactly.
+            mins.push(mn);
+            steps.push(step);
+        }
+        ResidualBank { mins, steps, codes }
+    }
+
+    /// Reconstruct the banked residual into `out` (same `spans` the
+    /// bank was built with).  Elements outside the spans are untouched.
+    pub fn dequantize_into(&self, spans: &[(usize, usize)], out: &mut [f32]) {
+        debug_assert_eq!(spans.len(), self.mins.len(), "span layout changed under the bank");
+        for (l, &(off, size)) in spans.iter().enumerate() {
+            let (mn, st) = (self.mins[l], self.steps[l]);
+            for j in off..off + size {
+                out[j] = mn + self.codes[j] as f32 * st;
+            }
+        }
+    }
+
+    /// Resident bytes of the banked residual (the sub-fp32 claim the
+    /// scale-smoke test asserts).
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + (self.mins.len() + self.steps.len()) * std::mem::size_of::<f32>()
+    }
+}
+
 /// One federated client's local state.
 ///
 /// Owns no thread affinity: the round engine moves a `ClientState`
@@ -45,8 +123,18 @@ pub struct ClientState {
     ys: Vec<i32>,
     /// Error-feedback residual (EF-SGD): what quantization dropped last
     /// round, folded into this round's update before quantizing.  Empty
-    /// when EF is disabled.
+    /// when EF is disabled — and, under banked EF (`bank_bits > 0`),
+    /// empty *between* rounds too: the buffer is re-materialized from
+    /// [`ResidualBank`] per active round and freed after banking.
     residual: Vec<f32>,
+    /// Banked-EF bit-width (`--ef-bits`): > 0 stores the residual
+    /// quantized between rounds (see [`ResidualBank`]); 0 keeps the
+    /// historical resident fp32 buffer, bit-identical to before the
+    /// knob existed.
+    bank_bits: u32,
+    /// The quantized residual carried between rounds when
+    /// `bank_bits > 0` (`None` until the client's first update).
+    bank: Option<ResidualBank>,
     /// Codec path: fused quantize→pack (narrow, native backend) or the
     /// split quantize-then-pack reference.
     codec: CodecMode,
@@ -96,10 +184,27 @@ impl ClientState {
             xs,
             ys,
             residual: if error_feedback { vec![0.0; mm.d] } else { Vec::new() },
+            bank_bits: 0,
+            bank: None,
             codec,
             last_ranges: Vec::new(),
             last_bits: Vec::new(),
         }
+    }
+
+    /// Bank the EF residual quantized to `bits` (`RunConfig::ef_bits`).
+    /// A no-op when `bits == 0` or error feedback is off (config
+    /// validation rejects `ef_bits > 0` without `--error-feedback`, but
+    /// the gate here keeps the builder safe to call unconditionally).
+    pub fn with_ef_bits(mut self, bits: u32) -> ClientState {
+        if bits > 0 && !self.residual.is_empty() {
+            self.bank_bits = bits;
+            // Between rounds only the bank is resident; the fp32 buffer
+            // (all zeros right now — banking it would be a zero grid) is
+            // re-materialized per active round.
+            self.residual = Vec::new();
+        }
+        self
     }
 
     /// The client's shard size (aggregation weight numerator).
@@ -125,6 +230,18 @@ impl ClientState {
         let (mut delta, train_loss) = model.local_round(params, &self.xs, &self.ys, self.lr)?;
 
         // 1b. error feedback: fold in last round's quantization residual
+        if self.bank_bits > 0 {
+            // Banked EF: re-materialize the fp32 buffer from the
+            // quantized bank (zeros before the first update).  The
+            // bank's own reconstruction error lands back in this
+            // round's residual below, so nothing leaves the EF loop.
+            self.residual = vec![0.0f32; mm.d];
+            if let Some(bank) = &self.bank {
+                let spans: Vec<(usize, usize)> =
+                    mm.segments.iter().map(|s| (s.offset, s.size)).collect();
+                bank.dequantize_into(&spans, &mut self.residual);
+            }
+        }
         if !self.residual.is_empty() {
             for (d, r) in delta.iter_mut().zip(&self.residual) {
                 *d += r;
@@ -186,6 +303,15 @@ impl ClientState {
             }
         };
 
+        // 6. banked EF: re-quantize what the encode just left behind and
+        // free the fp32 buffer until this client's next selected round.
+        if self.bank_bits > 0 {
+            let spans: Vec<(usize, usize)> =
+                mm.segments.iter().map(|s| (s.offset, s.size)).collect();
+            self.bank = Some(ResidualBank::bank(&spans, &self.residual, self.bank_bits));
+            self.residual = Vec::new();
+        }
+
         Ok(Update {
             round,
             client_id: self.id,
@@ -194,5 +320,78 @@ impl ClientState {
             segments,
             payload,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(bank: &ResidualBank, spans: &[(usize, usize)], d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; d];
+        bank.dequantize_into(spans, &mut out);
+        out
+    }
+
+    #[test]
+    fn bank_round_trip_error_is_bounded_by_half_a_step() {
+        // Two spans with very different scales: per-span grids must
+        // adapt (a shared grid would blow the bound on the small span).
+        let spans = [(0usize, 6usize), (6, 4)];
+        let values: Vec<f32> =
+            vec![-0.75, 0.3, 1.25, -0.1, 0.9, 0.0, 1e-3, -2e-3, 5e-4, 1.5e-3];
+        for bits in [1u32, 2, 4, 6, 8] {
+            let bank = ResidualBank::bank(&spans, &values, bits);
+            let got = reconstruct(&bank, &spans, values.len());
+            let maxcode = ((1u32 << bits) - 1) as f32;
+            for &(off, size) in &spans {
+                let seg = &values[off..off + size];
+                let mn = seg.iter().copied().fold(f32::INFINITY, f32::min);
+                let mx = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let step = (mx - mn) / maxcode;
+                for j in off..off + size {
+                    let err = (got[j] - values[j]).abs();
+                    let bound = step * 0.5 * (1.0 + 1e-4) + 1e-12;
+                    assert!(err <= bound, "bits={bits} j={j}: |{err}| > {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bank_reconstruction_is_stable_across_skipped_rounds() {
+        // An unselected client does not re-bank; dequantizing the same
+        // bank again rounds later must give bit-identical values.
+        let spans = [(0usize, 5usize)];
+        let values = vec![0.2f32, -0.4, 0.0, 1.0, -1.0];
+        let bank = ResidualBank::bank(&spans, &values, 4);
+        let first = reconstruct(&bank, &spans, 5);
+        for _skipped_round in 0..3 {
+            assert_eq!(reconstruct(&bank, &spans, 5), first);
+        }
+    }
+
+    #[test]
+    fn constant_and_zero_spans_bank_exactly() {
+        // step == 0 spans (all-equal values, the all-zero residual of a
+        // lossless round) must reconstruct exactly, not divide by zero.
+        let spans = [(0usize, 3usize), (3, 3)];
+        let values = vec![0.0f32, 0.0, 0.0, 0.7, 0.7, 0.7];
+        let bank = ResidualBank::bank(&spans, &values, 4);
+        assert_eq!(reconstruct(&bank, &spans, 6), values);
+    }
+
+    #[test]
+    fn bank_is_sub_fp32() {
+        let d = 1024usize;
+        let spans = [(0usize, d)];
+        let values: Vec<f32> = (0..d).map(|j| (j as f32).sin()).collect();
+        let bank = ResidualBank::bank(&spans, &values, 8);
+        assert!(
+            bank.resident_bytes() < d * 4,
+            "{} bytes for a {}-element residual",
+            bank.resident_bytes(),
+            d
+        );
     }
 }

@@ -30,7 +30,7 @@ use crate::quant::{math, Decision};
 use crate::runtime::ModelManifest;
 use crate::util::rng::Rng;
 use crate::wire::bitpack::{BitReader, BitWriter};
-use crate::wire::messages::{SegmentHeader, Update};
+use crate::wire::messages::{PartialAggregate, SegmentHeader, Update};
 use crate::wire::swar;
 
 /// Client-side quantization parameters derived from a policy decision and
@@ -431,6 +431,102 @@ pub fn decision_bits(mm: &ModelManifest, d: &Decision) -> Vec<u32> {
     (0..mm.num_segments()).map(|l| d.bits(l)).collect()
 }
 
+/// Fold a subtree's leaf updates into one [`PartialAggregate`].
+///
+/// This is the tree topology's **single source of truth**: both the
+/// remote `aggregate` role and the in-process engine's virtual grouping
+/// call it, so a TCP tree run and a flat run with the same `fanout`
+/// produce bit-identical accumulators.  Members fold in ascending
+/// client-id order (`updates` must arrive sorted and strictly
+/// ascending) with the subtree-local weight `s_i / S_g` — the server
+/// then folds the partial with `S_g / T`, so the composed weight per
+/// leaf element is `(S_g/T) * sum_i (s_i/S_g) * dequant_i`, the
+/// grouping-defined canonical order (see ARCHITECTURE.md).
+///
+/// `wire_bits` in the telemetry tail is the **leaf** uplink ledger
+/// (sum of each member update's packed bits + headers), so the paper's
+/// volume metric is unchanged by the topology.
+pub fn fold_partial(
+    mm: &ModelManifest,
+    round: u32,
+    agg_id: u32,
+    updates: &[Update],
+    mode: CodecMode,
+    depth: u32,
+) -> Result<PartialAggregate> {
+    ensure!(!updates.is_empty(), "partial aggregate needs at least one member");
+    for w in updates.windows(2) {
+        ensure!(
+            w[0].client_id < w[1].client_id,
+            "partial members must be sorted by ascending client id"
+        );
+    }
+    let total: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
+    ensure!(total > 0, "partial aggregate has zero total samples");
+    ensure!(
+        total <= u32::MAX as u64,
+        "subtree sample total {total} overflows the pseudo-update's u32"
+    );
+    let mut acc = vec![0.0f32; mm.d];
+    let mut dec = DecodedUpdate::new();
+    let mut loss_acc = 0.0f64;
+    let mut wire_bits = 0u64;
+    for u in updates {
+        decode_update_into_mode(mm, u, &mut dec, mode)?;
+        let w = u.num_samples as f32 / total as f32;
+        fold_range(mm, &dec, w, 0, mm.d, &mut acc);
+        loss_acc += u.num_samples as f64 * u.train_loss as f64;
+        wire_bits += update_wire_bits(mm, u);
+    }
+    Ok(PartialAggregate {
+        round,
+        agg_id,
+        train_loss: (loss_acc / total as f64) as f32,
+        members: updates.iter().map(|u| u.client_id).collect(),
+        samples: updates.iter().map(|u| u.num_samples).collect(),
+        acc,
+        telemetry: Some((depth, wire_bits)),
+    })
+}
+
+/// Shape a [`PartialAggregate`] as a pseudo-[`Update`] the server's
+/// existing receive/fold machinery consumes unchanged: fp32 segment
+/// headers (`bits: 32`), payload = the raw accumulator, `client_id` =
+/// the subtree root id, `num_samples` = the subtree sample total.
+///
+/// fp32 rows decode with `min = 0, step = 1`, so the server's
+/// `fold_range` contributes exactly `W_g * acc[j]` per element — the
+/// outer half of the composed tree weight.  Weighting, sorted-id fold
+/// order, quorum and staleness banking all apply to the pseudo-update
+/// exactly as to a leaf update, keyed by the subtree root id.
+pub fn partial_to_update(mm: &ModelManifest, p: &PartialAggregate) -> Result<Update> {
+    ensure!(
+        p.acc.len() == mm.d,
+        "partial accumulator has {} elements, model {} has {}",
+        p.acc.len(),
+        mm.name,
+        mm.d
+    );
+    let total = p.total_samples();
+    ensure!(
+        total <= u32::MAX as u64,
+        "subtree sample total {total} overflows the pseudo-update's u32"
+    );
+    let segments = (0..mm.num_segments())
+        .map(|_| SegmentHeader { bits: 32, level: 0, min: 0.0, step: 0.0 })
+        .collect();
+    let mut payload = Vec::with_capacity(mm.d * 4);
+    crate::wire::extend_f32_le(&mut payload, &p.acc);
+    Ok(Update {
+        round: p.round,
+        client_id: p.agg_id,
+        num_samples: total as u32,
+        train_loss: p.train_loss,
+        segments,
+        payload,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -781,6 +877,93 @@ mod tests {
         let bits = update_wire_bits(&m, &u);
         // 7 codes * 4 bits = 28 -> 4 payload bytes = 32 bits, + 2 headers * 88
         assert_eq!(bits, 32 + 2 * 88);
+    }
+
+    /// A small quantized update for the partial-aggregate tests.
+    fn quant_update(m: &ModelManifest, id: u32, samples: u32, loss: f32, fill: f32) -> Update {
+        let plan = QuantPlan::new(&[15, 7], &[1.0, 0.5]);
+        let codes: Vec<f32> = (0..m.d).map(|i| (fill + i as f32) % 7.0).collect();
+        let (segments, payload) = encode_quantized(m, &plan, &[-0.3, 0.1], &codes);
+        Update { round: 2, client_id: id, num_samples: samples, train_loss: loss, segments, payload }
+    }
+
+    #[test]
+    fn fold_partial_matches_manual_weighted_fold() {
+        let m = mm();
+        let us = vec![
+            quant_update(&m, 4, 10, 1.5, 0.0),
+            quant_update(&m, 5, 30, 0.5, 3.0),
+        ];
+        let p = fold_partial(&m, 2, 4, &us, CodecMode::Narrow, 1).unwrap();
+        assert_eq!(p.agg_id, 4);
+        assert_eq!(p.members, vec![4, 5]);
+        assert_eq!(p.samples, vec![10, 30]);
+        assert_eq!(p.total_samples(), 40);
+        assert_eq!(p.depth(), 1);
+        assert_eq!(
+            p.wire_bits(),
+            update_wire_bits(&m, &us[0]) + update_wire_bits(&m, &us[1]),
+            "telemetry carries the leaf uplink ledger"
+        );
+        // manual: same decode + fold_range calls, member order, weights
+        let mut want = vec![0.0f32; m.d];
+        for u in &us {
+            let dec = decode_update(&m, u).unwrap();
+            fold_range(&m, &dec, u.num_samples as f32 / 40u64 as f32, 0, m.d, &mut want);
+        }
+        let got: Vec<u32> = p.acc.iter().map(|x| x.to_bits()).collect();
+        let wantb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, wantb);
+        // subtree-weighted loss
+        let want_loss = ((10.0 * 1.5 + 30.0 * 0.5) / 40.0) as f32;
+        assert_eq!(p.train_loss.to_bits(), want_loss.to_bits());
+        // narrow and reference modes agree bit-for-bit (determinism matrix)
+        let p_ref = fold_partial(&m, 2, 4, &us, CodecMode::Reference, 1).unwrap();
+        let refb: Vec<u32> = p_ref.acc.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, refb);
+    }
+
+    #[test]
+    fn fold_partial_rejects_malformed_member_sets() {
+        let m = mm();
+        assert!(fold_partial(&m, 0, 0, &[], CodecMode::Narrow, 1).is_err(), "empty");
+        let unsorted = vec![quant_update(&m, 5, 1, 0.0, 0.0), quant_update(&m, 4, 1, 0.0, 0.0)];
+        assert!(fold_partial(&m, 0, 4, &unsorted, CodecMode::Narrow, 1).is_err());
+        let dup = vec![quant_update(&m, 4, 1, 0.0, 0.0), quant_update(&m, 4, 1, 0.0, 0.0)];
+        assert!(fold_partial(&m, 0, 4, &dup, CodecMode::Narrow, 1).is_err());
+        let zero = vec![quant_update(&m, 4, 0, 0.0, 0.0)];
+        assert!(fold_partial(&m, 0, 4, &zero, CodecMode::Narrow, 1).is_err(), "zero samples");
+    }
+
+    #[test]
+    fn pseudo_update_folds_to_weighted_accumulator() {
+        // The server folds the pseudo-update with weight W: fp32 rows
+        // decode with min 0 / step 1, so each element contributes
+        // exactly W * acc[j] — the outer half of the tree weight.
+        let m = mm();
+        let us = vec![
+            quant_update(&m, 0, 7, 2.0, 1.0),
+            quant_update(&m, 1, 9, 1.0, 4.0),
+        ];
+        let p = fold_partial(&m, 2, 0, &us, CodecMode::Narrow, 1).unwrap();
+        let pu = partial_to_update(&m, &p).unwrap();
+        assert_eq!(pu.client_id, 0);
+        assert_eq!(pu.num_samples, 16);
+        assert_eq!(pu.round, 2);
+        assert!(pu.segments.iter().all(|h| h.bits == 32));
+        let dec = decode_update(&m, &pu).unwrap();
+        assert_eq!(dec.codes_f32(&m), p.acc, "payload round-trips the accumulator");
+        let w = 0.37f32;
+        let mut acc = vec![0.25f32; m.d];
+        fold_range(&m, &dec, w, 0, m.d, &mut acc);
+        for (j, (&got, &c)) in acc.iter().zip(&p.acc).enumerate() {
+            let want = 0.25f32 + w * (c * 1.0 + 0.0);
+            assert_eq!(got.to_bits(), want.to_bits(), "element {j}");
+        }
+        // dimension mismatch is rejected
+        let mut bad = p.clone();
+        bad.acc.pop();
+        assert!(partial_to_update(&m, &bad).is_err());
     }
 
     #[test]

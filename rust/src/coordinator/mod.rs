@@ -19,6 +19,7 @@
 //! inside each shard, and reductions walk batches in a fixed order.
 //! `ARCHITECTURE.md` at the repo root walks the whole life of a round.
 
+pub mod arena;
 pub mod client;
 pub mod codec;
 pub mod pool;
@@ -26,6 +27,7 @@ pub mod sched;
 pub mod server;
 pub mod topology;
 
-pub use client::ClientState;
+pub use arena::ClientArena;
+pub use client::{ClientState, ResidualBank};
 pub use sched::{RoundPlan, RoundScheduler};
 pub use server::{Server, ServerOpts, Session};

@@ -54,10 +54,12 @@
 //! computed over the cohort the server actually received, never over
 //! the full registry.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
+use super::arena::ClientArena;
 use super::server::{ClientHandle, Server};
 use crate::config::RunConfig;
 use crate::metrics::RoundRecord;
@@ -143,8 +145,14 @@ pub struct RoundScheduler {
     busy: BTreeMap<u32, u32>,
     /// Root of the per-round selection streams (see module docs).
     select_root: Rng,
-    /// EWMA of observed per-client round seconds; 0.0 = never observed.
-    ewma: Vec<f64>,
+    /// Per-client state rows (the dispatch EWMA lives in
+    /// `ClientRow::ewma_secs`; 0.0 = never observed).  Shared with the
+    /// server's arena when built through
+    /// [`Self::from_config_with_arena`], so sample counts and EWMAs are
+    /// one 16-byte row per client instead of parallel maps — and the
+    /// rows materialize lazily, so a million-client registry costs
+    /// nothing until a client is actually observed.
+    arena: Arc<Mutex<ClientArena>>,
 }
 
 impl RoundScheduler {
@@ -192,7 +200,7 @@ impl RoundScheduler {
             staleness: 0,
             busy: BTreeMap::new(),
             select_root: Rng::new(seed).derive("sched"),
-            ewma: vec![0.0; n_clients],
+            arena: Arc::new(Mutex::new(ClientArena::new())),
         })
     }
 
@@ -233,6 +241,25 @@ impl RoundScheduler {
         .with_staleness(cfg.round.tolerance.staleness))
     }
 
+    /// Build from a run's config, sharing the server's client arena so
+    /// dispatch EWMAs and reported sample counts live in the same
+    /// 16-byte rows (one resident-bytes ledger instead of two).
+    pub fn from_config_with_arena(
+        cfg: &RunConfig,
+        n_clients: usize,
+        arena: Arc<Mutex<ClientArena>>,
+    ) -> Result<RoundScheduler> {
+        Ok(Self::from_config(cfg, n_clients)?.with_arena(arena))
+    }
+
+    /// Replace the scheduler's (private) arena with a shared one.  Any
+    /// EWMAs already written to the old arena are dropped — call before
+    /// the first `observe`.
+    pub fn with_arena(mut self, arena: Arc<Mutex<ClientArena>>) -> RoundScheduler {
+        self.arena = arena;
+        self
+    }
+
     /// Target cohort size `ceil(participation * n)`.
     pub fn cohort_target(&self) -> usize {
         self.k_target
@@ -240,16 +267,34 @@ impl RoundScheduler {
 
     /// Draw `k` distinct client ids for `round` (partial Fisher–Yates
     /// over `0..n` on the round-keyed stream).  Pure in `(seed, round)`.
+    ///
+    /// Sparse in `k`, not `n`: instead of materializing the identity
+    /// array `0..n` and swapping into it, only the *displacements* from
+    /// identity are tracked in a map.  Iteration `i` of the dense
+    /// algorithm reads positions `i` and `j >= i` and never revisits a
+    /// position below `i`, so recording just the far swap ends
+    /// reproduces the dense draw sequence exactly — the RNG stream and
+    /// the returned ids are bit-identical to the historical O(n)
+    /// version, at O(k) time and memory (the million-client scale-out
+    /// requirement; asserted against a dense reference in tests).
     fn sample(&self, round: u32, k: usize) -> Vec<u32> {
         let mut rng = self.select_root.derive(&format!("round{round}"));
         let n = self.n_clients;
-        let mut ids: Vec<u32> = (0..n as u32).collect();
-        for i in 0..k.min(n) {
+        let k = k.min(n);
+        let mut displaced: HashMap<usize, u32> = HashMap::with_capacity(k);
+        let mut out: Vec<u32> = Vec::with_capacity(k);
+        for i in 0..k {
             let j = i + rng.below((n - i) as u64) as usize;
-            ids.swap(i, j);
+            // ids[p] = displaced[p] if a prior swap moved something
+            // there, else the identity value p.
+            let vi = displaced.get(&i).copied().unwrap_or(i as u32);
+            let vj = displaced.get(&j).copied().unwrap_or(j as u32);
+            out.push(vj);
+            // Position i is never read again; position j now holds what
+            // was at i.
+            displaced.insert(j, vi);
         }
-        ids.truncate(k.min(n));
-        ids
+        out
     }
 
     /// Dispatch sort key for one cohort member: a `(tier, cost)` pair.
@@ -261,8 +306,8 @@ impl RoundScheduler {
     /// would put every unobserved client's ~1s *simulated* cost ahead
     /// of a true straggler's ~10ms *measured* cost and invert the
     /// longest-first heuristic.
-    fn dispatch_key(&self, client_id: u32, round: u32) -> (u8, f64) {
-        let e = self.ewma[client_id as usize];
+    fn dispatch_key(&self, arena: &ClientArena, client_id: u32, round: u32) -> (u8, f64) {
+        let e = arena.ewma(client_id);
         if e > 0.0 {
             (1, e)
         } else {
@@ -336,13 +381,15 @@ impl RoundScheduler {
         // profile with no observations yet) fall back to ascending id.
         // Keys are computed once per cohort member, not inside the
         // comparator.
+        let arena = self.arena.lock().expect("arena poisoned");
         let mut keyed: Vec<(u8, f64, u32)> = selected
             .iter()
             .map(|&id| {
-                let (tier, cost) = self.dispatch_key(id, round);
+                let (tier, cost) = self.dispatch_key(&arena, id, round);
                 (tier, cost, id)
             })
             .collect();
+        drop(arena);
         keyed.sort_by(|a, b| {
             a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2))
         });
@@ -469,13 +516,17 @@ impl RoundScheduler {
     /// that drives slowest-first dispatch.  Non-finite or non-positive
     /// observations and unknown ids are ignored.
     pub fn observe(&mut self, client_id: u32, secs: f64) {
-        let Some(e) = self.ewma.get_mut(client_id as usize) else {
+        if client_id as usize >= self.n_clients {
             return;
-        };
+        }
         if !secs.is_finite() || secs <= 0.0 {
             return;
         }
-        *e = if *e == 0.0 { secs } else { EWMA_ALPHA * secs + (1.0 - EWMA_ALPHA) * *e };
+        let mut arena = self.arena.lock().expect("arena poisoned");
+        let e = arena.ewma(client_id);
+        let blended =
+            if e == 0.0 { secs } else { EWMA_ALPHA * secs + (1.0 - EWMA_ALPHA) * e };
+        arena.set_ewma(client_id, blended);
     }
 }
 
@@ -508,9 +559,13 @@ pub fn run_scheduled_round(
         plan.dispatch.iter().copied().filter(|id| !churn.failed.contains(id)).collect()
     };
     scheduler.note_late(round, &churn.late);
-    order_clients(clients, &dispatch);
-    let mut rec =
-        server.run_round(round, &mut clients[..dispatch.len()], &churn.late, evaluate)?;
+    let swaps = order_clients(clients, &dispatch);
+    let rec =
+        server.run_round(round, &mut clients[..dispatch.len()], &churn.late, evaluate);
+    // Put the registry back in id order whether the round succeeded or
+    // not — the O(k) ordering below depends on it next round.
+    restore_clients(clients, swaps);
+    let mut rec = rec?;
     // Report over the *planned* cohort: `selected` counts everyone the
     // scheduler picked, `failed` adds the sim-failed members on top of
     // any real transport failures the server recorded, `stale_dropped`
@@ -527,14 +582,40 @@ pub fn run_scheduled_round(
 }
 
 /// Reorder `clients` so `dispatch`'s ids form the slice prefix
-/// `clients[..dispatch.len()]`, in dispatch (slowest-first) order;
-/// other handles keep their relative order in the tail.  The session
-/// and the TCP server both call this (via [`run_scheduled_round`])
-/// before handing the prefix to `Server::run_round`.
-pub fn order_clients(clients: &mut [Box<dyn ClientHandle + '_>], dispatch: &[u32]) {
-    let rank: BTreeMap<u32, usize> =
-        dispatch.iter().enumerate().map(|(i, &id)| (id, i)).collect();
-    clients.sort_by_key(|c| rank.get(&c.id()).copied().unwrap_or(usize::MAX));
+/// `clients[..dispatch.len()]`, in dispatch (slowest-first) order.  The
+/// session and the TCP server both call this (via
+/// [`run_scheduled_round`]) before handing the prefix to
+/// `Server::run_round`.
+///
+/// O(k) in the cohort size, not O(n log n) in the registry: the
+/// registry is required to be in id order (`clients[p].id() == p`, how
+/// both drivers construct it), each cohort member is swapped into its
+/// prefix slot directly, and the returned swap log lets
+/// [`restore_clients`] undo the permutation afterwards — so a
+/// 1000-client cohort touches at most `2k` entries of a million-client
+/// registry per round instead of re-sorting all of it.
+pub fn order_clients(
+    clients: &mut [Box<dyn ClientHandle + '_>],
+    dispatch: &[u32],
+) -> Vec<(usize, usize)> {
+    // id -> current position, for the (at most k) handles a prior swap
+    // displaced from their home slot `id as usize`.
+    let mut pos_of: HashMap<u32, usize> = HashMap::with_capacity(dispatch.len());
+    let mut swaps: Vec<(usize, usize)> = Vec::with_capacity(dispatch.len());
+    for (i, &id) in dispatch.iter().enumerate() {
+        let j = pos_of.get(&id).copied().unwrap_or(id as usize);
+        debug_assert!(
+            j < clients.len() && clients[j].id() == id,
+            "client registry not in id order (cohort id {id} not at slot {j})"
+        );
+        if i == j {
+            continue;
+        }
+        let displaced = clients[i].id();
+        clients.swap(i, j);
+        pos_of.insert(displaced, j);
+        swaps.push((i, j));
+    }
     debug_assert!(
         clients
             .iter()
@@ -543,6 +624,15 @@ pub fn order_clients(clients: &mut [Box<dyn ClientHandle + '_>], dispatch: &[u32
             .all(|(c, &id)| c.id() == id),
         "cohort ids missing from the client registry"
     );
+    swaps
+}
+
+/// Undo an [`order_clients`] permutation (replay its swap log in
+/// reverse), returning the registry to id order for the next round.
+pub fn restore_clients(clients: &mut [Box<dyn ClientHandle + '_>], swaps: Vec<(usize, usize)>) {
+    for &(i, j) in swaps.iter().rev() {
+        clients.swap(i, j);
+    }
 }
 
 #[cfg(test)]
@@ -829,5 +919,108 @@ mod tests {
         let mut all = sched(3, 1.0, None, LatencyProfile::Off);
         all.note_late(0, &[(0, 9), (1, 9), (2, 9)]);
         assert_eq!(all.plan_round(1).selected, vec![0]);
+    }
+
+    #[test]
+    fn sparse_sampler_matches_dense_reference() {
+        // The O(k) sampler must reproduce the historical O(n) partial
+        // Fisher–Yates bit-for-bit: same RNG stream, same ids, same
+        // order — otherwise every seeded run's cohorts would shift.
+        for &n in &[1usize, 7, 100, 1000] {
+            let s = sched(n, 1.0, None, LatencyProfile::Off);
+            for round in 0..5u32 {
+                for &k in &[1usize, 2, n / 2 + 1, n, n + 5] {
+                    let mut rng =
+                        Rng::new(17).derive("sched").derive(&format!("round{round}"));
+                    let mut ids: Vec<u32> = (0..n as u32).collect();
+                    for i in 0..k.min(n) {
+                        let j = i + rng.below((n - i) as u64) as usize;
+                        ids.swap(i, j);
+                    }
+                    ids.truncate(k.min(n));
+                    assert_eq!(s.sample(round, k), ids, "n={n} k={k} round={round}");
+                }
+            }
+        }
+    }
+
+    /// An inert handle for registry-permutation tests (never dispatched).
+    struct NullHandle(u32);
+
+    impl ClientHandle for NullHandle {
+        fn id(&self) -> u32 {
+            self.0
+        }
+        fn send(&mut self, _msg: &crate::wire::messages::Message) -> Result<()> {
+            Ok(())
+        }
+        fn recv_update(&mut self) -> Result<crate::wire::messages::Update> {
+            anyhow::bail!("inert test handle")
+        }
+        fn uplink_bytes(&self) -> u64 {
+            0
+        }
+        fn downlink_bytes(&self) -> u64 {
+            0
+        }
+    }
+
+    fn registry(n: u32) -> Vec<Box<dyn ClientHandle + 'static>> {
+        (0..n).map(|i| Box::new(NullHandle(i)) as Box<dyn ClientHandle>).collect()
+    }
+
+    #[test]
+    fn ordering_touches_only_the_cohort_and_restores_id_order() {
+        let n = 100_000u32;
+        let mut clients = registry(n);
+        let dispatch: Vec<u32> = vec![500, 3, 99_999, 42, 7];
+        let swaps = order_clients(&mut clients, &dispatch);
+        for (i, &id) in dispatch.iter().enumerate() {
+            assert_eq!(clients[i].id(), id, "prefix slot {i}");
+        }
+        // Touched-entry regression: at most one swap (two touched slots)
+        // per cohort member — never an O(n) re-sort of the registry.
+        assert!(
+            swaps.len() <= dispatch.len(),
+            "{} swaps for a {}-member cohort",
+            swaps.len(),
+            dispatch.len()
+        );
+        restore_clients(&mut clients, swaps);
+        assert!(clients.iter().enumerate().all(|(p, c)| c.id() == p as u32));
+    }
+
+    #[test]
+    fn ordering_handles_cohorts_that_displace_each_other() {
+        // Cohort members whose home slots overlap the prefix exercise
+        // the displaced-position bookkeeping.
+        for dispatch in
+            [vec![2, 0, 1], vec![1, 0], vec![3, 2, 1, 0], vec![0, 1, 2], vec![5, 4, 0]]
+        {
+            let mut clients = registry(6);
+            let swaps = order_clients(&mut clients, &dispatch);
+            for (i, &id) in dispatch.iter().enumerate() {
+                assert_eq!(clients[i].id(), id, "{dispatch:?} slot {i}");
+            }
+            assert!(swaps.len() <= dispatch.len());
+            restore_clients(&mut clients, swaps);
+            assert!(clients.iter().enumerate().all(|(p, c)| c.id() == p as u32));
+        }
+    }
+
+    #[test]
+    fn ewma_lives_in_the_shared_arena() {
+        let arena = Arc::new(Mutex::new(ClientArena::new()));
+        let mut s = sched(6, 1.0, None, LatencyProfile::Off).with_arena(arena.clone());
+        s.observe(2, 9.0);
+        assert_eq!(arena.lock().unwrap().ewma(2), 9.0);
+        // Dispatch reads straight from the shared rows: a value written
+        // by the other owner (the server side) drives ordering too.
+        arena.lock().unwrap().set_ewma(5, 50.0);
+        let p = s.plan_round(0);
+        assert_eq!(p.dispatch, vec![0, 1, 3, 4, 5, 2]);
+        // Out-of-registry observations must not materialize rows.
+        s.observe(99, 1.0);
+        assert!(arena.lock().unwrap().len() <= 6);
     }
 }

@@ -76,11 +76,12 @@
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
+use super::arena::ClientArena;
 use super::client::ClientState;
 use super::codec;
 use super::pool::{self, Job, Task, TaskSender, WorkerPool};
@@ -139,6 +140,20 @@ pub trait ClientHandle {
     fn uplink_bytes(&self) -> u64;
     /// Cumulative downlink bytes (server -> client), framed size.
     fn downlink_bytes(&self) -> u64;
+    /// Is this handle an intermediate aggregator (tree topology)?  An
+    /// aggregate handle's [`Self::recv_update`] delivers a subtree
+    /// *pseudo-update* (the pre-folded accumulator shaped as an fp32
+    /// update) and stashes the partial's metadata for
+    /// [`Self::take_partial_meta`].
+    fn is_aggregate(&self) -> bool {
+        false
+    }
+    /// The most recently received partial's metadata (member ids,
+    /// sample counts, leaf wire bits, depth), for aggregate handles.
+    /// `None` for leaf handles or before any partial arrived.
+    fn take_partial_meta(&mut self) -> Option<messages::PartialMeta> {
+        None
+    }
 }
 
 /// How the server schedules its own hot stages.
@@ -355,12 +370,21 @@ pub struct Server {
     initial_loss: Option<f32>,
     prev_loss: Option<f32>,
     cum_uplink_bits: u64,
-    /// Per-client sample counts, learned from handles (in-process) or
-    /// from received updates (TCP, available from round 1) — the
-    /// fold-overlap path needs aggregation weights before updates land.
-    /// Keyed by id so it accumulates across sampled cohorts: a client
-    /// absent this round keeps its entry for the next round it joins.
-    samples_by_id: BTreeMap<u32, u32>,
+    /// Per-client resident state (sample counts, latency EWMAs) in one
+    /// flat arena keyed by id — replacing the scattered
+    /// `samples_by_id`/`ewma` maps, 16 bytes per client.  Learned from
+    /// handles (in-process) or from received updates / partial metadata
+    /// (TCP, available from round 1) — the fold-overlap path needs
+    /// aggregation weights before updates land.  Rows accumulate across
+    /// sampled cohorts: a client absent this round keeps its row for
+    /// the next round it joins.  Shared with the scheduler
+    /// ([`Self::arena`]), which stores its dispatch EWMAs in the same
+    /// rows.
+    arena: Arc<Mutex<ClientArena>>,
+    /// Leaf cohort to embed in the next broadcast (tree topology): the
+    /// serve driver sets it so aggregators can relay the round to
+    /// exactly their span's selected members.  Consumed per round.
+    cohort_hint: Option<Vec<u32>>,
     /// Observed per-client round compute times of the last round
     /// (seconds, as measured by each client's own worker —
     /// [`ClientHandle::last_round_secs`]).  Feeds the scheduler's EWMA
@@ -400,7 +424,8 @@ impl Server {
             initial_loss: None,
             prev_loss: None,
             cum_uplink_bits: 0,
-            samples_by_id: BTreeMap::new(),
+            arena: Arc::new(Mutex::new(ClientArena::new())),
+            cohort_hint: None,
             arrivals: Vec::new(),
             banked: BTreeMap::new(),
             dec: codec::DecodedUpdate::new(),
@@ -427,6 +452,23 @@ impl Server {
         &self.arrivals
     }
 
+    /// The shared per-client state arena.  The scheduler reads and
+    /// writes the same rows (dispatch EWMAs), so one allocation serves
+    /// both sides — construct the scheduler with
+    /// [`super::sched::RoundScheduler::from_config_with_arena`].
+    pub fn arena(&self) -> Arc<Mutex<ClientArena>> {
+        Arc::clone(&self.arena)
+    }
+
+    /// Set the leaf cohort the next broadcast carries (tree topology):
+    /// aggregators intersect it with their span to relay the round to
+    /// exactly the selected members.  Consumed by the next
+    /// [`Self::run_round`]; flat-topology callers never set it and the
+    /// broadcast frame stays byte-identical to the historical one.
+    pub fn set_cohort_hint(&mut self, cohort: Option<Vec<u32>>) {
+        self.cohort_hint = cohort;
+    }
+
     /// Mutable view of the parameters.  Zero-copy when the server holds
     /// the only reference (the steady state: all per-round broadcast
     /// clones are dropped by aggregation time); falls back to
@@ -446,8 +488,9 @@ impl Server {
         ids.sort_unstable();
         let mut counts = Vec::with_capacity(ids.len());
         let mut total: u64 = 0;
+        let arena = self.arena.lock().expect("arena poisoned");
         for id in &ids {
-            let s = *self.samples_by_id.get(id)?;
+            let s = arena.samples(*id)?;
             counts.push(s);
             total += s as u64;
         }
@@ -508,10 +551,17 @@ impl Server {
         self.arrivals.clear();
 
         // Handles that know their dataset size up front seed the
-        // fold-overlap weight plan before any update arrives.
-        for c in clients.iter() {
-            if let Some(s) = c.num_samples() {
-                self.samples_by_id.insert(c.id(), s);
+        // fold-overlap weight plan before any update arrives (flat
+        // topology; the tree path learns leaf counts from partial
+        // metadata instead, and an aggregate handle's id would collide
+        // with its subtree root's leaf row).
+        let fanout = self.opts.round.topology.fanout;
+        if fanout == 0 {
+            let mut arena = self.arena.lock().expect("arena poisoned");
+            for c in clients.iter() {
+                if let Some(s) = c.num_samples() {
+                    arena.set_samples(c.id(), s);
+                }
             }
         }
 
@@ -525,6 +575,7 @@ impl Server {
             round,
             params: Arc::clone(&self.params),
             losses,
+            cohort: self.cohort_hint.take(),
         };
         // Strict mode (full quorum, no timeout, no staleness) keeps the
         // historical any-failure-aborts semantics and the
@@ -552,7 +603,13 @@ impl Server {
         // lands; with fold overlap additionally eligible, the sharded
         // fold itself runs inside this window (prefix folds).
         let t_recv = Instant::now();
+        // Tree rounds take the plain serial (or tolerant) receive: the
+        // pipelined/overlap fast paths key their bookkeeping by leaf
+        // client id, which the grouping below replaces with subtree
+        // roots.  Cohorts are tiny relative to the flat million-client
+        // case (that is the point of the tree), so nothing is lost.
         let pipelined = !tolerant
+            && fanout == 0
             && self.opts.tasks.is_some()
             && self.opts.aggregate == AggregateMode::Streaming;
         let overlap_plan = if pipelined && self.opts.round.pipeline.fold_overlap {
@@ -632,12 +689,62 @@ impl Server {
             }
         }
 
+        // Tree topology: every stage below consumes one pseudo-update
+        // per subtree, keyed by the subtree root id.  Over TCP the
+        // handles are aggregators and already delivered pseudo-updates
+        // (harvest their partial metadata); in-process the *same*
+        // grouping is applied virtually through the identical
+        // `codec::fold_partial` code — the grouping defines the
+        // canonical fold order, so the two paths produce bit-identical
+        // accumulators, records and `params_hash` (ARCHITECTURE.md).
+        let mut partial_metas: Vec<messages::PartialMeta> = Vec::new();
+        let updates = if fanout == 0 {
+            updates
+        } else if clients.iter().any(|c| c.is_aggregate()) {
+            for c in clients.iter_mut() {
+                if let Some(m) = c.take_partial_meta() {
+                    partial_metas.push(m);
+                }
+            }
+            partial_metas.sort_by_key(|m| m.agg_id);
+            updates
+        } else {
+            let mode = self.opts.round.pipeline.codec;
+            let mut pseudo: Vec<Update> = Vec::with_capacity(updates.len());
+            let mut i = 0usize;
+            while i < updates.len() {
+                let root = updates[i].client_id / fanout * fanout;
+                let mut j = i + 1;
+                while j < updates.len() && updates[j].client_id / fanout * fanout == root {
+                    j += 1;
+                }
+                let p = codec::fold_partial(&self.model.mm, round, root, &updates[i..j], mode, 1)?;
+                partial_metas.push(p.meta());
+                pseudo.push(codec::partial_to_update(&self.model.mm, &p)?);
+                i = j;
+            }
+            pseudo
+        };
+
         let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
         ensure!(total_samples > 0, "no samples reported");
         // Remember the counts so TCP cohorts become fold-overlap
-        // eligible from the next round on.
-        for u in updates.iter().chain(stale.iter().map(|(_, u)| u)) {
-            self.samples_by_id.insert(u.client_id, u.num_samples);
+        // eligible from the next round on; tree rounds record the
+        // *leaf* counts carried in the partial metadata, never the
+        // pseudo-update's subtree totals.
+        {
+            let mut arena = self.arena.lock().expect("arena poisoned");
+            if fanout > 0 {
+                for m in &partial_metas {
+                    for (&id, &s) in m.members.iter().zip(&m.samples) {
+                        arena.set_samples(id, s);
+                    }
+                }
+            } else {
+                for u in updates.iter().chain(stale.iter().map(|(_, u)| u)) {
+                    arena.set_samples(u.client_id, u.num_samples);
+                }
+            }
         }
 
         // Decode + aggregate, then apply (Eq. 4).  Under fold overlap
@@ -692,16 +799,26 @@ impl Server {
         // in (its simulated arrival), so strict and semi-sync runs
         // agree on the cumulative ledger once every bank drains.
         let mm = &self.model.mm;
-        let uplink_bits: u64 = updates
-            .iter()
-            .chain(stale.iter().map(|(_, u)| u))
-            .map(|u| codec::update_wire_bits(mm, u))
-            .sum();
+        // Tree rounds charge the *leaf* wire bits carried in the
+        // partial telemetry — the paper's volume metric counts client
+        // uplinks, and a pseudo-update's fp32 frame is a topology
+        // artifact, not client traffic.
+        let uplink_bits: u64 = if fanout > 0 {
+            partial_metas.iter().map(|m| m.wire_bits).sum()
+        } else {
+            updates
+                .iter()
+                .chain(stale.iter().map(|(_, u)| u))
+                .map(|u| codec::update_wire_bits(mm, u))
+                .sum()
+        };
         self.cum_uplink_bits += uplink_bits;
 
         // Telemetry: mean bits/element and ranges (Figs. 1b, 5),
         // unweighted means over the whole fold set (on-time + stale).
-        let n_fold = n_recv + stale.len();
+        // Tree rounds mean over the pseudo-updates (32-bit headers,
+        // zero telemetry range) — identical on both tree paths.
+        let n_fold = updates.len() + stale.len();
         let l = mm.num_segments();
         let seg_sizes = mm.segment_sizes();
         let mut mean_bits_acc = 0.0f64;
@@ -730,6 +847,16 @@ impl Server {
             (f32::NAN, f32::NAN)
         };
         let eval_secs = if evaluate { t_eval.elapsed().as_secs_f64() } else { 0.0 };
+
+        // Tree depth this round: number of fold tiers above the leaves
+        // (0 = flat, 2 = leaf -> aggregator -> server).  Identical on
+        // the wire and virtual paths by construction.
+        let agg_depth = if fanout > 0 {
+            partial_metas.iter().map(|m| m.depth).max().unwrap_or(0) + 1
+        } else {
+            0
+        };
+        let client_state_bytes = self.arena.lock().expect("arena poisoned").resident_bytes();
 
         Ok(RoundRecord {
             round,
@@ -761,6 +888,8 @@ impl Server {
             // its simulated share of drops on top).
             stale_folded: stale.len() as u32,
             stale_dropped,
+            agg_depth,
+            client_state_bytes,
         })
     }
 
@@ -1046,9 +1175,10 @@ impl Server {
                 u.client_id
             );
             let expect = self
-                .samples_by_id
-                .get(&id)
-                .copied()
+                .arena
+                .lock()
+                .expect("arena poisoned")
+                .samples(id)
                 .context("fold plan lost a client")?;
             ensure!(
                 u.num_samples == expect,
@@ -1339,7 +1469,7 @@ struct PoolClient {
 
 impl PoolClient {
     fn dispatch(&mut self, msg: &Message) -> Result<()> {
-        if let Message::Broadcast { round, params, losses } = msg {
+        if let Message::Broadcast { round, params, losses, cohort: _ } = msg {
             let state = self
                 .state
                 .take()
@@ -1497,16 +1627,19 @@ impl Session {
             .map(|(i, shard)| {
                 Box::new(PoolClient {
                     id: i as u32,
-                    state: Some(ClientState::with_options(
-                        i as u32,
-                        Arc::clone(shard),
-                        self.cfg.policy.build(),
-                        self.cfg.lr,
-                        &self.model,
-                        &root,
-                        self.cfg.error_feedback,
-                        self.cfg.round.pipeline.codec,
-                    )),
+                    state: Some(
+                        ClientState::with_options(
+                            i as u32,
+                            Arc::clone(shard),
+                            self.cfg.policy.build(),
+                            self.cfg.lr,
+                            &self.model,
+                            &root,
+                            self.cfg.error_feedback,
+                            self.cfg.round.pipeline.codec,
+                        )
+                        .with_ef_bits(self.cfg.ef_bits),
+                    ),
                     jobs: pool.sender(),
                     pending: None,
                     samples: shard.len() as u32,
@@ -1521,7 +1654,11 @@ impl Session {
         // deadline knobs) and orders its dispatch slowest-first.  The
         // selection stream is seed-pure, so reports stay bit-identical
         // across every threading knob.
-        let mut scheduler = RoundScheduler::from_config(&self.cfg, self.train_shards.len())?;
+        let mut scheduler = RoundScheduler::from_config_with_arena(
+            &self.cfg,
+            self.train_shards.len(),
+            server.arena(),
+        )?;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         for m in 0..self.cfg.rounds {
             let evaluate = m % self.cfg.eval_every == 0 || m + 1 == self.cfg.rounds;

@@ -31,16 +31,17 @@ use std::time::Duration;
 use anyhow::{ensure, Context, Result};
 
 use super::client::ClientState;
+use super::codec;
 use super::pool::WorkerPool;
 use super::sched::{self, RoundScheduler};
 use super::server::{ClientHandle, Server, ServerOpts};
 use crate::config::RunConfig;
-use crate::data::{self, shard};
+use crate::data::{self, shard, Dataset};
 use crate::metrics::{RoundRecord, RunReport};
-use crate::runtime::Runtime;
+use crate::runtime::{ModelRuntime, Runtime};
 use crate::sim::faults::{FaultModel, FaultProfile};
 use crate::util::rng::Rng;
-use crate::wire::messages::{Message, Update};
+use crate::wire::messages::{Message, PartialMeta, Update};
 use crate::wire::transport::{FaultTransport, TcpTransport, Transport};
 
 /// How many connect attempts a worker makes before giving up, and the
@@ -183,6 +184,77 @@ impl ClientHandle for RemoteClient {
     }
 }
 
+/// Server-side handle for one intermediate aggregator (tree topology).
+///
+/// The child process folds its whole subtree into one
+/// [`Message::Partial`]; this handle re-shapes that partial into a
+/// weight-exact fp32 *pseudo-update* ([`codec::partial_to_update`]) so
+/// the server's shared fold path — sorted-key order, quorum, staleness
+/// banking — treats a subtree exactly like one big client, keyed by the
+/// subtree's root id.
+struct AggregateClient {
+    /// Lowest leaf id of the subtree — doubles as the handle's registry
+    /// id, so pseudo-updates land in the canonical grouped fold order.
+    lo: u32,
+    t: TcpTransport,
+    /// Total samples over the subtree's leaves (ready handshake).
+    samples: Option<u32>,
+    /// Metadata of the most recently received partial (leaf members,
+    /// per-leaf samples, leaf wire bits, depth) for the server's ledger.
+    meta: Option<PartialMeta>,
+    model: Arc<ModelRuntime>,
+}
+
+impl ClientHandle for AggregateClient {
+    fn id(&self) -> u32 {
+        self.lo
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.t.send(msg)
+    }
+
+    fn send_broadcast(&mut self, _msg: &Message, encoded: &[u8]) -> Result<()> {
+        self.t.send_encoded(encoded)
+    }
+
+    fn recv_update(&mut self) -> Result<Update> {
+        match self.t.recv()? {
+            Message::Partial(p) => {
+                self.meta = Some(p.meta());
+                codec::partial_to_update(&self.model.mm, &p)
+            }
+            other => {
+                anyhow::bail!("expected Partial from aggregator {}, got {other:?}", self.lo)
+            }
+        }
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.t.set_read_timeout(timeout)
+    }
+
+    fn num_samples(&self) -> Option<u32> {
+        self.samples
+    }
+
+    fn uplink_bytes(&self) -> u64 {
+        self.t.bytes_received()
+    }
+
+    fn downlink_bytes(&self) -> u64 {
+        self.t.bytes_sent()
+    }
+
+    fn is_aggregate(&self) -> bool {
+        true
+    }
+
+    fn take_partial_meta(&mut self) -> Option<PartialMeta> {
+        self.meta.take()
+    }
+}
+
 /// The post-handshake accept loop, run on its own thread so late joins
 /// and rejoins are absorbed *while rounds run*.  Every accepted
 /// connection performs the same two-step handshake as an initial join
@@ -278,6 +350,22 @@ pub fn serve(
     )?;
 
     let config_json = cfg.to_json().to_string_compact();
+    if cfg.round.topology.fanout > 0 {
+        // Tree topology: the sockets that join are intermediate
+        // aggregators (one per subtree), not leaves — a different
+        // handshake, round driver and handle type, but the same model,
+        // data and server fold underneath.
+        return serve_tree(
+            cfg,
+            listener,
+            cfg.round.topology.fanout as usize,
+            model,
+            &pool,
+            test,
+            config_json,
+            observer,
+        );
+    }
     let mut remotes: Vec<RemoteClient> = Vec::with_capacity(n);
     let rejoins: RejoinMap = Arc::new(Mutex::new(HashMap::new()));
     let mut seen = vec![false; n];
@@ -387,7 +475,7 @@ pub fn serve(
     // simply receives no Broadcast and keeps blocking on its socket
     // until a later round selects it (or Shutdown arrives) — no wire
     // change needed, and its client-side state is untouched.
-    let mut scheduler = RoundScheduler::from_config(cfg, n)?;
+    let mut scheduler = RoundScheduler::from_config_with_arena(cfg, n, server.arena())?;
     let run = (|| -> Result<Vec<RoundRecord>> {
         let mut rounds = Vec::with_capacity(cfg.rounds);
         for m in 0..cfg.rounds {
@@ -425,6 +513,146 @@ pub fn serve(
     }
     Ok(RunReport {
         label: format!("{}-tcp", cfg.label()),
+        model: cfg.model.clone(),
+        rounds,
+        params_hash: server.params_hash(),
+    })
+}
+
+/// Tree-mode half of [`serve`]: accept `ceil(n / fanout)` intermediate
+/// aggregators (subtree roots `0, f, 2f, ...`), then drive rounds by
+/// broadcasting the leaf cohort (as the `Broadcast` frame's `cohort`
+/// routing field) to exactly the subtrees that own selected leaves.
+///
+/// Determinism: the canonical fold order is *defined by the grouping* —
+/// when `fanout > 0` the in-process engine applies the same virtual
+/// grouping via [`codec::fold_partial`], so a TCP tree run is
+/// bit-identical (params hash included) to the in-process run with the
+/// same config.  No rejoin machinery: an aggregator socket is a fat
+/// pipe carrying a whole subtree, so a failure is surfaced as a round
+/// error (handle-granularity quorum), not silently re-attached.
+#[allow(clippy::too_many_arguments)]
+fn serve_tree(
+    cfg: &RunConfig,
+    listener: TcpListener,
+    fanout: usize,
+    model: Arc<ModelRuntime>,
+    pool: &WorkerPool,
+    test: Dataset,
+    config_json: String,
+    mut observer: impl FnMut(u32, &RoundRecord),
+) -> Result<RunReport> {
+    let n = model.mm.n_clients;
+    let g = n.div_ceil(fanout);
+    crate::info!("serve", "tree topology: fanout {fanout}, {g} aggregators over {n} leaves");
+    let mut aggs: Vec<AggregateClient> = Vec::with_capacity(g);
+    let mut seen = vec![false; g];
+    for _ in 0..g {
+        let (stream, peer) = listener.accept().context("accept")?;
+        let mut t = TcpTransport::new(stream)?;
+        let lo = match t.recv()? {
+            Message::Join { client_id, .. } => client_id,
+            other => anyhow::bail!("expected Join, got {other:?}"),
+        };
+        ensure!(
+            (lo as usize) < n && (lo as usize) % fanout == 0,
+            "aggregator id {lo} is not a subtree root for fanout {fanout} over {n} leaves \
+             (from {peer})"
+        );
+        ensure!(
+            !seen[lo as usize / fanout],
+            "duplicate Join for aggregator {lo} (second connection from {peer})"
+        );
+        seen[lo as usize / fanout] = true;
+        t.send(&Message::Welcome {
+            client_id: lo,
+            config_json: config_json.clone(),
+            round: None,
+        })?;
+        crate::info!("serve", "aggregator {lo} joined from {peer}");
+        aggs.push(AggregateClient {
+            lo,
+            t,
+            samples: None,
+            meta: None,
+            model: Arc::clone(&model),
+        });
+    }
+    aggs.sort_by_key(|a| a.lo);
+    // Ready phase: an aggregator acks once all of its leaves have joined
+    // *it*, reporting the subtree's total samples.
+    crate::info!("serve", "waiting for {g} aggregator ready handshakes");
+    for a in aggs.iter_mut() {
+        match a.t.recv()? {
+            Message::Join { client_id, num_samples } => {
+                ensure!(
+                    client_id == a.lo,
+                    "aggregator {} sent a ready Join for {client_id}",
+                    a.lo
+                );
+                a.samples = num_samples;
+                if let Some(s) = num_samples {
+                    crate::info!("serve", "aggregator {} ready ({s} subtree samples)", a.lo);
+                }
+            }
+            other => {
+                anyhow::bail!("expected ready Join from aggregator {}, got {other:?}", a.lo)
+            }
+        }
+    }
+    let mut clients: Vec<Box<dyn ClientHandle + '_>> =
+        aggs.into_iter().map(|a| Box::new(a) as Box<dyn ClientHandle + '_>).collect();
+
+    let server_threads = cfg.resolved_server_threads();
+    let mut server = Server::new(
+        Arc::clone(&model),
+        Arc::new(test),
+        cfg.seed as u32,
+        ServerOpts {
+            aggregate: cfg.aggregate,
+            agg_shards: cfg.resolved_agg_shards(server_threads),
+            eval_threads: cfg.resolved_eval_threads(server_threads),
+            round: cfg.round,
+            tasks: Some(pool.sender()),
+        },
+    )?;
+    // The scheduler samples *leaves* (the same seed-pure cohorts as the
+    // flat topology); the tree only changes how their updates travel.
+    let scheduler = RoundScheduler::from_config_with_arena(cfg, n, server.arena())?;
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    for m in 0..cfg.rounds {
+        let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
+        let plan = scheduler.plan_round(m as u32);
+        // The distinct subtree roots owning the cohort (`selected` is
+        // ascending, so the deduped roots are too).
+        let mut roots: Vec<u32> =
+            plan.selected.iter().map(|&id| id / fanout as u32 * fanout as u32).collect();
+        roots.dedup();
+        let rank: HashMap<u32, usize> =
+            roots.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+        clients.sort_by_key(|c| rank.get(&c.id()).copied().unwrap_or(usize::MAX));
+        server.set_cohort_hint(Some(plan.selected.clone()));
+        let mut rec = server.run_round(m as u32, &mut clients[..roots.len()], &[], evaluate)?;
+        // The record counts leaves, not subtree handles: a tree round
+        // selects the exact cohort the flat run would.
+        rec.selected = plan.selected.len() as u32;
+        rec.dropped = plan.dropped;
+        rec.sim_makespan_secs = plan.sim_makespan_secs;
+        observer(m as u32, &rec);
+        let done = cfg
+            .target_accuracy
+            .map(|t| rec.evaluated() && rec.test_accuracy >= t)
+            .unwrap_or(false);
+        rounds.push(rec);
+        if done {
+            break;
+        }
+    }
+    for c in clients.iter_mut() {
+        let _ = c.send(&Message::Shutdown);
+    }
+    Ok(RunReport {
+        label: format!("{}-tcp-tree", cfg.label()),
         model: cfg.model.clone(),
         rounds,
         params_hash: server.params_hash(),
@@ -492,7 +720,10 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
         &root,
         cfg.error_feedback,
         cfg.round.pipeline.codec,
-    );
+    )
+    // The banking knob travels in the run config, so a TCP worker
+    // banks its residual exactly like its in-process twin would.
+    .with_ef_bits(cfg.ef_bits);
     // Chaos injection (tests/CI only): wrap the wire so this worker's
     // updates crash/stall/drop per the profile in FEDDQ_WORKER_FAULTS.
     match std::env::var("FEDDQ_WORKER_FAULTS") {
@@ -513,7 +744,10 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
 
     loop {
         match t.recv()? {
-            Message::Broadcast { round, params, losses } => {
+            Message::Broadcast { round, params, losses, cohort: _ } => {
+                // `cohort` is routing metadata for intermediate
+                // aggregators; a leaf was sent this broadcast *because*
+                // it is in the cohort.
                 let u = state.process_round(&model, round, &params, losses)?;
                 t.send(&Message::Update(u))?;
             }
@@ -522,6 +756,156 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
         }
     }
     crate::info!("worker", "client {id} done");
+    Ok(())
+}
+
+/// Run one intermediate aggregator: join `upstream` as subtree root
+/// `lo`, accept the subtree's leaf workers on `addr` (relaying the run
+/// config verbatim, so leaves cannot diverge from the server), and per
+/// round relay the broadcast to the cohort members in the subtree's
+/// span, fold their updates with the server's own fold kernel
+/// ([`codec::fold_partial`] — weight-exact, sorted order) and uplink a
+/// single [`Message::Partial`].  `fanout` must match the run's
+/// `--fanout`; the subtree's leaves are `lo .. min(lo + fanout, n)`.
+pub fn aggregate(
+    upstream: &str,
+    addr: &str,
+    lo: u32,
+    fanout: u32,
+    artifacts_dir: &str,
+) -> Result<()> {
+    ensure!(fanout >= 2, "aggregator fanout must be >= 2, got {fanout}");
+    let mut up = TcpTransport::connect_retry(
+        upstream,
+        WORKER_CONNECT_ATTEMPTS,
+        WORKER_CONNECT_BACKOFF,
+    )?;
+    up.send(&Message::Join { client_id: lo, num_samples: None })?;
+    let (cfg, config_json) = match up.recv()? {
+        Message::Welcome { client_id, config_json, round } => {
+            ensure!(client_id == lo, "upstream assigned a different id");
+            ensure!(round.is_none(), "aggregators cannot join a run in progress");
+            let mut cfg = RunConfig::from_json_str(&config_json)?;
+            cfg.artifacts_dir = artifacts_dir.to_string();
+            (cfg, config_json)
+        }
+        other => anyhow::bail!("expected Welcome, got {other:?}"),
+    };
+    ensure!(
+        cfg.round.topology.fanout == fanout,
+        "--fanout {fanout} disagrees with the run's topology (fanout {})",
+        cfg.round.topology.fanout
+    );
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let model = runtime.load_model(&cfg.model)?;
+    let n = model.mm.n_clients;
+    ensure!(
+        (lo as usize) < n && (lo as usize) % fanout as usize == 0,
+        "aggregator id {lo} is not a subtree root for fanout {fanout} over {n} leaves"
+    );
+    let span_lo = lo as usize;
+    let span_hi = (span_lo + fanout as usize).min(n);
+    let members: Vec<u32> = (span_lo as u32..span_hi as u32).collect();
+    let mode = cfg.round.pipeline.codec;
+
+    // Accept this subtree's leaves: the exact two-step handshake the
+    // flat server runs, config relayed untouched.
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    crate::info!(
+        "aggregate",
+        "subtree {span_lo}..{span_hi} listening on {addr}, upstream {upstream}"
+    );
+    let mut children: Vec<(u32, TcpTransport)> = Vec::with_capacity(members.len());
+    for _ in 0..members.len() {
+        let (stream, peer) = listener.accept().context("accept")?;
+        let mut t = TcpTransport::new(stream)?;
+        let id = match t.recv()? {
+            Message::Join { client_id, .. } => client_id,
+            other => anyhow::bail!("expected Join, got {other:?}"),
+        };
+        ensure!(
+            (span_lo..span_hi).contains(&(id as usize)),
+            "leaf id {id} outside subtree {span_lo}..{span_hi} (from {peer})"
+        );
+        ensure!(
+            children.iter().all(|&(c, _)| c != id),
+            "duplicate Join for leaf {id} (second connection from {peer})"
+        );
+        t.send(&Message::Welcome {
+            client_id: id,
+            config_json: config_json.clone(),
+            round: None,
+        })?;
+        children.push((id, t));
+    }
+    children.sort_by_key(|&(id, _)| id);
+    // Ready phase: collect each leaf's shard size; their sum is the
+    // subtree's aggregation weight numerator upstream.
+    let mut total: u64 = 0;
+    for (id, t) in children.iter_mut() {
+        match t.recv()? {
+            Message::Join { client_id, num_samples } => {
+                ensure!(client_id == *id, "leaf {id} sent a ready Join for {client_id}");
+                let s = num_samples
+                    .with_context(|| format!("leaf {id} did not report its shard size"))?;
+                total += s as u64;
+            }
+            other => anyhow::bail!("expected ready Join from leaf {id}, got {other:?}"),
+        }
+    }
+    ensure!(total > 0 && total <= u32::MAX as u64, "subtree sample total {total} out of range");
+    up.send(&Message::Join { client_id: lo, num_samples: Some(total as u32) })?;
+    crate::info!("aggregate", "subtree {span_lo}..{span_hi} ready ({total} samples)");
+
+    loop {
+        match up.recv()? {
+            Message::Broadcast { round, params, losses, cohort } => {
+                // Our members this round: the broadcast's leaf cohort
+                // intersected with the span (a missing cohort field —
+                // a legacy flat server — means every leaf).
+                let sel: Vec<u32> = match &cohort {
+                    Some(c) => {
+                        c.iter().copied().filter(|&id| members.contains(&id)).collect()
+                    }
+                    None => members.clone(),
+                };
+                ensure!(
+                    !sel.is_empty(),
+                    "round {round} broadcast reached subtree {span_lo}..{span_hi} with no \
+                     cohort member in its span"
+                );
+                let relay = Message::Broadcast { round, params, losses, cohort };
+                let encoded = relay.encode();
+                // Relay first, then collect: members compute in parallel.
+                for &id in &sel {
+                    children[(id - lo) as usize].1.send_encoded(&encoded)?;
+                }
+                let mut updates: Vec<Update> = Vec::with_capacity(sel.len());
+                for &id in &sel {
+                    let u = match children[(id - lo) as usize].1.recv()? {
+                        Message::Update(u) => u,
+                        other => anyhow::bail!("expected Update from leaf {id}, got {other:?}"),
+                    };
+                    ensure!(
+                        u.client_id == id,
+                        "leaf {id} sent an update for client {}",
+                        u.client_id
+                    );
+                    updates.push(u);
+                }
+                let p = codec::fold_partial(&model.mm, round, lo, &updates, mode, 1)?;
+                up.send(&Message::Partial(p))?;
+            }
+            Message::Shutdown => {
+                for (_, t) in children.iter_mut() {
+                    let _ = t.send(&Message::Shutdown);
+                }
+                break;
+            }
+            other => anyhow::bail!("unexpected message {other:?}"),
+        }
+    }
+    crate::info!("aggregate", "subtree {span_lo}..{span_hi} done");
     Ok(())
 }
 

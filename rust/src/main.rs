@@ -1,10 +1,11 @@
 //! `feddq` — the FedDQ federated-learning launcher.
 //!
 //! Subcommands:
-//!   train    single-process federated run (simulated clients)
-//!   serve    federated server, accepts TCP workers
-//!   worker   one federated client process
-//!   info     inspect the artifact manifest
+//!   train      single-process federated run (simulated clients)
+//!   serve      federated server, accepts TCP workers or aggregators
+//!   worker     one federated client process
+//!   aggregate  one intermediate aggregator (tree topology)
+//!   info       inspect the artifact manifest
 //!
 //! Run `feddq <cmd> --help` (or no args) for flags.
 
@@ -38,6 +39,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
+        "aggregate" => cmd_aggregate(&args),
         "info" => cmd_info(&args),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     }
@@ -132,6 +134,22 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .to_string();
     args.finish()?;
     topology::worker(&addr, id, &artifacts)
+}
+
+fn cmd_aggregate(args: &Args) -> Result<()> {
+    let upstream = args.get_or("upstream", "127.0.0.1:7177").to_string();
+    let addr = args.get_or("addr", "127.0.0.1:7178").to_string();
+    let id: u32 = args
+        .get_parse("id")?
+        .ok_or_else(|| anyhow::anyhow!("aggregate needs --id (the subtree's lowest leaf id)"))?;
+    let fanout: u32 = args
+        .get_parse("fanout")?
+        .ok_or_else(|| anyhow::anyhow!("aggregate needs --fanout (must match the run's)"))?;
+    let artifacts = args
+        .get_or("artifacts", &Runtime::default_artifacts_dir())
+        .to_string();
+    args.finish()?;
+    topology::aggregate(&upstream, &addr, id, fanout, &artifacts)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

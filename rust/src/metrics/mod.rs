@@ -75,6 +75,17 @@ pub struct RoundRecord {
     /// bound (simulated overshoots plus real too-stale socket replies;
     /// always 0 in strict mode).
     pub stale_dropped: u32,
+    /// Aggregation-tree depth of the fold that produced this round's
+    /// model: 0 for the flat topology (leaves straight into the
+    /// server), 2 with one aggregator tier between leaves and server.
+    /// A TCP tree run and its in-process virtual-grouping twin report
+    /// the same depth.
+    pub agg_depth: u32,
+    /// Resident server-side per-client state in bytes at the end of
+    /// the round: the client arena (samples/flags/EWMA rows) plus, in
+    /// in-process runs with `--ef-bits`, the banked residual codes.
+    /// 0 in legacy reports that predate the arena.
+    pub client_state_bytes: u64,
 }
 
 impl RoundRecord {
@@ -115,6 +126,11 @@ impl RoundRecord {
             ("rejoined", Json::from(self.rejoined)),
             ("stale_folded", Json::from(self.stale_folded)),
             ("stale_dropped", Json::from(self.stale_dropped)),
+            ("agg_depth", Json::from(self.agg_depth)),
+            // decimal string like the bit counters: a million-client
+            // arena's byte count is small today, but the schema should
+            // not bake in a 2^53 ceiling
+            ("client_state_bytes", u64_json(self.client_state_bytes)),
         ])
     }
 
@@ -197,6 +213,16 @@ impl RoundRecord {
                 None => 0,
                 Some(v) => v.as_usize().context("round: stale_dropped")? as u32,
             },
+            agg_depth: match j.get("agg_depth") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: agg_depth")? as u32,
+            },
+            client_state_bytes: match j.get("client_state_bytes") {
+                None => 0,
+                Some(v) => {
+                    json_u64(v).context("round: client_state_bytes missing or inexact")?
+                }
+            },
         })
     }
 }
@@ -247,11 +273,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -270,7 +296,9 @@ impl RunReport {
                 r.failed,
                 r.rejoined,
                 r.stale_folded,
-                r.stale_dropped
+                r.stale_dropped,
+                r.agg_depth,
+                r.client_state_bytes
             ));
         }
         out
@@ -386,6 +414,8 @@ mod tests {
             rejoined: 1,
             stale_folded: 2,
             stale_dropped: 1,
+            agg_depth: 2,
+            client_state_bytes: 160,
         }
     }
 
@@ -465,6 +495,8 @@ mod tests {
         assert_eq!(a.rejoined, b.rejoined);
         assert_eq!(a.stale_folded, b.stale_folded);
         assert_eq!(a.stale_dropped, b.stale_dropped);
+        assert_eq!(a.agg_depth, b.agg_depth);
+        assert_eq!(a.client_state_bytes, b.client_state_bytes);
     }
 
     #[test]
@@ -507,6 +539,8 @@ mod tests {
         assert_eq!(row.get("rejoined").and_then(Json::as_usize), Some(1));
         assert_eq!(row.get("stale_folded").and_then(Json::as_usize), Some(2));
         assert_eq!(row.get("stale_dropped").and_then(Json::as_usize), Some(1));
+        assert_eq!(row.get("agg_depth").and_then(Json::as_usize), Some(2));
+        assert_eq!(row.get("client_state_bytes").unwrap(), &Json::Str("160".into()));
     }
 
     #[test]
@@ -535,6 +569,8 @@ mod tests {
                     r.remove("rejoined");
                     r.remove("stale_folded");
                     r.remove("stale_dropped");
+                    r.remove("agg_depth");
+                    r.remove("client_state_bytes");
                 }
             }
         }
@@ -549,6 +585,8 @@ mod tests {
         assert_eq!(back.rounds[0].rejoined, 0);
         assert_eq!(back.rounds[0].stale_folded, 0);
         assert_eq!(back.rounds[0].stale_dropped, 0);
+        assert_eq!(back.rounds[0].agg_depth, 0);
+        assert_eq!(back.rounds[0].client_state_bytes, 0);
         assert_eq!(back.rounds[0].wall_secs, 0.5, "wall_secs survives");
         // present-but-mistyped fields still error (corruption, not legacy)
         let mut bad = rep.to_json();
@@ -574,7 +612,7 @@ mod tests {
         let header = csv.lines().next().unwrap();
         assert!(
             header.ends_with(
-                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped"
+                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes"
             ),
             "{header}"
         );
@@ -587,6 +625,8 @@ mod tests {
         assert_eq!(cols[16], "1");
         assert_eq!(cols[17], "2");
         assert_eq!(cols[18], "1");
+        assert_eq!(cols[19], "2");
+        assert_eq!(cols[20], "160");
     }
 
     #[test]

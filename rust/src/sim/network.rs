@@ -155,6 +155,10 @@ mod tests {
             sim_makespan_secs: 0.0,
             failed: 0,
             rejoined: 0,
+            stale_folded: 0,
+            stale_dropped: 0,
+            agg_depth: 0,
+            client_state_bytes: 0,
         }
     }
 

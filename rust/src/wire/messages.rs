@@ -112,11 +112,107 @@ pub enum Message {
         /// Global (initial, previous-round) training loss; `None`
         /// before round 1.
         losses: Option<(f32, f32)>,
+        /// This round's leaf cohort (ascending client ids), present only
+        /// in tree topologies so an intermediate aggregator knows which
+        /// of its children to relay to and wait for.  A trailing
+        /// optional field like `Join::num_samples`: `None` encodes the
+        /// legacy frame byte for byte, and leaf workers ignore it.
+        cohort: Option<Vec<u32>>,
     },
     /// Client -> server: the quantized update.
     Update(Update),
     /// Server -> client: training is over.
     Shutdown,
+    /// Aggregator -> server (or upstream aggregator): one subtree's
+    /// pre-folded contribution to the round (tree topology).
+    Partial(PartialAggregate),
+}
+
+/// A subtree's pre-folded weighted accumulator plus the bookkeeping the
+/// server needs to treat it exactly like a (pseudo-)client update: the
+/// member-id set with per-member sample counts (aggregation weights and
+/// the fold-overlap plan), the subtree-weighted mean training loss, and
+/// a telemetry tail (tree depth, summed leaf uplink wire bits).
+///
+/// The accumulator is `sum_i (s_i / S) * dequant(delta_i)` over the
+/// subtree's members, i.e. already normalized *within* the subtree; the
+/// upstream fold then weights the whole message by `S / T` (subtree
+/// samples over round total), which the existing `fold_range` kernel
+/// applies unchanged through [`crate::coordinator::codec`]'s
+/// pseudo-update conversion.
+///
+/// The telemetry tail is a trailing optional region (like
+/// `Join::num_samples`): `None` encodes the shorter legacy frame and
+/// decoders accept both, so the frame can grow again without breaking
+/// deployed aggregators.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartialAggregate {
+    /// Round this partial answers.
+    pub round: u32,
+    /// Subtree root id: the lowest leaf id in the aggregator's span.
+    /// Folds upstream are keyed by this id (sorted-key fold order).
+    pub agg_id: u32,
+    /// Subtree-weighted mean training loss (`sum_i (s_i / S) * loss_i`).
+    pub train_loss: f32,
+    /// Member leaf ids, strictly ascending.
+    pub members: Vec<u32>,
+    /// Per-member sample counts, parallel to `members`.
+    pub samples: Vec<u32>,
+    /// The pre-folded weighted accumulator (length `d`).
+    pub acc: Vec<f32>,
+    /// Optional telemetry tail: `(tree depth below the receiver, summed
+    /// leaf uplink wire bits)`.  `None` on legacy frames.
+    pub telemetry: Option<(u32, u64)>,
+}
+
+impl PartialAggregate {
+    /// Aggregation tiers below the receiver (1 = folded leaf updates
+    /// directly); legacy frames without the tail report 1.
+    pub fn depth(&self) -> u32 {
+        self.telemetry.map(|(d, _)| d).unwrap_or(1)
+    }
+
+    /// Summed leaf uplink wire bits of the members' original updates
+    /// (the paper's communication ledger); 0 on legacy frames.
+    pub fn wire_bits(&self) -> u64 {
+        self.telemetry.map(|(_, b)| b).unwrap_or(0)
+    }
+
+    /// Total subtree sample mass (the upstream aggregation weight
+    /// numerator).
+    pub fn total_samples(&self) -> u64 {
+        self.samples.iter().map(|&s| s as u64).sum()
+    }
+
+    /// The server-side bookkeeping view (everything but the
+    /// accumulator), harvested by the receive path for telemetry and
+    /// the client arena.
+    pub fn meta(&self) -> PartialMeta {
+        PartialMeta {
+            agg_id: self.agg_id,
+            depth: self.depth(),
+            wire_bits: self.wire_bits(),
+            members: self.members.clone(),
+            samples: self.samples.clone(),
+        }
+    }
+}
+
+/// The non-accumulator part of a [`PartialAggregate`]: what the server
+/// keeps after converting the partial into a pseudo-update (telemetry
+/// partials plus the member registry for the client arena).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartialMeta {
+    /// Subtree root id.
+    pub agg_id: u32,
+    /// Aggregation tiers below the server.
+    pub depth: u32,
+    /// Summed leaf uplink wire bits.
+    pub wire_bits: u64,
+    /// Member leaf ids, ascending.
+    pub members: Vec<u32>,
+    /// Per-member sample counts, parallel to `members`.
+    pub samples: Vec<u32>,
 }
 
 /// Encoded size of an [`Update`]'s body (without the message tag byte):
@@ -130,6 +226,7 @@ const TAG_WELCOME: u8 = 2;
 const TAG_BROADCAST: u8 = 3;
 const TAG_UPDATE: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_PARTIAL: u8 = 6;
 
 struct Writer {
     buf: Vec<u8>,
@@ -148,6 +245,9 @@ impl Writer {
     fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
     fn f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -162,6 +262,12 @@ impl Writer {
         self.u32(v.len() as u32);
         // bulk copy — this is the downlink hot path
         super::extend_f32_le(&mut self.buf, v);
+    }
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
     }
 }
 
@@ -191,6 +297,9 @@ impl<'a> Reader<'a> {
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -207,6 +316,18 @@ impl<'a> Reader<'a> {
         let mut out = Vec::with_capacity(n);
         for c in raw.chunks_exact(4) {
             out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        // take() before with_capacity: a corrupt count in a tiny frame
+        // fails on the read, never reserves memory first (same OOM
+        // hardening as the Update segment loop).
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
         }
         Ok(out)
     }
@@ -240,7 +361,7 @@ impl Message {
                     w.u32(*m);
                 }
             }
-            Message::Broadcast { round, params, losses } => {
+            Message::Broadcast { round, params, losses, cohort } => {
                 w.u8(TAG_BROADCAST);
                 w.u32(*round);
                 match losses {
@@ -252,6 +373,10 @@ impl Message {
                     }
                 }
                 w.f32s(params);
+                // present-by-length, like Join::num_samples
+                if let Some(c) = cohort {
+                    w.u32s(c);
+                }
             }
             Message::Update(u) => {
                 w.u8(TAG_UPDATE);
@@ -269,6 +394,20 @@ impl Message {
                 w.bytes(&u.payload);
             }
             Message::Shutdown => w.u8(TAG_SHUTDOWN),
+            Message::Partial(p) => {
+                w.u8(TAG_PARTIAL);
+                w.u32(p.round);
+                w.u32(p.agg_id);
+                w.f32(p.train_loss);
+                w.u32s(&p.members);
+                w.u32s(&p.samples);
+                w.f32s(&p.acc);
+                // trailing-optional telemetry tail
+                if let Some((depth, wire_bits)) = p.telemetry {
+                    w.u32(depth);
+                    w.u64(wire_bits);
+                }
+            }
         }
         w.buf
     }
@@ -285,15 +424,27 @@ impl Message {
             Message::Welcome { config_json, round, .. } => {
                 1 + 4 + 4 + config_json.len() + if round.is_some() { 4 } else { 0 }
             }
-            Message::Broadcast { params, losses, .. } => {
+            Message::Broadcast { params, losses, cohort, .. } => {
                 let losses_len = match losses {
                     None => 1,
                     Some(_) => 1 + 4 + 4,
                 };
-                1 + 4 + losses_len + 4 + params.len() * 4
+                let cohort_len = match cohort {
+                    None => 0,
+                    Some(c) => 4 + c.len() * 4,
+                };
+                1 + 4 + losses_len + 4 + params.len() * 4 + cohort_len
             }
             Message::Update(u) => 1 + update_encoded_len(u),
             Message::Shutdown => 1,
+            Message::Partial(p) => {
+                let tail = if p.telemetry.is_some() { 4 + 8 } else { 0 };
+                1 + 4 + 4 + 4
+                    + (4 + p.members.len() * 4)
+                    + (4 + p.samples.len() * 4)
+                    + (4 + p.acc.len() * 4)
+                    + tail
+            }
         }
     }
 
@@ -319,7 +470,10 @@ impl Message {
                     1 => Some((r.f32()?, r.f32()?)),
                     t => bail!("bad losses flag {t}"),
                 };
-                Message::Broadcast { round, params: r.f32s()?.into(), losses }
+                let params: Arc<[f32]> = r.f32s()?.into();
+                // version-tolerant: old frames end after the params
+                let cohort = if r.pos < r.buf.len() { Some(r.u32s()?) } else { None };
+                Message::Broadcast { round, params, losses, cohort }
             }
             TAG_UPDATE => {
                 let round = r.u32()?;
@@ -354,6 +508,43 @@ impl Message {
                 })
             }
             TAG_SHUTDOWN => Message::Shutdown,
+            TAG_PARTIAL => {
+                let round = r.u32()?;
+                let agg_id = r.u32()?;
+                let train_loss = r.f32()?;
+                let members = r.u32s()?;
+                if members.len() > 1_000_000 {
+                    bail!("absurd member count {}", members.len());
+                }
+                if !members.windows(2).all(|w| w[0] < w[1]) {
+                    bail!("partial members not strictly ascending");
+                }
+                let samples = r.u32s()?;
+                if samples.len() != members.len() {
+                    bail!(
+                        "partial samples/members length mismatch: {} vs {}",
+                        samples.len(),
+                        members.len()
+                    );
+                }
+                let acc = r.f32s()?;
+                // version-tolerant: legacy frames end after the
+                // accumulator; a present tail must be complete.
+                let telemetry = if r.pos < r.buf.len() {
+                    Some((r.u32()?, r.u64()?))
+                } else {
+                    None
+                };
+                Message::Partial(PartialAggregate {
+                    round,
+                    agg_id,
+                    train_loss,
+                    members,
+                    samples,
+                    acc,
+                    telemetry,
+                })
+            }
             t => bail!("unknown message tag {t}"),
         };
         r.done()?;
@@ -390,12 +581,44 @@ mod tests {
             round: 3,
             params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE].into(),
             losses: None,
+            cohort: None,
         });
         roundtrip(&Message::Broadcast {
             round: 4,
             params: vec![0.5; 3].into(),
             losses: Some((2.3, 0.7)),
+            cohort: None,
         });
+        roundtrip(&Message::Broadcast {
+            round: 5,
+            params: vec![0.5; 3].into(),
+            losses: Some((2.3, 0.7)),
+            cohort: Some(vec![0, 3, 7, 11]),
+        });
+        roundtrip(&Message::Broadcast {
+            round: 6,
+            params: vec![0.5; 2].into(),
+            losses: None,
+            cohort: Some(Vec::new()),
+        });
+        roundtrip(&Message::Partial(PartialAggregate {
+            round: 3,
+            agg_id: 4,
+            train_loss: 1.5,
+            members: vec![4, 5, 6, 7],
+            samples: vec![100, 200, 50, 75],
+            acc: vec![0.25, -1.0, 3.5],
+            telemetry: Some((1, u64::MAX - 7)),
+        }));
+        roundtrip(&Message::Partial(PartialAggregate {
+            round: 0,
+            agg_id: 0,
+            train_loss: 0.0,
+            members: vec![0],
+            samples: vec![1],
+            acc: Vec::new(),
+            telemetry: None,
+        }));
         roundtrip(&Message::Update(Update {
             round: 3,
             client_id: 1,
@@ -456,7 +679,9 @@ mod tests {
 
     #[test]
     fn rejects_truncation_and_trailing() {
-        let bytes = Message::Broadcast { round: 1, params: vec![1.0; 8].into(), losses: None }.encode();
+        let bytes =
+            Message::Broadcast { round: 1, params: vec![1.0; 8].into(), losses: None, cohort: None }
+                .encode();
         assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
         let mut extended = bytes.clone();
         extended.push(0);
@@ -471,8 +696,37 @@ mod tests {
             Message::Join { client_id: 7, num_samples: Some(600) },
             Message::Welcome { client_id: 7, config_json: r#"{"model":"mlp"}"#.into(), round: None },
             Message::Welcome { client_id: 7, config_json: "{}".into(), round: Some(3) },
-            Message::Broadcast { round: 3, params: vec![1.0; 13].into(), losses: None },
-            Message::Broadcast { round: 4, params: vec![0.5; 3].into(), losses: Some((2.3, 0.7)) },
+            Message::Broadcast { round: 3, params: vec![1.0; 13].into(), losses: None, cohort: None },
+            Message::Broadcast {
+                round: 4,
+                params: vec![0.5; 3].into(),
+                losses: Some((2.3, 0.7)),
+                cohort: None,
+            },
+            Message::Broadcast {
+                round: 5,
+                params: vec![0.5; 3].into(),
+                losses: None,
+                cohort: Some(vec![1, 2, 9]),
+            },
+            Message::Partial(PartialAggregate {
+                round: 2,
+                agg_id: 8,
+                train_loss: 0.5,
+                members: vec![8, 9],
+                samples: vec![10, 20],
+                acc: vec![1.0; 7],
+                telemetry: Some((1, 12345)),
+            }),
+            Message::Partial(PartialAggregate {
+                round: 2,
+                agg_id: 8,
+                train_loss: 0.5,
+                members: vec![8, 9],
+                samples: vec![10, 20],
+                acc: vec![1.0; 7],
+                telemetry: None,
+            }),
             Message::Shutdown,
         ];
         for m in &msgs {
@@ -585,6 +839,203 @@ mod tests {
             let n = g.size(0, 300);
             let soup = g.vec_of(n, |g| g.rng.next_u32() as u8);
             let _ = Message::decode(&soup);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn broadcast_decodes_legacy_and_cohort_frames() {
+        // A pre-cohort sender emits tag + round + losses flag + params:
+        // the new decoder must accept it as cohort None, and a None
+        // cohort must encode back to that same legacy layout.
+        let legacy = {
+            let mut b = vec![3u8];
+            b.extend_from_slice(&9u32.to_le_bytes());
+            b.push(0); // losses flag
+            b.extend_from_slice(&2u32.to_le_bytes());
+            b.extend_from_slice(&1.0f32.to_le_bytes());
+            b.extend_from_slice(&2.0f32.to_le_bytes());
+            b
+        };
+        let none = Message::Broadcast {
+            round: 9,
+            params: vec![1.0, 2.0].into(),
+            losses: None,
+            cohort: None,
+        };
+        assert_eq!(Message::decode(&legacy).unwrap(), none);
+        assert_eq!(none.encode(), legacy);
+        // The extended frame appends a length-prefixed id list.
+        let mut extended = legacy.clone();
+        extended.extend_from_slice(&2u32.to_le_bytes());
+        extended.extend_from_slice(&3u32.to_le_bytes());
+        extended.extend_from_slice(&5u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&extended).unwrap(),
+            Message::Broadcast {
+                round: 9,
+                params: vec![1.0, 2.0].into(),
+                losses: None,
+                cohort: Some(vec![3, 5]),
+            }
+        );
+        // A half-written cohort is rejected, not misread.
+        assert!(Message::decode(&extended[..extended.len() - 2]).is_err());
+    }
+
+    fn gen_partial(g: &mut Gen) -> PartialAggregate {
+        let n = g.size(1, 16);
+        let mut members: Vec<u32> = g.vec_of(n, |g| g.rng.next_u32() >> 8);
+        members.sort_unstable();
+        members.dedup();
+        let samples = g.vec_of(members.len(), |g| g.rng.next_u32());
+        let d = g.size(0, 64);
+        PartialAggregate {
+            round: g.rng.next_u32(),
+            agg_id: members[0],
+            train_loss: g.f32_wide(),
+            members,
+            samples,
+            acc: g.vec_of(d, |g| g.f32_wide()),
+            telemetry: if g.int(0, 1) == 1 {
+                Some((g.int(0, 7) as u32, g.rng.next_u32() as u64))
+            } else {
+                None
+            },
+        }
+    }
+
+    #[test]
+    fn partial_decodes_legacy_frames_without_telemetry_tail() {
+        // The telemetry tail is trailing-optional: a frame that ends
+        // after the accumulator decodes with tail defaults (depth 1,
+        // wire_bits 0), and a tail-less partial encodes back to exactly
+        // that shorter layout.
+        let p = PartialAggregate {
+            round: 4,
+            agg_id: 2,
+            train_loss: 1.0,
+            members: vec![2, 3],
+            samples: vec![5, 7],
+            acc: vec![0.5, 0.25],
+            telemetry: None,
+        };
+        let with_tail = Message::Partial(PartialAggregate {
+            telemetry: Some((1, 99)),
+            ..p.clone()
+        })
+        .encode();
+        let legacy = Message::Partial(p.clone()).encode();
+        assert_eq!(legacy.len() + 12, with_tail.len());
+        assert_eq!(&with_tail[..legacy.len()], &legacy[..], "tail appends, never reorders");
+        match Message::decode(&legacy).unwrap() {
+            Message::Partial(back) => {
+                assert_eq!(back, p);
+                assert_eq!(back.depth(), 1, "legacy depth default");
+                assert_eq!(back.wire_bits(), 0, "legacy wire-bits default");
+            }
+            other => panic!("decoded as {other:?}"),
+        }
+        // A half-written tail is rejected, not misread.
+        assert!(Message::decode(&with_tail[..legacy.len() + 4]).is_err());
+        assert!(Message::decode(&with_tail[..with_tail.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn partial_rejects_malformed_member_sets() {
+        let good = PartialAggregate {
+            round: 1,
+            agg_id: 0,
+            train_loss: 0.0,
+            members: vec![0, 1],
+            samples: vec![3, 4],
+            acc: vec![1.0],
+            telemetry: Some((1, 8)),
+        };
+        // unsorted members
+        let mut bad = good.clone();
+        bad.members = vec![1, 0];
+        assert!(Message::decode(&Message::Partial(bad).encode()).is_err());
+        // duplicate members
+        let mut bad = good.clone();
+        bad.members = vec![1, 1];
+        assert!(Message::decode(&Message::Partial(bad).encode()).is_err());
+        // samples/members length mismatch
+        let mut bad = good.clone();
+        bad.samples = vec![3];
+        assert!(Message::decode(&Message::Partial(bad).encode()).is_err());
+        assert!(Message::decode(&Message::Partial(good).encode()).is_ok());
+    }
+
+    #[test]
+    fn prop_partial_roundtrip_and_encoded_len() {
+        check("message-partial-roundtrip", 100, |g: &mut Gen| {
+            let m = Message::Partial(gen_partial(g));
+            if m.encoded_len() != m.encode().len() {
+                return Err("encoded_len diverged from encode".into());
+            }
+            let back = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
+            if back != m {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_truncated_partial_is_an_error_never_a_panic() {
+        // Every cut strictly before the trailing-optional telemetry
+        // tail must decode to Err (a cut exactly at the tail boundary
+        // legitimately decodes as the legacy layout, like Join/Welcome
+        // prefixes); no cut may panic or allocate absurdly.
+        check("message-truncated-partial", 100, |g: &mut Gen| {
+            let mut p = gen_partial(g);
+            p.telemetry = None;
+            let bytes = Message::Partial(p).encode();
+            let cut = g.size(0, bytes.len() - 1);
+            match Message::decode(&bytes[..cut]) {
+                Err(_) => Ok(()),
+                Ok(m) => Err(format!("truncated partial decoded as {m:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_partial_bit_flips_never_panic() {
+        // A flipped bit may still decode (float/payload bytes carry no
+        // structure) but must never panic, and a flip in a length field
+        // must not cause a huge allocation (counts are bounded by the
+        // remaining bytes before any reserve).
+        check("message-partial-bit-flip", 200, |g: &mut Gen| {
+            let mut bytes = Message::Partial(gen_partial(g)).encode();
+            let bit = g.size(0, bytes.len() * 8 - 1);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            let _ = Message::decode(&bytes);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_partial_and_legacy_update_streams_interleave() {
+        // Version tolerance on the receive path: one decoder must
+        // accept a stream mixing legacy leaf Updates and tree
+        // PartialAggregates, frame by frame, with no mode switch.
+        check("message-partial-update-interleave", 50, |g: &mut Gen| {
+            let frames: Vec<Message> = (0..6)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        gen_update(g)
+                    } else {
+                        Message::Partial(gen_partial(g))
+                    }
+                })
+                .collect();
+            for m in &frames {
+                let back = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
+                if back != *m {
+                    return Err("interleaved stream frame mismatch".into());
+                }
+            }
             Ok(())
         });
     }

@@ -285,7 +285,8 @@ mod tests {
     #[test]
     fn in_proc_roundtrip_and_accounting() {
         let (mut server, mut client) = in_proc_pair();
-        let msg = Message::Broadcast { round: 1, params: vec![0.5; 100].into(), losses: None };
+        let msg =
+            Message::Broadcast { round: 1, params: vec![0.5; 100].into(), losses: None, cohort: None };
         server.send(&msg).unwrap();
         let got = client.recv().unwrap();
         assert_eq!(got, msg);
@@ -295,7 +296,8 @@ mod tests {
 
     #[test]
     fn send_encoded_matches_send() {
-        let msg = Message::Broadcast { round: 2, params: vec![0.25; 64].into(), losses: None };
+        let msg =
+            Message::Broadcast { round: 2, params: vec![0.25; 64].into(), losses: None, cohort: None };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();
         let via_send = a.bytes_sent();
@@ -328,7 +330,12 @@ mod tests {
 
     #[test]
     fn in_proc_and_tcp_account_identically() {
-        let msg = Message::Broadcast { round: 9, params: vec![1.0; 257].into(), losses: Some((2.3, 1.1)) };
+        let msg = Message::Broadcast {
+            round: 9,
+            params: vec![1.0; 257].into(),
+            losses: Some((2.3, 1.1)),
+            cohort: None,
+        };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();
         b.recv().unwrap();

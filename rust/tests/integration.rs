@@ -438,6 +438,168 @@ fn tcp_run_survives_a_worker_crash_and_rejoin() {
     assert!(rejoined >= 1, "the restarted worker must be recorded as rejoined, got {rejoined}");
 }
 
+/// Spawn a full aggregation tree for `serve_addr`: one aggregator
+/// thread per subtree root (`0, f, 2f, ...` over `n` leaves) listening
+/// on consecutive ports from `agg_base_port`, plus one worker thread
+/// per leaf connecting to its subtree's aggregator.  Returns the join
+/// handles (aggregators first, then workers).
+fn spawn_tree(
+    serve_addr: &str,
+    agg_base_port: u16,
+    n: u32,
+    fanout: u32,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let mut handles = Vec::new();
+    for (t, lo) in (0..n).step_by(fanout as usize).enumerate() {
+        let upstream = serve_addr.to_string();
+        let addr = format!("127.0.0.1:{}", agg_base_port + t as u16);
+        handles.push(std::thread::spawn(move || {
+            topology::aggregate(&upstream, &addr, lo, fanout, "artifacts")
+                .unwrap_or_else(|e| panic!("aggregator {lo}: {e:#}"))
+        }));
+    }
+    for id in 0..n {
+        let addr = format!("127.0.0.1:{}", agg_base_port + (id / fanout) as u16);
+        handles.push(std::thread::spawn(move || {
+            topology::worker(&addr, id, "artifacts")
+                .unwrap_or_else(|e| panic!("worker {id}: {e:#}"))
+        }));
+    }
+    handles
+}
+
+#[test]
+fn tcp_tree_topology_matches_virtual_grouped_local_run() {
+    // A real two-tier tree (10 leaves -> 5 aggregator processes ->
+    // server) must be bit-identical — params hash included — to the
+    // in-process session with the same fanout, whose server applies
+    // the identical grouping virtually through codec::fold_partial.
+    // The grouping *defines* the canonical fold order, so the wire and
+    // virtual paths fold the exact same f32 sequence.
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 3;
+        cfg.round.topology.fanout = 2;
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17879";
+    let tree = spawn_tree(addr, 17901, 10, 2);
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+    assert!(report.label.ends_with("-tcp-tree"), "{}", report.label);
+    assert_eq!(report.rounds.len(), 3);
+
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, 10, "round {}", a.round);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.agg_depth, 2, "one aggregator tier above the leaves");
+        assert_eq!(a.agg_depth, b.agg_depth);
+        assert_eq!(a.train_loss, b.train_loss, "tree vs virtual train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tree vs virtual bits r{}", a.round);
+        assert_eq!(a.test_accuracy.is_nan(), b.test_accuracy.is_nan());
+        if !a.test_accuracy.is_nan() {
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+        }
+        // both sides learn the same leaf counts into the arena
+        assert!(a.client_state_bytes > 0);
+        assert_eq!(a.client_state_bytes, b.client_state_bytes);
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tree vs virtual params");
+
+    // The leaf ledger charges real client uplinks, not the fp32
+    // pseudo-update frames: the flat run's bit ledger must agree
+    // round for round even though its fold order (and hence its
+    // params hash) legitimately differs.
+    let mut cfg3 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg3.rounds = 3;
+    let flat = Session::new(cfg3).unwrap().run().unwrap();
+    assert_eq!(report.rounds[0].uplink_bits, flat.rounds[0].uplink_bits);
+    assert_eq!(flat.rounds[0].agg_depth, 0, "flat topology reports depth 0");
+}
+
+#[test]
+fn tcp_tree_composes_with_sampling_quorum_staleness_and_reference_codec() {
+    // The whole RoundPolicy surface at once, over the tree: sampled
+    // leaf cohorts (only subtrees owning selected leaves hear the
+    // broadcast), tolerant receive (quorum + timeout + staleness
+    // armed), and the scalar reference codec in the folds — still
+    // bit-identical to the virtually-grouped in-process run.
+    use feddq::config::CodecMode;
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 3;
+        cfg.round.topology.fanout = 2;
+        cfg.round.cohort.participation = 0.5;
+        cfg.round.tolerance.quorum = 0.5;
+        cfg.round.tolerance.round_timeout = Some(30.0);
+        cfg.round.tolerance.staleness = 2;
+        cfg.round.pipeline.codec = CodecMode::Reference;
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17907";
+    let tree = spawn_tree(addr, 17911, 10, 2);
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, 5, "round {}: half the 10 leaves", a.round);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.failed, 0);
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.stale_folded, b.stale_folded);
+        assert_eq!(a.stale_dropped, b.stale_dropped);
+        assert_eq!(a.agg_depth, 2);
+        assert_eq!(a.agg_depth, b.agg_depth);
+        assert_eq!(a.train_loss, b.train_loss, "tree vs virtual train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tree vs virtual bits r{}", a.round);
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tree vs virtual params");
+}
+
+#[test]
+fn banked_ef_session_matches_fp32_banking_at_32_bits_of_headroom() {
+    // --ef-bits re-quantizes the EF residual between rounds.  At 8
+    // bits the trajectory must differ from fp32 banking (the banking
+    // loss is real) yet stay finite; with the knob off (ef_bits = 0)
+    // the run is bit-for-bit the historical EF run.
+    let mut cfg = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
+    cfg.error_feedback = true;
+    cfg.ef_bits = 8;
+    cfg.rounds = 5;
+    let banked = Session::new(cfg).unwrap().run().unwrap();
+    assert_eq!(banked.rounds.len(), 5);
+    for r in &banked.rounds {
+        assert!(r.train_loss.is_finite());
+    }
+    let mut cfg2 = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
+    cfg2.error_feedback = true;
+    cfg2.rounds = 5;
+    let fp32 = Session::new(cfg2).unwrap().run().unwrap();
+    assert_ne!(
+        banked.rounds.last().unwrap().train_loss,
+        fp32.rounds.last().unwrap().train_loss,
+        "8-bit banking must leave a (bounded) mark on the trajectory"
+    );
+    // ef_bits = 0 is the identity: same struct, same run
+    let mut cfg3 = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
+    cfg3.error_feedback = true;
+    cfg3.ef_bits = 0;
+    cfg3.rounds = 5;
+    let off = Session::new(cfg3).unwrap().run().unwrap();
+    assert_eq!(off.params_hash, fp32.params_hash, "ef_bits 0 must change nothing");
+}
+
 #[test]
 fn error_feedback_session_runs_and_stays_finite() {
     let mut cfg = tiny_cfg(PolicyConfig::Fixed { bits: 2 });
