@@ -5,10 +5,12 @@
 //! dense `ewma: Vec<f64>`, ad-hoc arrival lists).  At the ROADMAP's
 //! million-client scale those structures dominate resident memory and
 //! cache behavior, so everything the server must remember about a
-//! client between rounds now lives in one dense [`ClientRow`] — 16
+//! client between rounds now lives in one dense [`ClientRow`] — 24
 //! bytes per client, lazily grown, shared between the [`Server`] fold
 //! path and the [`RoundScheduler`] dispatch path behind an
-//! `Arc<Mutex<..>>`.
+//! `Arc<Mutex<..>>`.  That includes the per-client uplink/downlink
+//! byte ledger, which used to live in O(n) per-handle counters at the
+//! root.
 //!
 //! The arena stores *metadata only* (sample counts, latency EWMAs);
 //! model-sized state (EF residuals) lives client-side and is banked
@@ -17,8 +19,8 @@
 //! [`Server`]: super::server::Server
 //! [`RoundScheduler`]: super::sched::RoundScheduler
 
-/// One client's resident server-side state.  Kept to 16 bytes so a
-/// million clients cost 16 MB — vs. ~48+ bytes per entry for the old
+/// One client's resident server-side state.  Kept to 24 bytes so a
+/// million clients cost 24 MB — vs. ~48+ bytes per entry for the old
 /// `BTreeMap<u32, u32>` + `Vec<f64>` + allocator overhead spread.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ClientRow {
@@ -30,6 +32,10 @@ pub struct ClientRow {
     /// tiering).  f64 so the blend arithmetic is bit-identical to the
     /// scheduler's historical `Vec<f64>` field.
     pub ewma_secs: f64,
+    /// Cumulative uplink bytes received from this client (saturating).
+    pub up_bytes: u32,
+    /// Cumulative downlink bytes sent to this client (saturating).
+    pub down_bytes: u32,
 }
 
 /// `flags` bit: the client has reported its sample count.
@@ -112,6 +118,24 @@ impl ClientArena {
         self.row_mut(id).ewma_secs = secs;
     }
 
+    /// Accumulate observed wire volume for this client (saturating: the
+    /// ledger is telemetry, and 4 GB per client outlives any run we
+    /// model).
+    pub fn add_io_bytes(&mut self, id: u32, up: u64, down: u64) {
+        if up == 0 && down == 0 {
+            return;
+        }
+        let r = self.row_mut(id);
+        r.up_bytes = r.up_bytes.saturating_add(up.min(u32::MAX as u64) as u32);
+        r.down_bytes = r.down_bytes.saturating_add(down.min(u32::MAX as u64) as u32);
+    }
+
+    /// Cumulative `(uplink, downlink)` bytes observed for this client.
+    pub fn io_bytes(&self, id: u32) -> (u64, u64) {
+        let r = self.row(id);
+        (r.up_bytes as u64, r.down_bytes as u64)
+    }
+
     /// Resident bytes of per-client state: materialized rows times the
     /// row size.  Reported per round as `RoundRecord::client_state_bytes`
     /// and asserted sub-fp32-baseline by the scale-smoke test.
@@ -125,10 +149,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn rows_are_16_bytes() {
-        // The million-client budget is 16 MB; a silent row growth would
+    fn rows_are_24_bytes() {
+        // The million-client budget is 24 MB; a silent row growth would
         // change the scale-smoke math.
-        assert_eq!(std::mem::size_of::<ClientRow>(), 16);
+        assert_eq!(std::mem::size_of::<ClientRow>(), 24);
     }
 
     #[test]
@@ -171,6 +195,22 @@ mod tests {
         assert_eq!(a.ewma(9), 1.5);
         a.set_ewma(9, 0.25);
         assert_eq!(a.ewma(9), 0.25);
-        assert_eq!(a.resident_bytes(), 10 * 16);
+        assert_eq!(a.resident_bytes(), 10 * 24);
+    }
+
+    #[test]
+    fn io_bytes_accumulate_and_saturate() {
+        let mut a = ClientArena::new();
+        assert_eq!(a.io_bytes(2), (0, 0));
+        a.add_io_bytes(2, 100, 40);
+        a.add_io_bytes(2, 3, 0);
+        assert_eq!(a.io_bytes(2), (103, 40));
+        // a zero-delta add on an unseen id must not materialize a row
+        a.add_io_bytes(999, 0, 0);
+        assert_eq!(a.len(), 3);
+        // overflow pins at u32::MAX instead of wrapping
+        a.add_io_bytes(2, u64::MAX, u32::MAX as u64);
+        a.add_io_bytes(2, 1, 1);
+        assert_eq!(a.io_bytes(2), (u32::MAX as u64, u32::MAX as u64));
     }
 }

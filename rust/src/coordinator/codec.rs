@@ -446,6 +446,14 @@ pub fn decision_bits(mm: &ModelManifest, d: &Decision) -> Vec<u32> {
 /// `wire_bits` in the telemetry tail is the **leaf** uplink ledger
 /// (sum of each member update's packed bits + headers), so the paper's
 /// volume metric is unchanged by the topology.
+///
+/// Under the tolerant tree (`--quorum` + `--round-timeout`) the
+/// `members`/`samples` lists double as the composite's quorum manifest:
+/// the root counts the listed *leaves* — never the partial itself —
+/// toward the quorum floor, and renormalizes surviving weight as if the
+/// leaves had arrived flat.  Late leaves are excluded from the fold and
+/// forwarded raw by the aggregator (see [`crate::coordinator::topology`]),
+/// so every leaf folds at exactly one tier.
 pub fn fold_partial(
     mm: &ModelManifest,
     round: u32,

@@ -25,6 +25,7 @@ pub mod codec;
 pub mod pool;
 pub mod sched;
 pub mod server;
+pub mod tolerance;
 pub mod topology;
 
 pub use arena::ClientArena;

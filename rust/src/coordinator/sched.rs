@@ -149,7 +149,7 @@ pub struct RoundScheduler {
     /// `ClientRow::ewma_secs`; 0.0 = never observed).  Shared with the
     /// server's arena when built through
     /// [`Self::from_config_with_arena`], so sample counts and EWMAs are
-    /// one 16-byte row per client instead of parallel maps — and the
+    /// one 24-byte row per client instead of parallel maps — and the
     /// rows materialize lazily, so a million-client registry costs
     /// nothing until a client is actually observed.
     arena: Arc<Mutex<ClientArena>>,
@@ -243,7 +243,7 @@ impl RoundScheduler {
 
     /// Build from a run's config, sharing the server's client arena so
     /// dispatch EWMAs and reported sample counts live in the same
-    /// 16-byte rows (one resident-bytes ledger instead of two).
+    /// 24-byte rows (one resident-bytes ledger instead of two).
     pub fn from_config_with_arena(
         cfg: &RunConfig,
         n_clients: usize,
@@ -956,12 +956,6 @@ mod tests {
         }
         fn recv_update(&mut self) -> Result<crate::wire::messages::Update> {
             anyhow::bail!("inert test handle")
-        }
-        fn uplink_bytes(&self) -> u64 {
-            0
-        }
-        fn downlink_bytes(&self) -> u64 {
-            0
         }
     }
 

@@ -86,6 +86,7 @@ use super::client::ClientState;
 use super::codec;
 use super::pool::{self, Job, Task, TaskSender, WorkerPool};
 use super::sched::{self, RoundScheduler};
+use super::tolerance::{self, Arrival, RecvBudget};
 use crate::config::{AggregateMode, CodecMode, RoundPolicy, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
@@ -136,10 +137,13 @@ pub trait ClientHandle {
     fn last_round_secs(&self) -> Option<f64> {
         None
     }
-    /// Cumulative uplink bytes (client -> server), framed size.
-    fn uplink_bytes(&self) -> u64;
-    /// Cumulative downlink bytes (server -> client), framed size.
-    fn downlink_bytes(&self) -> u64;
+    /// Drain the handle's wire-volume counters: framed `(uplink,
+    /// downlink)` bytes accumulated since the last call.  The server
+    /// folds the deltas into the client arena rows at the end of each
+    /// round, so the root keeps no per-handle O(n) byte maps.
+    fn take_io_bytes(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
     /// Is this handle an intermediate aggregator (tree topology)?  An
     /// aggregate handle's [`Self::recv_update`] delivers a subtree
     /// *pseudo-update* (the pre-folded accumulator shaped as an fp32
@@ -147,6 +151,24 @@ pub trait ClientHandle {
     /// [`Self::take_partial_meta`].
     fn is_aggregate(&self) -> bool {
         false
+    }
+    /// For aggregate handles: whether the most recent
+    /// [`Self::recv_update`] delivered the subtree's composite partial
+    /// (`true`) or a relayed raw leaf update (`false` — the late/stale
+    /// forwarding path, which the server banks instead of folding).
+    /// Leaf handles never relay, so the default is `true`.
+    fn last_recv_was_partial(&self) -> bool {
+        true
+    }
+    /// Composite-handle failover: try to adopt a restarted aggregator
+    /// from the rejoin map and re-send this round's encoded broadcast
+    /// over the new transport.  Returns `true` once the handle is live
+    /// again.  Leaf handles have no mid-round failover (their death
+    /// costs one member, not a whole span), so the default never
+    /// revives.
+    fn retry_revive(&mut self, encoded_broadcast: &[u8]) -> Result<bool> {
+        let _ = encoded_broadcast;
+        Ok(false)
     }
     /// The most recently received partial's metadata (member ids,
     /// sample counts, leaf wire bits, depth), for aggregate handles.
@@ -370,9 +392,10 @@ pub struct Server {
     initial_loss: Option<f32>,
     prev_loss: Option<f32>,
     cum_uplink_bits: u64,
-    /// Per-client resident state (sample counts, latency EWMAs) in one
-    /// flat arena keyed by id — replacing the scattered
-    /// `samples_by_id`/`ewma` maps, 16 bytes per client.  Learned from
+    /// Per-client resident state (sample counts, latency EWMAs, the
+    /// uplink/downlink byte ledger) in one flat arena keyed by id —
+    /// replacing the scattered `samples_by_id`/`ewma`/per-handle byte
+    /// maps, 24 bytes per client.  Learned from
     /// handles (in-process) or from received updates / partial metadata
     /// (TCP, available from round 1) — the fold-overlap path needs
     /// aggregation weights before updates land.  Rows accumulate across
@@ -385,6 +408,17 @@ pub struct Server {
     /// serve driver sets it so aggregators can relay the round to
     /// exactly their span's selected members.  Consumed per round.
     cohort_hint: Option<Vec<u32>>,
+    /// Leaves the scheduler expects to answer late (semi-sync banking),
+    /// embedded in the next broadcast so aggregators relay the round to
+    /// them but forward their replies upstream *raw* instead of folding
+    /// them.  Consumed per round; `None` keeps the frame legacy-shaped.
+    late_hint: Option<Vec<u32>>,
+    /// Tree rounds only: `(on_time, late)` *leaf* counts of the round's
+    /// cohort, set by the serve driver so quorum and the failed count
+    /// are judged over leaves, never subtree composites.  Consumed per
+    /// round; `None` falls back to handle-granularity (flat topology and
+    /// the in-process engine, where every handle already is a leaf).
+    tree_leaf_cohort: Option<(usize, usize)>,
     /// Observed per-client round compute times of the last round
     /// (seconds, as measured by each client's own worker —
     /// [`ClientHandle::last_round_secs`]).  Feeds the scheduler's EWMA
@@ -426,6 +460,8 @@ impl Server {
             cum_uplink_bits: 0,
             arena: Arc::new(Mutex::new(ClientArena::new())),
             cohort_hint: None,
+            late_hint: None,
+            tree_leaf_cohort: None,
             arrivals: Vec::new(),
             banked: BTreeMap::new(),
             dec: codec::DecodedUpdate::new(),
@@ -467,6 +503,23 @@ impl Server {
     /// broadcast frame stays byte-identical to the historical one.
     pub fn set_cohort_hint(&mut self, cohort: Option<Vec<u32>>) {
         self.cohort_hint = cohort;
+    }
+
+    /// Set the late-leaf plan the next broadcast carries (tree
+    /// topology + semi-sync): aggregators relay the round to these
+    /// leaves too, but forward their updates upstream raw so the root
+    /// banks exactly what the in-process engine banks.  Consumed by the
+    /// next [`Self::run_round`].
+    pub fn set_late_hint(&mut self, late: Option<Vec<u32>>) {
+        self.late_hint = late;
+    }
+
+    /// Declare the `(on_time, late)` *leaf* counts of the next tree
+    /// round's cohort, so quorum (and the failed count) are judged over
+    /// leaves rather than the root's composite handles.  Consumed by
+    /// the next [`Self::run_round`].
+    pub fn set_tree_leaf_cohort(&mut self, counts: Option<(usize, usize)>) {
+        self.tree_leaf_cohort = counts;
     }
 
     /// Mutable view of the parameters.  Zero-copy when the server holds
@@ -571,11 +624,13 @@ impl Server {
             (Some(f0), Some(fm)) => Some((f0, fm)),
             _ => None,
         };
+        let cohort_ids = self.cohort_hint.take();
         let bcast = Message::Broadcast {
             round,
             params: Arc::clone(&self.params),
             losses,
-            cohort: self.cohort_hint.take(),
+            cohort: cohort_ids.clone(),
+            late: self.late_hint.take(),
         };
         // Strict mode (full quorum, no timeout, no staleness) keeps the
         // historical any-failure-aborts semantics and the
@@ -594,8 +649,12 @@ impl Server {
                 Err(e) => return Err(e),
             }
         }
+        // `bcast` is dropped now so the params Arc is unique again by
+        // aggregation time; the *encoded* bytes stay alive through the
+        // receive window — a composite handle that dies mid-round and
+        // is revived from the rejoin map gets this round's broadcast
+        // re-sent over the new transport ([`ClientHandle::retry_revive`]).
         drop(bcast);
-        drop(encoded);
 
         // Collect updates (blocking per client; pool clients overlap).
         // With a pool attached and the streaming fold selected, each
@@ -618,26 +677,54 @@ impl Server {
             None
         };
         let mut stale_dropped: u32 = 0;
+        let mut subtree_failed: u32 = 0;
         let mut fold_ready: Option<(Vec<(usize, usize)>, Vec<Vec<f32>>)> = None;
-        let (updates, decoded) = if tolerant {
-            let ups = self.recv_tolerant(round, clients, &mut failed, late, &mut stale_dropped);
-            (ups, Vec::new())
+        // Arrivals are partitioned by *handle kind* — composite partials
+        // from aggregate handles vs raw leaf updates (flat handles,
+        // in-process leaves, degraded direct-to-root leaves) — so the
+        // partition, never the update's id, decides pseudo vs raw and a
+        // subtree root's id cannot shadow its own leaf.
+        let (agg_updates, leaf_updates, decoded) = if tolerant {
+            let (agg, leaf) = self.recv_tolerant(
+                round,
+                clients,
+                &mut failed,
+                late,
+                &mut stale_dropped,
+                cohort_ids.as_deref(),
+                &encoded,
+                &mut subtree_failed,
+            );
+            (agg, leaf, Vec::new())
         } else if let Some(weights) = overlap_plan {
             let (ups, ranges, chunks) = self.recv_fold_overlapped(round, clients, &weights)?;
             fold_ready = Some((ranges, chunks));
-            (ups, Vec::new())
+            (Vec::new(), ups, Vec::new())
         } else if pipelined {
-            self.recv_decode_pipelined(round, clients)?
+            let (ups, dec) = self.recv_decode_pipelined(round, clients)?;
+            (Vec::new(), ups, dec)
         } else {
-            let mut updates: Vec<Update> = Vec::with_capacity(n);
+            let mut agg: Vec<Update> = Vec::new();
+            let mut leaf: Vec<Update> = Vec::with_capacity(n);
             for c in clients.iter_mut() {
                 let u = c.recv_update()?;
-                ensure!(u.round == round, "client {} answered round {} for {round}", c.id(), u.round);
-                updates.push(u);
+                ensure!(
+                    u.round == round,
+                    "client {} answered round {} for {round}",
+                    c.id(),
+                    u.round
+                );
+                if c.is_aggregate() {
+                    agg.push(u);
+                } else {
+                    leaf.push(u);
+                }
             }
-            updates.sort_by_key(|u| u.client_id);
-            (updates, Vec::new())
+            agg.sort_by_key(|u| u.client_id);
+            leaf.sort_by_key(|u| u.client_id);
+            (agg, leaf, Vec::new())
         };
+        drop(encoded);
         let recv_decode_secs = t_recv.elapsed().as_secs_f64();
 
         // Harvest banked late updates whose fold is due this round:
@@ -666,20 +753,6 @@ impl Server {
             }
         }
 
-        // The quorum floor ranges over the dispatched slice: at 1.0 it
-        // equals n (strict mode already propagated any failure), below
-        // it the round completes on the survivors.  Only *on-time*
-        // updates count toward quorum — harvested stale folds are a
-        // bonus on top, never a substitute for a live round.
-        let n_recv = updates.len();
-        let quorum_need =
-            ((self.opts.round.tolerance.quorum as f64 * n as f64).ceil() as usize).clamp(1, n);
-        ensure!(
-            n_recv >= quorum_need,
-            "round {round}: quorum not met — {n_recv} of {n} updates arrived \
-             (need {quorum_need}; failed clients: {failed:?})"
-        );
-
         // Collect the cohort's observed round compute times (measured
         // by each client's own worker, so free of receive-queue skew)
         // for the scheduler's slowest-first EWMA.
@@ -691,40 +764,67 @@ impl Server {
 
         // Tree topology: every stage below consumes one pseudo-update
         // per subtree, keyed by the subtree root id.  Over TCP the
-        // handles are aggregators and already delivered pseudo-updates
-        // (harvest their partial metadata); in-process the *same*
-        // grouping is applied virtually through the identical
-        // `codec::fold_partial` code — the grouping defines the
-        // canonical fold order, so the two paths produce bit-identical
-        // accumulators, records and `params_hash` (ARCHITECTURE.md).
+        // aggregate handles already delivered composite pseudo-updates
+        // (harvest their partial metadata); any *raw* leaf updates —
+        // the whole cohort in-process, or degraded direct-to-root
+        // leaves over TCP — go through the identical
+        // `codec::fold_partial` grouping virtually.  The grouping
+        // defines the canonical fold order, so the two paths produce
+        // bit-identical accumulators, records and `params_hash`
+        // (ARCHITECTURE.md).
         let mut partial_metas: Vec<messages::PartialMeta> = Vec::new();
         let updates = if fanout == 0 {
-            updates
-        } else if clients.iter().any(|c| c.is_aggregate()) {
+            leaf_updates
+        } else {
+            let mut pseudo = agg_updates;
             for c in clients.iter_mut() {
                 if let Some(m) = c.take_partial_meta() {
                     partial_metas.push(m);
                 }
             }
-            partial_metas.sort_by_key(|m| m.agg_id);
-            updates
-        } else {
             let mode = self.opts.round.pipeline.codec;
-            let mut pseudo: Vec<Update> = Vec::with_capacity(updates.len());
             let mut i = 0usize;
-            while i < updates.len() {
-                let root = updates[i].client_id / fanout * fanout;
+            while i < leaf_updates.len() {
+                let root = leaf_updates[i].client_id / fanout * fanout;
                 let mut j = i + 1;
-                while j < updates.len() && updates[j].client_id / fanout * fanout == root {
+                while j < leaf_updates.len() && leaf_updates[j].client_id / fanout * fanout == root
+                {
                     j += 1;
                 }
-                let p = codec::fold_partial(&self.model.mm, round, root, &updates[i..j], mode, 1)?;
+                let p =
+                    codec::fold_partial(&self.model.mm, round, root, &leaf_updates[i..j], mode, 1)?;
                 partial_metas.push(p.meta());
                 pseudo.push(codec::partial_to_update(&self.model.mm, &p)?);
                 i = j;
             }
+            partial_metas.sort_by_key(|m| m.agg_id);
+            pseudo.sort_by_key(|u| u.client_id);
             pseudo
         };
+
+        // The quorum floor is *leaf-granular*: tree rounds count the
+        // leaves carried in the partial metadata — never the composite
+        // handles — against the leaf cohort the serve driver declared,
+        // so a tree round meets (or misses) quorum exactly when the
+        // same flat round would.  Flat rounds range over the dispatched
+        // slice as before: at 1.0 the floor equals n (strict mode
+        // already propagated any failure), below it the round completes
+        // on the survivors.  Only *on-time* updates count toward quorum
+        // — harvested stale folds are a bonus on top, never a
+        // substitute for a live round.
+        let tree_leaves = self.tree_leaf_cohort.take();
+        let n_recv: usize = if fanout > 0 {
+            partial_metas.iter().map(|m| m.members.len()).sum()
+        } else {
+            updates.len()
+        };
+        let n_quorum = tree_leaves.map_or(n, |(on_time, late_n)| on_time + late_n);
+        let quorum_need = tolerance::quorum_floor(self.opts.round.tolerance.quorum, n_quorum);
+        ensure!(
+            n_recv >= quorum_need,
+            "round {round}: quorum not met — {n_recv} of {n_quorum} updates arrived \
+             (need {quorum_need}; failed clients: {failed:?})"
+        );
 
         let total_samples: u64 = updates.iter().map(|u| u.num_samples as u64).sum();
         ensure!(total_samples > 0, "no samples reported");
@@ -804,7 +904,16 @@ impl Server {
         // uplinks, and a pseudo-update's fp32 frame is a topology
         // artifact, not client traffic.
         let uplink_bits: u64 = if fanout > 0 {
-            partial_metas.iter().map(|m| m.wire_bits).sum()
+            // Leaf wire bits from the partial telemetry, plus harvested
+            // banked updates charged at their fold round — the same
+            // rule as flat, and the banked raws are identical objects
+            // on both tree paths (aggregators forward late replies
+            // upstream raw instead of folding them).
+            partial_metas.iter().map(|m| m.wire_bits).sum::<u64>()
+                + stale
+                    .iter()
+                    .map(|(_, u)| codec::update_wire_bits(mm, u))
+                    .sum::<u64>()
         } else {
             updates
                 .iter()
@@ -856,7 +965,23 @@ impl Server {
         } else {
             0
         };
-        let client_state_bytes = self.arena.lock().expect("arena poisoned").resident_bytes();
+        // Fold each handle's wire-volume deltas into the arena rows:
+        // the per-client byte ledger lives with the rest of the client
+        // state, so the root keeps no per-handle O(n) side maps.  A
+        // composite handle's socket carries a whole span's traffic, not
+        // one client's, so aggregate handles are drained but skipped
+        // (their leaves' uplink volume is already accounted via the
+        // partial telemetry).
+        let client_state_bytes = {
+            let mut arena = self.arena.lock().expect("arena poisoned");
+            for c in clients.iter_mut() {
+                let (up, down) = c.take_io_bytes();
+                if !c.is_aggregate() {
+                    arena.add_io_bytes(c.id(), up, down);
+                }
+            }
+            arena.resident_bytes()
+        };
 
         Ok(RoundRecord {
             round,
@@ -879,8 +1004,13 @@ impl Server {
             dropped: 0,
             sim_makespan_secs: 0.0,
             // Real (socket-level) failures; the scheduler adds the
-            // simulated fault count on top.
-            failed: failed.len() as u32,
+            // simulated fault count on top.  Tree rounds count in leaf
+            // units — the on-time leaves that never made it into a
+            // partial — matching the leaf-granular quorum above.
+            failed: match tree_leaves {
+                Some((on_time, _)) => (on_time as u32).saturating_sub(n_recv as u32),
+                None => failed.len() as u32,
+            },
             // Rejoins are observed by the TCP serve loop, not here.
             rejoined: 0,
             // Semi-sync staleness: banked folds harvested this round,
@@ -890,6 +1020,12 @@ impl Server {
             stale_dropped,
             agg_depth,
             client_state_bytes,
+            // Aggregator subtrees whose composite handle died mid-round
+            // (counted once per handle per round, revived or not);
+            // degradation to direct-to-root attachment is observed by
+            // the TCP serve driver, not here.
+            subtree_failed,
+            degraded: 0,
         })
     }
 
@@ -926,9 +1062,14 @@ impl Server {
     ///   mode (the historical behavior) so a revived handle can
     ///   resynchronize.
     ///
-    /// Updates return sorted by `client_id`; decode happens downstream
-    /// on the non-pipelined aggregation path (containment is worth more
-    /// than overlap once clients are allowed to die mid-round).
+    /// Arrivals are partitioned by handle kind and both halves return
+    /// sorted by `client_id`: composite partials from aggregate handles
+    /// (tree topology — these take the failover-aware
+    /// [`Self::recv_from_aggregate`] path), then raw leaf updates.
+    /// Decode happens downstream on the non-pipelined aggregation path
+    /// (containment is worth more than overlap once clients are allowed
+    /// to die mid-round).
+    #[allow(clippy::too_many_arguments)]
     fn recv_tolerant(
         &mut self,
         round: u32,
@@ -936,23 +1077,36 @@ impl Server {
         failed: &mut Vec<u32>,
         late: &[(u32, u32)],
         stale_dropped: &mut u32,
-    ) -> Vec<Update> {
-        let deadline = self
-            .opts
-            .round
-            .tolerance
-            .round_timeout
-            .map(|t| Instant::now() + Duration::from_secs_f64(t));
+        cohort: Option<&[u32]>,
+        encoded_bcast: &[u8],
+        subtree_failed: &mut u32,
+    ) -> (Vec<Update>, Vec<Update>) {
+        let budget = RecvBudget::new(self.opts.round.tolerance.round_timeout);
         let k_bound = self.opts.round.tolerance.staleness;
-        let mut updates: Vec<Update> = Vec::with_capacity(clients.len());
+        let mut agg_updates: Vec<Update> = Vec::new();
+        let mut leaf_updates: Vec<Update> = Vec::with_capacity(clients.len());
         for c in clients.iter_mut() {
             let id = c.id();
+            if c.is_aggregate() {
+                self.recv_from_aggregate(
+                    round,
+                    c.as_mut(),
+                    failed,
+                    late,
+                    stale_dropped,
+                    cohort,
+                    encoded_bcast,
+                    &budget,
+                    subtree_failed,
+                    &mut agg_updates,
+                    &mut leaf_updates,
+                );
+                continue;
+            }
             if failed.contains(&id) {
                 continue; // broadcast never reached this client
             }
-            if let Some(dl) = deadline {
-                let now = Instant::now();
-                let remaining = dl.saturating_duration_since(now);
+            if let Some(remaining) = budget.remaining() {
                 if remaining.is_zero() || c.set_recv_timeout(Some(remaining)).is_err() {
                     crate::warn_!("server", "round {round}: client {id} timed out");
                     failed.push(id);
@@ -961,31 +1115,30 @@ impl Server {
             }
             let got = loop {
                 match c.recv_update() {
-                    Ok(u) if u.round == round => break Ok(u),
-                    // stale reply from an older, timed-out round: the
-                    // accept hook — bank it for this round's fold when
-                    // the staleness bound allows, drop it visibly when
-                    // not, drain it silently in strict mode
-                    Ok(u) if u.round < round => {
-                        let s = round - u.round;
-                        if k_bound > 0 {
-                            if s <= k_bound {
-                                self.banked.insert(
-                                    (u.round, u.client_id),
-                                    BankedUpdate { due: round, update: u },
-                                );
-                            } else {
-                                *stale_dropped += 1;
+                    Ok(u) => match tolerance::classify(u.round, round) {
+                        Arrival::OnTime => break Ok(u),
+                        // stale reply from an older, timed-out round:
+                        // the accept hook — bank it for this round's
+                        // fold when the staleness bound allows, drop it
+                        // visibly when not, drain it silently in strict
+                        // mode
+                        Arrival::Stale(s) => {
+                            if k_bound > 0 {
+                                if s <= k_bound {
+                                    self.bank(u.round, u, round);
+                                } else {
+                                    *stale_dropped += 1;
+                                }
                             }
+                            continue;
                         }
-                        continue;
-                    }
-                    Ok(u) => {
-                        break Err(anyhow!(
-                            "client {id} answered round {} for {round}",
-                            u.round
-                        ))
-                    }
+                        Arrival::Future => {
+                            break Err(anyhow!(
+                                "client {id} answered round {} for {round}",
+                                u.round
+                            ))
+                        }
+                    },
                     Err(e) => break Err(e),
                 }
             };
@@ -995,10 +1148,9 @@ impl Server {
                         // Scheduler-planned late member: its update
                         // answers this round but folds (discounted) at
                         // `due`.
-                        self.banked
-                            .insert((round, u.client_id), BankedUpdate { due, update: u });
+                        self.bank(round, u, due);
                     } else {
-                        updates.push(u);
+                        leaf_updates.push(u);
                     }
                 }
                 Err(e) => {
@@ -1010,8 +1162,164 @@ impl Server {
         for c in clients.iter_mut() {
             let _ = c.set_recv_timeout(None);
         }
-        updates.sort_by_key(|u| u.client_id);
-        updates
+        agg_updates.sort_by_key(|u| u.client_id);
+        leaf_updates.sort_by_key(|u| u.client_id);
+        (agg_updates, leaf_updates)
+    }
+
+    /// Bank `update` (which answers round `answered`) to fold at `due`,
+    /// materializing the leaf's arena row now so resident state evolves
+    /// identically whether the update arrived flat, in-process, or as a
+    /// raw relay through an aggregator.
+    fn bank(&mut self, answered: u32, update: Update, due: u32) {
+        self.arena
+            .lock()
+            .expect("arena poisoned")
+            .set_samples(update.client_id, update.num_samples);
+        self.banked
+            .insert((answered, update.client_id), BankedUpdate { due, update });
+    }
+
+    /// Tolerant receive from one composite (aggregate) handle: collect
+    /// the relayed raw updates of the span's late members plus the
+    /// subtree's composite partial, in whatever order the aggregator
+    /// sends them (protocol: raws first, partial last, so satisfying
+    /// the expectations drains the socket).  A dead handle gets the
+    /// failover path: wait — within the round budget, or a fixed grace
+    /// window when unbounded — for the restarted aggregator to rejoin
+    /// upstream ([`ClientHandle::retry_revive`]), re-send this round's
+    /// broadcast over the adopted transport, and keep collecting.  The
+    /// restarted aggregator re-runs the whole round, and the idempotent
+    /// bank/got bookkeeping absorbs any duplicates, so a revived round
+    /// folds exactly what an uninterrupted one would.
+    #[allow(clippy::too_many_arguments)]
+    fn recv_from_aggregate(
+        &mut self,
+        round: u32,
+        c: &mut (dyn ClientHandle + '_),
+        failed: &mut Vec<u32>,
+        late: &[(u32, u32)],
+        stale_dropped: &mut u32,
+        cohort: Option<&[u32]>,
+        encoded_bcast: &[u8],
+        budget: &RecvBudget,
+        subtree_failed: &mut u32,
+        agg_updates: &mut Vec<Update>,
+        leaf_updates: &mut Vec<Update>,
+    ) {
+        let id = c.id();
+        let fanout = self.opts.round.topology.fanout.max(1);
+        let span = id..id.saturating_add(fanout);
+        // What this handle owes the round: one raw relay per late
+        // member of its span, plus the composite partial whenever any
+        // on-time member lives there.
+        let want_raw: Vec<u32> = late
+            .iter()
+            .map(|&(l, _)| l)
+            .filter(|l| span.contains(l))
+            .collect();
+        let want_partial = cohort.map_or(true, |ids| ids.iter().any(|i| span.contains(i)));
+        let k_bound = self.opts.round.tolerance.staleness;
+        let mut got_raw: std::collections::BTreeSet<u32> = Default::default();
+        let mut got_partial: Option<Update> = None;
+        let mut crashed = false; // `subtree_failed` once per round
+
+        // A handle whose broadcast already failed goes straight to
+        // failover; on success it leaves the failed set and owes the
+        // full round like any live handle.
+        if failed.contains(&id) {
+            if !await_revive(c, round, encoded_bcast, budget, subtree_failed, &mut crashed) {
+                return;
+            }
+            failed.retain(|&f| f != id);
+        }
+
+        while (want_partial && got_partial.is_none()) || got_raw.len() < want_raw.len() {
+            if let Some(remaining) = budget.remaining() {
+                if remaining.is_zero() || c.set_recv_timeout(Some(remaining)).is_err() {
+                    crate::warn_!("server", "round {round}: aggregator {id} timed out");
+                    break;
+                }
+            }
+            match c.recv_update() {
+                Ok(u) if c.last_recv_was_partial() => {
+                    match tolerance::classify(u.round, round) {
+                        Arrival::OnTime => got_partial = Some(u),
+                        // a partial can only answer the round whose
+                        // broadcast we (re-)sent; drain anything else
+                        Arrival::Stale(_) | Arrival::Future => {
+                            crate::warn_!(
+                                "server",
+                                "round {round}: aggregator {id} sent a partial for round {} — drained",
+                                u.round
+                            );
+                        }
+                    }
+                }
+                Ok(u) => match tolerance::classify(u.round, round) {
+                    Arrival::OnTime => {
+                        if let Some(&(_, due)) = late.iter().find(|&&(l, _)| l == u.client_id) {
+                            got_raw.insert(u.client_id);
+                            self.bank(round, u, due);
+                        } else {
+                            // defensive: an on-time relay outside the
+                            // late plan folds like a direct leaf
+                            leaf_updates.push(u);
+                        }
+                    }
+                    Arrival::Stale(s) => {
+                        if k_bound > 0 {
+                            if s <= k_bound {
+                                self.bank(u.round, u, round);
+                            } else {
+                                *stale_dropped += 1;
+                            }
+                        }
+                    }
+                    Arrival::Future => {
+                        crate::warn_!(
+                            "server",
+                            "round {round}: aggregator {id} relayed round {} — drained",
+                            u.round
+                        );
+                    }
+                },
+                Err(e) => {
+                    // A read timeout is the budget expiring on a slow
+                    // subtree — not a crash, no failover, no
+                    // `subtree_failed`.  Anything else is a broken
+                    // socket: the aggregator process died.
+                    let timed_out = e
+                        .downcast_ref::<std::io::Error>()
+                        .map(|io| {
+                            matches!(
+                                io.kind(),
+                                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                            )
+                        })
+                        .unwrap_or(false);
+                    if timed_out {
+                        crate::warn_!("server", "round {round}: aggregator {id} timed out");
+                        break;
+                    }
+                    crate::warn_!("server", "round {round}: aggregator {id} failed: {e:#}");
+                    if !await_revive(c, round, encoded_bcast, budget, subtree_failed, &mut crashed)
+                    {
+                        break;
+                    }
+                    // revived: the restarted aggregator re-collects and
+                    // re-sends the full round; duplicates are idempotent
+                }
+            }
+        }
+        if let Some(u) = got_partial {
+            agg_updates.push(u);
+        } else if want_partial && !failed.contains(&id) {
+            // The span's on-time share never arrived: its leaves are
+            // simply missing from the leaf-granular quorum count.
+            failed.push(id);
+        }
+        let _ = c.set_recv_timeout(None);
     }
 
     /// Semi-sync aggregation for a round whose fold set includes
@@ -1419,6 +1727,56 @@ impl Server {
     }
 }
 
+/// How long a dead composite handle may wait for its restarted
+/// aggregator to rejoin when no round timeout bounds the receive
+/// window.
+const AGG_FAILOVER_SECS: f64 = 20.0;
+/// Poll cadence against the rejoin map during composite failover.
+const REVIVE_POLL: Duration = Duration::from_millis(100);
+
+/// Composite-handle failover loop: poll [`ClientHandle::retry_revive`]
+/// until the restarted aggregator is adopted from the rejoin map
+/// (`true`) or the window — the round budget when bounded, a fixed
+/// grace otherwise — runs out (`false`).  Counts the crash into
+/// `subtree_failed` exactly once per handle per round via `crashed`.
+fn await_revive(
+    c: &mut (dyn ClientHandle + '_),
+    round: u32,
+    encoded_bcast: &[u8],
+    budget: &RecvBudget,
+    subtree_failed: &mut u32,
+    crashed: &mut bool,
+) -> bool {
+    if !*crashed {
+        *subtree_failed += 1;
+        *crashed = true;
+    }
+    let window = if budget.remaining().is_some() {
+        *budget
+    } else {
+        RecvBudget::new(Some(AGG_FAILOVER_SECS))
+    };
+    loop {
+        match c.retry_revive(encoded_bcast) {
+            Ok(true) => {
+                crate::warn_!(
+                    "server",
+                    "round {round}: aggregator {} rejoined mid-round — broadcast re-sent",
+                    c.id()
+                );
+                return true;
+            }
+            Ok(false) => {}
+            Err(_) => return false,
+        }
+        if window.expired() {
+            return false;
+        }
+        let nap = window.remaining().map_or(REVIVE_POLL, |r| REVIVE_POLL.min(r));
+        std::thread::sleep(nap);
+    }
+}
+
 /// One fold-set member's staleness-discounted sample mass:
 /// `num_samples / (1 + s)` where `s` is how many rounds late the update
 /// folds (`0` for on-time members).
@@ -1469,7 +1827,7 @@ struct PoolClient {
 
 impl PoolClient {
     fn dispatch(&mut self, msg: &Message) -> Result<()> {
-        if let Message::Broadcast { round, params, losses, cohort: _ } = msg {
+        if let Message::Broadcast { round, params, losses, .. } = msg {
             let state = self
                 .state
                 .take()
@@ -1526,12 +1884,8 @@ impl ClientHandle for PoolClient {
         self.last_secs
     }
 
-    fn uplink_bytes(&self) -> u64 {
-        self.up_bytes
-    }
-
-    fn downlink_bytes(&self) -> u64 {
-        self.down_bytes
+    fn take_io_bytes(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.up_bytes), std::mem::take(&mut self.down_bytes))
     }
 }
 

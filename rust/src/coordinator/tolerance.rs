@@ -1,0 +1,121 @@
+//! The fold-tolerance core shared by every tolerant receive loop.
+//!
+//! Three parties run "collect updates until the budget runs out, bank
+//! what is late, fail what never answers" logic: the root server's
+//! [`recv_tolerant`], the `feddq aggregate` role's leaf collection, and
+//! (virtually) the in-process engine via the scheduler's simulated
+//! churn.  Before this module each reimplemented the deadline
+//! apportioning and arrival classification inline; keeping them here
+//! guarantees a leaf is judged identically no matter which tier of the
+//! tree receives it — the precondition for leaf-granularity quorum
+//! (`--quorum` counts *leaves*, never subtree composites).
+//!
+//! [`recv_tolerant`]: super::server::Server
+
+use std::time::{Duration, Instant};
+
+/// One round's shared receive deadline, apportioned across peers: every
+/// blocking receive gets whatever remains of the round budget, so a
+/// straggler cannot starve the peers polled after it beyond the round
+/// timeout (`--round-timeout`).
+#[derive(Clone, Copy, Debug)]
+pub struct RecvBudget {
+    deadline: Option<Instant>,
+}
+
+impl RecvBudget {
+    /// A budget of `timeout` seconds from now; `None` blocks forever.
+    pub fn new(timeout: Option<f64>) -> RecvBudget {
+        RecvBudget {
+            deadline: timeout.map(|t| Instant::now() + Duration::from_secs_f64(t)),
+        }
+    }
+
+    /// The share of the budget left for the next blocking receive:
+    /// `None` = unbounded, `Some(ZERO)` = already expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|dl| dl.saturating_duration_since(Instant::now()))
+    }
+
+    /// True once the budget is exhausted (never true for unbounded).
+    pub fn expired(&self) -> bool {
+        matches!(self.remaining(), Some(d) if d.is_zero())
+    }
+}
+
+/// How one arrived update relates to the round being collected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// Answers the current round: fold it.
+    OnTime,
+    /// Answers a past round, `s >= 1` rounds stale: bank or drop per
+    /// the `--staleness` bound.
+    Stale(u32),
+    /// Answers a round that has not been broadcast yet — a protocol
+    /// violation, never a banking candidate.
+    Future,
+}
+
+/// Classify an update answering `update_round` against the round being
+/// collected.  Every tier of the tree must use this single definition
+/// of staleness, or a leaf could fold at one tier and drop at another.
+pub fn classify(update_round: u32, round: u32) -> Arrival {
+    match update_round.cmp(&round) {
+        std::cmp::Ordering::Equal => Arrival::OnTime,
+        std::cmp::Ordering::Less => Arrival::Stale(round - update_round),
+        std::cmp::Ordering::Greater => Arrival::Future,
+    }
+}
+
+/// The quorum floor: how many of `n` expected leaves must fold before
+/// the round may close.  `ceil(quorum * n)` clamped to `[1, n]` — the
+/// same floor whether the leaves arrive flat or behind aggregators,
+/// which is what makes the tree's quorum *leaf-granular*.
+pub fn quorum_floor(quorum: f32, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((quorum as f64 * n as f64).ceil() as usize).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_orders_rounds() {
+        assert_eq!(classify(5, 5), Arrival::OnTime);
+        assert_eq!(classify(3, 5), Arrival::Stale(2));
+        assert_eq!(classify(4, 5), Arrival::Stale(1));
+        assert_eq!(classify(6, 5), Arrival::Future);
+    }
+
+    #[test]
+    fn quorum_floor_matches_flat_server_semantics() {
+        // the historical server-side formula, now shared with the tree
+        assert_eq!(quorum_floor(1.0, 10), 10);
+        assert_eq!(quorum_floor(0.6, 10), 6);
+        assert_eq!(quorum_floor(0.55, 10), 6); // ceil
+        assert_eq!(quorum_floor(0.0, 10), 1); // floor clamp
+        assert_eq!(quorum_floor(1.0, 0), 0); // degenerate registry
+        assert_eq!(quorum_floor(0.6, 1), 1);
+    }
+
+    #[test]
+    fn budget_apportions_and_expires() {
+        let unbounded = RecvBudget::new(None);
+        assert_eq!(unbounded.remaining(), None);
+        assert!(!unbounded.expired());
+
+        let b = RecvBudget::new(Some(30.0));
+        let r = b.remaining().expect("bounded");
+        assert!(r <= Duration::from_secs(30));
+        assert!(r > Duration::from_secs(29), "fresh budget nearly whole");
+        assert!(!b.expired());
+
+        let spent = RecvBudget::new(Some(0.0));
+        // zero-second budgets are expired from the start
+        assert!(spent.expired());
+        assert_eq!(spent.remaining(), Some(Duration::ZERO));
+    }
+}

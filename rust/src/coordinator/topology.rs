@@ -20,26 +20,46 @@
 //! memory would.  The *deterministic* churn story (`--sim-faults`) never
 //! uses this machinery — there the scheduler pre-excludes the failed set
 //! server-side (see [`super::sched::RoundScheduler::sim_churn`]) so local
-//! and TCP runs stay bit-identical.
+//! and TCP runs stay bit-identical.  Simulated faults compose with the
+//! tree topology: the draws are pure in `(seed, client, round)` over
+//! *leaf* ids, the excluded leaves simply vanish from the broadcast's
+//! `cohort`/`late` routing fields, and the in-process engine applies the
+//! identical exclusion before its virtual grouping — so `--fanout` ×
+//! `--sim-faults` runs stay bit-identical across topologies too.
+//!
+//! # Tree failures
+//!
+//! An aggregator socket is a fat pipe carrying a whole subtree, so it
+//! gets more machinery than a leaf (see ARCHITECTURE.md's failure state
+//! machine): a killed-and-restarted `feddq aggregate` process re-`Join`s
+//! upstream mid-run (the accept thread parks it in a rejoin map; the
+//! server's composite handle adopts it *mid-round* and re-sends the
+//! round's broadcast), quorum and `--staleness` banking are judged over
+//! the *leaves* carried in partial metadata — never subtree composites —
+//! and an orphaned leaf that cannot reach its aggregator degrades to
+//! direct-to-root attachment at the `fallback_addr` its aggregator
+//! stamped into the relayed run config.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use super::client::ClientState;
 use super::codec;
 use super::pool::WorkerPool;
 use super::sched::{self, RoundScheduler};
 use super::server::{ClientHandle, Server, ServerOpts};
+use super::tolerance::{self, Arrival, RecvBudget};
 use crate::config::RunConfig;
 use crate::data::{self, shard, Dataset};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::sim::faults::{FaultModel, FaultProfile};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::wire::messages::{Message, PartialMeta, Update};
 use crate::wire::transport::{FaultTransport, TcpTransport, Transport};
@@ -51,9 +71,24 @@ use crate::wire::transport::{FaultTransport, TcpTransport, Transport};
 const WORKER_CONNECT_ATTEMPTS: u32 = 40;
 const WORKER_CONNECT_BACKOFF: Duration = Duration::from_millis(50);
 
+/// How many reconnect attempts an orphaned *leaf* spends on its dead
+/// aggregator before degrading to direct-to-root attachment (when the
+/// relayed config carries a `fallback_addr`).  10 doubling attempts at
+/// 50ms span a few seconds — long enough for an aggregator restart the
+/// supervisor performs promptly, short enough that a permanently lost
+/// subtree does not stall its leaves for the whole run.
+const DEGRADE_CONNECT_ATTEMPTS: u32 = 10;
+
 /// Sockets re-attached by the accept thread, keyed by client id; a dead
 /// [`RemoteClient`] picks its replacement up here at its next send.
+/// Tree mode keys a second map of the same shape by subtree *root* id
+/// for restarted aggregators ([`AggregateClient::retry_revive`]).
 type RejoinMap = Arc<Mutex<HashMap<u32, (TcpTransport, Option<u32>)>>>;
+
+/// Degraded leaves parked by the tree accept thread (one-step
+/// handshake): `(leaf id, transport, samples)`, drained into
+/// direct-to-root [`RemoteClient`] handles between rounds.
+type DirectJoins = Arc<Mutex<Vec<(u32, TcpTransport, Option<u32>)>>>;
 
 /// Server-side handle for one remote worker.
 struct RemoteClient {
@@ -68,10 +103,15 @@ struct RemoteClient {
     dead: bool,
     /// Shared with the accept thread (see [`RejoinMap`]).
     rejoins: RejoinMap,
-    /// Byte counters carried over from previous (dead) sockets, so the
-    /// ledger's cumulative per-client volumes survive a re-attach.
-    base_up: u64,
-    base_down: u64,
+    /// Wire-volume deltas not yet drained by the server's
+    /// [`ClientHandle::take_io_bytes`], flushed here from a dead
+    /// socket's totals at revive time so no bytes are lost across a
+    /// re-attach.
+    pending_up: u64,
+    pending_down: u64,
+    /// Current socket's totals already drained by `take_io_bytes`.
+    mark_up: u64,
+    mark_down: u64,
 }
 
 impl RemoteClient {
@@ -85,8 +125,12 @@ impl RemoteClient {
         let Some((t, samples)) = self.rejoins.lock().unwrap().remove(&self.id) else {
             return;
         };
-        self.base_up += self.t.bytes_received();
-        self.base_down += self.t.bytes_sent();
+        // Flush the dead socket's undrained volume, then start the
+        // fresh socket's ledger from zero (its handshake bytes count).
+        self.pending_up += self.t.bytes_received().saturating_sub(self.mark_up);
+        self.pending_down += self.t.bytes_sent().saturating_sub(self.mark_down);
+        self.mark_up = 0;
+        self.mark_down = 0;
         self.t = t;
         // A rejoining worker re-materializes the same deterministic
         // shard, so a differing `num_samples` is a misconfigured or
@@ -175,12 +219,16 @@ impl ClientHandle for RemoteClient {
         self.samples
     }
 
-    fn uplink_bytes(&self) -> u64 {
-        self.base_up + self.t.bytes_received()
-    }
-
-    fn downlink_bytes(&self) -> u64 {
-        self.base_down + self.t.bytes_sent()
+    fn take_io_bytes(&mut self) -> (u64, u64) {
+        let up = self.t.bytes_received();
+        let down = self.t.bytes_sent();
+        let d_up = self.pending_up + up.saturating_sub(self.mark_up);
+        let d_down = self.pending_down + down.saturating_sub(self.mark_down);
+        self.pending_up = 0;
+        self.pending_down = 0;
+        self.mark_up = up;
+        self.mark_down = down;
+        (d_up, d_down)
     }
 }
 
@@ -203,6 +251,56 @@ struct AggregateClient {
     /// per-leaf samples, leaf wire bits, depth) for the server's ledger.
     meta: Option<PartialMeta>,
     model: Arc<ModelRuntime>,
+    /// Set when the socket errored; cleared when a restarted aggregator
+    /// is picked up from the rejoin map (keyed by subtree root id).
+    dead: bool,
+    /// Shared with the tree accept thread (see [`RejoinMap`]).
+    rejoins: RejoinMap,
+    /// Whether the most recent successful `recv_update` decoded a
+    /// `Partial` (subtree composite) rather than a raw late/stale leaf
+    /// `Update` the aggregator forwarded verbatim — the server's
+    /// tolerant receive routes on this, never on update ids.
+    last_was_partial: bool,
+    /// Same byte-ledger scheme as [`RemoteClient`]: deltas pending
+    /// across socket swaps + drained marks on the current socket.
+    pending_up: u64,
+    pending_down: u64,
+    mark_up: u64,
+    mark_down: u64,
+}
+
+impl AggregateClient {
+    /// If this handle is dead and the accept thread has parked a
+    /// restarted aggregator for this subtree root, adopt its socket.
+    fn revive_if_rejoined(&mut self) {
+        if !self.dead {
+            return;
+        }
+        let Some((t, samples)) = self.rejoins.lock().unwrap().remove(&self.lo) else {
+            return;
+        };
+        self.pending_up += self.t.bytes_received().saturating_sub(self.mark_up);
+        self.pending_down += self.t.bytes_sent().saturating_sub(self.mark_down);
+        self.mark_up = 0;
+        self.mark_down = 0;
+        self.t = t;
+        // Same trust rule as a rejoining leaf: the subtree's leaves
+        // re-materialize deterministic shards, so a differing total is
+        // a confused aggregator — keep the registered count.
+        match (self.samples, samples) {
+            (Some(orig), Some(new)) if orig != new => {
+                crate::warn_!(
+                    "serve",
+                    "aggregator {} rejoined claiming {new} samples but registered {orig}; keeping {orig}",
+                    self.lo
+                );
+            }
+            (None, Some(_)) => self.samples = samples,
+            _ => {}
+        }
+        self.dead = false;
+        crate::info!("serve", "aggregator {} re-attached", self.lo);
+    }
 }
 
 impl ClientHandle for AggregateClient {
@@ -211,26 +309,67 @@ impl ClientHandle for AggregateClient {
     }
 
     fn send(&mut self, msg: &Message) -> Result<()> {
-        self.t.send(msg)
+        self.revive_if_rejoined();
+        ensure!(!self.dead, "aggregator {} socket is dead (no rejoin yet)", self.lo);
+        let r = self.t.send(msg);
+        if r.is_err() {
+            self.dead = true;
+        }
+        r
     }
 
     fn send_broadcast(&mut self, _msg: &Message, encoded: &[u8]) -> Result<()> {
-        self.t.send_encoded(encoded)
+        self.revive_if_rejoined();
+        ensure!(!self.dead, "aggregator {} socket is dead (no rejoin yet)", self.lo);
+        let r = self.t.send_encoded(encoded);
+        if r.is_err() {
+            self.dead = true;
+        }
+        r
     }
 
     fn recv_update(&mut self) -> Result<Update> {
-        match self.t.recv()? {
-            Message::Partial(p) => {
+        let r = match self.t.recv() {
+            Ok(Message::Partial(p)) => {
                 self.meta = Some(p.meta());
+                self.last_was_partial = true;
                 codec::partial_to_update(&self.model.mm, &p)
             }
-            other => {
-                anyhow::bail!("expected Partial from aggregator {}, got {other:?}", self.lo)
+            // A raw late/stale leaf update the aggregator forwards
+            // verbatim so the root banks the identical object the flat
+            // topology would have received.
+            Ok(Message::Update(u)) => {
+                self.last_was_partial = false;
+                Ok(u)
+            }
+            Ok(other) => Err(anyhow!("unexpected {other:?} from aggregator {}", self.lo)),
+            Err(e) => Err(e),
+        };
+        if let Err(e) = &r {
+            // Same discrimination as RemoteClient: a read timeout is
+            // the budget expiring on a slow subtree; a broken socket
+            // means the aggregator process died and only the failover
+            // path ([`ClientHandle::retry_revive`]) brings it back.
+            let timed_out = e
+                .downcast_ref::<std::io::Error>()
+                .map(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                })
+                .unwrap_or(false);
+            if !timed_out {
+                self.dead = true;
             }
         }
+        r
     }
 
     fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        if self.dead {
+            return Ok(());
+        }
         self.t.set_read_timeout(timeout)
     }
 
@@ -238,12 +377,16 @@ impl ClientHandle for AggregateClient {
         self.samples
     }
 
-    fn uplink_bytes(&self) -> u64 {
-        self.t.bytes_received()
-    }
-
-    fn downlink_bytes(&self) -> u64 {
-        self.t.bytes_sent()
+    fn take_io_bytes(&mut self) -> (u64, u64) {
+        let up = self.t.bytes_received();
+        let down = self.t.bytes_sent();
+        let d_up = self.pending_up + up.saturating_sub(self.mark_up);
+        let d_down = self.pending_down + down.saturating_sub(self.mark_down);
+        self.pending_up = 0;
+        self.pending_down = 0;
+        self.mark_up = up;
+        self.mark_down = down;
+        (d_up, d_down)
     }
 
     fn is_aggregate(&self) -> bool {
@@ -252,6 +395,37 @@ impl ClientHandle for AggregateClient {
 
     fn take_partial_meta(&mut self) -> Option<PartialMeta> {
         self.meta.take()
+    }
+
+    fn last_recv_was_partial(&self) -> bool {
+        self.last_was_partial
+    }
+
+    fn retry_revive(&mut self, encoded_broadcast: &[u8]) -> Result<bool> {
+        ensure!(
+            self.dead,
+            "aggregator {} is alive — retry_revive is the failover path, not a resend",
+            self.lo
+        );
+        self.revive_if_rejoined();
+        if self.dead {
+            return Ok(false);
+        }
+        // Re-send the round's broadcast on the fresh socket so the
+        // restarted aggregator (and the leaves it re-accepted) can
+        // compute the round it missed the first transmission of.
+        match self.t.send_encoded(encoded_broadcast) {
+            Ok(()) => Ok(true),
+            Err(e) => {
+                crate::warn_!(
+                    "serve",
+                    "aggregator {} rejoined but broadcast re-send failed: {e:#}",
+                    self.lo
+                );
+                self.dead = true;
+                Ok(false) // keep polling; another rejoin may land
+            }
+        }
     }
 }
 
@@ -314,6 +488,96 @@ fn accept_rejoins(
                 rejoined_total.fetch_add(1, Ordering::AcqRel);
             }
             Err(e) => crate::warn_!("serve", "rejoin handshake from {peer} failed: {e:#}"),
+        }
+    }
+}
+
+/// Tree-mode post-handshake accept loop: two kinds of connection land
+/// here while rounds run.  A restarted `feddq aggregate` re-`Join`s
+/// with `num_samples: None` (it cannot know its subtree total until its
+/// leaves re-attach) and runs the two-step handshake; the ready socket
+/// is parked in `agg_rejoins` keyed by subtree root id for
+/// [`AggregateClient::retry_revive`] to adopt mid-round.  An orphaned
+/// *leaf* that gave up on its aggregator sends a one-step `Join` that
+/// already carries its shard size (its state survived — only its
+/// aggregator died); it is parked in `direct_joins` for the round loop
+/// to absorb as a direct-to-root [`RemoteClient`] (graceful
+/// degradation).  The aggregator handshake window is generous: between
+/// `Welcome` and the ready `Join` the restarted process reloads its
+/// model and re-accepts its whole subtree.
+#[allow(clippy::too_many_arguments)]
+fn accept_tree_rejoins(
+    listener: TcpListener,
+    n: usize,
+    fanout: usize,
+    config_json: String,
+    round_now: Arc<AtomicU32>,
+    agg_rejoins: RejoinMap,
+    direct_joins: DirectJoins,
+    rejoined_total: Arc<AtomicU32>,
+    stop: Arc<AtomicBool>,
+) {
+    const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+    enum Attach {
+        Aggregator(u32, TcpTransport, Option<u32>),
+        Leaf(u32, TcpTransport, Option<u32>),
+    }
+    while !stop.load(Ordering::Acquire) {
+        let (stream, peer) = match listener.accept() {
+            Ok(s) => s,
+            Err(e) => {
+                crate::warn_!("serve", "accept failed: {e:#}");
+                continue;
+            }
+        };
+        if stop.load(Ordering::Acquire) {
+            break; // the shutdown wake-up connection
+        }
+        let handshake = || -> Result<Attach> {
+            let mut t = TcpTransport::new(stream)?;
+            t.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+            let (id, first_samples) = match t.recv()? {
+                Message::Join { client_id, num_samples } => (client_id, num_samples),
+                other => anyhow::bail!("expected Join, got {other:?}"),
+            };
+            ensure!((id as usize) < n, "rejoin id {id} out of range 0..{n}");
+            t.send(&Message::Welcome {
+                client_id: id,
+                config_json: config_json.clone(),
+                round: Some(round_now.load(Ordering::Acquire)),
+            })?;
+            if first_samples.is_some() {
+                // One-step degraded-leaf attach.
+                t.set_read_timeout(None)?;
+                return Ok(Attach::Leaf(id, t, first_samples));
+            }
+            ensure!(
+                (id as usize) % fanout == 0,
+                "mid-run aggregator Join id {id} is not a subtree root for fanout {fanout}"
+            );
+            let samples = match t.recv()? {
+                Message::Join { client_id, num_samples } => {
+                    ensure!(client_id == id, "ready Join for {client_id}, expected {id}");
+                    num_samples
+                }
+                other => anyhow::bail!("expected ready Join, got {other:?}"),
+            };
+            t.set_read_timeout(None)?;
+            Ok(Attach::Aggregator(id, t, samples))
+        };
+        match handshake() {
+            Ok(Attach::Aggregator(id, t, samples)) => {
+                crate::info!("serve", "aggregator {id} rejoined from {peer}");
+                agg_rejoins.lock().unwrap().insert(id, (t, samples));
+                rejoined_total.fetch_add(1, Ordering::AcqRel);
+            }
+            Ok(Attach::Leaf(id, t, samples)) => {
+                crate::info!("serve", "leaf {id} attached directly from {peer} (degraded)");
+                direct_joins.lock().unwrap().push((id, t, samples));
+            }
+            Err(e) => {
+                crate::warn_!("serve", "tree rejoin handshake from {peer} failed: {e:#}")
+            }
         }
     }
 }
@@ -394,8 +658,10 @@ pub fn serve(
             samples,
             dead: false,
             rejoins: Arc::clone(&rejoins),
-            base_up: 0,
-            base_down: 0,
+            pending_up: 0,
+            pending_down: 0,
+            mark_up: 0,
+            mark_down: 0,
         });
     }
     remotes.sort_by_key(|c| c.id);
@@ -528,9 +794,19 @@ pub fn serve(
 /// when `fanout > 0` the in-process engine applies the same virtual
 /// grouping via [`codec::fold_partial`], so a TCP tree run is
 /// bit-identical (params hash included) to the in-process run with the
-/// same config.  No rejoin machinery: an aggregator socket is a fat
-/// pipe carrying a whole subtree, so a failure is surfaced as a round
-/// error (handle-granularity quorum), not silently re-attached.
+/// same config.  Simulated faults compose: the scheduler's churn draws
+/// run over *leaf* ids exactly as in-process, the excluded leaves
+/// vanish from the broadcast's `cohort`/`late` routing fields, and the
+/// leaf-granular quorum (`Server::run_round` counts partial-metadata
+/// members) judges the survivors identically.
+///
+/// Real failures get the machinery the module docs describe: restarted
+/// aggregators re-attach through [`accept_tree_rejoins`] (adopted
+/// mid-round by [`AggregateClient::retry_revive`]), and orphaned leaves
+/// degrade to direct-to-root handles — the first degraded leaf of a
+/// subtree *retires* that subtree's aggregate handle permanently, since
+/// the root id doubles as a leaf id and two live handles may not share
+/// one id.
 #[allow(clippy::too_many_arguments)]
 fn serve_tree(
     cfg: &RunConfig,
@@ -545,6 +821,8 @@ fn serve_tree(
     let n = model.mm.n_clients;
     let g = n.div_ceil(fanout);
     crate::info!("serve", "tree topology: fanout {fanout}, {g} aggregators over {n} leaves");
+    let local_addr = listener.local_addr().context("listener local addr")?;
+    let agg_rejoins: RejoinMap = Arc::new(Mutex::new(HashMap::new()));
     let mut aggs: Vec<AggregateClient> = Vec::with_capacity(g);
     let mut seen = vec![false; g];
     for _ in 0..g {
@@ -576,6 +854,13 @@ fn serve_tree(
             samples: None,
             meta: None,
             model: Arc::clone(&model),
+            dead: false,
+            rejoins: Arc::clone(&agg_rejoins),
+            last_was_partial: true,
+            pending_up: 0,
+            pending_down: 0,
+            mark_up: 0,
+            mark_down: 0,
         });
     }
     aggs.sort_by_key(|a| a.lo);
@@ -603,6 +888,37 @@ fn serve_tree(
     let mut clients: Vec<Box<dyn ClientHandle + '_>> =
         aggs.into_iter().map(|a| Box::new(a) as Box<dyn ClientHandle + '_>).collect();
 
+    // Hand the listener to the tree accept thread: restarted
+    // aggregators and degrading leaves land there for the rest of the
+    // run; `stop` + a self-connect wake it out of `accept()` at the end.
+    let round_now = Arc::new(AtomicU32::new(0));
+    let rejoined_total = Arc::new(AtomicU32::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let direct_joins: DirectJoins = Arc::new(Mutex::new(Vec::new()));
+    let accept_thread = std::thread::spawn({
+        let (config_json, round_now, agg_rejoins, direct_joins, rejoined_total, stop) = (
+            config_json.clone(),
+            Arc::clone(&round_now),
+            Arc::clone(&agg_rejoins),
+            Arc::clone(&direct_joins),
+            Arc::clone(&rejoined_total),
+            Arc::clone(&stop),
+        );
+        move || {
+            accept_tree_rejoins(
+                listener,
+                n,
+                fanout,
+                config_json,
+                round_now,
+                agg_rejoins,
+                direct_joins,
+                rejoined_total,
+                stop,
+            )
+        }
+    });
+
     let server_threads = cfg.resolved_server_threads();
     let mut server = Server::new(
         Arc::clone(&model),
@@ -616,38 +932,162 @@ fn serve_tree(
             tasks: Some(pool.sender()),
         },
     )?;
-    // The scheduler samples *leaves* (the same seed-pure cohorts as the
-    // flat topology); the tree only changes how their updates travel.
-    let scheduler = RoundScheduler::from_config_with_arena(cfg, n, server.arena())?;
-    let mut rounds = Vec::with_capacity(cfg.rounds);
-    for m in 0..cfg.rounds {
-        let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
-        let plan = scheduler.plan_round(m as u32);
-        // The distinct subtree roots owning the cohort (`selected` is
-        // ascending, so the deduped roots are too).
-        let mut roots: Vec<u32> =
-            plan.selected.iter().map(|&id| id / fanout as u32 * fanout as u32).collect();
-        roots.dedup();
-        let rank: HashMap<u32, usize> =
-            roots.iter().enumerate().map(|(i, &r)| (r, i)).collect();
-        clients.sort_by_key(|c| rank.get(&c.id()).copied().unwrap_or(usize::MAX));
-        server.set_cohort_hint(Some(plan.selected.clone()));
-        let mut rec = server.run_round(m as u32, &mut clients[..roots.len()], &[], evaluate)?;
-        // The record counts leaves, not subtree handles: a tree round
-        // selects the exact cohort the flat run would.
-        rec.selected = plan.selected.len() as u32;
-        rec.dropped = plan.dropped;
-        rec.sim_makespan_secs = plan.sim_makespan_secs;
-        observer(m as u32, &rec);
-        let done = cfg
-            .target_accuracy
-            .map(|t| rec.evaluated() && rec.test_accuracy >= t)
-            .unwrap_or(false);
-        rounds.push(rec);
-        if done {
-            break;
+    // The scheduler samples *leaves* (the same seed-pure cohorts and
+    // fault/late draws as the flat topology); the tree only changes how
+    // their updates travel.
+    let mut scheduler = RoundScheduler::from_config_with_arena(cfg, n, server.arena())?;
+    let f = fanout as u32;
+    // Subtrees whose aggregate handle was retired because a leaf
+    // degraded to direct attachment, and the leaf ids holding direct
+    // handles (their rejoins go through `direct_rejoins`, keyed by leaf
+    // id, disjoint from `agg_rejoins`' root keys by construction).
+    let direct_rejoins: RejoinMap = Arc::new(Mutex::new(HashMap::new()));
+    let mut retired: HashSet<u32> = HashSet::new();
+    let mut direct_ids: HashSet<u32> = HashSet::new();
+    let run = (|| -> Result<Vec<RoundRecord>> {
+        let mut rounds = Vec::with_capacity(cfg.rounds);
+        for m in 0..cfg.rounds {
+            round_now.store(m as u32, Ordering::Release);
+            let rejoined_before = rejoined_total.load(Ordering::Acquire);
+            let evaluate = m % cfg.eval_every == 0 || m + 1 == cfg.rounds;
+
+            // Absorb leaves that degraded to direct attachment since
+            // last round.  The first degraded leaf of a subtree retires
+            // that subtree's aggregate handle for good: the root id
+            // doubles as a leaf id, and two live handles sharing one id
+            // would corrupt the fold routing.
+            let fresh: Vec<(u32, TcpTransport, Option<u32>)> =
+                direct_joins.lock().unwrap().drain(..).collect();
+            for (id, t, samples) in fresh {
+                if direct_ids.contains(&id) {
+                    // Already-degraded leaf crashed and came back: a
+                    // plain rejoin of its direct handle.
+                    direct_rejoins.lock().unwrap().insert(id, (t, samples));
+                    continue;
+                }
+                let root = id / f * f;
+                if retired.insert(root) {
+                    if let Some(pos) =
+                        clients.iter().position(|c| c.is_aggregate() && c.id() == root)
+                    {
+                        // Dropping the handle closes the socket; a
+                        // still-running aggregator exits on the dead
+                        // pipe rather than feeding a forked subtree.
+                        clients.swap_remove(pos);
+                    }
+                    crate::warn_!(
+                        "serve",
+                        "leaf {id} degraded to direct attachment — retiring subtree {root} \
+                         (its remaining leaves must degrade too or count as failed)"
+                    );
+                }
+                direct_ids.insert(id);
+                clients.push(Box::new(RemoteClient {
+                    id,
+                    t,
+                    samples,
+                    dead: false,
+                    rejoins: Arc::clone(&direct_rejoins),
+                    pending_up: 0,
+                    pending_down: 0,
+                    mark_up: 0,
+                    mark_down: 0,
+                }));
+            }
+
+            let plan = scheduler.plan_round(m as u32);
+            let churn = scheduler.sim_churn(&plan);
+            scheduler.note_late(m as u32, &churn.late);
+            // Dispatched leaves: the cohort minus the sim-failed set —
+            // the identical pre-dispatch exclusion the in-process
+            // engine applies, so the broadcast's routing fields (and
+            // the fold) never see a failed leaf.
+            let dispatched: Vec<u32> = plan
+                .selected
+                .iter()
+                .copied()
+                .filter(|id| !churn.failed.contains(id))
+                .collect();
+            let late_ids: Vec<u32> = churn.late.iter().map(|&(id, _)| id).collect();
+            let on_time: Vec<u32> =
+                dispatched.iter().copied().filter(|id| !late_ids.contains(id)).collect();
+
+            // The handles to drive this round: one aggregate handle per
+            // live subtree owning a dispatched leaf, plus the direct
+            // handles of a retired subtree's dispatched leaves.  A
+            // dispatched leaf of a retired subtree that has not
+            // re-attached is stranded — it counts against the
+            // leaf-granular quorum like any other failure.
+            let mut want: Vec<u32> = Vec::new();
+            let mut degraded_now: u32 = 0;
+            let mut i = 0;
+            while i < dispatched.len() {
+                let root = dispatched[i] / f * f;
+                let mut j = i;
+                while j < dispatched.len() && dispatched[j] / f * f == root {
+                    j += 1;
+                }
+                if retired.contains(&root) {
+                    for &id in &dispatched[i..j] {
+                        if direct_ids.contains(&id) {
+                            want.push(id);
+                            degraded_now += 1;
+                        } else {
+                            crate::warn_!(
+                                "serve",
+                                "round {m}: leaf {id} of retired subtree {root} has not \
+                                 re-attached — it will count as failed"
+                            );
+                        }
+                    }
+                } else {
+                    want.push(root);
+                }
+                i = j;
+            }
+            let rank: HashMap<u32, usize> =
+                want.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+            clients.sort_by_key(|c| rank.get(&c.id()).copied().unwrap_or(usize::MAX));
+            server.set_cohort_hint(Some(on_time.clone()));
+            server.set_late_hint(if late_ids.is_empty() {
+                None
+            } else {
+                Some(late_ids.clone())
+            });
+            server.set_tree_leaf_cohort(Some((on_time.len(), churn.late.len())));
+            let mut rec =
+                server.run_round(m as u32, &mut clients[..want.len()], &churn.late, evaluate)?;
+            // The record counts leaves, not subtree handles: a tree
+            // round selects (and fails, banks, drops) the exact leaf
+            // cohort the flat run would.
+            rec.selected = plan.selected.len() as u32;
+            rec.failed += churn.failed.len() as u32;
+            rec.stale_dropped += churn.stale_dropped;
+            rec.dropped = plan.dropped;
+            rec.sim_makespan_secs = churn.sim_makespan_secs;
+            rec.rejoined = rejoined_total.load(Ordering::Acquire) - rejoined_before;
+            rec.degraded = degraded_now;
+            for &(id, secs) in server.arrivals() {
+                scheduler.observe(id, secs);
+            }
+            observer(m as u32, &rec);
+            let done = cfg
+                .target_accuracy
+                .map(|t| rec.evaluated() && rec.test_accuracy >= t)
+                .unwrap_or(false);
+            rounds.push(rec);
+            if done {
+                break;
+            }
         }
-    }
+        Ok(rounds)
+    })();
+    // Stop the accept thread whether the run finished or aborted: set
+    // the flag, then self-connect to knock it out of `accept()`.
+    stop.store(true, Ordering::Release);
+    let _ = TcpStream::connect(local_addr);
+    let _ = accept_thread.join();
+    let rounds = run?;
     for c in clients.iter_mut() {
         let _ = c.send(&Message::Shutdown);
     }
@@ -666,7 +1106,18 @@ fn serve_tree(
 /// The connect retries (bounded, backing off), so start order does not
 /// matter; a worker started *after* a crash rejoins the run in progress
 /// (the `Welcome` then carries the next round index) with fresh local
-/// state.  Setting `FEDDQ_WORKER_FAULTS` to a fault profile (e.g.
+/// state.  A worker whose *socket* dies mid-run keeps its state and
+/// reconnects itself: first to `addr` (the flat server, or this leaf's
+/// aggregator — either may have restarted), and, when the relayed
+/// config carries a `fallback_addr` (stamped by `feddq aggregate`),
+/// degrading to a direct root attachment after
+/// [`DEGRADE_CONNECT_ATTEMPTS`] failures.  Because a rejoined subtree
+/// gets its round broadcast re-sent, the worker caches its last answer
+/// and replays it by round index — at-least-once delivery, exactly-once
+/// compute, so local state (residual, batch cursor) advances once per
+/// round no matter how often the broadcast arrives.
+///
+/// Setting `FEDDQ_WORKER_FAULTS` to a fault profile (e.g.
 /// `crash:0.1`, `flaky:0.2` — see
 /// [`FaultProfile::parse`](crate::sim::faults::FaultProfile::parse))
 /// wraps the wire in a [`FaultTransport`] that injects those faults into
@@ -681,7 +1132,7 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     // The initial Join can't carry the shard size yet — the run config
     // (which determines the sharding) only arrives in the Welcome.
     t.send(&Message::Join { client_id: id, num_samples: None })?;
-    let cfg = match t.recv()? {
+    let (cfg, fallback) = match t.recv()? {
         Message::Welcome { client_id, config_json, round } => {
             ensure!(client_id == id, "server assigned a different id");
             if let Some(m) = round {
@@ -689,7 +1140,12 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
             }
             let mut cfg = RunConfig::from_json_str(&config_json)?;
             cfg.artifacts_dir = artifacts_dir.to_string();
-            cfg
+            // An aggregator stamps the root's address into the config
+            // it relays, so its leaves can outlive it (see `aggregate`).
+            let fallback = Json::parse(&config_json)
+                .ok()
+                .and_then(|j| j.get("fallback_addr").and_then(Json::as_str).map(String::from));
+            (cfg, fallback)
         }
         other => anyhow::bail!("expected Welcome, got {other:?}"),
     };
@@ -726,37 +1182,149 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     .with_ef_bits(cfg.ef_bits);
     // Chaos injection (tests/CI only): wrap the wire so this worker's
     // updates crash/stall/drop per the profile in FEDDQ_WORKER_FAULTS.
-    match std::env::var("FEDDQ_WORKER_FAULTS") {
+    // Parsed once and kept — a reconnected socket is re-wrapped so the
+    // chaos survives the worker's own resilience.
+    let fault_profile: Option<FaultProfile> = match std::env::var("FEDDQ_WORKER_FAULTS") {
         Ok(spec) if !spec.is_empty() => {
             let profile = FaultProfile::parse(&spec)
                 .with_context(|| format!("FEDDQ_WORKER_FAULTS={spec:?}"))?;
-            if !profile.is_off() {
-                crate::warn_!("worker", "client {id} injecting faults: {}", profile.label());
-                t = Box::new(FaultTransport::new(t, FaultModel::new(profile, cfg.seed), id));
-            }
+            (!profile.is_off()).then_some(profile)
         }
-        _ => {}
+        _ => None,
+    };
+    if let Some(profile) = fault_profile {
+        crate::warn_!("worker", "client {id} injecting faults: {}", profile.label());
+        t = Box::new(FaultTransport::new(t, FaultModel::new(profile, cfg.seed), id));
     }
     // Ready handshake: re-send Join carrying the shard size so the
     // server's fold-overlap weight plan exists before round 0.
-    t.send(&Message::Join { client_id: id, num_samples: Some(state.num_samples()) })?;
-    crate::info!("worker", "client {id} ready ({} samples)", state.num_samples());
+    let samples = state.num_samples();
+    t.send(&Message::Join { client_id: id, num_samples: Some(samples) })?;
+    crate::info!("worker", "client {id} ready ({samples} samples)");
 
+    let rewrap = |raw: TcpTransport| -> Box<dyn Transport> {
+        match fault_profile {
+            Some(profile) => Box::new(FaultTransport::new(
+                Box::new(raw) as Box<dyn Transport>,
+                FaultModel::new(profile, cfg.seed),
+                id,
+            )),
+            None => Box::new(raw),
+        }
+    };
+    // Reconnect policy: retry the upstream we joined through (it may
+    // have restarted — a full two-step rejoin handshake); a leaf under
+    // an aggregator that stays dead degrades to the fallback root with
+    // a one-step attach (its state, and so its shard size, survived).
+    let mut degraded = false;
+    let reconnect = |degraded: &mut bool| -> Result<Box<dyn Transport>> {
+        if *degraded {
+            let fb = fallback.as_deref().expect("degraded leaf without a fallback addr");
+            return Ok(rewrap(reattach(fb, WORKER_CONNECT_ATTEMPTS, false, id, samples)?));
+        }
+        let budget = if fallback.is_some() {
+            DEGRADE_CONNECT_ATTEMPTS
+        } else {
+            WORKER_CONNECT_ATTEMPTS
+        };
+        match reattach(addr, budget, true, id, samples) {
+            Ok(t) => Ok(rewrap(t)),
+            Err(e) => match &fallback {
+                Some(fb) => {
+                    crate::warn_!(
+                        "worker",
+                        "client {id} giving up on aggregator {addr} ({e:#}); degrading to \
+                         direct attachment at {fb}"
+                    );
+                    let t = reattach(fb, WORKER_CONNECT_ATTEMPTS, false, id, samples)?;
+                    *degraded = true;
+                    Ok(rewrap(t))
+                }
+                None => Err(e),
+            },
+        }
+    };
+
+    // Exactly-once compute under at-least-once delivery: a broadcast
+    // re-sent to a rejoined subtree must not advance this leaf's
+    // residual/cursor state twice, so the last answer is cached and
+    // replayed by round index.
+    let mut cache: Option<(u32, Update)> = None;
     loop {
-        match t.recv()? {
-            Message::Broadcast { round, params, losses, cohort: _ } => {
-                // `cohort` is routing metadata for intermediate
+        match t.recv() {
+            Ok(Message::Broadcast { round, params, losses, .. }) => {
+                // `cohort`/`late` are routing metadata for intermediate
                 // aggregators; a leaf was sent this broadcast *because*
-                // it is in the cohort.
-                let u = state.process_round(&model, round, &params, losses)?;
-                t.send(&Message::Update(u))?;
+                // it is in one of them.
+                let u = match &cache {
+                    Some((r, u)) if *r == round => {
+                        crate::info!("worker", "client {id} replaying round {round} from cache");
+                        u.clone()
+                    }
+                    _ => {
+                        let u = state.process_round(&model, round, &params, losses)?;
+                        cache = Some((round, u.clone()));
+                        u
+                    }
+                };
+                if let Err(e) = t.send(&Message::Update(u)) {
+                    crate::warn_!("worker", "client {id} failed to send round {round}: {e:#}");
+                    t = reconnect(&mut degraded)?;
+                }
             }
-            Message::Shutdown => break,
-            other => anyhow::bail!("unexpected message {other:?}"),
+            Ok(Message::Shutdown) => break,
+            Ok(other) => anyhow::bail!("unexpected message {other:?}"),
+            Err(e) => {
+                crate::warn_!("worker", "client {id} lost its upstream: {e:#}; reconnecting");
+                t = reconnect(&mut degraded)?;
+            }
         }
     }
     crate::info!("worker", "client {id} done");
     Ok(())
+}
+
+/// Re-establish a worker's upstream connection after a socket failure.
+/// `two_step` runs the full rejoin handshake (`Join(None)` → `Welcome` →
+/// ready `Join`) the flat server, the tree root and a restarted
+/// aggregator all expect from a leaf; a degraded direct attach is
+/// one-step (the first `Join` already carries the shard size, which is
+/// how the tree accept loop tells the two apart).  Handshake reads run
+/// under a timeout so a listener that accepts but never answers (e.g. a
+/// live aggregator past its setup phase) fails over instead of wedging.
+fn reattach(
+    target: &str,
+    attempts: u32,
+    two_step: bool,
+    id: u32,
+    samples: u32,
+) -> Result<TcpTransport> {
+    const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+    let mut t = TcpTransport::connect_retry(target, attempts, WORKER_CONNECT_BACKOFF)?;
+    t.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    if two_step {
+        t.send(&Message::Join { client_id: id, num_samples: None })?;
+        match t.recv()? {
+            Message::Welcome { client_id, round, .. } => {
+                ensure!(client_id == id, "upstream assigned a different id");
+                if let Some(m) = round {
+                    crate::info!("worker", "client {id} rejoined a run in progress (round {m})");
+                }
+            }
+            other => anyhow::bail!("expected Welcome, got {other:?}"),
+        }
+        t.send(&Message::Join { client_id: id, num_samples: Some(samples) })?;
+    } else {
+        t.send(&Message::Join { client_id: id, num_samples: Some(samples) })?;
+        match t.recv()? {
+            Message::Welcome { client_id, .. } => {
+                ensure!(client_id == id, "root assigned a different id");
+            }
+            other => anyhow::bail!("expected Welcome, got {other:?}"),
+        }
+    }
+    t.set_read_timeout(None)?;
+    Ok(t)
 }
 
 /// Run one intermediate aggregator: join `upstream` as subtree root
@@ -784,7 +1352,16 @@ pub fn aggregate(
     let (cfg, config_json) = match up.recv()? {
         Message::Welcome { client_id, config_json, round } => {
             ensure!(client_id == lo, "upstream assigned a different id");
-            ensure!(round.is_none(), "aggregators cannot join a run in progress");
+            if let Some(m) = round {
+                // A restarted aggregator rejoining mid-run: the root's
+                // accept thread parked this socket and the composite
+                // handle will re-send the current round's broadcast
+                // once the ready handshake below completes.
+                crate::info!(
+                    "aggregate",
+                    "subtree root {lo} rejoining a run in progress (round {m})"
+                );
+            }
             let mut cfg = RunConfig::from_json_str(&config_json)?;
             cfg.artifacts_dir = artifacts_dir.to_string();
             (cfg, config_json)
@@ -809,7 +1386,10 @@ pub fn aggregate(
     let mode = cfg.round.pipeline.codec;
 
     // Accept this subtree's leaves: the exact two-step handshake the
-    // flat server runs, config relayed untouched.
+    // flat server runs.  The relayed config gains one key — the root's
+    // address — so an orphaned leaf can degrade to a direct root
+    // attachment if this process dies and never comes back.
+    let leaf_config = with_fallback_addr(&config_json, upstream)?;
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     crate::info!(
         "aggregate",
@@ -833,7 +1413,7 @@ pub fn aggregate(
         );
         t.send(&Message::Welcome {
             client_id: id,
-            config_json: config_json.clone(),
+            config_json: leaf_config.clone(),
             round: None,
         })?;
         children.push((id, t));
@@ -857,44 +1437,147 @@ pub fn aggregate(
     up.send(&Message::Join { client_id: lo, num_samples: Some(total as u32) })?;
     crate::info!("aggregate", "subtree {span_lo}..{span_hi} ready ({total} samples)");
 
+    let tolerant = cfg.round.is_tolerant();
     loop {
         match up.recv()? {
-            Message::Broadcast { round, params, losses, cohort } => {
-                // Our members this round: the broadcast's leaf cohort
-                // intersected with the span (a missing cohort field —
-                // a legacy flat server — means every leaf).
+            Message::Broadcast { round, params, losses, cohort, late } => {
+                // Our members this round: the broadcast's on-time leaf
+                // cohort and late plan intersected with the span (a
+                // missing cohort field — a legacy flat server — means
+                // every leaf, all on time).
                 let sel: Vec<u32> = match &cohort {
                     Some(c) => {
                         c.iter().copied().filter(|&id| members.contains(&id)).collect()
                     }
                     None => members.clone(),
                 };
+                let late_sel: Vec<u32> = late
+                    .as_deref()
+                    .unwrap_or(&[])
+                    .iter()
+                    .copied()
+                    .filter(|&id| members.contains(&id))
+                    .collect();
                 ensure!(
-                    !sel.is_empty(),
+                    !sel.is_empty() || !late_sel.is_empty(),
                     "round {round} broadcast reached subtree {span_lo}..{span_hi} with no \
                      cohort member in its span"
                 );
-                let relay = Message::Broadcast { round, params, losses, cohort };
+                let relay = Message::Broadcast { round, params, losses, cohort, late };
                 let encoded = relay.encode();
-                // Relay first, then collect: members compute in parallel.
-                for &id in &sel {
-                    children[(id - lo) as usize].1.send_encoded(&encoded)?;
+                // Relay to on-time and late members alike (a late leaf
+                // computes now; the root banks its forwarded update for
+                // the due round), then collect: members compute in
+                // parallel.  A dead child is tolerable in quorum mode —
+                // the leaf-granular quorum absorbs its absence, and the
+                // leaf reconnects (or degrades) on its own.
+                let mut live: Vec<u32> = Vec::with_capacity(sel.len() + late_sel.len());
+                for &id in sel.iter().chain(late_sel.iter()) {
+                    match children[(id - lo) as usize].1.send_encoded(&encoded) {
+                        Ok(()) => live.push(id),
+                        Err(e) if tolerant => crate::warn_!(
+                            "aggregate",
+                            "round {round}: leaf {id} unreachable ({e:#}); leaving it to quorum"
+                        ),
+                        Err(e) => {
+                            return Err(e).with_context(|| format!("broadcast to leaf {id}"))
+                        }
+                    }
                 }
-                let mut updates: Vec<Update> = Vec::with_capacity(sel.len());
-                for &id in &sel {
-                    let u = match children[(id - lo) as usize].1.recv()? {
-                        Message::Update(u) => u,
-                        other => anyhow::bail!("expected Update from leaf {id}, got {other:?}"),
-                    };
-                    ensure!(
-                        u.client_id == id,
-                        "leaf {id} sent an update for client {}",
-                        u.client_id
+                // Tolerant collect mirrors the root's receive loop via
+                // the shared tolerance core: one budget apportioned
+                // across the span, arrivals classified identically.
+                let budget = RecvBudget::new(cfg.round.tolerance.round_timeout);
+                let mut on_time: Vec<Update> = Vec::new();
+                let mut raws: Vec<Update> = Vec::new();
+                for &id in &live {
+                    let child = &mut children[(id - lo) as usize].1;
+                    if tolerant {
+                        child.set_read_timeout(budget.remaining())?;
+                    }
+                    // Drain until this leaf yields its answer for the
+                    // round; stale backlog goes upstream raw, so the
+                    // *root* makes every bank-or-drop decision and the
+                    // staleness ledger matches the flat topology's.
+                    loop {
+                        match child.recv() {
+                            Ok(Message::Update(u)) => {
+                                ensure!(
+                                    u.client_id == id,
+                                    "leaf {id} sent an update for client {}",
+                                    u.client_id
+                                );
+                                match tolerance::classify(u.round, round) {
+                                    Arrival::OnTime => {
+                                        if late_sel.contains(&id) {
+                                            raws.push(u);
+                                        } else {
+                                            on_time.push(u);
+                                        }
+                                        break;
+                                    }
+                                    Arrival::Stale(_) => {
+                                        raws.push(u);
+                                        continue;
+                                    }
+                                    Arrival::Future => {
+                                        crate::warn_!(
+                                            "aggregate",
+                                            "leaf {id} answered future round {} during \
+                                             {round}; dropping",
+                                            u.round
+                                        );
+                                        continue;
+                                    }
+                                }
+                            }
+                            Ok(other) if tolerant => {
+                                crate::warn_!(
+                                    "aggregate",
+                                    "unexpected {other:?} from leaf {id}; skipping it"
+                                );
+                                break;
+                            }
+                            Ok(other) => {
+                                anyhow::bail!("expected Update from leaf {id}, got {other:?}")
+                            }
+                            Err(e) if tolerant => {
+                                crate::warn_!(
+                                    "aggregate",
+                                    "round {round}: leaf {id} failed ({e:#}); leaving it \
+                                     to quorum"
+                                );
+                                break;
+                            }
+                            Err(e) => {
+                                return Err(e)
+                                    .with_context(|| format!("receive from leaf {id}"))
+                            }
+                        }
+                    }
+                }
+                if tolerant {
+                    for (_, t) in children.iter_mut() {
+                        let _ = t.set_read_timeout(None);
+                    }
+                }
+                // Raw forwards go upstream FIRST (ascending leaf id),
+                // the subtree partial LAST — the order the root's
+                // composite receive expects.
+                raws.sort_by_key(|u| u.client_id);
+                for u in &raws {
+                    up.send(&Message::Update(u.clone()))?;
+                }
+                if !on_time.is_empty() {
+                    let p = codec::fold_partial(&model.mm, round, lo, &on_time, mode, 1)?;
+                    up.send(&Message::Partial(p))?;
+                } else if !sel.is_empty() {
+                    crate::warn_!(
+                        "aggregate",
+                        "round {round}: no on-time survivor in subtree {span_lo}..{span_hi}; \
+                         nothing to uplink (the root counts the span failed)"
                     );
-                    updates.push(u);
                 }
-                let p = codec::fold_partial(&model.mm, round, lo, &updates, mode, 1)?;
-                up.send(&Message::Partial(p))?;
             }
             Message::Shutdown => {
                 for (_, t) in children.iter_mut() {
@@ -907,6 +1590,22 @@ pub fn aggregate(
     }
     crate::info!("aggregate", "subtree {span_lo}..{span_hi} done");
     Ok(())
+}
+
+/// Stamp `fallback_addr` (the tree root's address, i.e. this
+/// aggregator's `--upstream`) into a run-config JSON string, preserving
+/// every other key.  [`RunConfig::from_json_str`] ignores unknown keys,
+/// so the stamped config parses identically on the leaf; only the
+/// degradation path in [`worker`] reads the extra key.
+fn with_fallback_addr(config_json: &str, upstream: &str) -> Result<String> {
+    let mut j = Json::parse(config_json)?;
+    match &mut j {
+        Json::Obj(o) => {
+            o.insert("fallback_addr".to_string(), Json::Str(upstream.to_string()));
+        }
+        _ => anyhow::bail!("run config JSON is not an object"),
+    }
+    Ok(j.to_string_compact())
 }
 
 #[cfg(test)]
@@ -929,8 +1628,10 @@ mod tests {
             samples,
             dead: true,
             rejoins: Arc::clone(rejoins),
-            base_up: 0,
-            base_down: 0,
+            pending_up: 0,
+            pending_down: 0,
+            mark_up: 0,
+            mark_down: 0,
         }
     }
 

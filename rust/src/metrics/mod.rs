@@ -86,6 +86,15 @@ pub struct RoundRecord {
     /// in-process runs with `--ef-bits`, the banked residual codes.
     /// 0 in legacy reports that predate the arena.
     pub client_state_bytes: u64,
+    /// Aggregator subtrees whose composite handle died mid-round this
+    /// round (TCP tree mode only; the member leaves are counted in
+    /// `failed` unless the aggregator rejoined in time).  Always 0 on
+    /// the flat topology and in-process.
+    pub subtree_failed: u32,
+    /// Leaves folded via the degraded direct-to-root path this round
+    /// after their aggregator stayed dead past the failover deadline
+    /// (TCP tree mode only; always 0 otherwise).
+    pub degraded: u32,
 }
 
 impl RoundRecord {
@@ -131,6 +140,8 @@ impl RoundRecord {
             // arena's byte count is small today, but the schema should
             // not bake in a 2^53 ceiling
             ("client_state_bytes", u64_json(self.client_state_bytes)),
+            ("subtree_failed", Json::from(self.subtree_failed)),
+            ("degraded", Json::from(self.degraded)),
         ])
     }
 
@@ -223,6 +234,14 @@ impl RoundRecord {
                     json_u64(v).context("round: client_state_bytes missing or inexact")?
                 }
             },
+            subtree_failed: match j.get("subtree_failed") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: subtree_failed")? as u32,
+            },
+            degraded: match j.get("degraded") {
+                None => 0,
+                Some(v) => v.as_usize().context("round: degraded")? as u32,
+            },
         })
     }
 }
@@ -273,11 +292,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes,subtree_failed,degraded\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -298,7 +317,9 @@ impl RunReport {
                 r.stale_folded,
                 r.stale_dropped,
                 r.agg_depth,
-                r.client_state_bytes
+                r.client_state_bytes,
+                r.subtree_failed,
+                r.degraded
             ));
         }
         out
@@ -416,6 +437,8 @@ mod tests {
             stale_dropped: 1,
             agg_depth: 2,
             client_state_bytes: 160,
+            subtree_failed: 1,
+            degraded: 2,
         }
     }
 
@@ -497,6 +520,8 @@ mod tests {
         assert_eq!(a.stale_dropped, b.stale_dropped);
         assert_eq!(a.agg_depth, b.agg_depth);
         assert_eq!(a.client_state_bytes, b.client_state_bytes);
+        assert_eq!(a.subtree_failed, b.subtree_failed);
+        assert_eq!(a.degraded, b.degraded);
     }
 
     #[test]
@@ -541,6 +566,8 @@ mod tests {
         assert_eq!(row.get("stale_dropped").and_then(Json::as_usize), Some(1));
         assert_eq!(row.get("agg_depth").and_then(Json::as_usize), Some(2));
         assert_eq!(row.get("client_state_bytes").unwrap(), &Json::Str("160".into()));
+        assert_eq!(row.get("subtree_failed").and_then(Json::as_usize), Some(1));
+        assert_eq!(row.get("degraded").and_then(Json::as_usize), Some(2));
     }
 
     #[test]
@@ -571,6 +598,8 @@ mod tests {
                     r.remove("stale_dropped");
                     r.remove("agg_depth");
                     r.remove("client_state_bytes");
+                    r.remove("subtree_failed");
+                    r.remove("degraded");
                 }
             }
         }
@@ -587,6 +616,8 @@ mod tests {
         assert_eq!(back.rounds[0].stale_dropped, 0);
         assert_eq!(back.rounds[0].agg_depth, 0);
         assert_eq!(back.rounds[0].client_state_bytes, 0);
+        assert_eq!(back.rounds[0].subtree_failed, 0);
+        assert_eq!(back.rounds[0].degraded, 0);
         assert_eq!(back.rounds[0].wall_secs, 0.5, "wall_secs survives");
         // present-but-mistyped fields still error (corruption, not legacy)
         let mut bad = rep.to_json();
@@ -612,7 +643,7 @@ mod tests {
         let header = csv.lines().next().unwrap();
         assert!(
             header.ends_with(
-                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes"
+                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes,subtree_failed,degraded"
             ),
             "{header}"
         );
@@ -627,6 +658,8 @@ mod tests {
         assert_eq!(cols[18], "1");
         assert_eq!(cols[19], "2");
         assert_eq!(cols[20], "160");
+        assert_eq!(cols[21], "1");
+        assert_eq!(cols[22], "2");
     }
 
     #[test]

@@ -159,6 +159,8 @@ mod tests {
             stale_dropped: 0,
             agg_depth: 0,
             client_state_bytes: 0,
+            subtree_failed: 0,
+            degraded: 0,
         }
     }
 

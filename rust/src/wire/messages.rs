@@ -112,12 +112,20 @@ pub enum Message {
         /// Global (initial, previous-round) training loss; `None`
         /// before round 1.
         losses: Option<(f32, f32)>,
-        /// This round's leaf cohort (ascending client ids), present only
-        /// in tree topologies so an intermediate aggregator knows which
-        /// of its children to relay to and wait for.  A trailing
+        /// This round's on-time leaf cohort (ascending client ids),
+        /// present only in tree topologies so an intermediate aggregator
+        /// knows which of its children to relay to and fold.  A trailing
         /// optional field like `Join::num_samples`: `None` encodes the
         /// legacy frame byte for byte, and leaf workers ignore it.
         cohort: Option<Vec<u32>>,
+        /// Leaves the scheduler expects to answer *late* (semi-sync
+        /// banking): an aggregator relays the broadcast to these children
+        /// too but forwards their updates upstream raw instead of folding
+        /// them, so the root banks exactly what the in-process engine
+        /// banks.  Second trailing optional region — present on the wire
+        /// only after `cohort` (the encoder writes an empty cohort if
+        /// necessary), so legacy frames stay byte-identical.
+        late: Option<Vec<u32>>,
     },
     /// Client -> server: the quantized update.
     Update(Update),
@@ -361,7 +369,7 @@ impl Message {
                     w.u32(*m);
                 }
             }
-            Message::Broadcast { round, params, losses, cohort } => {
+            Message::Broadcast { round, params, losses, cohort, late } => {
                 w.u8(TAG_BROADCAST);
                 w.u32(*round);
                 match losses {
@@ -373,9 +381,16 @@ impl Message {
                     }
                 }
                 w.f32s(params);
-                // present-by-length, like Join::num_samples
+                // present-by-length, like Join::num_samples; `late` can
+                // only follow a present cohort, so a Some(late) forces
+                // at least an empty cohort list onto the wire
                 if let Some(c) = cohort {
                     w.u32s(c);
+                } else if late.is_some() {
+                    w.u32s(&[]);
+                }
+                if let Some(l) = late {
+                    w.u32s(l);
                 }
             }
             Message::Update(u) => {
@@ -424,16 +439,21 @@ impl Message {
             Message::Welcome { config_json, round, .. } => {
                 1 + 4 + 4 + config_json.len() + if round.is_some() { 4 } else { 0 }
             }
-            Message::Broadcast { params, losses, cohort, .. } => {
+            Message::Broadcast { params, losses, cohort, late, .. } => {
                 let losses_len = match losses {
                     None => 1,
                     Some(_) => 1 + 4 + 4,
                 };
-                let cohort_len = match cohort {
-                    None => 0,
-                    Some(c) => 4 + c.len() * 4,
+                let cohort_len = match (cohort, late) {
+                    (None, None) => 0,
+                    (None, Some(_)) => 4, // forced empty cohort list
+                    (Some(c), _) => 4 + c.len() * 4,
                 };
-                1 + 4 + losses_len + 4 + params.len() * 4 + cohort_len
+                let late_len = match late {
+                    None => 0,
+                    Some(l) => 4 + l.len() * 4,
+                };
+                1 + 4 + losses_len + 4 + params.len() * 4 + cohort_len + late_len
             }
             Message::Update(u) => 1 + update_encoded_len(u),
             Message::Shutdown => 1,
@@ -471,9 +491,11 @@ impl Message {
                     t => bail!("bad losses flag {t}"),
                 };
                 let params: Arc<[f32]> = r.f32s()?.into();
-                // version-tolerant: old frames end after the params
+                // version-tolerant: old frames end after the params, and
+                // pre-`late` frames end after the cohort
                 let cohort = if r.pos < r.buf.len() { Some(r.u32s()?) } else { None };
-                Message::Broadcast { round, params, losses, cohort }
+                let late = if r.pos < r.buf.len() { Some(r.u32s()?) } else { None };
+                Message::Broadcast { round, params, losses, cohort, late }
             }
             TAG_UPDATE => {
                 let round = r.u32()?;
@@ -582,24 +604,42 @@ mod tests {
             params: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE].into(),
             losses: None,
             cohort: None,
+            late: None,
         });
         roundtrip(&Message::Broadcast {
             round: 4,
             params: vec![0.5; 3].into(),
             losses: Some((2.3, 0.7)),
             cohort: None,
+            late: None,
         });
         roundtrip(&Message::Broadcast {
             round: 5,
             params: vec![0.5; 3].into(),
             losses: Some((2.3, 0.7)),
             cohort: Some(vec![0, 3, 7, 11]),
+            late: None,
         });
         roundtrip(&Message::Broadcast {
             round: 6,
             params: vec![0.5; 2].into(),
             losses: None,
             cohort: Some(Vec::new()),
+            late: None,
+        });
+        roundtrip(&Message::Broadcast {
+            round: 7,
+            params: vec![0.5; 2].into(),
+            losses: Some((2.3, 0.7)),
+            cohort: Some(vec![0, 2]),
+            late: Some(vec![1, 5]),
+        });
+        roundtrip(&Message::Broadcast {
+            round: 8,
+            params: vec![0.5; 2].into(),
+            losses: None,
+            cohort: Some(vec![4]),
+            late: Some(Vec::new()),
         });
         roundtrip(&Message::Partial(PartialAggregate {
             round: 3,
@@ -680,8 +720,14 @@ mod tests {
     #[test]
     fn rejects_truncation_and_trailing() {
         let bytes =
-            Message::Broadcast { round: 1, params: vec![1.0; 8].into(), losses: None, cohort: None }
-                .encode();
+            Message::Broadcast {
+                round: 1,
+                params: vec![1.0; 8].into(),
+                losses: None,
+                cohort: None,
+                late: None,
+            }
+            .encode();
         assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
         let mut extended = bytes.clone();
         extended.push(0);
@@ -696,18 +742,42 @@ mod tests {
             Message::Join { client_id: 7, num_samples: Some(600) },
             Message::Welcome { client_id: 7, config_json: r#"{"model":"mlp"}"#.into(), round: None },
             Message::Welcome { client_id: 7, config_json: "{}".into(), round: Some(3) },
-            Message::Broadcast { round: 3, params: vec![1.0; 13].into(), losses: None, cohort: None },
+            Message::Broadcast {
+                round: 3,
+                params: vec![1.0; 13].into(),
+                losses: None,
+                cohort: None,
+                late: None,
+            },
             Message::Broadcast {
                 round: 4,
                 params: vec![0.5; 3].into(),
                 losses: Some((2.3, 0.7)),
                 cohort: None,
+                late: None,
             },
             Message::Broadcast {
                 round: 5,
                 params: vec![0.5; 3].into(),
                 losses: None,
                 cohort: Some(vec![1, 2, 9]),
+                late: None,
+            },
+            Message::Broadcast {
+                round: 6,
+                params: vec![0.5; 3].into(),
+                losses: None,
+                cohort: Some(vec![1, 2, 9]),
+                late: Some(vec![4, 7]),
+            },
+            // a Some(late) with no cohort forces an empty cohort list
+            // onto the wire; encoded_len must account for those 4 bytes
+            Message::Broadcast {
+                round: 7,
+                params: vec![0.5; 3].into(),
+                losses: None,
+                cohort: None,
+                late: Some(vec![4, 7]),
             },
             Message::Partial(PartialAggregate {
                 round: 2,
@@ -862,6 +932,7 @@ mod tests {
             params: vec![1.0, 2.0].into(),
             losses: None,
             cohort: None,
+            late: None,
         };
         assert_eq!(Message::decode(&legacy).unwrap(), none);
         assert_eq!(none.encode(), legacy);
@@ -877,10 +948,46 @@ mod tests {
                 params: vec![1.0, 2.0].into(),
                 losses: None,
                 cohort: Some(vec![3, 5]),
+                late: None,
             }
         );
         // A half-written cohort is rejected, not misread.
         assert!(Message::decode(&extended[..extended.len() - 2]).is_err());
+        // A second id list appends the late set (semi-sync x tree).
+        let mut with_late = extended.clone();
+        with_late.extend_from_slice(&1u32.to_le_bytes());
+        with_late.extend_from_slice(&4u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&with_late).unwrap(),
+            Message::Broadcast {
+                round: 9,
+                params: vec![1.0, 2.0].into(),
+                losses: None,
+                cohort: Some(vec![3, 5]),
+                late: Some(vec![4]),
+            }
+        );
+        // A half-written late list is rejected, not misread.
+        assert!(Message::decode(&with_late[..with_late.len() - 2]).is_err());
+        // A late set without a cohort encodes a forced empty cohort, so
+        // the frame stays parseable by the two-list layout.
+        let forced = Message::Broadcast {
+            round: 9,
+            params: vec![1.0, 2.0].into(),
+            losses: None,
+            cohort: None,
+            late: Some(vec![4]),
+        };
+        assert_eq!(
+            Message::decode(&forced.encode()).unwrap(),
+            Message::Broadcast {
+                round: 9,
+                params: vec![1.0, 2.0].into(),
+                losses: None,
+                cohort: Some(Vec::new()),
+                late: Some(vec![4]),
+            }
+        );
     }
 
     fn gen_partial(g: &mut Gen) -> PartialAggregate {

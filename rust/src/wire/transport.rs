@@ -285,8 +285,13 @@ mod tests {
     #[test]
     fn in_proc_roundtrip_and_accounting() {
         let (mut server, mut client) = in_proc_pair();
-        let msg =
-            Message::Broadcast { round: 1, params: vec![0.5; 100].into(), losses: None, cohort: None };
+        let msg = Message::Broadcast {
+            round: 1,
+            params: vec![0.5; 100].into(),
+            losses: None,
+            cohort: None,
+            late: None,
+        };
         server.send(&msg).unwrap();
         let got = client.recv().unwrap();
         assert_eq!(got, msg);
@@ -296,8 +301,13 @@ mod tests {
 
     #[test]
     fn send_encoded_matches_send() {
-        let msg =
-            Message::Broadcast { round: 2, params: vec![0.25; 64].into(), losses: None, cohort: None };
+        let msg = Message::Broadcast {
+            round: 2,
+            params: vec![0.25; 64].into(),
+            losses: None,
+            cohort: None,
+            late: None,
+        };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();
         let via_send = a.bytes_sent();
@@ -335,6 +345,7 @@ mod tests {
             params: vec![1.0; 257].into(),
             losses: Some((2.3, 1.1)),
             cohort: None,
+            late: None,
         };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();

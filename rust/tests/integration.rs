@@ -568,6 +568,341 @@ fn tcp_tree_composes_with_sampling_quorum_staleness_and_reference_codec() {
 }
 
 #[test]
+fn tcp_tree_with_sim_crash_faults_matches_virtual_grouped_local_run() {
+    use feddq::sim::faults::FaultProfile;
+    // The faults x topology composition over real sockets: crash draws
+    // are pure in (seed, leaf id, round), the failed leaves vanish from
+    // the broadcast's cohort routing field (their aggregator never
+    // relays to them), and the leaf-granular quorum judges the
+    // survivors — so the whole run must stay bit-identical to the
+    // in-process session with the same knobs, fault columns included.
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 5;
+        cfg.round.topology.fanout = 2;
+        cfg.sim_faults = FaultProfile::Crash { p: 0.3 };
+        // sim-failed leaves are excluded before dispatch, so the
+        // leaf-granular floor ranges over the *surviving* cohort and
+        // every survivor reports — the worst round at this seed keeps
+        // 5 of 10 leaves and still clears ceil(0.5 * 5) = 3
+        cfg.round.tolerance.quorum = 0.5;
+        cfg.round.tolerance.round_timeout = Some(30.0);
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17920";
+    let tree = spawn_tree(addr, 17921, 10, 2);
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+    assert_eq!(report.rounds.len(), 5);
+    let total_failed: u32 = report.rounds.iter().map(|r| r.failed).sum();
+    assert!(total_failed > 0, "crash:0.3 over 5 rounds of 10 leaves must fail someone");
+
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, 10, "round {}: failed members still count as selected", a.round);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.failed, b.failed, "round {}: failed set is seed-pure", a.round);
+        assert_eq!(a.rejoined, 0, "round {}: simulated crashes never rejoin", a.round);
+        assert_eq!(a.subtree_failed, 0, "round {}: sim faults kill leaves, not subtrees", a.round);
+        assert_eq!(a.subtree_failed, b.subtree_failed);
+        assert_eq!(a.degraded, 0, "round {}", a.round);
+        assert_eq!(a.degraded, b.degraded);
+        assert_eq!(a.agg_depth, 2);
+        assert_eq!(a.agg_depth, b.agg_depth);
+        assert_eq!(a.train_loss, b.train_loss, "tree vs virtual train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tree vs virtual bits r{}", a.round);
+        assert_eq!(a.client_state_bytes, b.client_state_bytes, "round {}", a.round);
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tree vs virtual params");
+}
+
+#[test]
+fn tcp_tree_semisync_forwards_straggler_relays_raw_and_matches_local() {
+    use feddq::sim::faults::FaultProfile;
+    // Bounded staleness under the tree, over real sockets: a late
+    // leaf's update is relayed to its aggregator, forwarded upstream
+    // RAW (never folded into the partial), banked by the root at
+    // dispatch and folded with discounted weight at its due round —
+    // the identical object, bank and ledger the flat topology and the
+    // in-process virtual grouping produce.
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 4;
+        cfg.round.topology.fanout = 2;
+        cfg.sim_faults = FaultProfile::Stall { p: 0.5, secs: 75.0 };
+        cfg.round.tolerance.round_timeout = Some(30.0);
+        // see semisync_tcp_run_banks_and_folds_stragglers_like_local
+        // for why the floor must stay at ceil(0.05 * n) = 1
+        cfg.round.tolerance.quorum = 0.05;
+        cfg.round.tolerance.staleness = 2;
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17926";
+    let tree = spawn_tree(addr, 17927, 10, 2);
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+    let folded: u32 = report.rounds.iter().map(|r| r.stale_folded).sum();
+    assert!(folded >= 1, "stall:0.5:75 under --staleness 2 must fold a straggler");
+
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, b.selected, "round {}", a.round);
+        assert_eq!(a.failed, b.failed, "round {}", a.round);
+        assert_eq!(a.stale_folded, b.stale_folded, "round {}", a.round);
+        assert_eq!(a.stale_dropped, b.stale_dropped, "round {}", a.round);
+        assert_eq!(a.subtree_failed, b.subtree_failed, "round {}", a.round);
+        assert_eq!(a.degraded, b.degraded, "round {}", a.round);
+        assert_eq!(a.train_loss, b.train_loss, "tree vs virtual train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tree vs virtual bits r{}", a.round);
+        assert_eq!(a.client_state_bytes, b.client_state_bytes, "round {}", a.round);
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tree vs virtual params");
+}
+
+/// A stand-in aggregator for crash tests: it completes the aggregator
+/// setup protocol end to end — join upstream, adopt its leaves (relaying
+/// the run config, optionally stamped with a `fallback_addr` like the
+/// real `feddq aggregate` does), collect their ready acks and ack
+/// readiness upstream — then drops its listener and every socket at
+/// once.  As far as the server and the subtree's leaves can tell, the
+/// aggregator process was kill -9'd just before round 0.  Sends on the
+/// returned channel after the sockets are gone (so a restarted
+/// aggregator can safely rebind the address).
+fn mortal_aggregator(
+    serve_addr: &str,
+    agg_addr: &str,
+    lo: u32,
+    fanout: u32,
+    stamp_fallback: bool,
+) -> (std::thread::JoinHandle<()>, std::sync::mpsc::Receiver<()>) {
+    use feddq::wire::messages::Message;
+    use feddq::wire::transport::{TcpTransport, Transport};
+    let (died_tx, died_rx) = std::sync::mpsc::channel::<()>();
+    let (serve_addr, agg_addr) = (serve_addr.to_string(), agg_addr.to_string());
+    let handle = std::thread::spawn(move || {
+        let listener = std::net::TcpListener::bind(&agg_addr).unwrap();
+        let mut up =
+            TcpTransport::connect_retry(&serve_addr, 100, std::time::Duration::from_millis(50))
+                .unwrap();
+        up.send(&Message::Join { client_id: lo, num_samples: None }).unwrap();
+        let config_json = match up.recv().unwrap() {
+            Message::Welcome { client_id, config_json, .. } => {
+                assert_eq!(client_id, lo);
+                config_json
+            }
+            other => panic!("expected Welcome, got {other:?}"),
+        };
+        // the real aggregator stamps its upstream into the relayed
+        // config so its orphaned leaves can degrade to the root
+        let leaf_config = if stamp_fallback {
+            assert!(config_json.starts_with('{'), "compact config JSON");
+            format!("{{\"fallback_addr\":\"{serve_addr}\",{}", &config_json[1..])
+        } else {
+            config_json
+        };
+        let mut children = Vec::new();
+        for _ in 0..fanout {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            let id = match t.recv().unwrap() {
+                Message::Join { client_id, .. } => client_id,
+                other => panic!("expected Join, got {other:?}"),
+            };
+            t.send(&Message::Welcome {
+                client_id: id,
+                config_json: leaf_config.clone(),
+                round: None,
+            })
+            .unwrap();
+            children.push((id, t));
+        }
+        let mut total = 0u32;
+        for (id, t) in children.iter_mut() {
+            match t.recv().unwrap() {
+                Message::Join { client_id, num_samples } => {
+                    assert_eq!(client_id, *id);
+                    total += num_samples.expect("leaf ready Join carries its shard size");
+                }
+                other => panic!("expected ready Join, got {other:?}"),
+            }
+        }
+        up.send(&Message::Join { client_id: lo, num_samples: Some(total) }).unwrap();
+        // the crash: the listener and every socket die together
+        drop(children);
+        drop(up);
+        drop(listener);
+        died_tx.send(()).unwrap();
+    });
+    (handle, died_rx)
+}
+
+#[test]
+fn tcp_tree_run_survives_an_aggregator_crash_and_rejoin() {
+    use feddq::sim::faults::FaultProfile;
+    // The acceptance scenario for the fault-tolerant tree: a tree run
+    // with simulated leaf faults composed on top loses subtree 0's
+    // aggregator to a (protocol-level) kill -9 before round 0.  Its
+    // leaves reconnect to the restarted aggregator on their own, the
+    // restarted process re-joins upstream mid-run, the server's
+    // composite handle adopts it mid-round and re-sends the round's
+    // broadcast — and because the leaves replay cached answers
+    // (exactly-once compute) the recovered round folds exactly what an
+    // uninterrupted one would: every deterministic column, params_hash
+    // included, still matches the in-process run bit for bit.  Only the
+    // real-churn columns (subtree_failed, rejoined) may differ, by >= 1.
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 6;
+        cfg.round.topology.fanout = 2;
+        cfg.sim_faults = FaultProfile::Crash { p: 0.2 };
+        cfg.round.tolerance.quorum = 0.6;
+        cfg.round.tolerance.round_timeout = Some(30.0);
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17933";
+    let agg0 = "127.0.0.1:17934";
+    let (mortal, died_rx) = mortal_aggregator(addr, agg0, 0, 2, false);
+    let mut tree = Vec::new();
+    for (t, lo) in (2..10u32).step_by(2).enumerate() {
+        let upstream = addr.to_string();
+        let agg_addr = format!("127.0.0.1:{}", 17935 + t as u16);
+        tree.push(std::thread::spawn(move || {
+            topology::aggregate(&upstream, &agg_addr, lo, 2, "artifacts")
+                .unwrap_or_else(|e| panic!("aggregator {lo}: {e:#}"))
+        }));
+    }
+    for id in 0..10u32 {
+        let agg_addr = if id < 2 {
+            agg0.to_string()
+        } else {
+            format!("127.0.0.1:{}", 17935 + (id / 2 - 1) as u16)
+        };
+        tree.push(std::thread::spawn(move || {
+            topology::worker(&agg_addr, id, "artifacts")
+                .unwrap_or_else(|e| panic!("worker {id}: {e:#}"))
+        }));
+    }
+    // The restarted aggregator: rebinds the dead one's address and
+    // rejoins the run in progress.  The short delay keeps it clear of
+    // the initial setup handshakes on a heavily loaded machine.
+    let reborn = {
+        let (addr, agg0) = (addr.to_string(), agg0.to_string());
+        std::thread::spawn(move || {
+            died_rx.recv().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            topology::aggregate(&addr, &agg0, 0, 2, "artifacts")
+                .unwrap_or_else(|e| panic!("restarted aggregator: {e:#}"))
+        })
+    };
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    mortal.join().unwrap();
+    // The restarted aggregator only exits on Shutdown, which the server
+    // can only deliver over the re-adopted socket — joining the thread
+    // is itself proof the failover path worked end to end.
+    reborn.join().unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+
+    assert_eq!(report.rounds.len(), 6, "the crash-hit run must complete every round");
+    let subtree_failed: u32 = report.rounds.iter().map(|r| r.subtree_failed).sum();
+    let rejoined: u32 = report.rounds.iter().map(|r| r.rejoined).sum();
+    assert!(subtree_failed >= 1, "the killed aggregator must be recorded, got {subtree_failed}");
+    assert!(rejoined >= 1, "the restarted aggregator must be recorded, got {rejoined}");
+
+    let mut cfg2 = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    knobs(&mut cfg2);
+    let local = Session::new(cfg2).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, b.selected, "round {}", a.round);
+        assert_eq!(a.failed, b.failed, "round {}: recovery absorbs the real crash", a.round);
+        assert_eq!(a.stale_folded, b.stale_folded, "round {}", a.round);
+        assert_eq!(a.stale_dropped, b.stale_dropped, "round {}", a.round);
+        assert_eq!(a.agg_depth, b.agg_depth, "round {}", a.round);
+        assert_eq!(a.train_loss, b.train_loss, "tree vs virtual train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tree vs virtual bits r{}", a.round);
+        assert_eq!(a.client_state_bytes, b.client_state_bytes, "round {}", a.round);
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tree vs virtual params");
+}
+
+#[test]
+fn tcp_tree_orphaned_leaves_degrade_to_direct_root_attachment() {
+    // Graceful degradation: subtree 8's aggregator dies before round 0
+    // and never comes back.  Its leaves give up on it after the bounded
+    // reconnect budget and attach directly to the root at the
+    // `fallback_addr` stamped into their relayed config; the serve loop
+    // retires the dead composite handle and absorbs them as direct
+    // handles, and the virtual grouping folds them exactly where their
+    // aggregator would have — so once degradation lands, rounds lose
+    // nobody.  The round that bridges the gap fails the orphaned span
+    // (leaf-granular: failed counts 2 leaves, not 1 subtree).  The dead
+    // subtree is the *last* one because the server collects handles in
+    // subtree order and failover on a handle burns the round budget
+    // that remains — the four live partials must drain first.
+    let mut cfg = tiny_cfg(PolicyConfig::FedDq { resolution: 0.005 });
+    cfg.rounds = 4;
+    cfg.round.topology.fanout = 2;
+    cfg.round.tolerance.quorum = 0.6;
+    // generous enough for the leaves' ~9s degrade budget to elapse
+    // within the first failed round, short enough to keep the test fast
+    cfg.round.tolerance.round_timeout = Some(12.0);
+    let addr = "127.0.0.1:17940";
+    let agg8 = "127.0.0.1:17941";
+    let (mortal, _died_rx) = mortal_aggregator(addr, agg8, 8, 2, true);
+    let mut tree = Vec::new();
+    for (t, lo) in (0..8u32).step_by(2).enumerate() {
+        let upstream = addr.to_string();
+        let agg_addr = format!("127.0.0.1:{}", 17942 + t as u16);
+        tree.push(std::thread::spawn(move || {
+            topology::aggregate(&upstream, &agg_addr, lo, 2, "artifacts")
+                .unwrap_or_else(|e| panic!("aggregator {lo}: {e:#}"))
+        }));
+    }
+    for id in 0..10u32 {
+        let agg_addr = if id >= 8 {
+            agg8.to_string()
+        } else {
+            format!("127.0.0.1:{}", 17942 + (id / 2) as u16)
+        };
+        tree.push(std::thread::spawn(move || {
+            topology::worker(&agg_addr, id, "artifacts")
+                .unwrap_or_else(|e| panic!("worker {id}: {e:#}"))
+        }));
+    }
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    mortal.join().unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+
+    assert_eq!(report.rounds.len(), 4, "the orphaned run must complete every round");
+    let subtree_failed: u32 = report.rounds.iter().map(|r| r.subtree_failed).sum();
+    assert!(subtree_failed >= 1, "the dead aggregator must be recorded, got {subtree_failed}");
+    let degraded: u32 = report.rounds.iter().map(|r| r.degraded).sum();
+    assert!(degraded >= 2, "both orphaned leaves must degrade, got {degraded}");
+    let rejoined: u32 = report.rounds.iter().map(|r| r.rejoined).sum();
+    assert_eq!(rejoined, 0, "a degraded leaf attach is not an aggregator rejoin");
+    let first = &report.rounds[0];
+    assert_eq!(first.failed, 2, "the bridging round fails the orphaned span's two leaves");
+    let last = report.rounds.last().unwrap();
+    assert_eq!(last.failed, 0, "degradation restores the full cohort");
+    assert_eq!(last.degraded, 2, "both direct handles serve the final round");
+    assert_eq!(last.agg_depth, 2, "virtual grouping keeps the tree depth for direct leaves");
+}
+
+#[test]
 fn banked_ef_session_matches_fp32_banking_at_32_bits_of_headroom() {
     // --ef-bits re-quantizes the EF residual between rounds.  At 8
     // bits the trajectory must differ from fp32 banking (the banking

@@ -65,6 +65,13 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
         assert_eq!(ra.rejoined, rb.rejoined, "{what}: rejoined r{}", ra.round);
         assert_eq!(ra.stale_folded, rb.stale_folded, "{what}: stale_folded r{}", ra.round);
         assert_eq!(ra.stale_dropped, rb.stale_dropped, "{what}: stale_dropped r{}", ra.round);
+        assert_eq!(
+            ra.subtree_failed,
+            rb.subtree_failed,
+            "{what}: subtree_failed r{}",
+            ra.round
+        );
+        assert_eq!(ra.degraded, rb.degraded, "{what}: degraded r{}", ra.round);
     }
     assert_ne!(a.params_hash, 0, "{what}: params hash must be tracked");
     assert_eq!(a.params_hash, b.params_hash, "{what}: final params diverged");
@@ -495,6 +502,107 @@ fn faults_compose_with_partial_participation_and_error_feedback() {
     b.agg_shards = 3;
     b.round.pipeline.decode_buffers = 1;
     assert_reports_identical(&a, &run(b), "EF + participation + crash: threads=1 vs 4");
+}
+
+#[test]
+fn sim_faults_compose_with_tree_fanout_across_the_knob_matrix() {
+    // The faults x topology composition contract: fault draws are pure
+    // in (seed, leaf id, round) — never in topology — and the virtual
+    // grouping excludes failed leaves identically at every fanout.  So
+    // for each (profile, fanout) cell the all-serial reference-codec
+    // run must be bit-identical to the maximally parallel narrow-codec
+    // run, including the failed counts, params_hash and the
+    // subtree_failed/degraded columns (always zero here: simulated
+    // faults kill leaves, never aggregator processes).
+    let profiles: &[(&str, FaultProfile, bool)] = &[
+        ("crash", FaultProfile::Crash { p: 0.3 }, false),
+        ("flaky", FaultProfile::Flaky { p: 0.3 }, false),
+        ("stall", FaultProfile::Stall { p: 0.5, secs: 60.0 }, true),
+    ];
+    for &(name, profile, tolerant) in profiles {
+        for fanout in [0u32, 2, 4] {
+            let knobs = |threads: usize| {
+                let mut c = mlp_cfg(threads);
+                c.rounds = 5;
+                c.sim_faults = profile;
+                c.round.topology.fanout = fanout;
+                if tolerant {
+                    // stalled members overshoot this budget in simulated
+                    // time and land in the failed set (staleness 0)
+                    c.round.tolerance.round_timeout = Some(30.0);
+                    c.round.tolerance.quorum = 0.1;
+                }
+                c
+            };
+            let serial = {
+                let mut c = knobs(1);
+                c.agg_shards = 1;
+                c.eval_threads = 1;
+                c.round.pipeline.fold_overlap = false;
+                c.round.pipeline.codec = CodecMode::Reference;
+                c
+            };
+            let base = run(serial);
+            assert_eq!(base.rounds.len(), 5, "{name}/fanout={fanout}: faulty rounds complete");
+            let total_failed: u32 = base.rounds.iter().map(|r| r.failed).sum();
+            assert!(total_failed > 0, "{name}/fanout={fanout}: the profile must fail someone");
+            for r in &base.rounds {
+                assert_eq!(r.subtree_failed, 0, "{name}/fanout={fanout}: sim faults kill leaves");
+                assert_eq!(r.degraded, 0, "{name}/fanout={fanout}: sim faults never degrade");
+                if fanout > 0 {
+                    assert_eq!(r.agg_depth, 2, "{name}/fanout={fanout}: one tier above leaves");
+                } else {
+                    assert_eq!(r.agg_depth, 0, "{name}: flat topology reports depth 0");
+                }
+            }
+            let parallel = {
+                let mut c = knobs(4);
+                c.agg_shards = 5;
+                c.eval_threads = 3;
+                c.round.pipeline.fold_overlap = true;
+                c.round.pipeline.decode_buffers = 2;
+                c.round.pipeline.codec = CodecMode::Narrow;
+                c
+            };
+            assert_reports_identical(
+                &base,
+                &run(parallel),
+                &format!("{name}/fanout={fanout}: serial-ref vs parallel-narrow"),
+            );
+        }
+    }
+}
+
+#[test]
+fn semisync_staleness_composes_with_the_tree() {
+    // Bounded staleness under the tree: stalled leaves (s = 2 against
+    // --staleness 2) are excluded from the on-time grouping, banked at
+    // dispatch, and folded with discounted weight two rounds later —
+    // with the grouping applied only to the on-time survivors.  The
+    // whole composition must stay engine-invariant for every fanout.
+    for fanout in [2u32, 4] {
+        let mut serial = semisync_cfg(1, 0.5, 2);
+        serial.round.topology.fanout = fanout;
+        serial.agg_shards = 1;
+        serial.eval_threads = 1;
+        serial.round.pipeline.fold_overlap = false;
+        serial.round.pipeline.codec = CodecMode::Reference;
+        let mut parallel = semisync_cfg(4, 0.5, 2);
+        parallel.round.topology.fanout = fanout;
+        parallel.agg_shards = 3;
+        parallel.eval_threads = 2;
+        parallel.round.pipeline.fold_overlap = true;
+        parallel.round.pipeline.decode_buffers = 2;
+        parallel.round.pipeline.codec = CodecMode::Narrow;
+        let (rs, rp) = (run(serial), run(parallel));
+        assert_reports_identical(
+            &rs,
+            &rp,
+            &format!("staleness=2/fanout={fanout}: serial-ref vs parallel-narrow"),
+        );
+        let folded: u32 = rs.rounds.iter().map(|r| r.stale_folded).sum();
+        assert!(folded > 0, "fanout={fanout}: stragglers must bank and fold under the tree");
+    }
 }
 
 #[test]

@@ -79,16 +79,21 @@ fn cohort_draws_differ_across_rounds_but_replay_within_one() {
 }
 
 #[test]
-fn arena_holds_a_million_clients_in_sixteen_bytes_each() {
+fn arena_holds_a_million_clients_in_twenty_four_bytes_each() {
     let mut arena = ClientArena::new();
     for id in 0..N as u32 {
         arena.set_samples(id, 60);
+        // the per-client wire ledger lives in the same row — no side maps
+        arena.add_io_bytes(id, 1_000, 4_000);
     }
     assert_eq!(arena.len(), N);
-    // The whole registry: 16 MB, vs the 48+ bytes/entry the old
-    // BTreeMap-samples + dense-f64-EWMA spread cost.
-    assert_eq!(arena.resident_bytes(), (N * 16) as u64);
-    assert!(arena.resident_bytes() <= (N as u64) * 16);
+    // The whole registry: 24 MB (samples + EWMA + io ledger), vs the
+    // 48+ bytes/entry the old BTreeMap-samples + dense-f64-EWMA +
+    // per-handle byte-counter spread cost.
+    assert_eq!(arena.resident_bytes(), (N * 24) as u64);
+    // The per-client budget `client_state_bytes` reports must hold.
+    assert!(arena.resident_bytes() <= (N as u64) * 24);
+    assert_eq!(arena.io_bytes((N - 1) as u32), (1_000, 4_000));
 
     // Reading ids that never reported stays free: no row materializes.
     let sparse = ClientArena::new();

@@ -1,0 +1,104 @@
+#!/usr/bin/env bash
+# Tree churn smoke: a real TCP tree run that survives its aggregator
+# being killed.
+#
+# Runs `feddq serve --fanout 2` with quorum aggregation enabled, one
+# `feddq aggregate` process owning the only subtree, and two leaf
+# workers on the built-in native manifest (FEDDQ_NATIVE_CLIENTS=2).
+# Mid-run the aggregator is `kill -9`'d and restarted: the restarted
+# process must rejoin upstream (two-step handshake through the tree
+# rejoin accept loop), re-accept its leaves (which retry their
+# aggregator with bounded backoff), and be adopted mid-round by the
+# server's failover poll.  The run must finish every round (exit 0),
+# and the written report must record at least one `subtree_failed`
+# round (the kill) and at least one `rejoined` aggregator (the
+# restart).
+#
+# CI runs this in the churn-smoke job; it also works locally:
+#
+#     scripts/tree_churn_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ADDR="${CHURN_ADDR:-127.0.0.1:17883}"
+AGG_ADDR="${CHURN_AGG_ADDR:-127.0.0.1:17884}"
+ROUNDS="${CHURN_ROUNDS:-40}"
+REPORT="$(mktemp -t tree_churn_report.XXXXXX.json)"
+SERVE_LOG="$(mktemp -t tree_churn_serve.XXXXXX.log)"
+export FEDDQ_NATIVE_CLIENTS=2
+
+cargo build --release --locked
+
+cleanup() {
+    kill -9 "${SERVE_PID:-}" "${AGG_PID:-}" "${W0_PID:-}" "${W1_PID:-}" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+echo "== serve on $ADDR ($ROUNDS rounds, fanout 2, quorum 0.5, round-timeout 20s) =="
+target/release/feddq serve --addr "$ADDR" --rounds "$ROUNDS" \
+    --train-size 2000 --test-size 500 --fanout 2 \
+    --quorum 0.5 --round-timeout 20 --out "$REPORT" >"$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+target/release/feddq aggregate --upstream "$ADDR" --addr "$AGG_ADDR" --id 0 --fanout 2 &
+AGG_PID=$!
+target/release/feddq worker --addr "$AGG_ADDR" --id 0 &
+W0_PID=$!
+target/release/feddq worker --addr "$AGG_ADDR" --id 1 &
+W1_PID=$!
+
+# Wait for the first round record before pulling the plug: killing the
+# aggregator during the initial handshake would (correctly) abort serve.
+for _ in $(seq 1 100); do
+    if grep -q "round " "$SERVE_LOG"; then break; fi
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "serve exited before round 0:"; cat "$SERVE_LOG"; exit 1
+    fi
+    sleep 0.2
+done
+grep -q "round " "$SERVE_LOG" || { echo "no round completed in 20s:"; cat "$SERVE_LOG"; exit 1; }
+
+echo "== kill -9 the aggregator mid-run =="
+kill -9 "$AGG_PID"
+sleep 1
+
+echo "== restart the aggregator (rejoins the run in progress) =="
+target/release/feddq aggregate --upstream "$ADDR" --addr "$AGG_ADDR" --id 0 --fanout 2 &
+AGG_PID=$!
+
+if ! wait "$SERVE_PID"; then
+    echo "serve failed:"; cat "$SERVE_LOG"; exit 1
+fi
+wait "$AGG_PID"
+wait "$W0_PID"
+wait "$W1_PID"
+
+echo "== verifying the report recorded the aggregator churn =="
+python3 - "$REPORT" "$ROUNDS" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    report = json.load(f)
+rounds = report["rounds"]
+want = int(sys.argv[2])
+subtree_failed = sum(int(r["subtree_failed"]) for r in rounds)
+rejoined = sum(int(r["rejoined"]) for r in rounds)
+depths = {int(r["agg_depth"]) for r in rounds}
+print(f"  rounds {len(rounds)}/{want}, subtree_failed {subtree_failed}, "
+      f"rejoined {rejoined}, agg_depth {sorted(depths)}")
+ok = True
+if len(rounds) != want:
+    print("  FAIL: the tree run must complete every round")
+    ok = False
+if subtree_failed < 1:
+    print("  FAIL: the killed aggregator must be recorded as subtree_failed")
+    ok = False
+if rejoined < 1:
+    print("  FAIL: the restarted aggregator must be recorded as rejoined")
+    ok = False
+if depths != {2}:
+    print("  FAIL: every round must fold through the aggregator tier")
+    ok = False
+sys.exit(0 if ok else 1)
+EOF
+echo "tree churn smoke passed"
