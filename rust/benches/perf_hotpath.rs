@@ -288,6 +288,41 @@ fn main() -> anyhow::Result<()> {
     });
     json.push(("encode_fused_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
 
+    bench_header("server downlink: fused quantized broadcast encode (mlp delta, 4-bit)");
+    // The per-round broadcast cost with --downlink-bits on: envelope +
+    // fused quantize→pack of the (params - replica) + residual vector,
+    // with the EF residual updated in place.  Same 4-byte/element basis
+    // as the client encode rows above.
+    {
+        let replica = vec![0.0f32; mm.d];
+        let mut residual = vec![0.0f32; mm.d];
+        let r = b.bench_bytes("encode downlink (4-bit fused)", Some(dbytes), &mut || {
+            // reset the residual so every rep encodes the same vector
+            residual.iter_mut().for_each(|v| *v = 0.0);
+            black_box(
+                codec::encode_downlink(&mm, 4, &delta, &replica, &mut residual, 7).unwrap(),
+            )
+        });
+        json.push(("downlink_encode_gbps".into(), r.throughput_gbps().unwrap_or(0.0)));
+    }
+
+    bench_header("bit-budget controller: per-round allocation (1000-member cohort)");
+    // The closed loop's control-plane cost: one plan() over a sampled
+    // 1000-client cohort against the mlp segment layout — must stay
+    // far below a round's compute cost (microseconds, not millis).
+    {
+        use feddq::quant::budget::BitBudgetController;
+        let seg_sizes: Vec<u64> = mm.segments.iter().map(|s| s.size as u64).collect();
+        let k = 1000u32;
+        let cap = k as u64 * mm.d as u64 * 4; // ~4 bits/element/member
+        let cohort: Vec<(u32, bool)> = (0..k).map(|id| (id, id % 7 == 0)).collect();
+        let mut ctl = BitBudgetController::new(cap, seg_sizes);
+        let r = b.bench(&format!("budget plan k={k}"), || black_box(ctl.plan(&cohort)));
+        let plan_secs = r.median.as_secs_f64();
+        println!("budget plan over {k} members: {:.3} ms", plan_secs * 1e3);
+        json.push(("budget_plan_secs".into(), plan_secs));
+    }
+
     bench_header("server hot path: sharded aggregation (mlp layout)");
     // Fixture: n decoded 8-bit updates produced through the real codec,
     // decoded both ways (narrow u16 rows = production, f32 reference

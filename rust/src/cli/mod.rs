@@ -60,6 +60,10 @@ TRAIN FLAGS (all also accepted by serve, which runs the same rounds over TCP):
   --round-timeout <s>   give up on missing updates after s seconds [off]
   --quorum <f>          update fraction that completes a round, (0,1] [1.0]
   --staleness <k>       accept up to k-round-late updates, discounted  [0]
+  --bit-budget <bits>   round-level uplink payload bit budget, split per
+                        client per segment (0 = off; needs --error-feedback) [0]
+  --downlink-bits <b>   quantize the server broadcast to b bits (1..=16, needs
+                        --error-feedback; 32 = fp32 ledger only; 0 = off)  [0]
   --artifacts <dir>     AOT artifacts directory                [artifacts]
   --data-dir <dir>      real dataset directory                 [data]
   --out <path>          write the per-round report (.csv/.json)
@@ -105,6 +109,8 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "round-timeout",
     "quorum",
     "staleness",
+    "bit-budget",
+    "downlink-bits",
     "artifacts",
     "data-dir",
     "out",
@@ -308,6 +314,12 @@ pub fn run_config_from_args(args: &Args, default_model: &str) -> Result<crate::c
     if let Some(f) = args.get_parse::<u32>("fanout")? {
         rp = rp.fanout(f);
     }
+    if let Some(b) = args.get_parse::<u64>("bit-budget")? {
+        rp = rp.bit_budget(b);
+    }
+    if let Some(b) = args.get_parse::<u32>("downlink-bits")? {
+        rp = rp.downlink_bits(b);
+    }
     cfg.round = rp
         .latency_context(cfg.sim_latency)
         .build()
@@ -452,6 +464,35 @@ mod tests {
         let a = Args::parse(&argv("--staleness 2 --quorum 0.5")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_ok());
         let a = Args::parse(&argv("--staleness 2 --round-timeout 30")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_ok());
+    }
+
+    #[test]
+    fn bad_budget_flags_rejected() {
+        // a quantized downlink is lossy: EF required
+        let a = Args::parse(&argv("--downlink-bits 3")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        // out-of-range widths
+        let a = Args::parse(&argv("--downlink-bits 40 --error-feedback")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        let a = Args::parse(&argv("--downlink-bits 17 --error-feedback")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        // an uplink budget clamps the policy: EF required too
+        let a = Args::parse(&argv("--bit-budget 1000")).unwrap();
+        assert!(run_config_from_args(&a, "mlp").is_err());
+        // good compositions
+        let a = Args::parse(&argv("--downlink-bits 3 --error-feedback")).unwrap();
+        let cfg = run_config_from_args(&a, "mlp").unwrap();
+        assert_eq!(cfg.round.budget.downlink_bits, 3);
+        let a = Args::parse(&argv("--bit-budget 1000000 --error-feedback --ef-bits 4")).unwrap();
+        let cfg = run_config_from_args(&a, "mlp").unwrap();
+        assert_eq!(cfg.round.budget.bit_budget, 1_000_000);
+        // 32 = lossless fp32 ledger: no EF needed
+        let a = Args::parse(&argv("--downlink-bits 32")).unwrap();
+        let cfg = run_config_from_args(&a, "mlp").unwrap();
+        assert_eq!(cfg.round.budget.downlink_bits, 32);
+        // 0 = off is always fine
+        let a = Args::parse(&argv("--downlink-bits 0 --bit-budget 0")).unwrap();
         assert!(run_config_from_args(&a, "mlp").is_ok());
     }
 

@@ -187,10 +187,34 @@ pub struct Pipeline {
     pub codec: CodecMode,
 }
 
+/// Wire-budget knobs: the round-level uplink bit budget and the
+/// quantized downlink broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Budget {
+    /// Round-level uplink *payload* bit budget, split per client per
+    /// segment by the server's `BitBudgetController` (slow clients get
+    /// narrower widths instead of getting dropped).  `0` = off (the
+    /// historical behavior, bit-for-bit).  Budgets clamp the policy's
+    /// decision, so they compose with any quantization policy —
+    /// including `fp32`, which a budget forces onto the quantized
+    /// path.  Requires `error_feedback` (clamping is lossy; the
+    /// residual loop compensates).
+    pub bit_budget: u64,
+    /// Quantize the server's broadcast delta to this many bits per
+    /// element (`1..=16`), with a server-side error-feedback residual;
+    /// clients train on their replica of the quantized stream.  `32` =
+    /// ledger-only mode: the broadcast stays raw fp32 (bit-identical
+    /// wire bytes to off) but the downlink ledger columns report the
+    /// fp32 cost.  `0` = off (no ledger, the historical behavior).
+    /// `1..=16` requires `error_feedback`.
+    pub downlink_bits: u32,
+}
+
 /// Everything that governs one round's behavior, as one typed value:
 /// [`Cohort`] (who is dispatched), [`Tolerance`] (when the round may
-/// complete without everyone) and [`Pipeline`] (how the server's hot
-/// path is shaped).  Construct through [`RoundPolicy::builder`], which
+/// complete without everyone), [`Pipeline`] (how the server's hot
+/// path is shaped) and [`Budget`] (the two-direction wire budget).
+/// Construct through [`RoundPolicy::builder`], which
 /// cross-validates the fields at build time, or take
 /// [`RoundPolicy::strict_sync`] / `Default` for the historical strict
 /// synchronous behavior.
@@ -204,6 +228,8 @@ pub struct RoundPolicy {
     pub pipeline: Pipeline,
     /// Aggregation-topology knobs.
     pub topology: Topology,
+    /// Wire-budget knobs.
+    pub budget: Budget,
 }
 
 impl Default for RoundPolicy {
@@ -226,6 +252,7 @@ impl RoundPolicy {
                 codec: CodecMode::Narrow,
             },
             topology: Topology { fanout: 0 },
+            budget: Budget { bit_budget: 0, downlink_bits: 0 },
         }
     }
 
@@ -280,6 +307,13 @@ impl RoundPolicy {
             self.topology.fanout == 0 || self.topology.fanout >= 2,
             "fanout must be 0 (flat topology) or >= 2 (aggregation tree)"
         );
+        anyhow::ensure!(
+            self.budget.downlink_bits == 0
+                || (1..=16).contains(&self.budget.downlink_bits)
+                || self.budget.downlink_bits == 32,
+            "downlink_bits must be 0 (off), 1..=16 (quantized broadcast) \
+             or 32 (fp32 ledger only)"
+        );
         Ok(())
     }
 
@@ -328,6 +362,15 @@ impl RoundPolicy {
                     Json::from(self.topology.fanout as usize),
                 )]),
             ),
+            (
+                "budget",
+                Json::obj(vec![
+                    // decimal string: u64-exact (f64 JSON numbers lose
+                    // precision past 2^53), like the report's counters
+                    ("bit_budget", crate::metrics::u64_json(self.budget.bit_budget)),
+                    ("downlink_bits", Json::from(self.budget.downlink_bits as usize)),
+                ]),
+            ),
         ])
     }
 
@@ -375,6 +418,17 @@ impl RoundPolicy {
         if let Some(t) = j.get("topology") {
             if let Some(v) = t.get("fanout") {
                 p.topology.fanout = v.as_usize().context("round.topology.fanout")? as u32;
+            }
+        }
+        // absent in pre-budget configs: both knobs off
+        if let Some(b) = j.get("budget") {
+            if let Some(v) = b.get("bit_budget") {
+                p.budget.bit_budget =
+                    crate::metrics::json_u64(v).context("round.budget.bit_budget")?;
+            }
+            if let Some(v) = b.get("downlink_bits") {
+                p.budget.downlink_bits =
+                    v.as_usize().context("round.budget.downlink_bits")? as u32;
             }
         }
         Ok(p)
@@ -443,6 +497,19 @@ impl RoundPolicyBuilder {
     /// Set the aggregation-tree fanout (0 = flat topology).
     pub fn fanout(mut self, f: u32) -> Self {
         self.policy.topology.fanout = f;
+        self
+    }
+
+    /// Set the round-level uplink payload bit budget (0 = off).
+    pub fn bit_budget(mut self, bits: u64) -> Self {
+        self.policy.budget.bit_budget = bits;
+        self
+    }
+
+    /// Set the downlink broadcast width (0 = off, 1..=16 = quantized,
+    /// 32 = fp32 ledger only).
+    pub fn downlink_bits(mut self, b: u32) -> Self {
+        self.policy.budget.downlink_bits = b;
         self
     }
 
@@ -794,6 +861,21 @@ impl RunConfig {
                  requires --error-feedback"
             );
         }
+        if (1..=16).contains(&self.round.budget.downlink_bits) {
+            anyhow::ensure!(
+                self.error_feedback,
+                "a quantized downlink (--downlink-bits 1..=16) is lossy and \
+                 requires the error-feedback residual loop (--error-feedback); \
+                 use 32 for a lossless fp32 ledger"
+            );
+        }
+        if self.round.budget.bit_budget > 0 {
+            anyhow::ensure!(
+                self.error_feedback,
+                "--bit-budget clamps client bit widths below the policy's \
+                 choice and requires --error-feedback to compensate"
+            );
+        }
         self.round.validate(&self.sim_latency)
     }
 }
@@ -833,6 +915,8 @@ mod tests {
             .fold_overlap(false)
             .decode_buffers(4)
             .codec(CodecMode::Reference)
+            .bit_budget((1u64 << 60) + 3) // past 2^53: the string codec is load-bearing
+            .downlink_bits(6)
             .latency_context(LatencyProfile::LogNormal { median: 1.5, sigma: 0.75 })
             .build()
             .unwrap();
@@ -952,6 +1036,29 @@ mod tests {
         assert!(c.validate().is_ok());
         c.ef_bits = 9;
         assert!(c.validate().is_err(), "ef_bits out of range");
+        // downlink_bits: 0 | 1..=16 | 32, and a lossy width needs EF
+        assert!(RoundPolicy::builder().downlink_bits(17).build().is_err());
+        assert!(RoundPolicy::builder().downlink_bits(40).build().is_err());
+        assert!(RoundPolicy::builder().downlink_bits(16).build().is_ok());
+        assert!(RoundPolicy::builder().downlink_bits(32).build().is_ok());
+        let mut c = RunConfig::default_for("mlp");
+        c.round.budget.downlink_bits = 4;
+        assert!(c.validate().is_err(), "quantized downlink without error_feedback");
+        c.error_feedback = true;
+        assert!(c.validate().is_ok());
+        // 32 is the lossless ledger mode: no EF requirement
+        let mut c = RunConfig::default_for("mlp");
+        c.round.budget.downlink_bits = 32;
+        assert!(c.validate().is_ok());
+        // bit_budget clamps below the policy and so also needs EF
+        let mut c = RunConfig::default_for("mlp");
+        c.round.budget.bit_budget = 100_000;
+        assert!(c.validate().is_err(), "bit budget without error_feedback");
+        c.error_feedback = true;
+        assert!(c.validate().is_ok());
+        // and it composes with banked EF residuals
+        c.ef_bits = 4;
+        assert!(c.validate().is_ok(), "bit budget composes with --ef-bits");
     }
 
     #[test]
@@ -989,6 +1096,18 @@ mod tests {
         }
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.round.topology.fanout, 0);
+        // a round object without the budget group (pre-budget
+        // serializers) defaults both knobs off
+        let c = RunConfig::default_for("mlp");
+        let mut j = c.to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(r)) = o.get_mut("round") {
+                r.remove("budget");
+            }
+        }
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.round.budget.bit_budget, 0);
+        assert_eq!(back.round.budget.downlink_bits, 0);
     }
 
     #[test]

@@ -41,6 +41,16 @@ pub struct ClientRow {
 /// `flags` bit: the client has reported its sample count.
 pub const FLAG_SAMPLES: u32 = 1 << 0;
 
+/// `flags` bit: the client answered its last dispatched round late
+/// (banked under bounded staleness).  Set by the scheduler's seeded
+/// churn simulation, so the bit is identical across threads and
+/// topologies — the bit-budget controller conditions on it.
+pub const FLAG_LATE: u32 = 1 << 1;
+
+/// `flags` bit: the client was dropped from its last planned round
+/// (deadline cut or simulated fault).  Seed-pure, like [`FLAG_LATE`].
+pub const FLAG_DROPPED: u32 = 1 << 2;
+
 /// Dense, lazily-grown arena of [`ClientRow`]s indexed by client id.
 ///
 /// Rows materialize on first write (`set_samples` / `set_ewma`); reads
@@ -136,6 +146,32 @@ impl ClientArena {
         (r.up_bytes as u64, r.down_bytes as u64)
     }
 
+    /// Flag the client as late on its last dispatched round.
+    /// Idempotent (a pure bit-set), so re-planning a round is safe.
+    pub fn mark_late(&mut self, id: u32) {
+        self.row_mut(id).flags |= FLAG_LATE;
+    }
+
+    /// Flag the client as dropped from its last planned round.
+    /// Idempotent (a pure bit-set), so re-planning a round is safe.
+    pub fn mark_dropped(&mut self, id: u32) {
+        self.row_mut(id).flags |= FLAG_DROPPED;
+    }
+
+    /// Clear the per-round outcome flags after a clean on-time round.
+    pub fn clear_round_flags(&mut self, id: u32) {
+        self.row_mut(id).flags &= !(FLAG_LATE | FLAG_DROPPED);
+    }
+
+    /// Did this client's last planned round end late or dropped?  The
+    /// bit-budget controller's only arena input: unlike the EWMA and
+    /// byte ledgers (wall-clock / real sockets), the outcome flags are
+    /// written from seeded simulation state and so are bit-identical
+    /// across threads and topologies.
+    pub fn is_flagged(&self, id: u32) -> bool {
+        self.row(id).flags & (FLAG_LATE | FLAG_DROPPED) != 0
+    }
+
     /// Resident bytes of per-client state: materialized rows times the
     /// row size.  Reported per round as `RoundRecord::client_state_bytes`
     /// and asserted sub-fp32-baseline by the scale-smoke test.
@@ -196,6 +232,26 @@ mod tests {
         a.set_ewma(9, 0.25);
         assert_eq!(a.ewma(9), 0.25);
         assert_eq!(a.resident_bytes(), 10 * 24);
+    }
+
+    #[test]
+    fn round_flags_set_clear_and_compose_with_samples() {
+        let mut a = ClientArena::new();
+        assert!(!a.is_flagged(4));
+        a.set_samples(4, 10);
+        a.mark_late(4);
+        assert!(a.is_flagged(4));
+        // idempotent: marking again changes nothing
+        a.mark_late(4);
+        a.mark_dropped(4);
+        assert!(a.is_flagged(4));
+        a.clear_round_flags(4);
+        assert!(!a.is_flagged(4));
+        // clearing must not erase the samples flag
+        assert_eq!(a.samples(4), Some(10));
+        // dropped alone also flags
+        a.mark_dropped(7);
+        assert!(a.is_flagged(7));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::codec::{self, QuantPlan};
 use crate::config::CodecMode;
 use crate::data::batch::BatchCursor;
 use crate::data::Dataset;
-use crate::quant::{PolicyInputs, QuantPolicy};
+use crate::quant::{math, Decision, PolicyInputs, QuantPolicy};
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 use crate::wire::messages::Update;
@@ -215,13 +215,17 @@ impl ClientState {
     /// Process one broadcast: run the local round and produce the update.
     ///
     /// `losses` is the (initial, previous) global training loss pair from
-    /// the broadcast (None before round 1).
+    /// the broadcast (None before round 1).  `budget`, when present, is
+    /// the server's per-segment bit-width allocation for this client
+    /// this round (`--bit-budget`): the policy's levels are clamped so
+    /// no segment exceeds its allocated width — a hard cap, not advice.
     pub fn process_round(
         &mut self,
         model: &ModelRuntime,
         round: u32,
         params: &[f32],
         losses: Option<(f32, f32)>,
+        budget: Option<&[u8]>,
     ) -> Result<Update> {
         let mm = &model.mm;
         // 1. local tau-step SGD
@@ -262,6 +266,28 @@ impl ClientState {
             initial_loss: losses.map(|(f0, _)| f0),
             prev_loss: losses.map(|(_, fm)| fm),
         });
+
+        // 3b. budget clamp: each segment's level may not exceed the
+        // width the server allocated.  An fp32 decision under a budget
+        // quantizes at exactly the allocated widths (fp32 would blow
+        // the round cap by construction).
+        let decision = match (decision.levels, budget) {
+            (Some(levels), Some(ws)) => Decision {
+                levels: Some(
+                    levels
+                        .iter()
+                        .zip(ws)
+                        .map(|(&s, &w)| s.min(math::max_level_for_bits(w as u32)))
+                        .collect(),
+                ),
+            },
+            (None, Some(ws)) => Decision {
+                levels: Some(
+                    ws.iter().map(|&w| math::max_level_for_bits(w as u32)).collect(),
+                ),
+            },
+            (levels, None) => Decision { levels },
+        };
         self.last_bits = codec::decision_bits(mm, &decision);
 
         // 4+5. quantize + pack (and, under EF, bank what was dropped)

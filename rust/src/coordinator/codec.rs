@@ -30,7 +30,7 @@ use crate::quant::{math, Decision};
 use crate::runtime::ModelManifest;
 use crate::util::rng::Rng;
 use crate::wire::bitpack::{BitReader, BitWriter};
-use crate::wire::messages::{PartialAggregate, SegmentHeader, Update};
+use crate::wire::messages::{DownlinkDelta, PartialAggregate, SegmentHeader, Update};
 use crate::wire::swar;
 
 /// Client-side quantization parameters derived from a policy decision and
@@ -429,6 +429,107 @@ pub fn update_wire_bits(mm: &ModelManifest, u: &Update) -> u64 {
 /// Build a decision's bit widths per segment (metrics helper).
 pub fn decision_bits(mm: &ModelManifest, d: &Decision) -> Vec<u32> {
     (0..mm.num_segments()).map(|l| d.bits(l)).collect()
+}
+
+/// Per-segment (min, range) envelope of `x`, computed with a scalar
+/// loop — the downlink runs on the server, which has no `ranges`
+/// executable; the envelope feeds [`QuantPlan::new`] exactly like the
+/// client-side measurement does.
+fn segment_envelope(mm: &ModelManifest, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut mins = Vec::with_capacity(mm.num_segments());
+    let mut ranges = Vec::with_capacity(mm.num_segments());
+    for seg in &mm.segments {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &x[seg.offset..seg.offset + seg.size] {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        mins.push(mn);
+        ranges.push((mx - mn).max(0.0));
+    }
+    (mins, ranges)
+}
+
+/// Encode the server's broadcast delta at a uniform `bits` width with
+/// server-side error feedback.
+///
+/// The quantizer input is `x = (params - replica) + residual`: what the
+/// in-sync receiver is missing plus the error carried from earlier
+/// rounds.  `residual` is updated in place by the fused kernel to
+/// `x - dequant(codes)`, and the caller advances its own `replica` by
+/// [`apply_downlink`] on the returned delta — the *encoded* bytes, not
+/// `x - residual'` — so the server-held replica stays bit-identical to
+/// every receiver's (f32 addition is not associative; replaying the
+/// wire is the only safe advance).
+pub fn encode_downlink(
+    mm: &ModelManifest,
+    bits: u32,
+    params: &[f32],
+    replica: &[f32],
+    residual: &mut [f32],
+    seed: u32,
+) -> Result<DownlinkDelta> {
+    ensure!((1..=16).contains(&bits), "downlink bits must be in 1..=16, got {bits}");
+    ensure!(
+        params.len() == mm.d && replica.len() == mm.d && residual.len() == mm.d,
+        "downlink buffers must all be d = {} long",
+        mm.d
+    );
+    let x: Vec<f32> = (0..mm.d)
+        .map(|i| (params[i] - replica[i]) + residual[i])
+        .collect();
+    let (mins, ranges) = segment_envelope(mm, &x);
+    let levels = vec![math::max_level_for_bits(bits); mm.num_segments()];
+    let plan = QuantPlan::new(&levels, &ranges);
+    let (segments, payload) = encode_quantized_fused(mm, &plan, &mins, &x, seed, Some(residual));
+    Ok(DownlinkDelta { segments, payload })
+}
+
+/// Apply a downlink delta to a replica: `out[j] += min + code * step`
+/// per element — the same dequant expression the uplink fold uses, so
+/// the server's replica advance and every worker's are bit-identical.
+///
+/// Rejects (never panics on) malformed frames: wrong segment count,
+/// out-of-range widths, or a payload whose byte length does not match
+/// the headers exactly.
+pub fn apply_downlink(mm: &ModelManifest, dl: &DownlinkDelta, out: &mut [f32]) -> Result<()> {
+    ensure!(
+        dl.segments.len() == mm.num_segments(),
+        "downlink delta has {} segments, model {} has {}",
+        dl.segments.len(),
+        mm.name,
+        mm.num_segments()
+    );
+    ensure!(out.len() == mm.d, "replica must be d = {} long", mm.d);
+    let mut payload_bits = 0usize;
+    for (seg, h) in mm.segments.iter().zip(&dl.segments) {
+        ensure!(
+            (1..=16).contains(&h.bits),
+            "downlink segment width {} out of range 1..=16",
+            h.bits
+        );
+        payload_bits += seg.size * h.bits as usize;
+    }
+    ensure!(
+        dl.payload.len() == (payload_bits + 7) / 8,
+        "downlink payload is {} bytes, headers demand {}",
+        dl.payload.len(),
+        (payload_bits + 7) / 8
+    );
+    let mut r = BitReader::new(&dl.payload);
+    let mut codes: Vec<u16> = Vec::new();
+    for (l, seg) in mm.segments.iter().enumerate() {
+        let h = &dl.segments[l];
+        codes.clear();
+        if swar::unpack_u16(&mut r, &mut codes, seg.size, h.bits as u32).is_none() {
+            bail!("downlink payload truncated in segment {l}");
+        }
+        for (j, &c) in codes.iter().enumerate() {
+            out[seg.offset + j] += h.min + c as f32 * h.step;
+        }
+    }
+    Ok(())
 }
 
 /// Fold a subtree's leaf updates into one [`PartialAggregate`].
@@ -985,5 +1086,125 @@ mod tests {
         let codes = vec![0.0f32; m.d];
         let (_, payload) = encode_quantized(&m, &plan, &[0.0; 3], &codes);
         assert_eq!(payload.len(), packed_payload_bytes(&m, &plan));
+    }
+
+    #[test]
+    fn downlink_roundtrip_advances_replica_within_one_step() {
+        let m = mm3();
+        let params: Vec<f32> =
+            (0..m.d).map(|i| (i as f32 * 0.37 - 1.9).sin() * 2.0).collect();
+        let mut replica = vec![0.0f32; m.d];
+        let mut residual = vec![0.0f32; m.d];
+        let dl = encode_downlink(&m, 4, &params, &replica, &mut residual, 7).unwrap();
+        assert_eq!(dl.segments.len(), 3);
+        assert!(dl.segments.iter().all(|h| h.bits == 4 && h.level == 15));
+        apply_downlink(&m, &dl, &mut replica).unwrap();
+        for (l, seg) in m.segments.iter().enumerate() {
+            let step = dl.segments[l].step;
+            for j in seg.offset..seg.offset + seg.size {
+                // stochastic rounding: per-element error bounded by one
+                // full step, not half
+                assert!(
+                    (replica[j] - params[j]).abs() <= step * (1.0 + 1e-5),
+                    "element {j}: replica {} vs params {} (step {step})",
+                    replica[j],
+                    params[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn downlink_residual_is_bitwise_exact() {
+        // residual' = x - dequant(codes) with x = (params - replica) +
+        // residual, computed by the fused kernel.  Applying the delta to
+        // a copy of the old replica must land exactly at x - residual'.
+        let m = mm3();
+        let params: Vec<f32> = (0..m.d).map(|i| (i as f32 * 1.7).cos()).collect();
+        let mut replica: Vec<f32> = (0..m.d).map(|i| i as f32 * 0.01).collect();
+        let mut residual: Vec<f32> = (0..m.d).map(|i| (i as f32 * 0.3).sin() * 0.05).collect();
+        let x: Vec<f32> = (0..m.d)
+            .map(|i| (params[i] - replica[i]) + residual[i])
+            .collect();
+        let old_replica = replica.clone();
+        let dl = encode_downlink(&m, 6, &params, &replica, &mut residual, 99).unwrap();
+        apply_downlink(&m, &dl, &mut replica).unwrap();
+        for j in 0..m.d {
+            let applied = replica[j] - old_replica[j];
+            assert_eq!(
+                residual[j].to_bits(),
+                (x[j] - applied).to_bits(),
+                "element {j}: residual must equal x - dequant exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn downlink_is_deterministic_in_its_seed() {
+        let m = mm();
+        let params: Vec<f32> = (0..m.d).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let replica = vec![0.1f32; m.d];
+        let mk = |seed| {
+            let mut res = vec![0.0f32; m.d];
+            encode_downlink(&m, 3, &params, &replica, &mut res, seed).unwrap()
+        };
+        let (a, b, c) = (mk(5), mk(5), mk(6));
+        assert_eq!(a.payload, b.payload, "same seed, same bytes");
+        assert_ne!(a.payload, c.payload, "different seed, different rounding");
+        assert_eq!(a.segments, b.segments);
+    }
+
+    #[test]
+    fn downlink_degenerate_range_collapses_to_constant() {
+        // A constant x per segment yields step 0: every code decodes to
+        // the segment min and the residual is exactly zero.
+        let m = mm();
+        let params = vec![0.5f32; m.d];
+        let mut replica = vec![0.25f32; m.d];
+        let mut residual = vec![0.0f32; m.d];
+        let dl = encode_downlink(&m, 8, &params, &replica, &mut residual, 1).unwrap();
+        assert!(dl.segments.iter().all(|h| h.step == 0.0 && h.min == 0.25));
+        apply_downlink(&m, &dl, &mut replica).unwrap();
+        assert_eq!(replica, params);
+        assert_eq!(residual, vec![0.0f32; m.d]);
+    }
+
+    #[test]
+    fn apply_downlink_rejects_malformed_frames() {
+        let m = mm();
+        let params: Vec<f32> = (0..m.d).map(|i| i as f32).collect();
+        let replica = vec![0.0f32; m.d];
+        let mut residual = vec![0.0f32; m.d];
+        let dl = encode_downlink(&m, 5, &params, &replica, &mut residual, 3).unwrap();
+        let mut out = vec![0.0f32; m.d];
+
+        let mut short = dl.clone();
+        short.payload.pop();
+        assert!(apply_downlink(&m, &short, &mut out).is_err(), "truncated payload");
+        let mut long = dl.clone();
+        long.payload.push(0);
+        assert!(apply_downlink(&m, &long, &mut out).is_err(), "oversized payload");
+        let mut few = dl.clone();
+        few.segments.pop();
+        assert!(apply_downlink(&m, &few, &mut out).is_err(), "segment count");
+        let mut wide = dl.clone();
+        wide.segments[0].bits = 32;
+        assert!(apply_downlink(&m, &wide, &mut out).is_err(), "fp32 width on downlink");
+        let mut zero = dl.clone();
+        zero.segments[0].bits = 0;
+        assert!(apply_downlink(&m, &zero, &mut out).is_err(), "zero width");
+        assert!(apply_downlink(&m, &dl, &mut vec![0.0f32; m.d - 1]).is_err(), "short replica");
+        // bit widths are in 1..=16 but the EXACT byte-length check must
+        // hold for every legal width change too
+        let mut rewidth = dl.clone();
+        rewidth.segments[0].bits = 1;
+        assert!(apply_downlink(&m, &rewidth, &mut out).is_err(), "width/payload mismatch");
+        // encode rejects out-of-range widths and bad buffer lengths
+        assert!(encode_downlink(&m, 0, &params, &replica, &mut residual, 0).is_err());
+        assert!(encode_downlink(&m, 17, &params, &replica, &mut residual, 0).is_err());
+        assert!(
+            encode_downlink(&m, 4, &params[1..], &replica, &mut residual, 0).is_err(),
+            "short params"
+        );
     }
 }

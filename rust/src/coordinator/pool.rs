@@ -85,6 +85,9 @@ pub struct Job {
     pub params: Arc<[f32]>,
     /// Global (initial, previous) loss pair for loss-driven policies.
     pub losses: Option<(f32, f32)>,
+    /// Per-segment bit-width allocation from the server's budget
+    /// controller (`--bit-budget`), `None` when the budget is off.
+    pub budget: Option<Vec<u8>>,
     /// Where the worker sends the state, the update and the round's
     /// measured compute seconds back (or the error).  The timing is
     /// taken *inside* the worker, so it reflects the client's actual
@@ -356,12 +359,12 @@ fn worker_loop(q: &TwoLaneQueue, model: &ModelRuntime) {
 fn run_task(task: Task, model: &ModelRuntime) {
     match task {
         Task::Round(job) => {
-            let Job { state, round, params, losses, reply } = job;
+            let Job { state, round, params, losses, budget, reply } = job;
             let result = catch_unwind(AssertUnwindSafe(move || {
                 let mut state = state;
                 let t0 = std::time::Instant::now();
                 state
-                    .process_round(model, round, &params, losses)
+                    .process_round(model, round, &params, losses, budget.as_deref())
                     .map(|update| (state, update, t0.elapsed().as_secs_f64()))
             }))
             .unwrap_or_else(|p| Err(anyhow!("client round panicked: {}", panic_message(&*p))));

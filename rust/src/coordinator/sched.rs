@@ -54,7 +54,7 @@
 //! computed over the cohort the server actually received, never over
 //! the full registry.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
@@ -344,6 +344,23 @@ impl RoundScheduler {
                     keep.push(timed[0]);
                 }
                 let dropped = (k_cand - keep.len()) as u32;
+                // Seed-pure slowness signal for the bit-budget
+                // controller: every over-sampled candidate cut here
+                // (too slow for the deadline, or the slow tail beyond
+                // the k-target) is flagged dropped in the shared
+                // arena.  The flag persists until the client's next
+                // clean dispatch clears it (see [`Self::sim_churn`]),
+                // so a budget planned rounds later still sees it.
+                // `|=` writes are idempotent and the plan itself never
+                // reads flags, so re-planning a round stays pure.
+                let kept: BTreeSet<u32> = keep.iter().map(|&(_, id)| id).collect();
+                let mut arena = self.arena.lock().expect("arena poisoned");
+                for &(_, id) in &timed {
+                    if !kept.contains(&id) {
+                        arena.mark_dropped(id);
+                    }
+                }
+                drop(arena);
                 (keep, dropped)
             }
             None => {
@@ -493,11 +510,47 @@ impl RoundScheduler {
             let stall = stall_of(id).unwrap_or(0.0);
             makespan = makespan.max(self.latency.round_secs(id, plan.round) + stall);
         }
+        // Publish the outcome as arena flags for the bit-budget
+        // controller: a failed member is marked dropped, a banked-late
+        // member late.  Derived only from (seed, profile, round, id) —
+        // never from arrival order — so every thread count and
+        // topology writes identical flags, and re-simulating a round
+        // `|=`s the same bits again.  Forgiveness (clearing a flag
+        // once the client answers a round cleanly) happens *after* the
+        // round in [`run_scheduled_round`], so the budget planner
+        // inside `Server::run_round` still sees last round's flag when
+        // it allocates this round's bits.
+        {
+            let mut arena = self.arena.lock().expect("arena poisoned");
+            for &id in &failed {
+                arena.mark_dropped(id);
+            }
+            for &(id, _) in &late {
+                arena.mark_late(id);
+            }
+        }
         ChurnOutcome {
             failed,
             late,
             stale_dropped: over_k.len() as u32,
             sim_makespan_secs: makespan,
+        }
+    }
+
+    /// Forgiveness for the bit-budget controller's slowness flags: a
+    /// dispatched member that answered its round on time (not in the
+    /// late plan) sheds any flag left by an earlier deadline cut or
+    /// fault draw.  Both round drivers call this *after*
+    /// `Server::run_round` — the budget planner inside must read the
+    /// pre-forgiveness flags when it allocates the round's bits.
+    /// Dispatch and lateness are seed-pure, so the flag trajectory is
+    /// bit-identical across threads and topologies.
+    pub fn forgive_on_time(&self, dispatched: &[u32], late: &[(u32, u32)]) {
+        let mut arena = self.arena.lock().expect("arena poisoned");
+        for &id in dispatched {
+            if !late.iter().any(|&(l, _)| l == id) {
+                arena.clear_round_flags(id);
+            }
         }
     }
 
@@ -566,6 +619,7 @@ pub fn run_scheduled_round(
     // not — the O(k) ordering below depends on it next round.
     restore_clients(clients, swaps);
     let mut rec = rec?;
+    scheduler.forgive_on_time(&dispatch, &churn.late);
     // Report over the *planned* cohort: `selected` counts everyone the
     // scheduler picked, `failed` adds the sim-failed members on top of
     // any real transport failures the server recorded, `stale_dropped`

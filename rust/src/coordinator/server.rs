@@ -90,6 +90,8 @@ use super::tolerance::{self, Arrival, RecvBudget};
 use crate::config::{AggregateMode, CodecMode, RoundPolicy, RunConfig};
 use crate::data::{self, shard};
 use crate::metrics::{RoundRecord, RunReport};
+use crate::quant::budget::BitBudgetController;
+use crate::quant::math;
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -150,6 +152,15 @@ pub trait ClientHandle {
     /// update) and stashes the partial's metadata for
     /// [`Self::take_partial_meta`].
     fn is_aggregate(&self) -> bool {
+        false
+    }
+    /// Does this handle cross a process boundary (TCP)?  Remote
+    /// receivers keep their own replica of the broadcast parameters,
+    /// so they — and only they — may be sent a quantized downlink
+    /// delta (`--downlink-bits`) instead of the full vector.
+    /// In-process handles share the server's `Arc` directly and always
+    /// take the full broadcast.
+    fn is_remote(&self) -> bool {
         false
     }
     /// For aggregate handles: whether the most recent
@@ -215,6 +226,36 @@ impl ServerOpts {
 /// What the fold-overlap receive returns: updates in sorted-id order
 /// plus the fully folded accumulator as `(ranges, chunks)`.
 type OverlappedRound = (Vec<Update>, Vec<(usize, usize)>, Vec<Vec<f32>>);
+
+/// Server-side quantized-downlink state (`--downlink-bits` in 1..=16).
+///
+/// The server keeps its *true* parameters for aggregation, evaluation
+/// and `params_hash`, and separately this **replica** — the vector
+/// every in-sync receiver holds, advanced once per round by replaying
+/// the encoded delta through [`codec::apply_downlink`] (never by
+/// analytic `x - residual'` arithmetic: f32 addition is not
+/// associative, replaying the wire is the only advance that keeps the
+/// server and every worker bit-identical).  Clients train on the
+/// replica; their updates fold onto the true parameters.  The delta
+/// chain advances every round whether or not anyone receives it, so
+/// the replica stream is a pure function of the seed.
+struct Downlink {
+    /// The shared receiver replica (empty until the first round
+    /// initializes it from the parameters — that round broadcasts
+    /// full fp32 to everyone).
+    replica: Vec<f32>,
+    /// Server-side error-feedback residual: what the last delta's
+    /// quantization dropped, folded into the next delta.
+    residual: Vec<f32>,
+    /// Stochastic-rounding stream for the delta encoder (seed-pure;
+    /// one draw per round).
+    rng: Rng,
+    /// Last round each leaf id was sent (full or delta).  A leaf is
+    /// in-sync for round `m` iff its entry reads `m - 1`; the map is
+    /// updated for every dispatched leaf each round, so it is a pure
+    /// function of the seed-pure dispatch stream.
+    last: BTreeMap<u32, u32>,
+}
 
 /// One banked late update (semi-sync staleness): the update itself plus
 /// the round its discounted fold is due.
@@ -392,6 +433,15 @@ pub struct Server {
     initial_loss: Option<f32>,
     prev_loss: Option<f32>,
     cum_uplink_bits: u64,
+    /// Cumulative broadcast (downlink) bits by the analytic per-leaf
+    /// ledger — what each dispatched leaf would cost sent directly,
+    /// independent of fanout/topology, so reports stay bit-identical
+    /// across them.  0 when `downlink_bits` is 0.
+    cum_downlink_bits: u64,
+    /// Quantized-downlink state, `Some` iff `downlink_bits` in 1..=16.
+    down: Option<Downlink>,
+    /// Closed-loop uplink budget allocator, `Some` iff `bit_budget > 0`.
+    budget_ctl: Option<BitBudgetController>,
     /// Per-client resident state (sample counts, latency EWMAs, the
     /// uplink/downlink byte ledger) in one flat arena keyed by id —
     /// replacing the scattered `samples_by_id`/`ewma`/per-handle byte
@@ -450,6 +500,30 @@ impl Server {
         opts: ServerOpts,
     ) -> Result<Self> {
         let params: Arc<[f32]> = model.init(seed)?.into();
+        let budget = opts.round.budget;
+        ensure!(
+            budget.bit_budget == 0 || budget.bit_budget >= model.mm.d as u64,
+            "--bit-budget {} is below the 1-bit/element floor for one client of model {} (d = {})",
+            budget.bit_budget,
+            model.mm.name,
+            model.mm.d
+        );
+        let down = if (1..=16).contains(&budget.downlink_bits) {
+            Some(Downlink {
+                replica: Vec::new(),
+                residual: vec![0.0; model.mm.d],
+                rng: Rng::new(seed as u64).derive("server.downlink"),
+                last: BTreeMap::new(),
+            })
+        } else {
+            None
+        };
+        let budget_ctl = if budget.bit_budget > 0 {
+            let sizes = model.mm.segment_sizes().iter().map(|&s| s as u64).collect();
+            Some(BitBudgetController::new(budget.bit_budget, sizes))
+        } else {
+            None
+        };
         Ok(Server {
             model,
             params,
@@ -458,6 +532,9 @@ impl Server {
             initial_loss: None,
             prev_loss: None,
             cum_uplink_bits: 0,
+            cum_downlink_bits: 0,
+            down,
+            budget_ctl,
             arena: Arc::new(Mutex::new(ClientArena::new())),
             cohort_hint: None,
             late_hint: None,
@@ -625,13 +702,139 @@ impl Server {
             _ => None,
         };
         let cohort_ids = self.cohort_hint.take();
+        let late_ids = self.late_hint.take();
+
+        // The round's dispatched *leaves*, sorted: the cohort hint plus
+        // the late plan on tree rounds (the composite handles in
+        // `clients` span them), the non-aggregate handles otherwise.
+        // Budget allocation and the downlink ledger/sync map range over
+        // exactly this seed-pure set, never over transport outcomes —
+        // the determinism contract's requirement.
+        let dispatched: Vec<u32> = match &cohort_ids {
+            Some(cohort) => {
+                let mut ids: Vec<u32> = cohort
+                    .iter()
+                    .chain(late_ids.iter().flatten())
+                    .copied()
+                    .collect();
+                ids.sort_unstable();
+                ids.dedup();
+                ids
+            }
+            None => {
+                let mut ids: Vec<u32> = clients
+                    .iter()
+                    .filter(|c| !c.is_aggregate())
+                    .map(|c| c.id())
+                    .collect();
+                ids.sort_unstable();
+                ids
+            }
+        };
+
+        // Closed-loop uplink budget: allocate this round's per-client
+        // per-segment widths from the seeded outcome flags and the
+        // controller's own allocation ledger (both bit-identical across
+        // threads and topologies).
+        let budgets: Option<Vec<(u32, Vec<u8>)>> = self.budget_ctl.as_mut().map(|ctl| {
+            let cohort: Vec<(u32, bool)> = {
+                let arena = self.arena.lock().expect("arena poisoned");
+                dispatched.iter().map(|&id| (id, arena.is_flagged(id))).collect()
+            };
+            ctl.plan(&cohort)
+        });
+
+        // Quantized downlink: advance the delta chain (every round,
+        // received or not — the replica stream must be a pure function
+        // of the seed), charge the analytic per-leaf ledger against the
+        // *old* sync map, then mark every dispatched leaf current.
+        let down_bits_cfg = self.opts.round.budget.downlink_bits;
+        let mm_d = self.model.mm.d as u64;
+        let full_bcast_bits = mm_d * 32;
+        let mut delta_msg: Option<messages::DownlinkDelta> = None;
+        let mut init_round = false;
+        if let Some(down) = self.down.as_mut() {
+            if down.replica.is_empty() {
+                init_round = true;
+                down.replica = self.params.to_vec();
+            } else {
+                let seed = down.rng.next_u32();
+                let dl = codec::encode_downlink(
+                    &self.model.mm,
+                    down_bits_cfg,
+                    &self.params,
+                    &down.replica,
+                    &mut down.residual,
+                    seed,
+                )?;
+                codec::apply_downlink(&self.model.mm, &dl, &mut down.replica)?;
+                delta_msg = Some(dl);
+            }
+        }
+        // Which dispatched leaves are in sync — judged against the map
+        // *before* this round's update, per leaf, fanout-blind: the
+        // ledger below and the per-handle routing both consult this
+        // set, but the ledger never looks at handle grouping, so the
+        // reported bits are identical across topologies.
+        let synced: std::collections::BTreeSet<u32> = match &self.down {
+            Some(down) if !init_round && round > 0 => dispatched
+                .iter()
+                .copied()
+                .filter(|id| down.last.get(id) == Some(&(round - 1)))
+                .collect(),
+            _ => Default::default(),
+        };
+        let downlink_bits: u64 = match (&self.down, down_bits_cfg) {
+            (None, 32) => dispatched.len() as u64 * full_bcast_bits,
+            (None, _) => 0,
+            (Some(_), _) => {
+                let delta_bits = delta_msg.as_ref().map(|dl| {
+                    dl.payload.len() as u64 * 8
+                        + dl.segments.len() as u64 * math::SEGMENT_HEADER_BITS
+                });
+                dispatched
+                    .iter()
+                    .map(|&id| match (synced.contains(&id), delta_bits) {
+                        (true, Some(b)) => b,
+                        _ => full_bcast_bits,
+                    })
+                    .sum()
+            }
+        };
+        self.cum_downlink_bits += downlink_bits;
+        if let Some(down) = self.down.as_mut() {
+            for &id in &dispatched {
+                down.last.insert(id, round);
+            }
+        }
+
+        // Clients train on the replica when the downlink is quantized
+        // (full and delta both land receivers exactly on it), on the
+        // true parameters otherwise.
+        let bcast_params: Arc<[f32]> = match &self.down {
+            Some(down) => down.replica.clone().into(),
+            None => Arc::clone(&self.params),
+        };
         let bcast = Message::Broadcast {
             round,
-            params: Arc::clone(&self.params),
+            params: bcast_params,
             losses,
             cohort: cohort_ids.clone(),
-            late: self.late_hint.take(),
+            late: late_ids.clone(),
+            downlink: None,
+            budgets: budgets.clone(),
         };
+        let bcast_delta = delta_msg.map(|dl| Message::Broadcast {
+            round,
+            // Delta-base convention: the receiver advances its own
+            // replica, so the full vector stays off this wire.
+            params: Vec::new().into(),
+            losses,
+            cohort: cohort_ids.clone(),
+            late: late_ids,
+            downlink: Some(dl),
+            budgets,
+        });
         // Strict mode (full quorum, no timeout, no staleness) keeps the
         // historical any-failure-aborts semantics and the
         // pipelined/overlap fast paths; tolerant mode trades them for
@@ -639,8 +842,43 @@ impl Server {
         let tolerant = self.opts.round.is_tolerant();
         let mut failed: Vec<u32> = Vec::new();
         let encoded = bcast.encode();
+        let encoded_delta = bcast_delta.as_ref().map(Message::encode);
         for c in clients.iter_mut() {
-            match c.send_broadcast(&bcast, &encoded) {
+            // Routing: only remote handles may take the delta (they
+            // keep their own replica), and only when in sync — every
+            // dispatched leaf of the handle's span got round m-1.
+            // In-process handles share the replica Arc at full fidelity
+            // for free, so quantizing their "wire" would only add
+            // noise the ledger already accounts analytically.
+            let use_delta = bcast_delta.is_some()
+                && c.is_remote()
+                && if c.is_aggregate() {
+                    // A subtree relays the broadcast verbatim, so the
+                    // delta is only safe when every dispatched leaf in
+                    // its span can apply it.
+                    let f = fanout.max(1);
+                    let span = c.id()..c.id().saturating_add(f);
+                    let mut any = false;
+                    let all = dispatched
+                        .iter()
+                        .filter(|l| span.contains(l))
+                        .all(|l| {
+                            any = true;
+                            synced.contains(l)
+                        });
+                    any && all
+                } else {
+                    synced.contains(&c.id())
+                };
+            let (msg, enc) = if use_delta {
+                (
+                    bcast_delta.as_ref().expect("checked above"),
+                    encoded_delta.as_ref().expect("checked above").as_slice(),
+                )
+            } else {
+                (&bcast, encoded.as_slice())
+            };
+            match c.send_broadcast(msg, enc) {
                 Ok(()) => {}
                 Err(e) if tolerant => {
                     crate::warn_!("server", "round {round}: broadcast to client {} failed: {e:#}", c.id());
@@ -655,6 +893,7 @@ impl Server {
         // is revived from the rejoin map gets this round's broadcast
         // re-sent over the new transport ([`ClientHandle::retry_revive`]).
         drop(bcast);
+        drop(bcast_delta);
 
         // Collect updates (blocking per client; pool clients overlap).
         // With a pool attached and the streaming fold selected, each
@@ -726,6 +965,20 @@ impl Server {
         };
         drop(encoded);
         let recv_decode_secs = t_recv.elapsed().as_secs_f64();
+
+        // A real (socket-level) failure means the leaves never took
+        // this round's broadcast after all: drop their sync entries so
+        // the next round sends them full.  `failed` holds composite
+        // ids on tree rounds, so clear the whole span.  Empty in
+        // deterministic runs — the ledger above never sees this.
+        if let Some(down) = self.down.as_mut() {
+            let width = if fanout > 0 { fanout } else { 1 };
+            for &id in &failed {
+                for l in id..id.saturating_add(width) {
+                    down.last.remove(&l);
+                }
+            }
+        }
 
         // Harvest banked late updates whose fold is due this round:
         // `(staleness, update)` pairs in `(round, client id)` order
@@ -1026,6 +1279,8 @@ impl Server {
             // the TCP serve driver, not here.
             subtree_failed,
             degraded: 0,
+            downlink_bits,
+            cum_downlink_bits: self.cum_downlink_bits,
         })
     }
 
@@ -1827,17 +2082,24 @@ struct PoolClient {
 
 impl PoolClient {
     fn dispatch(&mut self, msg: &Message) -> Result<()> {
-        if let Message::Broadcast { round, params, losses, .. } = msg {
+        if let Message::Broadcast { round, params, losses, budgets, .. } = msg {
             let state = self
                 .state
                 .take()
                 .context("client already has a round in flight")?;
             let (tx, rx) = channel();
+            // In-process handles always receive the full broadcast
+            // (is_remote() = false), so `params` is the exact training
+            // base; only the client's own budget entry rides along.
+            let budget = budgets.as_ref().and_then(|b| {
+                b.iter().find(|(id, _)| *id == self.id).map(|(_, ws)| ws.clone())
+            });
             self.jobs.send(Task::Round(Job {
                 state,
                 round: *round,
                 params: Arc::clone(params),
                 losses: *losses,
+                budget,
                 reply: tx,
             }))?;
             self.pending = Some(rx);

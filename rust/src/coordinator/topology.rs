@@ -219,6 +219,10 @@ impl ClientHandle for RemoteClient {
         self.samples
     }
 
+    fn is_remote(&self) -> bool {
+        true
+    }
+
     fn take_io_bytes(&mut self) -> (u64, u64) {
         let up = self.t.bytes_received();
         let down = self.t.bytes_sent();
@@ -390,6 +394,10 @@ impl ClientHandle for AggregateClient {
     }
 
     fn is_aggregate(&self) -> bool {
+        true
+    }
+
+    fn is_remote(&self) -> bool {
         true
     }
 
@@ -1057,6 +1065,10 @@ fn serve_tree(
             server.set_tree_leaf_cohort(Some((on_time.len(), churn.late.len())));
             let mut rec =
                 server.run_round(m as u32, &mut clients[..want.len()], &churn.late, evaluate)?;
+            // Same post-round flag forgiveness as the in-process
+            // driver (`run_scheduled_round`): the budget controller's
+            // flag trajectory must not depend on the topology.
+            scheduler.forgive_on_time(&dispatched, &churn.late);
             // The record counts leaves, not subtree handles: a tree
             // round selects (and fails, banks, drops) the exact leaf
             // cohort the flat run would.
@@ -1250,19 +1262,69 @@ pub fn worker(addr: &str, id: u32, artifacts_dir: &str) -> Result<()> {
     // residual/cursor state twice, so the last answer is cached and
     // replayed by round index.
     let mut cache: Option<(u32, Update)> = None;
+    // Quantized downlink (`--downlink-bits` 1..=16): this worker keeps
+    // its own replica of the broadcast parameters.  A full broadcast
+    // (round 0, an out-of-sync catch-up, a rejoin re-send) resets it; a
+    // delta advances it from the previous round's replica with the
+    // server's exact dequant arithmetic, so both land bit-identically
+    // on the server-side replica.  Applying is idempotent by round — a
+    // re-delivered frame of the current round is skipped.
+    let down_on = (1..=16).contains(&cfg.round.budget.downlink_bits);
+    let mut replica: Vec<f32> = Vec::new();
+    let mut down_round: Option<u32> = None;
     loop {
         match t.recv() {
-            Ok(Message::Broadcast { round, params, losses, .. }) => {
+            Ok(Message::Broadcast { round, params, losses, downlink, budgets, .. }) => {
                 // `cohort`/`late` are routing metadata for intermediate
                 // aggregators; a leaf was sent this broadcast *because*
                 // it is in one of them.
+                let train_params: &[f32] = if down_on {
+                    match &downlink {
+                        Some(dl) => {
+                            ensure!(
+                                down_round == round.checked_sub(1)
+                                    || down_round == Some(round),
+                                "client {id} got a round-{round} delta on a \
+                                 round-{down_round:?} replica"
+                            );
+                            if down_round != Some(round) {
+                                codec::apply_downlink(&model.mm, dl, &mut replica)?;
+                                down_round = Some(round);
+                            }
+                            &replica
+                        }
+                        None => {
+                            ensure!(
+                                params.len() == model.mm.d,
+                                "full broadcast of {} params, model d = {}",
+                                params.len(),
+                                model.mm.d
+                            );
+                            replica.clear();
+                            replica.extend_from_slice(&params);
+                            down_round = Some(round);
+                            &replica
+                        }
+                    }
+                } else {
+                    &params
+                };
+                let my_budget: Option<Vec<u8>> = budgets.as_ref().and_then(|b| {
+                    b.iter().find(|(bid, _)| *bid == id).map(|(_, ws)| ws.clone())
+                });
                 let u = match &cache {
                     Some((r, u)) if *r == round => {
                         crate::info!("worker", "client {id} replaying round {round} from cache");
                         u.clone()
                     }
                     _ => {
-                        let u = state.process_round(&model, round, &params, losses)?;
+                        let u = state.process_round(
+                            &model,
+                            round,
+                            train_params,
+                            losses,
+                            my_budget.as_deref(),
+                        )?;
                         cache = Some((round, u.clone()));
                         u
                     }
@@ -1440,7 +1502,7 @@ pub fn aggregate(
     let tolerant = cfg.round.is_tolerant();
     loop {
         match up.recv()? {
-            Message::Broadcast { round, params, losses, cohort, late } => {
+            Message::Broadcast { round, params, losses, cohort, late, downlink, budgets } => {
                 // Our members this round: the broadcast's on-time leaf
                 // cohort and late plan intersected with the span (a
                 // missing cohort field — a legacy flat server — means
@@ -1463,7 +1525,11 @@ pub fn aggregate(
                     "round {round} broadcast reached subtree {span_lo}..{span_hi} with no \
                      cohort member in its span"
                 );
-                let relay = Message::Broadcast { round, params, losses, cohort, late };
+                // Downlink deltas and budget tables relay verbatim: the
+                // aggregator holds no replica of its own, leaves apply
+                // the delta against theirs.
+                let relay =
+                    Message::Broadcast { round, params, losses, cohort, late, downlink, budgets };
                 let encoded = relay.encode();
                 // Relay to on-time and late members alike (a late leaf
                 // computes now; the root banks its forwarded update for

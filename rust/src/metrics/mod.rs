@@ -95,6 +95,15 @@ pub struct RoundRecord {
     /// after their aggregator stayed dead past the failover deadline
     /// (TCP tree mode only; always 0 otherwise).
     pub degraded: u32,
+    /// Broadcast cost this round in bits, counted per dispatched leaf
+    /// by the server's fanout-blind analytic ledger: a quantized delta
+    /// (`--downlink-bits 1..=16`) costs its payload plus per-segment
+    /// headers, a full broadcast (round 0, catch-up, or
+    /// `--downlink-bits 32`) costs `d * 32` per leaf.  0 with the knob
+    /// off entirely and in legacy reports that predate the downlink.
+    pub downlink_bits: u64,
+    /// Running total of `downlink_bits` across rounds.
+    pub cum_downlink_bits: u64,
 }
 
 impl RoundRecord {
@@ -142,6 +151,8 @@ impl RoundRecord {
             ("client_state_bytes", u64_json(self.client_state_bytes)),
             ("subtree_failed", Json::from(self.subtree_failed)),
             ("degraded", Json::from(self.degraded)),
+            ("downlink_bits", u64_json(self.downlink_bits)),
+            ("cum_downlink_bits", u64_json(self.cum_downlink_bits)),
         ])
     }
 
@@ -242,6 +253,16 @@ impl RoundRecord {
                 None => 0,
                 Some(v) => v.as_usize().context("round: degraded")? as u32,
             },
+            downlink_bits: match j.get("downlink_bits") {
+                None => 0,
+                Some(v) => json_u64(v).context("round: downlink_bits missing or inexact")?,
+            },
+            cum_downlink_bits: match j.get("cum_downlink_bits") {
+                None => 0,
+                Some(v) => {
+                    json_u64(v).context("round: cum_downlink_bits missing or inexact")?
+                }
+            },
         })
     }
 }
@@ -292,11 +313,11 @@ impl RunReport {
     /// CSV with a fixed schema (one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes,subtree_failed,degraded\n",
+            "round,train_loss,test_loss,test_acc,uplink_bits,cum_uplink_bits,mean_bits,mean_range,wall_secs,recv_decode_secs,agg_secs,eval_secs,selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes,subtree_failed,degraded,downlink_bits,cum_downlink_bits\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{},{:.6},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -319,7 +340,9 @@ impl RunReport {
                 r.agg_depth,
                 r.client_state_bytes,
                 r.subtree_failed,
-                r.degraded
+                r.degraded,
+                r.downlink_bits,
+                r.cum_downlink_bits
             ));
         }
         out
@@ -439,6 +462,8 @@ mod tests {
             client_state_bytes: 160,
             subtree_failed: 1,
             degraded: 2,
+            downlink_bits: 77,
+            cum_downlink_bits: 154,
         }
     }
 
@@ -522,6 +547,8 @@ mod tests {
         assert_eq!(a.client_state_bytes, b.client_state_bytes);
         assert_eq!(a.subtree_failed, b.subtree_failed);
         assert_eq!(a.degraded, b.degraded);
+        assert_eq!(a.downlink_bits, b.downlink_bits);
+        assert_eq!(a.cum_downlink_bits, b.cum_downlink_bits);
     }
 
     #[test]
@@ -568,6 +595,8 @@ mod tests {
         assert_eq!(row.get("client_state_bytes").unwrap(), &Json::Str("160".into()));
         assert_eq!(row.get("subtree_failed").and_then(Json::as_usize), Some(1));
         assert_eq!(row.get("degraded").and_then(Json::as_usize), Some(2));
+        assert_eq!(row.get("downlink_bits").unwrap(), &Json::Str("77".into()));
+        assert_eq!(row.get("cum_downlink_bits").unwrap(), &Json::Str("154".into()));
     }
 
     #[test]
@@ -600,6 +629,8 @@ mod tests {
                     r.remove("client_state_bytes");
                     r.remove("subtree_failed");
                     r.remove("degraded");
+                    r.remove("downlink_bits");
+                    r.remove("cum_downlink_bits");
                 }
             }
         }
@@ -618,6 +649,8 @@ mod tests {
         assert_eq!(back.rounds[0].client_state_bytes, 0);
         assert_eq!(back.rounds[0].subtree_failed, 0);
         assert_eq!(back.rounds[0].degraded, 0);
+        assert_eq!(back.rounds[0].downlink_bits, 0);
+        assert_eq!(back.rounds[0].cum_downlink_bits, 0);
         assert_eq!(back.rounds[0].wall_secs, 0.5, "wall_secs survives");
         // present-but-mistyped fields still error (corruption, not legacy)
         let mut bad = rep.to_json();
@@ -643,7 +676,7 @@ mod tests {
         let header = csv.lines().next().unwrap();
         assert!(
             header.ends_with(
-                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes,subtree_failed,degraded"
+                "selected,dropped,sim_makespan_secs,failed,rejoined,stale_folded,stale_dropped,agg_depth,client_state_bytes,subtree_failed,degraded,downlink_bits,cum_downlink_bits"
             ),
             "{header}"
         );
@@ -660,6 +693,8 @@ mod tests {
         assert_eq!(cols[20], "160");
         assert_eq!(cols[21], "1");
         assert_eq!(cols[22], "2");
+        assert_eq!(cols[23], "77");
+        assert_eq!(cols[24], "154");
     }
 
     #[test]

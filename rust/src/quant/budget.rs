@@ -1,0 +1,282 @@
+//! Closed-loop bit-budget control: the server-side half of doubly
+//! adaptive quantization (DAdaQuant-style cross-*client* adaptation on
+//! top of the policies' cross-*time* adaptation).
+//!
+//! [`BitBudgetController`] splits a round-level uplink payload budget
+//! (`--bit-budget <bits>`) across the dispatched cohort, FedFQ-style:
+//! per client *and* per segment, so an expensive client is throttled to
+//! fewer bits instead of being dropped.  The resulting per-segment
+//! widths ride the `Broadcast` to each client, where they clamp the
+//! policy's own decision (`min(policy_level, max_level_for_bits(w))`)
+//! before the existing `QuantPlan` encode path runs — the controller
+//! never invents a new encoder.
+//!
+//! **Determinism.**  The controller's inputs are restricted to state
+//! that is bit-identical across threads, shard counts and topologies:
+//! the arena's seeded per-round outcome flags
+//! ([`FLAG_LATE`]/[`FLAG_DROPPED`], written from the scheduler's seeded
+//! churn simulation) and the controller's *own* cumulative
+//! allocated-bits ledger.  Wall-clock EWMAs and real socket byte
+//! counts are deliberately excluded: they differ run-to-run and
+//! topology-to-topology, and one divergent input would break the
+//! repo-wide contract that any (threads, shards, fanout) combination
+//! yields an identical `RunReport`.  For the same reason the ledger
+//! tracks bits the controller *allocated*, not bits that actually hit
+//! the wire — at a tree root only subtree totals are observable, so
+//! observed bits are not per-leaf reconstructible.
+//!
+//! **Accounting.**  The cap covers *payload* bits only (code bits,
+//! `Σ_l seg_size_l * width_l` per client).  Segment headers are a
+//! fixed small tax (`SEGMENT_HEADER_BITS` per segment) independent of
+//! the controller's choices, so including them would only shift every
+//! allocation by a constant.
+//!
+//! [`FLAG_LATE`]: crate::coordinator::arena::FLAG_LATE
+//! [`FLAG_DROPPED`]: crate::coordinator::arena::FLAG_DROPPED
+
+/// Widest per-segment width the controller will allocate, matching the
+/// narrow-codec ceiling (`u16` code rows).
+pub const MAX_WIDTH: u8 = 16;
+
+/// Splits a round-level uplink payload budget across the dispatched
+/// cohort, per client per segment.  See the module docs for the
+/// determinism and accounting rules.
+#[derive(Clone, Debug)]
+pub struct BitBudgetController {
+    /// Round-level payload budget in bits (never 0 — a zero budget
+    /// means the controller is not constructed at all).
+    cap: u64,
+    /// Element count per model segment.
+    seg_sizes: Vec<u64>,
+    /// `Σ seg_sizes`: one client's floor cost (1 bit/element).
+    d: u64,
+    /// Per-client total payload bits allocated last time the client was
+    /// in a cohort; `u64::MAX` = never budgeted (unconstrained).
+    /// Flagged (late/dropped) clients may never exceed this.
+    prev_bits: Vec<u64>,
+    /// Per-client cumulative allocated payload bits — the controller's
+    /// fairness ledger (cheapest-so-far clients are raised first).
+    cum_bits: Vec<u64>,
+}
+
+impl BitBudgetController {
+    /// A controller for `cap` payload bits per round over a model with
+    /// the given per-segment element counts.
+    pub fn new(cap: u64, seg_sizes: Vec<u64>) -> BitBudgetController {
+        let d = seg_sizes.iter().sum();
+        debug_assert!(cap > 0, "a zero budget should not construct a controller");
+        debug_assert!(d > 0, "budgeting an empty model");
+        BitBudgetController { cap, seg_sizes, d, prev_bits: Vec::new(), cum_bits: Vec::new() }
+    }
+
+    fn slot(v: &mut Vec<u64>, id: u32, fill: u64) -> &mut u64 {
+        let i = id as usize;
+        if i >= v.len() {
+            v.resize(i + 1, fill);
+        }
+        &mut v[i]
+    }
+
+    /// Cumulative payload bits allocated to `id` so far.
+    pub fn cum_allocated(&self, id: u32) -> u64 {
+        self.cum_bits.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Allocate this round's budget over the dispatched cohort, given
+    /// each member's seeded outcome flag (late/dropped last round).
+    /// Returns `(client_id, per-segment widths in bits)` sorted by id.
+    ///
+    /// Every member gets the 1 bit/segment floor unconditionally — a
+    /// cap below `cohort * d` is allowed to overshoot rather than send
+    /// a 0-bit (empty) update.  Above the floor, a deterministic
+    /// greedy raises one segment of one client at a time: unflagged
+    /// before flagged, then lowest cumulative allocation, then lowest
+    /// id; within a client, the narrowest segment first (ties to the
+    /// lowest index).  A flagged client's total may never exceed its
+    /// previous allocation, so a slow client's budget is monotonically
+    /// non-increasing until it completes a round cleanly.
+    pub fn plan(&mut self, cohort: &[(u32, bool)]) -> Vec<(u32, Vec<u8>)> {
+        let nseg = self.seg_sizes.len();
+        let mut members: Vec<(u32, bool)> = cohort.to_vec();
+        members.sort_by_key(|&(id, _)| id);
+        members.dedup_by_key(|&mut (id, _)| id);
+        if members.is_empty() {
+            return Vec::new();
+        }
+
+        // Floor: 1 bit per element for everyone.
+        let mut widths: Vec<Vec<u8>> = vec![vec![1u8; nseg]; members.len()];
+        let mut totals: Vec<u64> = vec![self.d; members.len()];
+        let mut spent: u64 = self.d * members.len() as u64;
+
+        // Greedy raises while the cap has room.  Each raise picks the
+        // eligible member with (unflagged, lowest cum ledger, lowest
+        // id) and widens its narrowest segment by one bit.
+        let mut order: Vec<usize> = (0..members.len()).collect();
+        order.sort_by_key(|&i| {
+            let (id, flagged) = members[i];
+            (flagged as u8, self.cum_allocated(id), id)
+        });
+        loop {
+            let mut raised = false;
+            for &i in &order {
+                let (id, flagged) = members[i];
+                // narrowest raisable segment, ties to the lowest index
+                let Some(l) = (0..nseg)
+                    .filter(|&l| widths[i][l] < MAX_WIDTH)
+                    .min_by_key(|&l| (widths[i][l], l))
+                else {
+                    continue;
+                };
+                let cost = self.seg_sizes[l];
+                if spent + cost > self.cap {
+                    continue;
+                }
+                if flagged {
+                    let prev = self.prev_bits.get(id as usize).copied().unwrap_or(u64::MAX);
+                    if totals[i] + cost > prev {
+                        continue;
+                    }
+                }
+                widths[i][l] += 1;
+                totals[i] += cost;
+                spent += cost;
+                raised = true;
+            }
+            if !raised {
+                break;
+            }
+        }
+
+        for (i, &(id, _)) in members.iter().enumerate() {
+            *Self::slot(&mut self.prev_bits, id, u64::MAX) = totals[i];
+            *Self::slot(&mut self.cum_bits, id, 0) += totals[i];
+        }
+        members
+            .iter()
+            .enumerate()
+            .map(|(i, &(id, _))| (id, std::mem::take(&mut widths[i])))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(seg_sizes: &[u64], widths: &[u8]) -> u64 {
+        seg_sizes.iter().zip(widths).map(|(&s, &w)| s * w as u64).sum()
+    }
+
+    const SEGS: [u64; 3] = [5, 4, 3]; // d = 12
+
+    #[test]
+    fn conservation_when_cap_covers_the_floor() {
+        let mut c = BitBudgetController::new(200, SEGS.to_vec());
+        let plan = c.plan(&[(0, false), (1, false), (2, false)]);
+        assert_eq!(plan.len(), 3);
+        let spent: u64 = plan.iter().map(|(_, w)| total(&SEGS, w)).sum();
+        assert!(spent <= 200, "allocated {spent} > cap 200");
+        // and the greedy actually uses the room: within one raise of the cap
+        assert!(spent + SEGS.iter().min().unwrap() > 200 - SEGS.iter().max().unwrap());
+        for (_, w) in &plan {
+            assert!(w.iter().all(|&b| (1..=MAX_WIDTH).contains(&b)));
+        }
+    }
+
+    #[test]
+    fn starved_cohort_still_gets_the_one_bit_floor() {
+        // cap 20 < 3 clients * d 12: floor wins over conservation
+        let mut c = BitBudgetController::new(20, SEGS.to_vec());
+        let plan = c.plan(&[(5, true), (6, false), (7, true)]);
+        assert_eq!(plan.len(), 3);
+        for (_, w) in &plan {
+            assert_eq!(w, &vec![1u8; 3], "starved clients still send 1 bit/segment");
+        }
+    }
+
+    #[test]
+    fn flagged_client_budget_never_grows() {
+        let mut c = BitBudgetController::new(300, SEGS.to_vec());
+        // round 0: clean, client 1 gets some allocation
+        let p0 = c.plan(&[(0, false), (1, false)]);
+        let t0 = total(&SEGS, &p0.iter().find(|(id, _)| *id == 1).unwrap().1);
+        // rounds 1..: client 1 flagged — its total must never exceed t0,
+        // even when the round cap would allow more
+        let mut prev = t0;
+        for _ in 0..4 {
+            let p = c.plan(&[(0, false), (1, true)]);
+            let t = total(&SEGS, &p.iter().find(|(id, _)| *id == 1).unwrap().1);
+            assert!(t <= prev, "flagged client grew {prev} -> {t}");
+            prev = t;
+        }
+        // after a clean round the constraint lifts
+        let p = c.plan(&[(1, false)]);
+        let t = total(&SEGS, &p.iter().find(|(id, _)| *id == 1).unwrap().1);
+        assert!(t >= prev, "a clean round may restore the budget");
+    }
+
+    #[test]
+    fn unflagged_clients_are_raised_before_flagged() {
+        let mut c = BitBudgetController::new(50, SEGS.to_vec());
+        // prior round so client 9 has a prev ceiling
+        c.plan(&[(8, false), (9, false)]);
+        let p = c.plan(&[(8, false), (9, true)]);
+        let t8 = total(&SEGS, &p.iter().find(|(id, _)| *id == 8).unwrap().1);
+        let t9 = total(&SEGS, &p.iter().find(|(id, _)| *id == 9).unwrap().1);
+        assert!(t8 >= t9, "clean client {t8} must not trail flagged client {t9}");
+    }
+
+    #[test]
+    fn allocations_replay_from_inputs_alone() {
+        // Identical input sequences → identical plans: no hidden clock,
+        // RNG, or wire feedback.  This is what lets a report reader
+        // re-derive every budget from the report's own telemetry.
+        let rounds: Vec<Vec<(u32, bool)>> = vec![
+            vec![(0, false), (1, false), (2, false)],
+            vec![(0, true), (2, false)],
+            vec![(0, true), (1, false), (2, true)],
+            vec![(1, false)],
+        ];
+        let mut a = BitBudgetController::new(160, SEGS.to_vec());
+        let mut b = BitBudgetController::new(160, SEGS.to_vec());
+        for cohort in &rounds {
+            assert_eq!(a.plan(cohort), b.plan(cohort));
+        }
+        assert_eq!(a.cum_allocated(0), b.cum_allocated(0));
+    }
+
+    #[test]
+    fn plan_output_is_sorted_and_deduped() {
+        let mut c = BitBudgetController::new(100, SEGS.to_vec());
+        let p = c.plan(&[(3, false), (1, true), (3, false), (2, false)]);
+        let ids: Vec<u32> = p.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn widths_cap_at_sixteen_with_a_huge_budget() {
+        let mut c = BitBudgetController::new(u64::MAX / 2, SEGS.to_vec());
+        let p = c.plan(&[(0, false)]);
+        assert_eq!(p[0].1, vec![MAX_WIDTH; 3]);
+    }
+
+    #[test]
+    fn empty_cohort_is_a_no_op() {
+        let mut c = BitBudgetController::new(100, SEGS.to_vec());
+        assert!(c.plan(&[]).is_empty());
+        assert_eq!(c.cum_allocated(0), 0);
+    }
+
+    #[test]
+    fn fairness_ledger_prefers_the_cheaper_history() {
+        // Client 0 was budgeted alone for a round; when 0 and 4 later
+        // share a tight cap, 4 (lower cumulative ledger) is raised first.
+        let mut c = BitBudgetController::new(40, SEGS.to_vec());
+        c.plan(&[(0, false)]);
+        let p = c.plan(&[(0, false), (4, false)]);
+        let t0 = total(&SEGS, &p.iter().find(|(id, _)| *id == 0).unwrap().1);
+        let t4 = total(&SEGS, &p.iter().find(|(id, _)| *id == 4).unwrap().1);
+        assert!(t4 >= t0, "ledger-cheap client {t4} must not trail {t0}");
+    }
+}

@@ -12,6 +12,7 @@
 //!   baselines.
 
 pub mod adaquantfl;
+pub mod budget;
 pub mod feddq;
 pub mod fixed;
 pub mod math;

@@ -161,6 +161,8 @@ mod tests {
             client_state_bytes: 0,
             subtree_failed: 0,
             degraded: 0,
+            downlink_bits: 0,
+            cum_downlink_bits: 0,
         }
     }
 

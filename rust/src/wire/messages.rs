@@ -60,6 +60,20 @@ pub struct Update {
     pub payload: Vec<u8>,
 }
 
+/// The server's quantized params delta riding a `Broadcast`: the same
+/// per-segment header + bit-packed payload shape as an [`Update`], but
+/// traveling downlink.  A receiver that is in sync (it applied the
+/// previous round's delta) advances its replica by
+/// `replica[j] += min + code * step` per element; everyone else gets a
+/// full fp32 broadcast instead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DownlinkDelta {
+    /// Per-segment quantization headers, in manifest segment order.
+    pub segments: Vec<SegmentHeader>,
+    /// Bit-packed codes.
+    pub payload: Vec<u8>,
+}
+
 /// Everything that can cross a transport.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
@@ -126,6 +140,21 @@ pub enum Message {
         /// only after `cohort` (the encoder writes an empty cohort if
         /// necessary), so legacy frames stay byte-identical.
         late: Option<Vec<u32>>,
+        /// Quantized downlink delta (`--downlink-bits 1..=16`): when
+        /// present, `params` is the *delta base* convention — receivers
+        /// that are in sync apply this delta to their replica and
+        /// ignore `params` (the server sends an empty vector).  Third
+        /// trailing optional region, gated by a flags byte shared with
+        /// `budgets`; its presence forces `cohort` and `late` onto the
+        /// wire (empty lists if unset) so the frame stays parseable by
+        /// position, exactly like `late` forcing `cohort`.
+        downlink: Option<DownlinkDelta>,
+        /// Per-client uplink bit budgets for this round
+        /// (`--bit-budget`): `(client_id, per-segment widths in bits)`
+        /// sorted by id.  Each recipient looks up its own id and clamps
+        /// its policy decision; aggregators relay the list verbatim.
+        /// Shares the flags byte with `downlink` (see above).
+        budgets: Option<Vec<(u32, Vec<u8>)>>,
     },
     /// Client -> server: the quantized update.
     Update(Update),
@@ -369,7 +398,7 @@ impl Message {
                     w.u32(*m);
                 }
             }
-            Message::Broadcast { round, params, losses, cohort, late } => {
+            Message::Broadcast { round, params, losses, cohort, late, downlink, budgets } => {
                 w.u8(TAG_BROADCAST);
                 w.u32(*round);
                 match losses {
@@ -381,16 +410,41 @@ impl Message {
                     }
                 }
                 w.f32s(params);
-                // present-by-length, like Join::num_samples; `late` can
-                // only follow a present cohort, so a Some(late) forces
-                // at least an empty cohort list onto the wire
+                // present-by-length, like Join::num_samples; each later
+                // region can only follow present earlier ones, so a
+                // Some(late) forces at least an empty cohort list onto
+                // the wire, and the budget extension forces both lists
+                let ext = downlink.is_some() || budgets.is_some();
                 if let Some(c) = cohort {
                     w.u32s(c);
-                } else if late.is_some() {
+                } else if late.is_some() || ext {
                     w.u32s(&[]);
                 }
                 if let Some(l) = late {
                     w.u32s(l);
+                } else if ext {
+                    w.u32s(&[]);
+                }
+                if ext {
+                    let flags = (downlink.is_some() as u8) | ((budgets.is_some() as u8) << 1);
+                    w.u8(flags);
+                    if let Some(d) = downlink {
+                        w.u32(d.segments.len() as u32);
+                        for s in &d.segments {
+                            w.u8(s.bits);
+                            w.u16(s.level);
+                            w.f32(s.min);
+                            w.f32(s.step);
+                        }
+                        w.bytes(&d.payload);
+                    }
+                    if let Some(b) = budgets {
+                        w.u32(b.len() as u32);
+                        for (id, widths) in b {
+                            w.u32(*id);
+                            w.bytes(widths);
+                        }
+                    }
                 }
             }
             Message::Update(u) => {
@@ -439,21 +493,38 @@ impl Message {
             Message::Welcome { config_json, round, .. } => {
                 1 + 4 + 4 + config_json.len() + if round.is_some() { 4 } else { 0 }
             }
-            Message::Broadcast { params, losses, cohort, late, .. } => {
+            Message::Broadcast { params, losses, cohort, late, downlink, budgets, .. } => {
+                let ext = downlink.is_some() || budgets.is_some();
                 let losses_len = match losses {
                     None => 1,
                     Some(_) => 1 + 4 + 4,
                 };
-                let cohort_len = match (cohort, late) {
-                    (None, None) => 0,
-                    (None, Some(_)) => 4, // forced empty cohort list
-                    (Some(c), _) => 4 + c.len() * 4,
+                let cohort_len = match cohort {
+                    Some(c) => 4 + c.len() * 4,
+                    None if late.is_some() || ext => 4, // forced empty list
+                    None => 0,
                 };
                 let late_len = match late {
-                    None => 0,
                     Some(l) => 4 + l.len() * 4,
+                    None if ext => 4, // forced empty list
+                    None => 0,
                 };
-                1 + 4 + losses_len + 4 + params.len() * 4 + cohort_len + late_len
+                let ext_len = if ext {
+                    let down_len = match downlink {
+                        Some(d) => 4 + d.segments.len() * (1 + 2 + 4 + 4) + 4 + d.payload.len(),
+                        None => 0,
+                    };
+                    let budget_len = match budgets {
+                        Some(b) => {
+                            4 + b.iter().map(|(_, ws)| 4 + 4 + ws.len()).sum::<usize>()
+                        }
+                        None => 0,
+                    };
+                    1 + down_len + budget_len
+                } else {
+                    0
+                };
+                1 + 4 + losses_len + 4 + params.len() * 4 + cohort_len + late_len + ext_len
             }
             Message::Update(u) => 1 + update_encoded_len(u),
             Message::Shutdown => 1,
@@ -491,11 +562,49 @@ impl Message {
                     t => bail!("bad losses flag {t}"),
                 };
                 let params: Arc<[f32]> = r.f32s()?.into();
-                // version-tolerant: old frames end after the params, and
-                // pre-`late` frames end after the cohort
+                // version-tolerant: old frames end after the params,
+                // pre-`late` frames end after the cohort, and
+                // pre-budget frames end after the late list
                 let cohort = if r.pos < r.buf.len() { Some(r.u32s()?) } else { None };
                 let late = if r.pos < r.buf.len() { Some(r.u32s()?) } else { None };
-                Message::Broadcast { round, params, losses, cohort, late }
+                let (mut downlink, mut budgets) = (None, None);
+                if r.pos < r.buf.len() {
+                    let flags = r.u8()?;
+                    if flags & !3 != 0 || flags == 0 {
+                        bail!("bad broadcast extension flags {flags:#x}");
+                    }
+                    if flags & 1 != 0 {
+                        let nseg = r.u32()? as usize;
+                        if nseg > 1_000_000 {
+                            bail!("absurd downlink segment count {nseg}");
+                        }
+                        let mut segments =
+                            Vec::with_capacity(nseg.min((r.buf.len() - r.pos) / 11));
+                        for _ in 0..nseg {
+                            segments.push(SegmentHeader {
+                                bits: r.u8()?,
+                                level: r.u16()?,
+                                min: r.f32()?,
+                                step: r.f32()?,
+                            });
+                        }
+                        downlink = Some(DownlinkDelta { segments, payload: r.bytes()? });
+                    }
+                    if flags & 2 != 0 {
+                        let n = r.u32()? as usize;
+                        if n > 1_000_000 {
+                            bail!("absurd budget count {n}");
+                        }
+                        // 8 = the smallest encoded entry (id + empty list)
+                        let mut b = Vec::with_capacity(n.min((r.buf.len() - r.pos) / 8));
+                        for _ in 0..n {
+                            let id = r.u32()?;
+                            b.push((id, r.bytes()?));
+                        }
+                        budgets = Some(b);
+                    }
+                }
+                Message::Broadcast { round, params, losses, cohort, late, downlink, budgets }
             }
             TAG_UPDATE => {
                 let round = r.u32()?;
@@ -605,6 +714,8 @@ mod tests {
             losses: None,
             cohort: None,
             late: None,
+            downlink: None,
+            budgets: None,
         });
         roundtrip(&Message::Broadcast {
             round: 4,
@@ -612,6 +723,8 @@ mod tests {
             losses: Some((2.3, 0.7)),
             cohort: None,
             late: None,
+            downlink: None,
+            budgets: None,
         });
         roundtrip(&Message::Broadcast {
             round: 5,
@@ -619,6 +732,8 @@ mod tests {
             losses: Some((2.3, 0.7)),
             cohort: Some(vec![0, 3, 7, 11]),
             late: None,
+            downlink: None,
+            budgets: None,
         });
         roundtrip(&Message::Broadcast {
             round: 6,
@@ -626,6 +741,8 @@ mod tests {
             losses: None,
             cohort: Some(Vec::new()),
             late: None,
+            downlink: None,
+            budgets: None,
         });
         roundtrip(&Message::Broadcast {
             round: 7,
@@ -633,6 +750,8 @@ mod tests {
             losses: Some((2.3, 0.7)),
             cohort: Some(vec![0, 2]),
             late: Some(vec![1, 5]),
+            downlink: None,
+            budgets: None,
         });
         roundtrip(&Message::Broadcast {
             round: 8,
@@ -640,6 +759,8 @@ mod tests {
             losses: None,
             cohort: Some(vec![4]),
             late: Some(Vec::new()),
+            downlink: None,
+            budgets: None,
         });
         roundtrip(&Message::Partial(PartialAggregate {
             round: 3,
@@ -726,6 +847,8 @@ mod tests {
                 losses: None,
                 cohort: None,
                 late: None,
+                downlink: None,
+                budgets: None,
             }
             .encode();
         assert!(Message::decode(&bytes[..bytes.len() - 1]).is_err());
@@ -748,6 +871,8 @@ mod tests {
                 losses: None,
                 cohort: None,
                 late: None,
+                downlink: None,
+                budgets: None,
             },
             Message::Broadcast {
                 round: 4,
@@ -755,6 +880,8 @@ mod tests {
                 losses: Some((2.3, 0.7)),
                 cohort: None,
                 late: None,
+                downlink: None,
+                budgets: None,
             },
             Message::Broadcast {
                 round: 5,
@@ -762,6 +889,8 @@ mod tests {
                 losses: None,
                 cohort: Some(vec![1, 2, 9]),
                 late: None,
+                downlink: None,
+                budgets: None,
             },
             Message::Broadcast {
                 round: 6,
@@ -769,6 +898,8 @@ mod tests {
                 losses: None,
                 cohort: Some(vec![1, 2, 9]),
                 late: Some(vec![4, 7]),
+                downlink: None,
+                budgets: None,
             },
             // a Some(late) with no cohort forces an empty cohort list
             // onto the wire; encoded_len must account for those 4 bytes
@@ -778,6 +909,8 @@ mod tests {
                 losses: None,
                 cohort: None,
                 late: Some(vec![4, 7]),
+                downlink: None,
+                budgets: None,
             },
             Message::Partial(PartialAggregate {
                 round: 2,
@@ -933,6 +1066,8 @@ mod tests {
             losses: None,
             cohort: None,
             late: None,
+            downlink: None,
+            budgets: None,
         };
         assert_eq!(Message::decode(&legacy).unwrap(), none);
         assert_eq!(none.encode(), legacy);
@@ -949,6 +1084,8 @@ mod tests {
                 losses: None,
                 cohort: Some(vec![3, 5]),
                 late: None,
+                downlink: None,
+                budgets: None,
             }
         );
         // A half-written cohort is rejected, not misread.
@@ -965,6 +1102,8 @@ mod tests {
                 losses: None,
                 cohort: Some(vec![3, 5]),
                 late: Some(vec![4]),
+                downlink: None,
+                budgets: None,
             }
         );
         // A half-written late list is rejected, not misread.
@@ -977,6 +1116,8 @@ mod tests {
             losses: None,
             cohort: None,
             late: Some(vec![4]),
+            downlink: None,
+            budgets: None,
         };
         assert_eq!(
             Message::decode(&forced.encode()).unwrap(),
@@ -986,8 +1127,172 @@ mod tests {
                 losses: None,
                 cohort: Some(Vec::new()),
                 late: Some(vec![4]),
+                downlink: None,
+                budgets: None,
             }
         );
+    }
+
+    fn gen_downlink(g: &mut Gen) -> DownlinkDelta {
+        let nseg = g.size(1, 12);
+        let segments = g.vec_of(nseg, |g| SegmentHeader {
+            bits: g.int(1, 16) as u8,
+            level: g.int(1, 65535) as u16,
+            min: g.f32_wide(),
+            step: g.f32_wide(),
+        });
+        let n = g.size(0, 400);
+        DownlinkDelta { segments, payload: g.vec_of(n, |g| g.rng.next_u32() as u8) }
+    }
+
+    fn gen_budgets(g: &mut Gen) -> Vec<(u32, Vec<u8>)> {
+        let n = g.size(0, 8);
+        (0..n as u32)
+            .map(|id| {
+                let nseg = g.size(1, 12);
+                (id * 3, g.vec_of(nseg, |g| g.int(1, 16) as u8))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn broadcast_budget_extension_roundtrips_and_sizes() {
+        // every flag combination, with present cohort/late lists so the
+        // roundtrip is exact (see the normalization test for None)
+        for (down, budget) in
+            [(true, false), (false, true), (true, true)]
+        {
+            let m = Message::Broadcast {
+                round: 11,
+                params: vec![0.25, -1.5].into(),
+                losses: Some((2.0, 0.5)),
+                cohort: Some(vec![0, 2, 5]),
+                late: Some(vec![1]),
+                downlink: down.then(|| DownlinkDelta {
+                    segments: vec![
+                        SegmentHeader { bits: 4, level: 15, min: -0.5, step: 0.0625 },
+                        SegmentHeader { bits: 2, level: 3, min: 0.0, step: 0.125 },
+                    ],
+                    payload: vec![0xab, 0xcd, 0x12],
+                }),
+                budgets: budget.then(|| vec![(0, vec![4, 2]), (5, vec![1, 1])]),
+            };
+            roundtrip(&m);
+            assert_eq!(m.encoded_len(), m.encode().len(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn broadcast_extension_forces_cohort_and_late_lists() {
+        // The ext region can only follow both id lists, so an encoder
+        // given None lists writes empty ones; the decode normalizes
+        // None -> Some(vec![]) exactly like the forced-cohort case.
+        let m = Message::Broadcast {
+            round: 2,
+            params: vec![1.0].into(),
+            losses: None,
+            cohort: None,
+            late: None,
+            downlink: None,
+            budgets: Some(vec![(3, vec![2])]),
+        };
+        assert_eq!(m.encoded_len(), m.encode().len());
+        match Message::decode(&m.encode()).unwrap() {
+            Message::Broadcast { cohort, late, budgets, .. } => {
+                assert_eq!(cohort, Some(Vec::new()));
+                assert_eq!(late, Some(Vec::new()));
+                assert_eq!(budgets, Some(vec![(3, vec![2])]));
+            }
+            other => panic!("decoded as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn broadcast_rejects_bad_extension_flags() {
+        // a trailing zero or unknown-bit flags byte is corruption, not
+        // a legal empty extension
+        let base = Message::Broadcast {
+            round: 1,
+            params: vec![1.0].into(),
+            losses: None,
+            cohort: Some(vec![0]),
+            late: Some(Vec::new()),
+            downlink: None,
+            budgets: None,
+        }
+        .encode();
+        for flags in [0u8, 4, 0xff] {
+            let mut bytes = base.clone();
+            bytes.push(flags);
+            assert!(Message::decode(&bytes).is_err(), "flags {flags:#x} accepted");
+        }
+    }
+
+    #[test]
+    fn prop_quantized_broadcast_cuts_err_exactly_off_region_boundaries() {
+        // A Broadcast has three trailing-optional regions, so a cut at
+        // a region boundary legitimately decodes as an older layout —
+        // but every other cut, including anywhere inside the extension
+        // bodies, must Err and never panic.  This pins the exact
+        // version-tolerance surface of the quantized-downlink frame.
+        check("message-broadcast-cuts", 60, |g: &mut Gen| {
+            let nparams = g.size(0, 20);
+            let ncohort = g.size(0, 6);
+            let nlate = g.size(0, 4);
+            let losses = g.int(0, 1) == 1;
+            let m = Message::Broadcast {
+                round: g.rng.next_u32(),
+                params: g.vec_of(nparams, |g| g.f32_wide()).into(),
+                losses: losses.then(|| (1.0, 0.5)),
+                cohort: Some(g.vec_of(ncohort, |g| g.rng.next_u32())),
+                late: Some(g.vec_of(nlate, |g| g.rng.next_u32())),
+                downlink: Some(gen_downlink(g)),
+                budgets: Some(gen_budgets(g)),
+            };
+            let bytes = m.encode();
+            let losses_len = if losses { 9 } else { 1 };
+            let base = 1 + 4 + losses_len + 4 + nparams * 4;
+            let after_cohort = base + 4 + ncohort * 4;
+            let after_late = after_cohort + 4 + nlate * 4;
+            let boundaries = [base, after_cohort, after_late, bytes.len()];
+            for cut in 0..=bytes.len() {
+                let ok = Message::decode(&bytes[..cut]).is_ok();
+                if boundaries.contains(&cut) {
+                    if !ok {
+                        return Err(format!("boundary cut {cut} failed to decode"));
+                    }
+                } else if ok {
+                    return Err(format!("mid-region cut {cut} decoded"));
+                }
+            }
+            // oversized: one trailing byte after a complete frame
+            let mut over = bytes.clone();
+            over.push(0x01);
+            if Message::decode(&over).is_ok() {
+                return Err("oversized quantized broadcast decoded".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantized_broadcast_bit_flips_never_panic() {
+        check("message-broadcast-bit-flip", 200, |g: &mut Gen| {
+            let m = Message::Broadcast {
+                round: g.rng.next_u32(),
+                params: { let n = g.size(1, 16); g.vec_of(n, |g| g.f32_wide()).into() },
+                losses: None,
+                cohort: Some(vec![0, 1]),
+                late: None,
+                downlink: Some(gen_downlink(g)),
+                budgets: Some(gen_budgets(g)),
+            };
+            let mut bytes = m.encode();
+            let bit = g.size(0, bytes.len() * 8 - 1);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            let _ = Message::decode(&bytes);
+            Ok(())
+        });
     }
 
     fn gen_partial(g: &mut Gen) -> PartialAggregate {

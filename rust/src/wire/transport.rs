@@ -291,6 +291,8 @@ mod tests {
             losses: None,
             cohort: None,
             late: None,
+            downlink: None,
+            budgets: None,
         };
         server.send(&msg).unwrap();
         let got = client.recv().unwrap();
@@ -307,6 +309,8 @@ mod tests {
             losses: None,
             cohort: None,
             late: None,
+            downlink: None,
+            budgets: None,
         };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();
@@ -346,6 +350,8 @@ mod tests {
             losses: Some((2.3, 1.1)),
             cohort: None,
             late: None,
+            downlink: None,
+            budgets: None,
         };
         let (mut a, mut b) = in_proc_pair();
         a.send(&msg).unwrap();

@@ -1,0 +1,307 @@
+//! Property layer for the quantized downlink codec
+//! (`codec::encode_downlink` / `codec::apply_downlink`): the fused
+//! SWAR encode is checked code-for-code against a scalar reference
+//! oracle over random manifests, widths and seeds; the server-side
+//! error-feedback residual must be *bitwise* the quantization error;
+//! and the whole delta chain must be a pure function of its seed.
+//!
+//! These are the wire-level guarantees the round engine's downlink
+//! integration leans on — the session-level counterparts (replica ==
+//! broadcast across topologies, ledger monotonicity) live in
+//! `parallel_determinism.rs` and `integration.rs`.
+
+use std::collections::BTreeMap;
+
+use feddq::coordinator::codec;
+use feddq::quant::math;
+use feddq::runtime::{ModelManifest, Segment};
+use feddq::util::prop::{check, Gen};
+use feddq::util::rng::Rng;
+use feddq::wire::bitpack::BitReader;
+use feddq::wire::swar;
+
+/// Random segmented manifest: 1..=4 segments of 1..=48 elements.  Only
+/// the quantization-relevant fields matter to the codec; the training
+/// fields are inert placeholders.
+fn manifest(g: &mut Gen) -> ModelManifest {
+    let nseg = g.size(1, 4);
+    let mut segments = Vec::with_capacity(nseg);
+    let mut offset = 0usize;
+    for l in 0..nseg {
+        let size = g.size(1, 48);
+        segments.push(Segment {
+            name: format!("s{l}"),
+            offset,
+            size,
+            shape: vec![size],
+        });
+        offset += size;
+    }
+    ModelManifest {
+        name: "downlink-prop".into(),
+        d: offset,
+        segments,
+        input_shape: vec![1],
+        classes: 2,
+        tau: 1,
+        batch: 1,
+        eval_batch: 1,
+        n_clients: 2,
+        files: BTreeMap::new(),
+    }
+}
+
+/// Per-segment (min, range) with the exact envelope scan the encoder
+/// uses (min/max fold, range clamped non-negative).
+fn envelope(mm: &ModelManifest, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    mm.segments
+        .iter()
+        .map(|seg| {
+            let s = &x[seg.offset..seg.offset + seg.size];
+            let mn = s.iter().fold(f32::INFINITY, |a, &v| a.min(v));
+            let mx = s.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            (mn, (mx - mn).max(0.0))
+        })
+        .unzip()
+}
+
+/// Scalar reference oracle: the quantize executable's per-element
+/// contract, straight from `kernels/ref.py` —
+/// `c = clamp(floor((x - min) * sinv + u), 0, s)` with `u ~ U[0,1)`
+/// drawn from `Rng::new(seed)` in flat element order — plus the EF
+/// residual expression `x - (min + c * step)`.  Returns (codes,
+/// residual, per-segment min, per-segment step).
+fn scalar_oracle(
+    mm: &ModelManifest,
+    x: &[f32],
+    bits: u32,
+    seed: u32,
+) -> (Vec<u16>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mins, ranges) = envelope(mm, x);
+    let s = math::max_level_for_bits(bits).max(1) as f32;
+    let mut rng = Rng::new(seed as u64);
+    let mut codes = vec![0u16; mm.d];
+    let mut residual = vec![0f32; mm.d];
+    let mut steps = Vec::with_capacity(mm.segments.len());
+    for (l, seg) in mm.segments.iter().enumerate() {
+        // QuantPlan's degenerate-range guard: below eps the segment
+        // collapses to its min (sinv = step = 0).
+        let (sinv, step) = if ranges[l] > 1e-12 && ranges[l].is_finite() {
+            (s / ranges[l], ranges[l] / s)
+        } else {
+            (0.0, 0.0)
+        };
+        steps.push(step);
+        for j in seg.offset..seg.offset + seg.size {
+            let u = rng.next_f32();
+            let y = ((x[j] - mins[l]) * sinv + u).floor();
+            let c = y.clamp(0.0, s);
+            codes[j] = c as u32 as u16;
+            residual[j] = x[j] - (mins[l] + c * step);
+        }
+    }
+    (codes, residual, mins, steps)
+}
+
+/// Unpack a downlink payload back to per-element codes (test-side
+/// decoder, independent of `apply_downlink`'s arithmetic).
+fn unpack_codes(mm: &ModelManifest, dl: &feddq::wire::messages::DownlinkDelta) -> Vec<u16> {
+    let mut r = BitReader::new(&dl.payload);
+    let mut out: Vec<u16> = Vec::with_capacity(mm.d);
+    for (seg, h) in mm.segments.iter().zip(&dl.segments) {
+        swar::unpack_u16(&mut r, &mut out, seg.size, h.bits as u32)
+            .expect("payload long enough for its own headers");
+    }
+    out
+}
+
+#[test]
+fn prop_fused_downlink_matches_scalar_oracle() {
+    check("fused downlink == scalar oracle", 300, |g| {
+        let mm = manifest(g);
+        let bits = g.size(1, 16) as u32;
+        let seed = g.rng.next_u64() as u32;
+        // Wide-magnitude values (zeros, uniforms, 2^±20 scales,
+        // normals) — the regime where a fused/scalar divergence in
+        // rounding or clamping would show.
+        let x: Vec<f32> = g.vec_of(mm.d, |g| g.f32_wide());
+        let (want_codes, want_res, want_mins, want_steps) = scalar_oracle(&mm, &x, bits, seed);
+
+        // x enters as (params - replica) + residual with replica and
+        // residual zero, so the quantizer input is exactly `x`.
+        let mut residual = vec![0f32; mm.d];
+        let dl = codec::encode_downlink(&mm, bits, &x, &vec![0f32; mm.d], &mut residual, seed)
+            .map_err(|e| format!("encode failed: {e:#}"))?;
+
+        let payload_bits: usize = mm.segments.iter().map(|s| s.size * bits as usize).sum();
+        if dl.payload.len() != (payload_bits + 7) / 8 {
+            return Err(format!(
+                "payload {} bytes, want exactly {}",
+                dl.payload.len(),
+                (payload_bits + 7) / 8
+            ));
+        }
+        for (l, h) in dl.segments.iter().enumerate() {
+            if h.bits as u32 != bits {
+                return Err(format!("segment {l} header width {} != {bits}", h.bits));
+            }
+            if h.min.to_bits() != want_mins[l].to_bits()
+                || h.step.to_bits() != want_steps[l].to_bits()
+            {
+                return Err(format!("segment {l} header (min, step) mismatch"));
+            }
+        }
+        let got_codes = unpack_codes(&mm, &dl);
+        if got_codes != want_codes {
+            return Err(format!(
+                "codes diverge from scalar oracle (bits {bits}, d {})",
+                mm.d
+            ));
+        }
+        for j in 0..mm.d {
+            if residual[j].to_bits() != want_res[j].to_bits() {
+                return Err(format!(
+                    "EF residual[{j}] = {} not bitwise {}",
+                    residual[j], want_res[j]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_lands_within_one_step_and_residual_is_exact() {
+    check("downlink round-trip error bound", 300, |g| {
+        let mm = manifest(g);
+        let bits = g.size(1, 16) as u32;
+        let seed = g.rng.next_u64() as u32;
+        // Tame values: the one-step bound below is the exact-arithmetic
+        // guarantee plus a small float allowance, which wide 2^±20
+        // magnitudes would need looser slack for (the oracle test above
+        // covers those bit-exactly).
+        let x: Vec<f32> = g.vec_of(mm.d, |g| g.f32(-2.0, 2.0));
+        let mut residual = vec![0f32; mm.d];
+        let dl = codec::encode_downlink(&mm, bits, &x, &vec![0f32; mm.d], &mut residual, seed)
+            .map_err(|e| format!("encode failed: {e:#}"))?;
+        let mut applied = vec![0f32; mm.d];
+        codec::apply_downlink(&mm, &dl, &mut applied)
+            .map_err(|e| format!("apply failed: {e:#}"))?;
+        for (l, seg) in mm.segments.iter().enumerate() {
+            let step = dl.segments[l].step;
+            let bound = step * (1.0 + 1e-4) + 1e-6;
+            for j in seg.offset..seg.offset + seg.size {
+                let err = (x[j] - applied[j]).abs();
+                if !(err <= bound) {
+                    return Err(format!(
+                        "element {j}: |x - decoded| = {err} > {bound} (step {step})"
+                    ));
+                }
+                // The EF contract: what the wire lost is exactly what
+                // the residual banked — nothing leaks out of the loop.
+                if residual[j].to_bits() != (x[j] - applied[j]).to_bits() {
+                    return Err(format!("residual[{j}] != x - decoded bitwise"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_chain_is_a_pure_function_of_its_seed() {
+    // Run a multi-round server-side chain (params drift, EF residual
+    // carry, replica advanced by replaying the encoded wire) twice and
+    // require bitwise-identical payloads and replicas — the property
+    // the round engine's determinism contract inherits.
+    check("downlink chain replays bitwise", 60, |g| {
+        let mm = manifest(g);
+        let bits = g.size(1, 8) as u32;
+        let rounds = g.size(2, 5);
+        let chain_seed = g.rng.next_u64();
+        // Seed-pure params trajectory, shared by both replays.
+        let mut traj = Rng::new(chain_seed);
+        let mut params_by_round: Vec<Vec<f32>> = Vec::with_capacity(rounds);
+        let mut p: Vec<f32> = (0..mm.d).map(|_| traj.next_f32() * 2.0 - 1.0).collect();
+        for _ in 0..rounds {
+            p.iter_mut().for_each(|v| *v += 0.05 * (traj.next_f32() - 0.5));
+            params_by_round.push(p.clone());
+        }
+        let run = |tag: &str| -> Result<(Vec<Vec<u8>>, Vec<f32>), String> {
+            let mut replica = params_by_round[0].clone(); // init round: full
+            let mut residual = vec![0f32; mm.d];
+            let mut rng = Rng::new(chain_seed).derive("server.downlink");
+            let mut payloads = Vec::new();
+            for params in &params_by_round[1..] {
+                let seed = rng.next_u32();
+                let dl =
+                    codec::encode_downlink(&mm, bits, params, &replica, &mut residual, seed)
+                        .map_err(|e| format!("{tag}: encode failed: {e:#}"))?;
+                codec::apply_downlink(&mm, &dl, &mut replica)
+                    .map_err(|e| format!("{tag}: apply failed: {e:#}"))?;
+                if !replica.iter().all(|v| v.is_finite()) {
+                    return Err(format!("{tag}: replica went non-finite"));
+                }
+                payloads.push(dl.payload);
+            }
+            Ok((payloads, replica))
+        };
+        let (pay_a, rep_a) = run("first")?;
+        let (pay_b, rep_b) = run("second")?;
+        if pay_a != pay_b {
+            return Err("replayed chain produced different payloads".into());
+        }
+        let bits_a: Vec<u32> = rep_a.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = rep_b.iter().map(|v| v.to_bits()).collect();
+        if bits_a != bits_b {
+            return Err("replayed chain produced different replicas".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_malformed_downlink_frames_err_and_never_panic() {
+    // Truncated, oversized and bit-flipped-width frames must all come
+    // back as Err from `apply_downlink` — a malicious or corrupt
+    // broadcast must not be able to panic a worker.
+    check("malformed downlink frames rejected", 200, |g| {
+        let mm = manifest(g);
+        let bits = g.size(1, 16) as u32;
+        let seed = g.rng.next_u64() as u32;
+        let x: Vec<f32> = g.vec_of(mm.d, |g| g.f32(-1.0, 1.0));
+        let mut residual = vec![0f32; mm.d];
+        let dl = codec::encode_downlink(&mm, bits, &x, &vec![0f32; mm.d], &mut residual, seed)
+            .map_err(|e| format!("encode failed: {e:#}"))?;
+        let mut out = vec![0f32; mm.d];
+
+        if !dl.payload.is_empty() {
+            let mut short = dl.clone();
+            short.payload.pop();
+            if codec::apply_downlink(&mm, &short, &mut out).is_ok() {
+                return Err("truncated payload accepted".into());
+            }
+        }
+        let mut long = dl.clone();
+        long.payload.push(0);
+        if codec::apply_downlink(&mm, &long, &mut out).is_ok() {
+            return Err("oversized payload accepted".into());
+        }
+        let mut wide = dl.clone();
+        let l = g.size(0, wide.segments.len() - 1);
+        wide.segments[l].bits = *g.choose(&[0u8, 17, 32, 255]);
+        if codec::apply_downlink(&mm, &wide, &mut out).is_ok() {
+            return Err("out-of-range segment width accepted".into());
+        }
+        let mut fewer = dl.clone();
+        fewer.segments.pop();
+        if codec::apply_downlink(&mm, &fewer, &mut out).is_ok() {
+            return Err("missing segment header accepted".into());
+        }
+        let mut short_replica = vec![0f32; mm.d - 1];
+        if codec::apply_downlink(&mm, &dl, &mut short_replica).is_ok() {
+            return Err("short replica accepted".into());
+        }
+        Ok(())
+    });
+}

@@ -1037,3 +1037,82 @@ fn semisync_tcp_run_banks_and_folds_stragglers_like_local() {
     }
     assert_eq!(report.params_hash, local.params_hash, "tcp vs local params");
 }
+
+#[test]
+fn budget_below_one_bit_per_element_is_rejected() {
+    // RunConfig::validate can't see the model dimension, so the 1-bit
+    // floor is the server's to enforce: a cap that can't give a single
+    // client 1 bit/element fails at round-engine construction, not
+    // with a silent starve.
+    let mut cfg = tiny_cfg(PolicyConfig::Fixed { bits: 8 });
+    cfg.error_feedback = true;
+    cfg.round.budget.bit_budget = 1000; // d = 101770
+    let err = Session::new(cfg).unwrap().run().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("floor"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn tcp_tree_with_budget_and_quantized_downlink_matches_local() {
+    // The closed loop over real sockets: per-client budgets ride the
+    // broadcast frame down the tree, workers hold a replica and apply
+    // the quantized delta chain, and the analytic downlink ledger is
+    // charged per dispatched leaf — so a two-tier tree must stay
+    // bit-identical to the in-process session, budgets, replicas,
+    // downlink columns, params hash and all.
+    let knobs = |cfg: &mut RunConfig| {
+        cfg.rounds = 4;
+        cfg.policy = PolicyConfig::Fixed { bits: 8 };
+        cfg.error_feedback = true;
+        // ~2 bits/element across the 10-client cohort: the clamp binds
+        cfg.round.budget.bit_budget = 10 * 101_770 * 2;
+        cfg.round.budget.downlink_bits = 4;
+        cfg.round.topology.fanout = 2;
+    };
+    let mut cfg = tiny_cfg(PolicyConfig::Fixed { bits: 8 });
+    knobs(&mut cfg);
+    let addr = "127.0.0.1:17951";
+    let tree = spawn_tree(addr, 17953, 10, 2);
+    let report = topology::serve(&cfg, addr, |_, _| {}).unwrap();
+    for h in tree {
+        h.join().unwrap();
+    }
+
+    let mut cfg2 = tiny_cfg(PolicyConfig::Fixed { bits: 8 });
+    knobs(&mut cfg2);
+    let mut session = Session::new(cfg2).unwrap();
+    let d = session.manifest().d as u64;
+    let local = session.run().unwrap();
+
+    assert_eq!(report.rounds.len(), local.rounds.len());
+    for (a, b) in report.rounds.iter().zip(&local.rounds) {
+        assert_eq!(a.selected, b.selected, "round {}", a.round);
+        assert_eq!(a.train_loss, b.train_loss, "tree vs local train loss r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "tree vs local uplink r{}", a.round);
+        assert_eq!(
+            a.downlink_bits, b.downlink_bits,
+            "tree vs local downlink r{}",
+            a.round
+        );
+        assert_eq!(
+            a.cum_downlink_bits, b.cum_downlink_bits,
+            "tree vs local cum downlink r{}",
+            a.round
+        );
+    }
+    assert_eq!(report.params_hash, local.params_hash, "tree vs local params");
+
+    // Round 0 is the full fp32 init; every later round rides the 4-bit
+    // delta chain, so the whole run must undercut what an fp32
+    // broadcast ledger would have charged.
+    assert_eq!(report.rounds[0].downlink_bits, 10 * d * 32);
+    let fp32_cost: u64 = report.rounds.iter().map(|r| r.selected as u64 * d * 32).sum();
+    let last = report.rounds.last().unwrap();
+    assert!(
+        last.cum_downlink_bits < fp32_cost,
+        "quantized downlink {} must undercut the fp32 broadcast cost {fp32_cost}",
+        last.cum_downlink_bits
+    );
+}

@@ -72,6 +72,16 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, what: &str) {
             ra.round
         );
         assert_eq!(ra.degraded, rb.degraded, "{what}: degraded r{}", ra.round);
+        // the downlink ledger is analytic and fanout-blind: counted per
+        // dispatched leaf from seed-pure state, so it is part of the
+        // bit-identical contract like the uplink ledger
+        assert_eq!(ra.downlink_bits, rb.downlink_bits, "{what}: downlink_bits r{}", ra.round);
+        assert_eq!(
+            ra.cum_downlink_bits,
+            rb.cum_downlink_bits,
+            "{what}: cum_downlink_bits r{}",
+            ra.round
+        );
     }
     assert_ne!(a.params_hash, 0, "{what}: params hash must be tracked");
     assert_eq!(a.params_hash, b.params_hash, "{what}: final params diverged");
@@ -726,6 +736,209 @@ fn staleness_is_inert_without_late_updates() {
     let semisync = run(knobs(2));
     assert_reports_identical(&strict, &semisync, "k=0 vs inert k=2");
     assert!(semisync.rounds.iter().all(|r| r.stale_folded == 0 && r.stale_dropped == 0));
+}
+
+/// Closed-loop fixture: a per-round uplink cap of ~2 bits/element
+/// across the 10-client cohort under an 8-bit fixed policy (so the
+/// budget clamp actually binds), plus a quantized downlink.  Both
+/// knobs require error feedback.
+fn budget_cfg(threads: usize, bit_budget: u64, downlink_bits: u32) -> RunConfig {
+    let mut c = mlp_cfg(threads);
+    c.policy = PolicyConfig::Fixed { bits: 8 };
+    c.error_feedback = true;
+    c.round.budget.bit_budget = bit_budget;
+    c.round.budget.downlink_bits = downlink_bits;
+    c
+}
+
+/// ~2 bits/element/client across the builtin 10-client mlp cohort
+/// (d = 101770).
+const MLP_D: u64 = 101_770;
+const MLP_CAP: u64 = 10 * MLP_D * 2;
+
+#[test]
+fn budget_and_downlink_are_deterministic_across_the_knob_matrix() {
+    // The tentpole acceptance matrix: --bit-budget x --downlink-bits
+    // crossed against threads / shards / fold overlap / decode buffers
+    // / codec path / fanout / participation.  Budgets derive only from
+    // seed-pure arena flags and the controller's own ledger, and the
+    // downlink replica chain is a pure function of the run seed — so
+    // the all-serial reference-codec run must be bit-identical to the
+    // maximally parallel narrow-codec run in every cell, including
+    // params_hash and both downlink ledger columns.
+    for &(fanout, participation) in &[(0u32, 1.0f32), (0, 0.5), (2, 1.0), (4, 0.5)] {
+        let knobs = |threads: usize| {
+            let mut c = budget_cfg(threads, MLP_CAP, 4);
+            c.round.topology.fanout = fanout;
+            c.round.cohort.participation = participation;
+            c
+        };
+        let serial = {
+            let mut c = knobs(1);
+            c.agg_shards = 1;
+            c.eval_threads = 1;
+            c.round.pipeline.fold_overlap = false;
+            c.round.pipeline.codec = CodecMode::Reference;
+            c
+        };
+        let base = run(serial);
+        let parallel = {
+            let mut c = knobs(4);
+            c.agg_shards = 5;
+            c.eval_threads = 3;
+            c.round.pipeline.fold_overlap = true;
+            c.round.pipeline.decode_buffers = 2;
+            c.round.pipeline.codec = CodecMode::Narrow;
+            c
+        };
+        assert_reports_identical(
+            &base,
+            &run(parallel),
+            &format!(
+                "budget+downlink fanout={fanout} participation={participation}: \
+                 serial-ref vs parallel-narrow"
+            ),
+        );
+        // The ledger must actually be charging the quantized chain:
+        // round 0 is the full fp32 init, later rounds the ~4-bit delta.
+        let r0 = &base.rounds[0];
+        assert_eq!(
+            r0.downlink_bits,
+            r0.selected as u64 * MLP_D * 32,
+            "fanout={fanout} p={participation}: init round is a full fp32 broadcast"
+        );
+        for r in &base.rounds[1..] {
+            // A resampled cohort can pull in leaves that missed the
+            // previous round; those resync at full fp32, so the strict
+            // undercut is only guaranteed with everyone in every round.
+            if participation == 1.0 {
+                assert!(
+                    r.downlink_bits < r.selected as u64 * MLP_D * 32,
+                    "fanout={fanout} round {}: quantized delta {} must undercut \
+                     the fp32 cost",
+                    r.round,
+                    r.downlink_bits
+                );
+            } else {
+                assert!(
+                    r.downlink_bits <= r.selected as u64 * MLP_D * 32,
+                    "fanout={fanout} p={participation} round {}: ledger {} above \
+                     the fp32 ceiling",
+                    r.round,
+                    r.downlink_bits
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn budget_cap_bounds_the_uplink_ledger() {
+    // The controller's allocation is a hard per-round cap on payload
+    // bits; the wire adds only the fixed per-segment headers.  An
+    // 8-bit policy without the cap must exceed it; with the cap every
+    // round must fit under cap + header overhead, and the whole run
+    // must ship fewer uplink bits.
+    let capped = run(budget_cfg(2, MLP_CAP, 0));
+    let free = run(budget_cfg(2, 0, 0));
+    // mlp manifest: 4 segments, 88-bit header per segment per client,
+    // plus up to 7 bits of byte padding per packed segment — the wire
+    // ledger counts whole payload bytes.
+    let header_slack = 10 * 4 * (88u64 + 7);
+    for r in &capped.rounds {
+        assert!(
+            r.uplink_bits <= MLP_CAP + header_slack,
+            "round {}: uplink {} exceeds cap {} + headers {}",
+            r.round,
+            r.uplink_bits,
+            MLP_CAP,
+            header_slack
+        );
+    }
+    assert!(
+        capped.rounds.last().unwrap().cum_uplink_bits
+            < free.rounds.last().unwrap().cum_uplink_bits,
+        "the cap must shrink the uplink ledger vs the uncapped 8-bit policy"
+    );
+}
+
+#[test]
+fn downlink_off_and_fp32_ledger_train_identically() {
+    // --downlink-bits 32 is a pure ledger change: the broadcast is the
+    // same fp32 `Arc<[f32]>` either way, so every column except the
+    // two downlink counters must be bit-identical — and those must be
+    // exactly n * d * 32 per round.
+    let off = run(budget_cfg(2, 0, 0));
+    let ledger = run(budget_cfg(2, 0, 32));
+    assert_eq!(off.params_hash, ledger.params_hash, "b=32 must not touch training");
+    assert_eq!(off.rounds.len(), ledger.rounds.len());
+    for (a, b) in off.rounds.iter().zip(&ledger.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "r{}", a.round);
+        assert_eq!(a.uplink_bits, b.uplink_bits, "r{}", a.round);
+        assert_eq!(a.downlink_bits, 0, "off: nothing counted");
+        assert_eq!(
+            b.downlink_bits,
+            b.selected as u64 * MLP_D * 32,
+            "r{}: fp32 ledger counts every dispatched leaf",
+            b.round
+        );
+    }
+}
+
+#[test]
+fn quantized_downlink_undercuts_the_fp32_ledger() {
+    // The point of the feature: the same run with a 4-bit downlink
+    // must ship fewer broadcast bits than the fp32 ledger counts,
+    // while every run stays internally deterministic (covered above).
+    let fp32 = run(budget_cfg(2, 0, 32));
+    let q4 = run(budget_cfg(2, 0, 4));
+    assert!(
+        q4.rounds.last().unwrap().cum_downlink_bits
+            < fp32.rounds.last().unwrap().cum_downlink_bits,
+        "4-bit downlink {} must undercut fp32 {}",
+        q4.rounds.last().unwrap().cum_downlink_bits,
+        fp32.rounds.last().unwrap().cum_downlink_bits
+    );
+}
+
+#[test]
+fn budget_and_downlink_compose_with_faults_and_staleness() {
+    // The harshest composition: stall faults + semi-sync staleness +
+    // budget + quantized downlink.  Late and failed members drive the
+    // controller's flag inputs and the downlink sync map (failed
+    // members are never dispatched; late ones are), so this exercises
+    // the full closed loop — and it must still be engine-invariant.
+    let knobs = |threads: usize| {
+        let mut c = semisync_cfg(threads, 0.5, 2);
+        c.rounds = 6;
+        c.policy = PolicyConfig::Fixed { bits: 8 };
+        c.error_feedback = true;
+        c.round.budget.bit_budget = MLP_CAP;
+        c.round.budget.downlink_bits = 4;
+        c
+    };
+    let serial = {
+        let mut c = knobs(1);
+        c.agg_shards = 1;
+        c.eval_threads = 1;
+        c.round.pipeline.fold_overlap = false;
+        c.round.pipeline.codec = CodecMode::Reference;
+        c
+    };
+    let base = run(serial);
+    let folded: u32 = base.rounds.iter().map(|r| r.stale_folded).sum();
+    assert!(folded > 0, "the fixture must actually produce late members");
+    let mut parallel = knobs(4);
+    parallel.agg_shards = 3;
+    parallel.eval_threads = 2;
+    parallel.round.pipeline.fold_overlap = true;
+    parallel.round.pipeline.decode_buffers = 2;
+    parallel.round.pipeline.codec = CodecMode::Narrow;
+    assert_reports_identical(
+        &base,
+        &run(parallel),
+        "budget+downlink+stall+staleness: serial-ref vs parallel-narrow",
+    );
 }
 
 #[test]

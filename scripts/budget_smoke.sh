@@ -1,0 +1,102 @@
+#!/usr/bin/env bash
+# Budget smoke: the closed-loop bit budget and the quantized downlink
+# on a real TCP run, contrasted against the same run with both knobs
+# effectively off.
+#
+# Runs `feddq serve` twice with the same seed, two workers each on the
+# built-in native manifest (FEDDQ_NATIVE_CLIENTS=2), under a fixed
+# 8-bit uplink policy with error feedback: once with `--downlink-bits
+# 32` (fp32 broadcast, ledger only — the baseline costs) and once with
+# a ~2-bit/element round cap (`--bit-budget`) plus a 4-bit quantized
+# downlink.  The budgeted run must complete every round, ship strictly
+# fewer uplink bits than the free 8-bit run, pay the full fp32 frame
+# only for the round-0 init, and undercut the baseline's broadcast
+# ledger overall — while both runs remain plain, loss-finite sessions.
+#
+# CI runs this in the budget-smoke job; it also works locally:
+#
+#     scripts/budget_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FREE_ADDR="${BUDGET_FREE_ADDR:-127.0.0.1:17885}"
+CAPPED_ADDR="${BUDGET_CAPPED_ADDR:-127.0.0.1:17887}"
+ROUNDS="${BUDGET_ROUNDS:-6}"
+# mlp is d = 101770; 2 clients at ~2 bits/element per round
+CAP=$((2 * 101770 * 2))
+FREE_REPORT="$(mktemp -t budget_free.XXXXXX.json)"
+CAPPED_REPORT="$(mktemp -t budget_capped.XXXXXX.json)"
+export FEDDQ_NATIVE_CLIENTS=2
+
+cargo build --release --locked
+
+cleanup() {
+    kill -9 "${SERVE_PID:-}" "${W0_PID:-}" "${W1_PID:-}" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+# one_run <addr> <report> <extra flags...>: serve + 2 workers to completion
+one_run() {
+    local addr="$1" report="$2"
+    shift 2
+    echo "== serve on $addr ($ROUNDS rounds, fixed:8 + EF, $*) =="
+    target/release/feddq serve --addr "$addr" --rounds "$ROUNDS" \
+        --train-size 2000 --test-size 500 \
+        --policy fixed:8 --error-feedback \
+        "$@" --out "$report" &
+    SERVE_PID=$!
+    target/release/feddq worker --addr "$addr" --id 0 &
+    W0_PID=$!
+    target/release/feddq worker --addr "$addr" --id 1 &
+    W1_PID=$!
+    wait "$SERVE_PID"
+    wait "$W0_PID"
+    wait "$W1_PID"
+}
+
+one_run "$FREE_ADDR" "$FREE_REPORT" --downlink-bits 32
+one_run "$CAPPED_ADDR" "$CAPPED_REPORT" --bit-budget "$CAP" --downlink-bits 4
+
+echo "== verifying the budgeted run undercuts the free run on both ledgers =="
+python3 - "$FREE_REPORT" "$CAPPED_REPORT" "$ROUNDS" "$CAP" <<'EOF'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    free = json.load(f)["rounds"]
+with open(sys.argv[2]) as f:
+    capped = json.load(f)["rounds"]
+want = int(sys.argv[3])
+cap = int(sys.argv[4])
+D = 101770
+free_up = int(free[-1]["cum_uplink_bits"])
+capped_up = int(capped[-1]["cum_uplink_bits"])
+free_down = int(free[-1]["cum_downlink_bits"])
+capped_down = int(capped[-1]["cum_downlink_bits"])
+print(f"  rounds {len(capped)}/{want}; uplink free {free_up} vs capped {capped_up}; "
+      f"downlink fp32 {free_down} vs 4-bit {capped_down}")
+ok = True
+if len(free) != want or len(capped) != want:
+    print("  FAIL: both runs must complete every round")
+    ok = False
+if int(capped[0]["downlink_bits"]) != 2 * D * 32:
+    print("  FAIL: round 0 must be the full fp32 init broadcast")
+    ok = False
+# header + byte-padding slack: 4 segments x 2 clients
+slack = 2 * 4 * (88 + 7)
+over = [r["round"] for r in capped if int(r["uplink_bits"]) > cap + slack]
+if over:
+    print(f"  FAIL: rounds {over} exceed the {cap}-bit budget (+{slack} slack)")
+    ok = False
+if not capped_up < free_up:
+    print("  FAIL: the bit budget must shrink the uplink ledger")
+    ok = False
+if not capped_down < free_down:
+    print("  FAIL: the 4-bit downlink must undercut the fp32 broadcast ledger")
+    ok = False
+if any(float(r["train_loss"]) != float(r["train_loss"]) for r in capped):
+    print("  FAIL: budgeted training must stay finite")
+    ok = False
+sys.exit(0 if ok else 1)
+EOF
+echo "budget smoke passed"
